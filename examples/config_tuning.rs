@@ -1,0 +1,60 @@
+//! Configuration tuning — the paper's §5.4 knobs through the public API.
+//!
+//! Sweeps cuPC-E's (β, γ) and cuPC-S's (θ, δ) on a sparse and a dense
+//! problem, showing the trade-off the paper's heat maps (Fig. 7/8) map
+//! out: larger per-edge flights help dense graphs and hurt sparse ones.
+//!
+//!     cargo run --release --example config_tuning
+
+use cupc::prelude::*;
+use cupc::sim::datasets;
+use cupc::skeleton::run as run_skeleton;
+use cupc::stats::corr::correlation_matrix;
+use cupc::util::timer::median_time;
+
+fn main() -> anyhow::Result<()> {
+    for (label, n, d) in [("sparse", 120usize, 0.03f64), ("dense", 80, 0.25)] {
+        let ds = datasets::generate_er(n, 800, d, 99);
+        let corr = correlation_matrix(&ds.data, 1);
+        println!("== {label} problem: n={n}, density {d} ==");
+
+        println!("cuPC-E (β, γ) sweep:");
+        let mut best: Option<(f64, usize, usize)> = None;
+        for (beta, gamma) in [(1, 32), (2, 32), (2, 128), (8, 8), (32, 1)] {
+            let cfg = Config {
+                variant: Variant::CupcE,
+                beta,
+                gamma,
+                ..Config::default()
+            };
+            let mut tests = 0;
+            let t = median_time(0, 3, || {
+                let r = run_skeleton(&corr, ds.data.n, ds.data.m, &cfg).unwrap();
+                tests = r.total_tests();
+            });
+            println!("  β={beta:<3} γ={gamma:<3}: {:>8.1} ms  ({tests} CI tests)", t * 1e3);
+            if best.map(|(bt, _, _)| t < bt).unwrap_or(true) {
+                best = Some((t, beta, gamma));
+            }
+        }
+        let (_, bb, bg) = best.unwrap();
+        println!("  -> best for {label}: β={bb}, γ={bg}");
+
+        println!("cuPC-S (θ, δ) sweep:");
+        for (theta, delta) in [(32, 1), (64, 2), (256, 8)] {
+            let cfg = Config {
+                variant: Variant::CupcS,
+                theta,
+                delta,
+                ..Config::default()
+            };
+            let t = median_time(0, 3, || {
+                run_skeleton(&corr, ds.data.n, ds.data.m, &cfg).unwrap();
+            });
+            println!("  θ={theta:<3} δ={delta:<2}: {:>8.1} ms", t * 1e3);
+        }
+        println!();
+    }
+    println!("(paper: cuPC-E varies 0.3–1.3x with config; cuPC-S only 0.7–1.2x)");
+    Ok(())
+}

@@ -1,0 +1,85 @@
+//! End-to-end driver: the full three-layer stack on a real workload.
+//!
+//! Exercises every layer in one run: a GRN-shaped dataset is generated
+//! (substrate), its correlation matrix computed (L3 preprocessing), the
+//! PC-stable level loop runs with CI-test batches dispatched to the
+//! **AOT-compiled Pallas kernels through the XLA PJRT runtime** (L1/L2
+//! artifacts — Python is not involved at runtime), results are
+//! cross-checked against the pure-Rust native engine, the skeleton is
+//! oriented into a CPDAG, and recovery metrics + per-level timings are
+//! reported. This is the headline-workload driver recorded in
+//! EXPERIMENTS.md.
+//!
+//!     cargo run --release --example end_to_end [dataset] (default saureus-mini)
+
+use cupc::metrics::{level_time_shares, skeleton_metrics};
+use cupc::prelude::*;
+use cupc::sim::datasets;
+use cupc::stats::corr::correlation_matrix;
+use cupc::util::timer::Timer;
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args()
+        .nth(1)
+        .unwrap_or_else(|| "saureus-mini".to_string());
+    let spec = datasets::spec(&name)
+        .unwrap_or_else(|| panic!("unknown dataset {name}"));
+    println!("== end-to-end: {} (n={}, m={}) ==", spec.name, spec.n, spec.m);
+
+    // substrate: synthetic GRN + linear SEM observational data
+    let t = Timer::start();
+    let ds = datasets::generate(spec);
+    println!("[gen ] {:.3}s  ({} true edges)", t.elapsed_s(), ds.dag.n_edges());
+
+    // L3 preprocessing: correlation matrix
+    let t = Timer::start();
+    let corr = correlation_matrix(&ds.data, 1);
+    println!("[corr] {:.3}s  ({}x{} matrix)", t.elapsed_s(), ds.data.n, ds.data.n);
+
+    // production path: cuPC-S schedule over the XLA PJRT artifacts
+    let cfg_xla = Config {
+        variant: Variant::CupcS,
+        engine: EngineKind::Xla,
+        ..Config::default()
+    };
+    let res = cupc::api::pc_stable_corr(&corr, ds.data.n, ds.data.m, &cfg_xla)?;
+    println!(
+        "[xla ] skeleton {:.3}s + orient {:.3}s, {} CI tests, {} edges",
+        res.skeleton.total_seconds(),
+        res.orient_seconds,
+        res.skeleton.total_tests(),
+        res.skeleton.graph.n_edges()
+    );
+    for (ls, (lvl, share)) in res.skeleton.levels.iter().zip(level_time_shares(&res.skeleton.levels)) {
+        println!(
+            "       level {lvl}: {:>9} tests, removed {:>5}, {:>7.1} ms ({share:.1}%)",
+            ls.tests, ls.removed, ls.seconds * 1e3
+        );
+    }
+
+    // cross-check: native engine must produce the identical skeleton
+    let cfg_nat = Config {
+        engine: EngineKind::Native,
+        ..cfg_xla.clone()
+    };
+    let res_nat = cupc::api::pc_stable_corr(&corr, ds.data.n, ds.data.m, &cfg_nat)?;
+    assert_eq!(
+        res.skeleton.graph.snapshot(),
+        res_nat.skeleton.graph.snapshot(),
+        "XLA and native engines must agree on the skeleton"
+    );
+    println!("[chk ] native engine skeleton identical ✓");
+
+    // headline metric: structure recovery vs ground truth
+    let m = skeleton_metrics(&res.skeleton.graph.snapshot(), &ds.dag.skeleton_dense(), ds.data.n);
+    println!(
+        "[eval] precision {:.3}  recall {:.3}  F1 {:.3}  (TP {} / FP {} / FN {})",
+        m.precision, m.recall, m.f1, m.tp, m.fp, m.fn_
+    );
+    println!(
+        "[eval] CPDAG: {} directed, {} undirected",
+        res.cpdag.directed_edges().len(),
+        res.cpdag.undirected_edges().len()
+    );
+    Ok(())
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: JAX -> HLO *text* artifacts for the Rust PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published `xla` crate) rejects; the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+Emits one .hlo.txt per computation plus manifest.json describing the
+batch geometry (consumed by rust/src/runtime/artifacts.rs).
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    only = set(args.only.split(",")) if args.only else None
+
+    manifest = {
+        "max_level": model.MAX_LEVEL,
+        "b0": model.B0,
+        "be": model.BE,
+        "bs": model.BS,
+        "k": model.K,
+        "artifacts": {},
+    }
+    for name, fn, ex_args, meta in model.computations():
+        if only is not None and name not in only:
+            continue
+        text = to_hlo_text(fn, ex_args)
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out_dir, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["file"] = fname
+        meta["sha256"] = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = meta
+        print(f"wrote {path} ({len(text)} chars)")
+
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

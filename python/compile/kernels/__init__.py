@@ -1,0 +1,10 @@
+"""L1 — Pallas kernels for the cuPC CI-test hot spot.
+
+ci_e:    cuPC-E style, one (i, j, S) test per batch row  (Algorithm 4)
+ci_s:    cuPC-S style, one S per row, pinv shared over K tests (Algorithm 5)
+level0:  Fisher-z over raw correlations                  (Algorithm 3)
+linalg:  hand-written batched Cholesky / Moore-Penrose   (Algorithm 7)
+ref:     independent numpy oracle (SVD pinv) for all of the above
+"""
+
+from . import ci_e, ci_s, level0, linalg, ref  # noqa: F401

@@ -1,0 +1,61 @@
+"""L1 Pallas kernel — cuPC-E style batched CI tests (paper Algorithm 4).
+
+One conditional-independence test I(Vi, Vj | S), |S| = l, per batch row.
+The coordinator (Rust L3) has already gathered the correlation blocks —
+the analogue of cuPC's shared-memory staging of an A'_G row — so the
+kernel's job is the pure numeric hot spot: the Moore-Penrose pseudo-
+inverse of M2 (Algorithm 7), H = M0 - M1 M2^+ M1^T, the partial
+correlation (eq. 5) and the Fisher z statistic (eq. 6).
+
+Inputs (per batch of size B, conditioning-set size l static):
+  c_ij [B]       C[i, j]
+  m1   [B, 2, l] (C[i, S]; C[j, S])
+  m2   [B, l, l] C[S, S]
+Output:
+  z    [B]       |Fisher z| of the estimated partial correlation.
+
+The batch is tiled over a 1-D grid with BLOCK_B rows per program —
+on TPU each block's operands live in VMEM and the einsums in
+``linalg.batched_pinv`` feed the MXU; interpret=True lowers the same
+body to plain HLO for the CPU PJRT client (see DESIGN.md
+§Hardware-Adaptation).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import linalg
+
+BLOCK_B = 256
+
+
+def _ci_e_kernel(c_ij_ref, m1_ref, m2_ref, z_ref, *, l):
+    c_ij = c_ij_ref[...]
+    m1 = m1_ref[...]
+    m2 = m2_ref[...]
+    m2inv = linalg.batched_pinv(m2, l)
+    rho = linalg.partial_corr_from_packed(c_ij, m1, m2inv, l)
+    z_ref[...] = linalg.fisher_z(rho)
+
+
+def ci_e(c_ij, m1, m2, *, l, block_b=BLOCK_B, interpret=True):
+    """Batched CI tests, one (i,j,S) per row. Returns z[B] (f32)."""
+    b = c_ij.shape[0]
+    assert b % block_b == 0, f"batch {b} must be a multiple of {block_b}"
+    assert m1.shape == (b, 2, l) and m2.shape == (b, l, l)
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        functools.partial(_ci_e_kernel, l=l),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b, 2, l), lambda i: (i, 0, 0)),
+            pl.BlockSpec((block_b, l, l), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(c_ij, m1, m2)

@@ -1,0 +1,35 @@
+"""L1 Pallas kernel — level-0 CI tests (paper Algorithm 3).
+
+At level 0 the conditioning set is empty, so the test degenerates to
+comparing the Fisher z of the *raw* correlation C[i, j] against tau.
+The kernel maps a batch of correlation entries to |z| values; the Rust
+coordinator owns the tau comparison and the n(n-1)/2 pair enumeration
+(the CUDA 2-D grid of Algorithm 3 becomes the batch dimension here).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import linalg
+
+BLOCK_B = 1024
+
+
+def _level0_kernel(c_ij_ref, z_ref):
+    z_ref[...] = linalg.fisher_z(c_ij_ref[...])
+
+
+def level0(c_ij, *, block_b=BLOCK_B, interpret=True):
+    """Fisher-z over a batch of raw correlations. Returns z[B] (f32)."""
+    b = c_ij.shape[0]
+    assert b % block_b == 0, f"batch {b} must be a multiple of {block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _level0_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_b,), lambda i: (i,))],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=interpret,
+    )(c_ij)

@@ -1,0 +1,194 @@
+"""Batched small-matrix linear algebra used inside the Pallas CI kernels.
+
+Everything here is written against plain ``jnp`` ops with *static* Python
+loops over the (small, ``l <= MAX_LEVEL``) matrix dimension, so it traces
+cleanly inside a Pallas kernel body (interpret=True) and lowers to fused
+elementwise/matmul HLO. No ``jnp.linalg`` is used on purpose: the paper's
+Algorithm 7 (Moore-Penrose pseudo-inverse via full-rank Cholesky) is
+implemented by hand, and the Rust NativeEngine mirrors this file
+operation-for-operation so the two engines agree bit-for-bit-ish (<=1e-4).
+
+Shapes use the convention ``A[B, l, l]`` — a batch of B independent l-by-l
+matrices. ``l`` must be a static Python int.
+"""
+
+import jax.numpy as jnp
+
+# Tikhonov jitter added to the diagonal of M2^T M2 before Cholesky.
+# M2 is a correlation submatrix and may be singular (perfectly correlated
+# variables); the paper handles this with a pseudo-inverse. The jitter is
+# the standard full-rank-ification and is mirrored in rust/src/stats/chol.rs.
+CHOL_EPS = 1e-8
+
+# bmm unrolling threshold: unrolled fused multiplies below, einsum above
+# (see bmm docstring; levels above 5 are rare in PC runs).
+UNROLL_MAX_L = 5
+
+
+def batched_cholesky(a, l, rank_tol=None):
+    """Lower Cholesky factor of a batch of SPD / PSD matrices.
+
+    a: [B, l, l] symmetric positive (semi-)definite.
+    Returns L with a = L @ L.T, L lower-triangular. Static unrolled loops.
+
+    rank_tol: None -> jittered pivots (strict SPD assumption).
+              [B] array -> *full-rank Cholesky* (Courrieu): any column whose
+              pivot falls below the tolerance is zeroed out, the static-shape
+              analogue of dropping it. Zero columns later self-cancel in the
+              pseudo-inverse composition L R R L^T.
+    """
+    # Build L column by column (standard Cholesky-Banachiewicz), batched.
+    cols = [[None] * l for _ in range(l)]  # cols[i][k] -> [B] entries L[i,k]
+    for k in range(l):
+        # diagonal: L[k,k] = sqrt(a[k,k] - sum_m L[k,m]^2)
+        s = a[:, k, k]
+        for m in range(k):
+            s = s - cols[k][m] * cols[k][m]
+        if rank_tol is None:
+            dkk = jnp.sqrt(jnp.maximum(s, CHOL_EPS))
+            cols[k][k] = dkk
+            inv_dkk = 1.0 / dkk
+        else:
+            ok = s > rank_tol
+            dkk = jnp.sqrt(jnp.maximum(s, CHOL_EPS))
+            cols[k][k] = jnp.where(ok, dkk, 0.0)
+            inv_dkk = jnp.where(ok, 1.0 / dkk, 0.0)
+        for i in range(k + 1, l):
+            s = a[:, i, k]
+            for m in range(k):
+                s = s - cols[i][m] * cols[k][m]
+            cols[i][k] = s * inv_dkk
+    # Assemble [B, l, l]
+    zero = jnp.zeros_like(a[:, 0, 0])
+    rows = []
+    for i in range(l):
+        row = [cols[i][k] if k <= i else zero for k in range(l)]
+        rows.append(jnp.stack(row, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def batched_tril_inverse(lmat, l):
+    """Inverse of a batch of lower-triangular matrices by forward substitution.
+
+    lmat: [B, l, l] lower triangular, returns X with lmat @ X = I.
+    """
+    # Solve column by column: X[:, :, j] solves L x = e_j.
+    zero = jnp.zeros_like(lmat[:, 0, 0])
+    xcols = []  # xcols[j][i] -> [B]
+    for j in range(l):
+        col = [zero] * l
+        for i in range(j, l):
+            s = jnp.where(jnp.array(i == j), jnp.ones_like(zero), zero)
+            # s = e_j[i] - sum_{k<i} L[i,k] * x[k]
+            for k in range(j, i):
+                s = s - lmat[:, i, k] * col[k]
+            col[i] = s / lmat[:, i, i]
+        xcols.append(col)
+    rows = []
+    for i in range(l):
+        rows.append(jnp.stack([xcols[j][i] for j in range(l)], axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def bmm(a, b, l, ta=False, tb=False):
+    """Batched l-by-l matmul with optional transposes, fully unrolled.
+
+    XLA CPU lowers batched `einsum`/`dot_general` with l >= 4 to library
+    batched-GEMM calls — catastrophic for thousands of tiny matrices
+    (measured ~100x cliff between l=3 and l=4). Static unrolling keeps
+    every product an elementwise [B] op that fuses with its neighbours;
+    on TPU the same graph vectorizes across the batch on the VPU.
+
+    Beyond UNROLL_MAX_L the O(l^3) unrolled graph blows up compile time
+    for little runtime gain (the GEMM overhead amortizes as matrices
+    grow), so large l falls back to einsum.
+    """
+    if l > UNROLL_MAX_L:
+        spec_a = "bki" if ta else "bik"
+        spec_b = "bjk" if tb else "bkj"
+        return jnp.einsum(f"{spec_a},{spec_b}->bij", a, b)
+    rows = []
+    for i in range(l):
+        cols = []
+        for j in range(l):
+            s = None
+            for k in range(l):
+                av = a[:, k, i] if ta else a[:, i, k]
+                bv = b[:, j, k] if tb else b[:, k, j]
+                term = av * bv
+                s = term if s is None else s + term
+            cols.append(s)
+        rows.append(jnp.stack(cols, axis=-1))
+    return jnp.stack(rows, axis=-2)
+
+
+def batched_spd_inverse(a, l):
+    """Inverse of a batch of SPD matrices via Cholesky: A^-1 = L^-T L^-1."""
+    lmat = batched_cholesky(a, l)
+    linv = batched_tril_inverse(lmat, l)
+    return bmm(linv, linv, l, ta=True)
+
+
+def batched_pinv(m2, l):
+    """Moore-Penrose pseudo-inverse, paper Algorithm 7 (Courrieu).
+
+    m2: [B, l, l]. L = chol(M2^T M2); R = (L^T L)^-1;
+    M2^+ = L R R L^T M2^T.
+    """
+    if l == 1:
+        # 1x1 fast path: pinv(x) = x / (x^2 + eps)
+        x = m2[:, 0, 0]
+        return (x / (x * x + CHOL_EPS))[:, None, None]
+    mtm = bmm(m2, m2, l, ta=True)
+    eye = jnp.eye(l, dtype=m2.dtype)
+    # Rank-revealing tolerance relative to the largest diagonal entry
+    # (Courrieu's full-rank Cholesky drops columns below it; we zero them).
+    diag = jnp.stack([mtm[:, d, d] for d in range(l)], axis=-1)
+    rank_tol = jnp.max(diag, axis=-1) * 1e-6 + CHOL_EPS
+    lmat = batched_cholesky(mtm, l, rank_tol=rank_tol)
+    ltl = bmm(lmat, lmat, l, ta=True)  # L^T L
+    r = batched_spd_inverse(ltl + CHOL_EPS * eye, l)
+    lr = bmm(lmat, r, l)
+    lrr = bmm(lr, r, l)
+    lrrlt = bmm(lrr, lmat, l, tb=True)  # (L R R) L^T
+    return bmm(lrrlt, m2, l, tb=True)  # ... M2^T
+
+
+def fisher_z(rho):
+    """|0.5 * ln((1+r)/(1-r))|, clamped away from +-1 (paper eq. 6)."""
+    r = jnp.clip(rho, -0.9999999, 0.9999999)
+    return jnp.abs(0.5 * jnp.log((1.0 + r) / (1.0 - r)))
+
+
+def partial_corr_from_packed(c_ij, m1, m2inv, l):
+    """rho(Vi,Vj|S) from pre-gathered blocks (paper eq. 4-5).
+
+    c_ij:  [B]        C[i,j]
+    m1:    [B, 2, l]  rows (C[i,S]; C[j,S])
+    m2inv: [B, l, l]  pinv(C[S,S])
+    Returns rho [B].
+    H = M0 - M1 M2^-1 M1^T with M0 = [[1, c_ij],[c_ij, 1]] (C diag == 1).
+    Unrolled like `bmm` (2×l×l then 2×2 contractions).
+    """
+    # w[s, c] = sum_k m1[s, k] m2inv[k, c]   (s in {0, 1})
+    w = [[None] * l for _ in range(2)]
+    for s in range(2):
+        for c in range(l):
+            acc = None
+            for k in range(l):
+                term = m1[:, s, k] * m2inv[:, k, c]
+                acc = term if acc is None else acc + term
+            w[s][c] = acc
+    # h[s, t] = sum_k w[s, k] m1[t, k]
+    def hdot(s, t):
+        acc = None
+        for k in range(l):
+            term = w[s][k] * m1[:, t, k]
+            acc = term if acc is None else acc + term
+        return acc
+
+    h00 = 1.0 - hdot(0, 0)
+    h11 = 1.0 - hdot(1, 1)
+    h01 = c_ij - hdot(0, 1)
+    denom = jnp.sqrt(jnp.maximum(h00 * h11, 1e-12))
+    return h01 / denom

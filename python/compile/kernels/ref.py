@@ -1,0 +1,85 @@
+"""Pure-numpy oracle for the CI-test kernels.
+
+Uses np.linalg.pinv (SVD-based) and straightforward loops — no Pallas,
+no hand-written Cholesky — so it is an *independent* implementation of
+eq. (3)-(6) of the paper. pytest asserts the kernels against this, and
+the Rust NativeEngine is cross-checked against the XLA artifacts which
+are themselves checked against this oracle, closing the loop.
+"""
+
+import numpy as np
+
+
+def fisher_z_ref(rho):
+    r = np.clip(np.asarray(rho, dtype=np.float64), -0.9999999, 0.9999999)
+    return np.abs(0.5 * np.log((1.0 + r) / (1.0 - r)))
+
+
+def partial_corr_ref(c_ij, m1, m2):
+    """rho(Vi,Vj|S) per batch row, float64 numpy. m1 [B,2,l], m2 [B,l,l]."""
+    c_ij = np.asarray(c_ij, dtype=np.float64)
+    m1 = np.asarray(m1, dtype=np.float64)
+    m2 = np.asarray(m2, dtype=np.float64)
+    b = c_ij.shape[0]
+    rho = np.empty(b)
+    for r in range(b):
+        m2inv = np.linalg.pinv(m2[r], rcond=1e-8)
+        h = m1[r] @ m2inv @ m1[r].T  # 2x2
+        h00 = 1.0 - h[0, 0]
+        h11 = 1.0 - h[1, 1]
+        h01 = c_ij[r] - h[0, 1]
+        rho[r] = h01 / np.sqrt(max(h00 * h11, 1e-12))
+    return rho
+
+
+def ci_e_ref(c_ij, m1, m2):
+    """Oracle for kernels.ci_e: |fisher z| per row."""
+    return fisher_z_ref(partial_corr_ref(c_ij, m1, m2))
+
+
+def ci_s_ref(c_ij, m1, m2):
+    """Oracle for kernels.ci_s: |fisher z| [B, K]."""
+    c_ij = np.asarray(c_ij, dtype=np.float64)
+    b, k = c_ij.shape
+    out = np.empty((b, k))
+    for r in range(b):
+        m2_rep = np.broadcast_to(np.asarray(m2[r]), (k, m2[r].shape[0], m2[r].shape[1]))
+        out[r] = ci_e_ref(c_ij[r], m1[r], m2_rep)
+    return out
+
+
+def level0_ref(c_ij):
+    return fisher_z_ref(c_ij)
+
+
+def random_ci_batch(rng, b, l, k=None, near_singular=False):
+    """Generate a consistent random batch by sampling *real* correlation
+    matrices: draw data for (2+l) or (1+k+l) variables, compute the sample
+    correlation, slice the blocks. Keeps M2 a valid (possibly near-singular
+    when m is tiny) correlation submatrix, exactly as in a live PC run."""
+    nv = (2 + l) if k is None else (1 + k + l)
+    m = 8 if near_singular else 200  # few samples => near-singular C
+    a = rng.standard_normal((nv, nv)) / np.sqrt(nv)
+    x = rng.standard_normal((b, m, nv)) @ (np.eye(nv) + 0.5 * a)
+    xs = x - x.mean(axis=1, keepdims=True)
+    xs = xs / (xs.std(axis=1, keepdims=True) + 1e-12)
+    c = np.einsum("bmi,bmj->bij", xs, xs) / m  # [b, nv, nv]
+    if k is None:
+        # variable layout: 0 = i, 1 = j, 2.. = S
+        c_ij = c[:, 0, 1]
+        m1 = np.stack([c[:, 0, 2:], c[:, 1, 2:]], axis=1)  # [b,2,l]
+        m2 = c[:, 2:, 2:]
+    else:
+        # variable layout: 0 = i, 1..k = j's, k+1.. = S
+        c_ij = c[:, 0, 1 : 1 + k]  # [b,k]
+        ci_s_ = c[:, 0, 1 + k :]  # [b,l] = C[i,S]
+        cj_s = c[:, 1 : 1 + k, 1 + k :]  # [b,k,l]
+        m1 = np.stack(
+            [np.broadcast_to(ci_s_[:, None, :], cj_s.shape), cj_s], axis=2
+        )  # [b,k,2,l]
+        m2 = c[:, 1 + k :, 1 + k :]
+    return (
+        np.ascontiguousarray(c_ij, dtype=np.float32),
+        np.ascontiguousarray(m1, dtype=np.float32),
+        np.ascontiguousarray(m2, dtype=np.float32),
+    )

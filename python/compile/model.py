@@ -1,0 +1,72 @@
+"""L2 — jitted JAX computations around the L1 Pallas kernels.
+
+One computation per (kind, level): the shapes baked here define the HLO
+artifacts the Rust runtime loads. MAX_LEVEL bounds the conditioning-set
+size we AOT-compile for; the paper's datasets top out at level ~5-6 and
+the coordinator falls back to its native engine above MAX_LEVEL.
+
+Batch geometry (must match rust/src/runtime/artifacts.rs):
+  level0:       B0 = 4096 raw correlations per call
+  ci_e, lvl l:  BE = 4096 tests per call
+  ci_s, lvl l:  BS = 256 conditioning sets x K = 32 tests each
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ci_e as ci_e_k
+from .kernels import ci_s as ci_s_k
+from .kernels import level0 as level0_k
+
+MAX_LEVEL = 8
+B0 = 4096
+BE = 4096
+BS = 256
+K = 32
+
+
+def level0_fn(c_ij):
+    return (level0_k.level0(c_ij),)
+
+
+def make_ci_e_fn(l):
+    def fn(c_ij, m1, m2):
+        return (ci_e_k.ci_e(c_ij, m1, m2, l=l),)
+
+    fn.__name__ = f"ci_e_l{l}"
+    return fn
+
+
+def make_ci_s_fn(l):
+    def fn(c_ij, m1, m2):
+        return (ci_s_k.ci_s(c_ij, m1, m2, l=l, k=K),)
+
+    fn.__name__ = f"ci_s_l{l}"
+    return fn
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def computations():
+    """Yield (name, jitted_fn, example_args, meta) for every artifact."""
+    yield (
+        "level0",
+        level0_fn,
+        (f32(B0),),
+        {"kind": "level0", "b": B0},
+    )
+    for l in range(1, MAX_LEVEL + 1):
+        yield (
+            f"ci_e_l{l}",
+            make_ci_e_fn(l),
+            (f32(BE), f32(BE, 2, l), f32(BE, l, l)),
+            {"kind": "ci_e", "l": l, "b": BE},
+        )
+        yield (
+            f"ci_s_l{l}",
+            make_ci_s_fn(l),
+            (f32(BS, K), f32(BS, K, 2, l), f32(BS, l, l)),
+            {"kind": "ci_s", "l": l, "b": BS, "k": K},
+        )

@@ -1,0 +1,78 @@
+"""AOT pipeline tests: lowering to HLO text, manifest integrity."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_to_hlo_text_roundtrip_small():
+    def fn(x):
+        return (x * 2.0 + 1.0,)
+
+    text = aot.to_hlo_text(fn, (jax.ShapeDtypeStruct((4,), jnp.float32),))
+    assert "HloModule" in text
+    assert "f32[4]" in text
+
+
+def test_computations_cover_all_levels():
+    names = [name for name, *_ in model.computations()]
+    assert "level0" in names
+    for l in range(1, model.MAX_LEVEL + 1):
+        assert f"ci_e_l{l}" in names
+        assert f"ci_s_l{l}" in names
+    assert len(names) == 1 + 2 * model.MAX_LEVEL
+
+
+def test_example_shapes_match_meta():
+    for name, _fn, ex_args, meta in model.computations():
+        if meta["kind"] == "level0":
+            assert ex_args[0].shape == (meta["b"],)
+        elif meta["kind"] == "ci_e":
+            b, l = meta["b"], meta["l"]
+            assert ex_args[0].shape == (b,)
+            assert ex_args[1].shape == (b, 2, l)
+            assert ex_args[2].shape == (b, l, l)
+        elif meta["kind"] == "ci_s":
+            b, l, k = meta["b"], meta["l"], meta["k"]
+            assert ex_args[0].shape == (b, k)
+            assert ex_args[1].shape == (b, k, 2, l)
+            assert ex_args[2].shape == (b, l, l)
+
+
+@pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+def test_manifest_matches_files():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["max_level"] == model.MAX_LEVEL
+    assert man["be"] == model.BE and man["bs"] == model.BS and man["k"] == model.K
+    for name, meta in man["artifacts"].items():
+        path = os.path.join(ART, meta["file"])
+        assert os.path.exists(path), f"missing artifact {path}"
+        with open(path) as f:
+            head = f.read(64)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_lowered_hlo_has_expected_params():
+    """The ci_e_l2 computation must take 3 f32 params with the documented
+    shapes — the Rust literal marshaling depends on this exact order."""
+    for name, fn, ex_args, meta in model.computations():
+        if name != "ci_e_l2":
+            continue
+        text = aot.to_hlo_text(fn, ex_args)
+        b = meta["b"]
+        assert f"f32[{b}]" in text
+        assert f"f32[{b},2,2]" in text
+        assert f"f32[{b},2,2]" in text
+        return
+    raise AssertionError("ci_e_l2 not found")

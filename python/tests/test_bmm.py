@@ -1,0 +1,72 @@
+"""Tests for the unrolled batched matmul (the XLA-CPU GEMM-cliff fix)."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import linalg
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 5])  # unrolled range
+@pytest.mark.parametrize("ta,tb", [(False, False), (True, False), (False, True), (True, True)])
+def test_bmm_unrolled_matches_einsum(l, ta, tb):
+    rng = np.random.default_rng(l * 7 + ta * 2 + tb)
+    a = rng.standard_normal((16, l, l)).astype(np.float32)
+    b = rng.standard_normal((16, l, l)).astype(np.float32)
+    got = np.asarray(linalg.bmm(a, b, l, ta=ta, tb=tb))
+    aa = np.swapaxes(a, 1, 2) if ta else a
+    bb = np.swapaxes(b, 1, 2) if tb else b
+    want = aa @ bb
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("l", [6, 8])  # einsum fallback range
+def test_bmm_fallback_matches_matmul(l):
+    assert l > linalg.UNROLL_MAX_L
+    rng = np.random.default_rng(l)
+    a = rng.standard_normal((8, l, l)).astype(np.float32)
+    b = rng.standard_normal((8, l, l)).astype(np.float32)
+    got = np.asarray(linalg.bmm(a, b, l, ta=True))
+    want = np.swapaxes(a, 1, 2) @ b
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_bmm_boundary_consistency():
+    """Results must not change across the UNROLL_MAX_L boundary — both
+    code paths compute the same product."""
+    rng = np.random.default_rng(0)
+    for l in [linalg.UNROLL_MAX_L, linalg.UNROLL_MAX_L + 1]:
+        a = rng.standard_normal((4, l, l)).astype(np.float32)
+        b = rng.standard_normal((4, l, l)).astype(np.float32)
+        got = np.asarray(linalg.bmm(a, b, l))
+        np.testing.assert_allclose(got, a @ b, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(l=st.integers(1, 8), seed=st.integers(0, 2**31 - 1))
+def test_bmm_hypothesis(l, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((4, l, l)).astype(np.float32)
+    b = rng.standard_normal((4, l, l)).astype(np.float32)
+    got = np.asarray(linalg.bmm(a, b, l))
+    np.testing.assert_allclose(got, a @ b, rtol=5e-4, atol=5e-5)
+
+
+def test_bmm_jits_without_gemm_cliff():
+    """Smoke: the jitted unrolled bmm at l=4 must run at fused speed —
+    bound the per-element time loosely to catch a reintroduced cliff."""
+    import time
+
+    l, b = 4, 8192
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((b, l, l)).astype(np.float32)
+    c = rng.standard_normal((b, l, l)).astype(np.float32)
+    f = jax.jit(lambda x, y: linalg.bmm(x, y, l))
+    jax.block_until_ready(f(a, c))
+    t = time.perf_counter()
+    for _ in range(5):
+        jax.block_until_ready(f(a, c))
+    per = (time.perf_counter() - t) / 5 / b
+    assert per < 2e-6, f"bmm l=4 at {per*1e9:.0f} ns/matrix — GEMM cliff is back?"

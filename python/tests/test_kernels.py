@@ -1,0 +1,137 @@
+"""Kernel-vs-oracle: the core L1 correctness signal.
+
+hypothesis sweeps the kernel over conditioning-set sizes, batch shapes
+and near-singular correlation structures; every case asserts allclose
+against the independent numpy/SVD oracle in kernels/ref.py.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import ci_e, ci_s, level0, ref
+
+TOL = dict(rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("l", list(range(1, 9)))
+def test_ci_e_matches_ref(l):
+    rng = np.random.default_rng(l)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 256, l)
+    z = np.asarray(ci_e.ci_e(c_ij, m1, m2, l=l, block_b=128))
+    np.testing.assert_allclose(z, ref.ci_e_ref(c_ij, m1, m2), **TOL)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 4])
+def test_ci_e_near_singular(l):
+    """m << n regime: sample correlation is near-singular; kernel must
+    stay finite and agree with the SVD pinv oracle on the z decision."""
+    rng = np.random.default_rng(40 + l)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 128, l, near_singular=True)
+    z = np.asarray(ci_e.ci_e(c_ij, m1, m2, l=l, block_b=128))
+    assert np.isfinite(z).all()
+    zr = ref.ci_e_ref(c_ij, m1, m2)
+    # near-singular pinv can legitimately differ in magnitude between
+    # Cholesky-jitter and SVD-rcond; what must agree is the large-vs-small
+    # structure. Compare on the well-conditioned (finite, moderate) rows.
+    ok = zr < 5.0
+    np.testing.assert_allclose(z[ok], zr[ok], rtol=0.15, atol=0.15)
+
+
+@pytest.mark.parametrize("l,k", [(1, 4), (2, 8), (3, 32), (5, 16)])
+def test_ci_s_matches_ref(l, k):
+    rng = np.random.default_rng(7 * l + k)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 64, l, k=k)
+    z = np.asarray(ci_s.ci_s(c_ij, m1, m2, l=l, k=k, block_b=32))
+    np.testing.assert_allclose(z, ref.ci_s_ref(c_ij, m1, m2), **TOL)
+
+
+def test_ci_s_shares_pinv_consistently_with_ci_e():
+    """cuPC-S and cuPC-E must compute the same statistic for the same
+    (i, j, S): flatten the S-batch and compare."""
+    rng = np.random.default_rng(99)
+    l, k = 3, 8
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 64, l, k=k)
+    z_s = np.asarray(ci_s.ci_s(c_ij, m1, m2, l=l, k=k, block_b=32))
+    m2_rep = np.repeat(m2, k, axis=0)
+    z_e = np.asarray(
+        ci_e.ci_e(
+            c_ij.reshape(-1), m1.reshape(-1, 2, l), m2_rep, l=l, block_b=64
+        )
+    )
+    np.testing.assert_allclose(z_s.reshape(-1), z_e, rtol=1e-4, atol=1e-5)
+
+
+def test_level0_matches_ref():
+    rng = np.random.default_rng(0)
+    c = rng.uniform(-0.99, 0.99, 4096).astype(np.float32)
+    z = np.asarray(level0.level0(c, block_b=1024))
+    np.testing.assert_allclose(z, ref.level0_ref(c), **TOL)
+
+
+def test_level0_symmetry():
+    c = np.array([0.5, -0.5] * 512, dtype=np.float32)
+    z = np.asarray(level0.level0(c, block_b=1024))
+    np.testing.assert_allclose(z[0::2], z[1::2], rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    l=st.integers(1, 8),
+    log_b=st.integers(0, 3),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ci_e_hypothesis(l, log_b, seed):
+    rng = np.random.default_rng(seed)
+    b = 128 * (2**log_b)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, b, l)
+    z = np.asarray(ci_e.ci_e(c_ij, m1, m2, l=l, block_b=128))
+    np.testing.assert_allclose(z, ref.ci_e_ref(c_ij, m1, m2), rtol=5e-3, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    l=st.integers(1, 6),
+    k=st.sampled_from([2, 4, 8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_ci_s_hypothesis(l, k, seed):
+    rng = np.random.default_rng(seed)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 32, l, k=k)
+    z = np.asarray(ci_s.ci_s(c_ij, m1, m2, l=l, k=k, block_b=32))
+    np.testing.assert_allclose(z, ref.ci_s_ref(c_ij, m1, m2), rtol=5e-3, atol=5e-3)
+
+
+def test_ci_e_rejects_bad_batch():
+    rng = np.random.default_rng(1)
+    c_ij, m1, m2 = ref.random_ci_batch(rng, 100, 2)  # not multiple of block
+    with pytest.raises(AssertionError):
+        ci_e.ci_e(c_ij, m1, m2, l=2, block_b=64)
+
+
+def test_independence_decision_on_known_structure():
+    """Construct X -> Z -> Y: rho(X,Y) != 0 but rho(X,Y|Z) ~ 0."""
+    rng = np.random.default_rng(5)
+    m = 20000
+    x = rng.standard_normal(m)
+    zv = 0.8 * x + 0.6 * rng.standard_normal(m)
+    y = 0.8 * zv + 0.6 * rng.standard_normal(m)
+    data = np.stack([x, y, zv], axis=1)
+    d = data - data.mean(0)
+    d /= d.std(0)
+    c = d.T @ d / m
+    # level 0: X-Y dependent
+    z0 = np.asarray(
+        level0.level0(np.full(1024, c[0, 1], dtype=np.float32), block_b=1024)
+    )[0]
+    tau_ish = 2.58 / np.sqrt(m - 3)  # alpha=0.01
+    assert z0 > tau_ish
+    # level 1 with S={Z}: X indep Y
+    c_ij = np.full(128, c[0, 1], dtype=np.float32)
+    m1 = np.tile(
+        np.array([[c[0, 2]], [c[1, 2]]], dtype=np.float32), (128, 1, 1)
+    )
+    m2 = np.ones((128, 1, 1), dtype=np.float32)
+    z1 = np.asarray(ci_e.ci_e(c_ij, m1, m2, l=1, block_b=128))[0]
+    assert z1 < 2.58 / np.sqrt(m - 1 - 3)

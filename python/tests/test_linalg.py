@@ -1,0 +1,98 @@
+"""Unit tests for the hand-written batched linear algebra (Algorithm 7)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.kernels import linalg
+
+
+def random_spd(rng, b, l, cond=10.0):
+    q, _ = np.linalg.qr(rng.standard_normal((b, l, l)))
+    eig = np.exp(rng.uniform(-np.log(cond), 0.0, (b, l)))
+    return np.einsum("bik,bk,bjk->bij", q, eig, q).astype(np.float32)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 6, 8])
+def test_cholesky_reconstructs(l):
+    rng = np.random.default_rng(l)
+    a = random_spd(rng, 32, l)
+    lo = np.asarray(linalg.batched_cholesky(a, l))
+    rec = np.einsum("bik,bjk->bij", lo, lo)
+    np.testing.assert_allclose(rec, a, rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 6, 8])
+def test_cholesky_is_lower_triangular(l):
+    rng = np.random.default_rng(100 + l)
+    a = random_spd(rng, 8, l)
+    lo = np.asarray(linalg.batched_cholesky(a, l))
+    upper = np.triu(lo, k=1)
+    assert np.abs(upper).max() == 0.0
+
+
+@pytest.mark.parametrize("l", [2, 3, 4, 6, 8])
+def test_tril_inverse(l):
+    rng = np.random.default_rng(200 + l)
+    a = random_spd(rng, 16, l)
+    lo = np.asarray(linalg.batched_cholesky(a, l))
+    li = np.asarray(linalg.batched_tril_inverse(lo, l))
+    eye = np.einsum("bik,bkj->bij", lo, li)
+    np.testing.assert_allclose(eye, np.broadcast_to(np.eye(l), eye.shape), atol=2e-3)
+
+
+@pytest.mark.parametrize("l", [2, 3, 4, 8])
+def test_spd_inverse(l):
+    rng = np.random.default_rng(300 + l)
+    a = random_spd(rng, 16, l)
+    ai = np.asarray(linalg.batched_spd_inverse(a, l))
+    eye = np.einsum("bik,bkj->bij", a, ai)
+    np.testing.assert_allclose(eye, np.broadcast_to(np.eye(l), eye.shape), atol=5e-3)
+
+
+@pytest.mark.parametrize("l", [1, 2, 3, 4, 6, 8])
+def test_pinv_well_conditioned_matches_inverse(l):
+    rng = np.random.default_rng(400 + l)
+    a = random_spd(rng, 16, l, cond=5.0)
+    pinv = np.asarray(linalg.batched_pinv(a, l))
+    ref = np.linalg.inv(a.astype(np.float64))
+    np.testing.assert_allclose(pinv, ref, rtol=2e-2, atol=2e-3)
+
+
+@pytest.mark.parametrize("l", [2, 3, 4])
+def test_pinv_singular_is_finite_and_penrose(l):
+    """On a rank-deficient *correlation* matrix (duplicated variables:
+    unit diagonal, rank 1 — the degenerate case PC actually hits) the
+    pinv must stay finite and roughly satisfy Penrose A A+ A ~ A."""
+    rng = np.random.default_rng(500 + l)
+    s = np.sign(rng.standard_normal((8, l, 1))).astype(np.float32)
+    a = np.einsum("bik,bjk->bij", s, s)  # +-1 rank-1 with unit diagonal
+    pinv = np.asarray(linalg.batched_pinv(a, l))
+    assert np.isfinite(pinv).all()
+    apa = np.einsum("bij,bjk,bkl->bil", a, pinv, a)
+    np.testing.assert_allclose(apa, a, atol=5e-2, rtol=5e-2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    l=st.integers(1, 8),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_pinv_hypothesis_finite(l, seed):
+    rng = np.random.default_rng(seed)
+    a = random_spd(rng, 4, l, cond=100.0)
+    pinv = np.asarray(linalg.batched_pinv(a, l))
+    assert np.isfinite(pinv).all()
+
+
+def test_fisher_z_matches_numpy():
+    r = np.linspace(-0.999, 0.999, 101).astype(np.float32)
+    z = np.asarray(linalg.fisher_z(r))
+    ref = np.abs(np.arctanh(r.astype(np.float64)))
+    np.testing.assert_allclose(z, ref, rtol=1e-4, atol=1e-5)
+
+
+def test_fisher_z_clamps_at_one():
+    z = np.asarray(linalg.fisher_z(np.array([1.0, -1.0], dtype=np.float32)))
+    assert np.isfinite(z).all()

@@ -1,0 +1,83 @@
+"""Statistical validity of the CI-test math, cross-checked against an
+entirely different derivation: partial correlation via regression
+residuals (scipy), and decision calibration under the null."""
+
+import numpy as np
+import scipy.stats
+from scipy.stats import norm
+
+from compile.kernels import ci_e, level0, ref
+
+
+def partial_corr_residual_method(x, i, j, s_idx):
+    """rho(Vi,Vj|S) as the correlation of OLS residuals — textbook
+    definition, no matrix-inverse shortcut."""
+    S = x[:, s_idx]
+    S1 = np.column_stack([np.ones(len(x)), S])
+    bi, *_ = np.linalg.lstsq(S1, x[:, i], rcond=None)
+    bj, *_ = np.linalg.lstsq(S1, x[:, j], rcond=None)
+    ri = x[:, i] - S1 @ bi
+    rj = x[:, j] - S1 @ bj
+    return scipy.stats.pearsonr(ri, rj)[0]
+
+
+def test_kernel_partial_corr_matches_residual_method():
+    rng = np.random.default_rng(0)
+    m, nv = 2000, 6  # i=0, j=1, S={2,3,4,5}
+    a = rng.standard_normal((nv, nv)) * 0.4
+    x = rng.standard_normal((m, nv)) @ (np.eye(nv) + a)
+    xs = (x - x.mean(0)) / x.std(0)
+    c = xs.T @ xs / m
+    l = 4
+    c_ij = np.full(128, c[0, 1], dtype=np.float32)
+    m1 = np.tile(
+        np.stack([c[0, 2:], c[1, 2:]]).astype(np.float32)[None], (128, 1, 1)
+    )
+    m2 = np.tile(c[2:, 2:].astype(np.float32)[None], (128, 1, 1))
+    z_kernel = float(np.asarray(ci_e.ci_e(c_ij, m1, m2, l=l, block_b=128))[0])
+
+    rho_resid = partial_corr_residual_method(xs, 0, 1, [2, 3, 4, 5])
+    z_resid = abs(np.arctanh(rho_resid))
+    # sample partial-corr from C vs residual method agree to O(1/m)
+    assert abs(z_kernel - z_resid) < 0.02, (z_kernel, z_resid)
+
+
+def test_null_calibration_level0():
+    """Under H0 (independent pairs), the level-0 test at significance
+    alpha should fire ~alpha of the time."""
+    rng = np.random.default_rng(1)
+    m = 500
+    trials = 2048
+    alpha = 0.05
+    x = rng.standard_normal((trials, m))
+    y = rng.standard_normal((trials, m))
+    xc = (x - x.mean(1, keepdims=True)) / x.std(1, keepdims=True)
+    yc = (y - y.mean(1, keepdims=True)) / y.std(1, keepdims=True)
+    r = np.einsum("tm,tm->t", xc, yc) / m
+    z = np.asarray(level0.level0(r.astype(np.float32), block_b=1024))
+    tau = norm.ppf(1 - alpha / 2) / np.sqrt(m - 3)
+    reject_rate = float((z > tau).mean())
+    assert 0.5 * alpha < reject_rate < 2.0 * alpha, reject_rate
+
+
+def test_power_grows_with_effect_size():
+    """z statistic must be monotone in |rho|."""
+    rhos = np.array([0.05, 0.1, 0.2, 0.4, 0.8], dtype=np.float32)
+    z = ref.level0_ref(rhos)
+    assert np.all(np.diff(z) > 0)
+
+
+def test_fisher_z_variance_stabilization():
+    """atanh(r) of a true-rho sample has ~1/(m-3) variance regardless of
+    rho — the property eq. (7)'s threshold relies on."""
+    rng = np.random.default_rng(2)
+    m = 200
+    for true_rho in [0.0, 0.5]:
+        zs = []
+        for _ in range(300):
+            x = rng.standard_normal(m)
+            y = true_rho * x + np.sqrt(1 - true_rho**2) * rng.standard_normal(m)
+            r = np.corrcoef(x, y)[0, 1]
+            zs.append(np.arctanh(r))
+        v = np.var(zs) * (m - 3)
+        assert 0.6 < v < 1.6, (true_rho, v)

@@ -1,0 +1,36 @@
+//! Shared bench plumbing: flag parsing for `cargo bench -- --scale ...`.
+//! (criterion is unavailable offline; each bench is a harness=false main
+//! that regenerates one paper table/figure via cupc::experiments.)
+
+use cupc::experiments::{ExpOpts, Scale};
+use cupc::skeleton::EngineKind;
+use cupc::util::cli::Args;
+use std::path::PathBuf;
+
+pub fn opts_from_env() -> ExpOpts {
+    let argv: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| a != "--bench") // cargo bench appends this
+        .collect();
+    let args = Args::parse(argv);
+    let scale = match args.get_or("scale", "small").as_str() {
+        "paper" => Scale::Paper,
+        _ => Scale::Small,
+    };
+    let engine = match args.get_or("engine", "native").as_str() {
+        "xla" => EngineKind::Xla,
+        _ => EngineKind::Native,
+    };
+    ExpOpts {
+        scale,
+        engine,
+        reps: args.get_usize("reps", 1),
+        artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+    }
+}
+
+#[allow(dead_code)]
+pub fn graphs_from_env(default: usize) -> usize {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    Args::parse(argv).get_usize("graphs", default)
+}

@@ -1,0 +1,17 @@
+//! `cargo bench --bench fig10_scalability` — Fig. 10: runtime vs number
+//! of variables (a), sample size (b) and graph density (c); 10 random
+//! graphs per point, box-plot quartiles.
+
+mod common;
+use cupc::experiments::fig10::{self, Sweep};
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    let graphs = common::graphs_from_env(10);
+    eprintln!("fig10: {:?} graphs/point={graphs}", opts);
+    for sweep in [Sweep::N, Sweep::M, Sweep::D] {
+        let points = fig10::run(&opts, sweep, graphs)?;
+        fig10::print(&points, sweep);
+    }
+    Ok(())
+}

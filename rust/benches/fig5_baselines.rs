@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig5_baselines` — Fig. 5: cuPC-E / cuPC-S vs
+//! the two baseline GPU schedules.
+
+mod common;
+use cupc::experiments::fig5;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("fig5: {:?}", opts);
+    let rows = fig5::run(&opts)?;
+    fig5::print(&rows);
+    Ok(())
+}

@@ -1,0 +1,12 @@
+//! `cargo bench --bench fig6_levels` — Fig. 6: % of runtime per level.
+
+mod common;
+use cupc::experiments::fig6;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("fig6: {:?}", opts);
+    let rows = fig6::run(&opts)?;
+    fig6::print(&rows);
+    Ok(())
+}

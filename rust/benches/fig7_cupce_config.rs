@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig7_cupce_config` — Fig. 7: cuPC-E (β, γ)
+//! heat maps vs the selected cuPC-E-2-32 (sparse + dense datasets).
+
+mod common;
+use cupc::experiments::fig7;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("fig7: {:?}", opts);
+    let maps = fig7::run(&opts, Some(&["nci60", "dream5-insilico"]))?;
+    fig7::print(&maps);
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig8_cupcs_config` — Fig. 8: cuPC-S (θ, δ)
+//! heat maps vs the selected cuPC-S-64-2.
+
+mod common;
+use cupc::experiments::fig8;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("fig8: {:?}", opts);
+    let maps = fig8::run(&opts, Some(&["nci60", "dream5-insilico"]))?;
+    fig8::print(&maps);
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench fig9_sharing` — Fig. 9: conditional-set sharing
+//! histogram at level 2 of DREAM5-Insilico (local vs global sharing).
+
+mod common;
+use cupc::experiments::fig9;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("fig9: {:?}", opts);
+    let out = fig9::run(&opts)?;
+    fig9::print(&out);
+    Ok(())
+}

@@ -1,0 +1,13 @@
+//! `cargo bench --bench table2` — regenerates Table 2 (runtimes +
+//! speedups of serial / parallel-CPU / cuPC-E / cuPC-S).
+
+mod common;
+use cupc::experiments::table2;
+
+fn main() -> anyhow::Result<()> {
+    let opts = common::opts_from_env();
+    eprintln!("table2: {:?}", opts);
+    let rows = table2::run(&opts)?;
+    table2::print(&rows);
+    Ok(())
+}

@@ -1,0 +1,165 @@
+//! Public API: the `pc_stable` entry points composing correlation →
+//! skeleton → orientation, mirroring pcalg's `pc()` interface shape.
+
+use crate::graph::cpdag::Cpdag;
+use crate::orient;
+use crate::skeleton::{self, Config, SkeletonResult};
+use crate::stats::corr::{correlation_matrix, DataMatrix};
+use anyhow::Result;
+
+/// Full result of a PC-stable run.
+pub struct PcResult {
+    /// the CPDAG after v-structure + Meek orientation
+    pub cpdag: Cpdag,
+    /// skeleton phase output (graph, sepsets, per-level stats)
+    pub skeleton: SkeletonResult,
+    /// seconds spent in the correlation computation (0 when a
+    /// correlation matrix was supplied directly)
+    pub corr_seconds: f64,
+    /// seconds spent in orientation
+    pub orient_seconds: f64,
+}
+
+impl PcResult {
+    /// End-to-end seconds (corr + skeleton + orientation).
+    pub fn total_seconds(&self) -> f64 {
+        self.corr_seconds + self.skeleton.total_seconds() + self.orient_seconds
+    }
+
+    /// Convenience access to the estimated graph.
+    pub fn graph(&self) -> &Cpdag {
+        &self.cpdag
+    }
+}
+
+/// Run PC-stable from observational data (m samples × n variables).
+pub fn pc_stable_data(data: &DataMatrix, cfg: &Config) -> Result<PcResult> {
+    let t = crate::util::timer::Timer::start();
+    let corr = correlation_matrix(data, cfg.threads);
+    let corr_seconds = t.elapsed_s();
+    let mut res = pc_stable_corr(&corr, data.n, data.m, cfg)?;
+    res.corr_seconds = corr_seconds;
+    Ok(res)
+}
+
+/// Run PC-stable from a precomputed correlation matrix (row-major n×n)
+/// and the sample count `m` it was estimated from.
+pub fn pc_stable_corr(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<PcResult> {
+    let skel = skeleton::run(corr, n, m, cfg)?;
+    let t = crate::util::timer::Timer::start();
+    let cpdag = match cfg.orient {
+        crate::skeleton::OrientRule::Standard => orient::orient(&skel.graph, &skel.sepsets),
+        crate::skeleton::OrientRule::Majority => {
+            let deepest = skel.levels.last().map(|l| l.level).unwrap_or(0);
+            orient::orient_majority(&skel.graph, corr, m, cfg.alpha, deepest)
+        }
+    };
+    Ok(PcResult {
+        cpdag,
+        skeleton: skel,
+        corr_seconds: 0.0,
+        orient_seconds: t.elapsed_s(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{dag::WeightedDag, sem};
+    use crate::util::rng::Pcg;
+
+    /// The textbook collider: X0 → X2 ← X1 must orient both arrows.
+    #[test]
+    fn collider_is_recovered_end_to_end() {
+        let dag = WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![], vec![(0, 0.8), (1, 0.8)]],
+        };
+        let data = sem::sample(&dag, 5000, &mut Pcg::seeded(1));
+        let cfg = Config::default();
+        let res = pc_stable_data(&data, &cfg).unwrap();
+        assert!(res.cpdag.is_directed(0, 2), "{:?}", res.cpdag);
+        assert!(res.cpdag.is_directed(1, 2));
+        assert!(!res.cpdag.adjacent(0, 1));
+    }
+
+    /// A chain is Markov-equivalent to its reversal: edges stay undirected.
+    #[test]
+    fn chain_stays_undirected() {
+        let dag = WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![(0, 0.9)], vec![(1, 0.9)]],
+        };
+        let data = sem::sample(&dag, 5000, &mut Pcg::seeded(2));
+        let res = pc_stable_data(&data, &Config::default()).unwrap();
+        assert!(res.cpdag.is_undirected(0, 1));
+        assert!(res.cpdag.is_undirected(1, 2));
+        assert!(!res.cpdag.adjacent(0, 2));
+    }
+
+    /// All variants produce the same *skeleton* (PC-stable's
+    /// order-independence guarantee). Sepsets — and hence individual
+    /// orientations — may legitimately differ between schedules: each
+    /// stores the *first* separating set it finds, and the search order
+    /// is the schedule. (Colombo & Maathuis §4 discusses exactly this;
+    /// the skeleton is the invariant.)
+    #[test]
+    fn all_variants_agree_on_skeleton() {
+        use crate::skeleton::Variant;
+        let dag = WeightedDag::random_er(30, 0.12, &mut Pcg::seeded(5));
+        let data = sem::sample(&dag, 400, &mut Pcg::seeded(6));
+        let base = Config::default();
+        let mut results = Vec::new();
+        for v in [
+            Variant::Serial,
+            Variant::ParallelCpu,
+            Variant::CupcE,
+            Variant::CupcS,
+            Variant::Baseline1,
+            Variant::Baseline2,
+        ] {
+            let cfg = Config {
+                variant: v,
+                ..base.clone()
+            };
+            results.push((v, pc_stable_data(&data, &cfg).unwrap()));
+        }
+        let (v0, first) = &results[0];
+        for (v, r) in &results[1..] {
+            assert_eq!(
+                first.skeleton.graph.snapshot(),
+                r.skeleton.graph.snapshot(),
+                "{v:?} skeleton differs from {v0:?}"
+            );
+            // CPDAG skeletons (adjacency disregarding marks) also match
+            assert_eq!(first.cpdag.skeleton(), r.cpdag.skeleton());
+        }
+    }
+
+    /// Deterministic schedules are bit-reproducible run to run.
+    #[test]
+    fn deterministic_variants_reproduce_cpdag() {
+        use crate::skeleton::Variant;
+        let dag = WeightedDag::random_er(25, 0.15, &mut Pcg::seeded(15));
+        let data = sem::sample(&dag, 300, &mut Pcg::seeded(16));
+        for v in [Variant::Serial, Variant::CupcE, Variant::CupcS] {
+            let cfg = Config {
+                variant: v,
+                ..Config::default()
+            };
+            let a = pc_stable_data(&data, &cfg).unwrap();
+            let b = pc_stable_data(&data, &cfg).unwrap();
+            assert!(a.cpdag.same_as(&b.cpdag), "{v:?} not deterministic");
+        }
+    }
+
+    #[test]
+    fn timings_populate() {
+        let dag = WeightedDag::random_er(15, 0.2, &mut Pcg::seeded(8));
+        let data = sem::sample(&dag, 200, &mut Pcg::seeded(9));
+        let res = pc_stable_data(&data, &Config::default()).unwrap();
+        assert!(res.total_seconds() > 0.0);
+        assert!(res.corr_seconds > 0.0);
+        assert!(!res.skeleton.levels.is_empty());
+    }
+}

@@ -1,0 +1,100 @@
+//! `cupc experiment <id>` — regenerate a paper table/figure.
+
+use anyhow::{bail, Context, Result};
+use cupc::experiments::{self, fig10, ExpOpts, Scale};
+use cupc::skeleton::EngineKind;
+use cupc::util::cli::Args;
+use std::path::PathBuf;
+
+pub fn opts_from_args(args: &Args) -> Result<ExpOpts> {
+    let scale = match args.get_or("scale", "small").as_str() {
+        "small" => Scale::Small,
+        "paper" => Scale::Paper,
+        other => bail!("unknown scale {other:?} (small|paper)"),
+    };
+    let engine = match args.get_or("engine", "native").as_str() {
+        "native" => EngineKind::Native,
+        "xla" => EngineKind::Xla,
+        other => bail!("unknown engine {other:?} (native|xla)"),
+    };
+    Ok(ExpOpts {
+        scale,
+        engine,
+        reps: args.get_usize("reps", 1),
+        artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
+    })
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let id = args
+        .positional
+        .first()
+        .context("experiment id required: table2|fig5|fig6|fig7|fig8|fig9|fig10")?
+        .as_str();
+    let opts = opts_from_args(args)?;
+    eprintln!("experiment {id} scale={:?} engine={:?}", opts.scale, opts.engine);
+    match id {
+        "table2" => {
+            let rows = experiments::table2::run(&opts)?;
+            experiments::table2::print(&rows);
+        }
+        "fig5" => {
+            let rows = experiments::fig5::run(&opts)?;
+            experiments::fig5::print(&rows);
+        }
+        "fig6" => {
+            let rows = experiments::fig6::run(&opts)?;
+            experiments::fig6::print(&rows);
+        }
+        "fig7" => {
+            // default: one sparse + one dense dataset to bound runtime
+            let filter = args.get("datasets").map(|s| s.to_string());
+            let maps = match &filter {
+                Some(f) => {
+                    let list: Vec<&str> = f.split(',').collect();
+                    experiments::fig7::run(&opts, Some(&list))?
+                }
+                None => experiments::fig7::run(&opts, Some(&["nci60", "dream5-insilico"]))?,
+            };
+            experiments::fig7::print(&maps);
+        }
+        "fig8" => {
+            let filter = args.get("datasets").map(|s| s.to_string());
+            let maps = match &filter {
+                Some(f) => {
+                    let list: Vec<&str> = f.split(',').collect();
+                    experiments::fig8::run(&opts, Some(&list))?
+                }
+                None => experiments::fig8::run(&opts, Some(&["nci60", "dream5-insilico"]))?,
+            };
+            experiments::fig8::print(&maps);
+        }
+        "fig9" => {
+            let out = experiments::fig9::run(&opts)?;
+            experiments::fig9::print(&out);
+        }
+        "fig10" => {
+            let sweep_arg = args.get_or("sweep", "all");
+            let graphs = args.get_usize("graphs", match opts.scale {
+                Scale::Small => 10,
+                Scale::Paper => 10,
+            });
+            let sweeps: Vec<fig10::Sweep> = if sweep_arg == "all" {
+                vec![fig10::Sweep::N, fig10::Sweep::M, fig10::Sweep::D]
+            } else {
+                vec![fig10::Sweep::parse(&sweep_arg)
+                    .with_context(|| format!("unknown sweep {sweep_arg:?} (n|m|d)"))?]
+            };
+            for sweep in sweeps {
+                let points = fig10::run(&opts, sweep, graphs)?;
+                fig10::print(&points, sweep);
+            }
+        }
+        "ablation" => {
+            let rows = experiments::ablation::run(&opts)?;
+            experiments::ablation::print(&rows);
+        }
+        other => bail!("unknown experiment {other:?}"),
+    }
+    Ok(())
+}

@@ -1,0 +1,38 @@
+//! CLI subcommand dispatch (binary-only module).
+
+pub mod engines;
+pub mod experiment;
+pub mod run;
+pub mod simulate;
+
+use anyhow::{bail, Result};
+use cupc::util::cli::Args;
+
+pub fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand.as_deref() {
+        Some("run") => run::main(args),
+        Some("simulate") => simulate::main(args),
+        Some("experiment") => experiment::main(args),
+        Some("engines") => engines::main(args),
+        Some(other) => bail!("unknown subcommand {other:?}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+pub const USAGE: &str = "\
+cupc — GPU-schedule parallel PC-stable (cuPC reproduction)
+
+USAGE:
+  cupc run --dataset <name|csv> [--variant cups|cupe|serial|parcpu|b1|b2]
+           [--engine native|xla] [--alpha 0.01] [--max-level L]
+           [--beta B --gamma G --theta T --delta D] [--threads N]
+           [--orient standard|majority] [--verbose]
+  cupc simulate --n 1000 --m 10000 --d 0.1 --seed 1 --out data.csv
+  cupc experiment <table2|fig5|fig6|fig7|fig8|fig9|fig10|ablation>
+           [--scale small|paper] [--engine native|xla] [--reps 1]
+  cupc engines [--artifacts DIR]
+
+Datasets: nci60 mcc br51 scerevisiae saureus dream5-insilico (+ -mini)";

@@ -1,0 +1,95 @@
+//! `cupc run` — PC-stable on a registry dataset or CSV file.
+
+use anyhow::{bail, Context, Result};
+use cupc::data::csv::load_csv;
+use cupc::metrics::{skeleton_metrics, level_time_shares};
+use cupc::prelude::*;
+use cupc::sim::datasets;
+use cupc::util::cli::Args;
+use std::path::PathBuf;
+
+pub fn config_from_args(args: &Args) -> Result<Config> {
+    let mut cfg = Config::default();
+    cfg.alpha = args.get_f64("alpha", cfg.alpha);
+    if let Some(l) = args.get("max-level") {
+        cfg.max_level = Some(l.parse().context("--max-level")?);
+    }
+    if let Some(v) = args.get("variant") {
+        cfg.variant = Variant::parse(v)
+            .with_context(|| format!("unknown variant {v:?}"))?;
+    }
+    match args.get_or("engine", "native").as_str() {
+        "native" => cfg.engine = EngineKind::Native,
+        "xla" => cfg.engine = EngineKind::Xla,
+        other => bail!("unknown engine {other:?} (native|xla)"),
+    }
+    cfg.threads = args.get_usize("threads", cfg.threads);
+    cfg.beta = args.get_usize("beta", cfg.beta);
+    cfg.gamma = args.get_usize("gamma", cfg.gamma);
+    cfg.theta = args.get_usize("theta", cfg.theta);
+    cfg.delta = args.get_usize("delta", cfg.delta);
+    cfg.artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
+    cfg.verbose = args.has_flag("verbose");
+    match args.get_or("orient", "standard").as_str() {
+        "standard" => cfg.orient = cupc::skeleton::OrientRule::Standard,
+        "majority" => cfg.orient = cupc::skeleton::OrientRule::Majority,
+        other => bail!("unknown orient rule {other:?} (standard|majority)"),
+    }
+    Ok(cfg)
+}
+
+pub fn main(args: &Args) -> Result<()> {
+    let cfg = config_from_args(args)?;
+    let name = args
+        .get("dataset")
+        .context("--dataset <registry name or .csv path> required")?;
+
+    let (data, truth) = if name.ends_with(".csv") {
+        let (d, _names) = load_csv(std::path::Path::new(name))?;
+        (d, None)
+    } else {
+        let spec = datasets::spec(name)
+            .with_context(|| format!("unknown dataset {name:?} (see `cupc` for the list)"))?;
+        let ds = datasets::generate(spec);
+        (ds.data, Some(ds.dag.skeleton_dense()))
+    };
+
+    eprintln!(
+        "running {:?} engine={:?} on {name}: n={} m={} alpha={}",
+        cfg.variant, cfg.engine, data.n, data.m, cfg.alpha
+    );
+    let res = cupc::api::pc_stable_data(&data, &cfg)?;
+
+    println!("== result ==");
+    println!("variables        : {}", data.n);
+    println!("samples          : {}", data.m);
+    println!("edges (skeleton) : {}", res.skeleton.graph.n_edges());
+    println!("directed edges   : {}", res.cpdag.directed_edges().len());
+    println!("undirected edges : {}", res.cpdag.undirected_edges().len());
+    println!("corr time        : {:.3}s", res.corr_seconds);
+    println!("skeleton time    : {:.3}s", res.skeleton.total_seconds());
+    println!("orient time      : {:.3}s", res.orient_seconds);
+    println!("total time       : {:.3}s", res.total_seconds());
+    println!("CI tests         : {}", res.skeleton.total_tests());
+    println!("-- per level --");
+    for (ls, (lvl, share)) in res
+        .skeleton
+        .levels
+        .iter()
+        .zip(level_time_shares(&res.skeleton.levels))
+    {
+        println!(
+            "level {lvl}: tests={} removed={} edges_after={} time={:.3}s ({share:.1}%)",
+            ls.tests, ls.removed, ls.edges_after, ls.seconds
+        );
+    }
+    if let Some(truth) = truth {
+        let m = skeleton_metrics(&res.skeleton.graph.snapshot(), &truth, data.n);
+        println!("-- vs ground truth --");
+        println!(
+            "TP={} FP={} FN={} precision={:.3} recall={:.3} F1={:.3}",
+            m.tp, m.fp, m.fn_, m.precision, m.recall, m.f1
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,139 @@
+//! Minimal CSV reader/writer for numeric data matrices (samples × vars).
+//!
+//! Accepts an optional header row (detected by non-numeric first field),
+//! comma / tab / semicolon separators, and blank-line tolerance. This is
+//! the `read.csv` analog of the R pcalg workflow the paper integrates
+//! with.
+
+use crate::stats::corr::DataMatrix;
+use anyhow::{bail, Context, Result};
+
+/// Parse CSV text into a data matrix (+ optional column names).
+pub fn parse_csv(text: &str) -> Result<(DataMatrix, Option<Vec<String>>)> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut header: Option<Vec<String>> = None;
+    let mut n: Option<usize> = None;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let sep = if line.contains('\t') {
+            '\t'
+        } else if line.contains(';') && !line.contains(',') {
+            ';'
+        } else {
+            ','
+        };
+        let fields: Vec<&str> = line.split(sep).map(|f| f.trim()).collect();
+        if rows.is_empty() && header.is_none() {
+            // header detection: any non-numeric field
+            if fields.iter().any(|f| f.parse::<f64>().is_err()) {
+                header = Some(fields.iter().map(|s| s.to_string()).collect());
+                n = Some(fields.len());
+                continue;
+            }
+        }
+        let vals: Result<Vec<f64>> = fields
+            .iter()
+            .map(|f| {
+                f.parse::<f64>()
+                    .with_context(|| format!("line {}: bad number {f:?}", lineno + 1))
+            })
+            .collect();
+        let vals = vals?;
+        if let Some(nn) = n {
+            if vals.len() != nn {
+                bail!(
+                    "line {}: expected {} fields, got {}",
+                    lineno + 1,
+                    nn,
+                    vals.len()
+                );
+            }
+        } else {
+            n = Some(vals.len());
+        }
+        rows.push(vals);
+    }
+    let n = n.context("empty csv")?;
+    let m = rows.len();
+    if m == 0 {
+        bail!("csv has a header but no data rows");
+    }
+    let mut x = Vec::with_capacity(m * n);
+    for r in rows {
+        x.extend(r);
+    }
+    Ok((DataMatrix::new(x, m, n), header))
+}
+
+/// Load a CSV file from disk.
+pub fn load_csv(path: &std::path::Path) -> Result<(DataMatrix, Option<Vec<String>>)> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading {}", path.display()))?;
+    parse_csv(&text)
+}
+
+/// Write a data matrix as CSV (with v0..v{n-1} header).
+pub fn write_csv(path: &std::path::Path, data: &DataMatrix) -> Result<()> {
+    use std::io::Write;
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut w = std::io::BufWriter::new(f);
+    let names: Vec<String> = (0..data.n).map(|i| format!("v{i}")).collect();
+    writeln!(w, "{}", names.join(","))?;
+    for s in 0..data.m {
+        let row: Vec<String> = (0..data.n).map(|v| format!("{}", data.at(s, v))).collect();
+        writeln!(w, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_plain_csv() {
+        let (d, h) = parse_csv("1,2,3\n4,5,6\n").unwrap();
+        assert!(h.is_none());
+        assert_eq!((d.m, d.n), (2, 3));
+        assert_eq!(d.at(1, 2), 6.0);
+    }
+
+    #[test]
+    fn parses_header_and_tabs() {
+        let (d, h) = parse_csv("a\tb\n1\t2\n3\t4\n").unwrap();
+        assert_eq!(h.unwrap(), vec!["a", "b"]);
+        assert_eq!((d.m, d.n), (2, 2));
+    }
+
+    #[test]
+    fn skips_comments_and_blank_lines() {
+        let (d, _) = parse_csv("# comment\n1,2\n\n3,4\n").unwrap();
+        assert_eq!(d.m, 2);
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        assert!(parse_csv("1,2\n3\n").is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(parse_csv("1,2\nx,y\n").is_err());
+        assert!(parse_csv("").is_err());
+    }
+
+    #[test]
+    fn roundtrip_via_file() {
+        let d = DataMatrix::new(vec![1.5, -2.0, 0.25, 3.0], 2, 2);
+        let tmp = std::env::temp_dir().join("cupc_test_roundtrip.csv");
+        write_csv(&tmp, &d).unwrap();
+        let (d2, h) = load_csv(&tmp).unwrap();
+        assert_eq!(h.unwrap(), vec!["v0", "v1"]);
+        assert_eq!(d.x, d2.x);
+        std::fs::remove_file(&tmp).ok();
+    }
+}

@@ -1,0 +1,3 @@
+//! Data ingestion: CSV loading for observational data matrices.
+
+pub mod csv;

@@ -1,0 +1,120 @@
+//! Fig. 10: scalability of cuPC-E / cuPC-S over (a) the number of
+//! variables n, (b) the sample size m, (c) the graph density d —
+//! 10 random ER graphs per point (paper §5.6), box-plot quartiles.
+
+use super::{quartiles, ExpOpts, Scale};
+use crate::sim::datasets;
+use crate::skeleton::{run as run_skeleton, Config, Variant};
+use crate::stats::corr::correlation_matrix;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub x: f64,
+    pub variant: &'static str,
+    pub q1: f64,
+    pub med: f64,
+    pub q3: f64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sweep {
+    N,
+    M,
+    D,
+}
+
+impl Sweep {
+    pub fn parse(s: &str) -> Option<Sweep> {
+        Some(match s {
+            "n" => Sweep::N,
+            "m" => Sweep::M,
+            "d" => Sweep::D,
+            _ => return None,
+        })
+    }
+}
+
+/// Sweep parameters: paper values, or ~10x smaller in Small scale.
+pub fn sweep_points(sweep: Sweep, scale: Scale) -> Vec<(usize, usize, f64)> {
+    // returns (n, m, d) per point
+    match (sweep, scale) {
+        (Sweep::N, Scale::Paper) => [1000usize, 2000, 3000, 4000]
+            .iter()
+            .map(|&n| (n, 10000, 0.1))
+            .collect(),
+        (Sweep::N, Scale::Small) => [100usize, 200, 300, 400]
+            .iter()
+            .map(|&n| (n, 1000, 0.1))
+            .collect(),
+        (Sweep::M, Scale::Paper) => [2000usize, 4000, 6000, 8000, 10000]
+            .iter()
+            .map(|&m| (1000, m, 0.1))
+            .collect(),
+        (Sweep::M, Scale::Small) => [200usize, 400, 600, 800, 1000]
+            .iter()
+            .map(|&m| (100, m, 0.1))
+            .collect(),
+        (Sweep::D, Scale::Paper) => [0.1, 0.2, 0.3, 0.4, 0.5]
+            .iter()
+            .map(|&d| (1000, 10000, d))
+            .collect(),
+        (Sweep::D, Scale::Small) => [0.1, 0.2, 0.3, 0.4, 0.5]
+            .iter()
+            .map(|&d| (100, 1000, d))
+            .collect(),
+    }
+}
+
+pub fn run(opts: &ExpOpts, sweep: Sweep, graphs_per_point: usize) -> Result<Vec<Point>> {
+    let mut out = Vec::new();
+    for (n, m, d) in sweep_points(sweep, opts.scale) {
+        let x = match sweep {
+            Sweep::N => n as f64,
+            Sweep::M => m as f64,
+            Sweep::D => d,
+        };
+        for (variant, label) in [(Variant::CupcE, "cuPC-E"), (Variant::CupcS, "cuPC-S")] {
+            let mut times = Vec::new();
+            for g in 0..graphs_per_point.max(1) {
+                let ds = datasets::generate_er(n, m, d, 1000 + g as u64);
+                let corr = correlation_matrix(&ds.data, opts.base_config().threads);
+                let cfg = Config {
+                    variant,
+                    ..opts.base_config()
+                };
+                let res = run_skeleton(&corr, n, m, &cfg)?;
+                times.push(res.total_seconds());
+            }
+            let (q1, med, q3) = quartiles(&times);
+            out.push(Point {
+                x,
+                variant: label,
+                q1,
+                med,
+                q3,
+            });
+        }
+    }
+    Ok(out)
+}
+
+pub fn print(points: &[Point], sweep: Sweep) {
+    let axis = match sweep {
+        Sweep::N => "n (variables)",
+        Sweep::M => "m (samples)",
+        Sweep::D => "d (density)",
+    };
+    println!("== Fig. 10 analog: runtime vs {axis} (box quartiles, seconds) ==");
+    println!(
+        "{:>12} {:<8} {:>10} {:>10} {:>10}",
+        axis, "variant", "q1", "median", "q3"
+    );
+    for p in points {
+        println!(
+            "{:>12} {:<8} {:>10.3} {:>10.3} {:>10.3}",
+            p.x, p.variant, p.q1, p.med, p.q3
+        );
+    }
+    println!("(paper: runtime grows with n and d, ~linear in m; cuPC-S dominates cuPC-E throughout)");
+}

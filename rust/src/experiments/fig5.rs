@@ -1,0 +1,63 @@
+//! Fig. 5: cuPC-E and cuPC-S vs the two baseline GPU schedules.
+//! Bars are runtime ratios baseline/cuPC (higher = cuPC faster).
+
+use super::{median, ExpOpts};
+use crate::sim::datasets;
+use crate::skeleton::{run as run_skeleton, Config, Variant};
+use crate::stats::corr::correlation_matrix;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub dataset: String,
+    pub b1_over_e: f64,
+    pub b2_over_e: f64,
+    pub b1_over_s: f64,
+    pub b2_over_s: f64,
+}
+
+pub fn run(opts: &ExpOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for name in opts.dataset_names() {
+        let ds = datasets::generate(datasets::spec(&name).unwrap());
+        let corr = correlation_matrix(&ds.data, opts.base_config().threads);
+        let (n, m) = (ds.data.n, ds.data.m);
+        let time_of = |v: Variant| -> Result<f64> {
+            let cfg = Config {
+                variant: v,
+                ..opts.base_config()
+            };
+            let times: Result<Vec<f64>> = (0..opts.reps.max(1))
+                .map(|_| Ok(run_skeleton(&corr, n, m, &cfg)?.total_seconds()))
+                .collect();
+            Ok(median(&times?))
+        };
+        let te = time_of(Variant::CupcE)?;
+        let ts = time_of(Variant::CupcS)?;
+        let tb1 = time_of(Variant::Baseline1)?;
+        let tb2 = time_of(Variant::Baseline2)?;
+        rows.push(Row {
+            dataset: name,
+            b1_over_e: tb1 / te,
+            b2_over_e: tb2 / te,
+            b1_over_s: tb1 / ts,
+            b2_over_s: tb2 / ts,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Row]) {
+    println!("== Fig. 5 analog: speedup of cuPC over baseline GPU schedules ==");
+    println!(
+        "{:<22} {:>10} {:>10} {:>10} {:>10}",
+        "dataset", "B1/cuPC-E", "B2/cuPC-E", "B1/cuPC-S", "B2/cuPC-S"
+    );
+    for r in rows {
+        println!(
+            "{:<22} {:>9.2}x {:>9.2}x {:>9.2}x {:>9.2}x",
+            r.dataset, r.b1_over_e, r.b2_over_e, r.b1_over_s, r.b2_over_s
+        );
+    }
+    println!("(paper: cuPC-E 1.3–3.9x over B1, 1.8–3.2x over B2; cuPC-S up to 45.8x/20.6x on DREAM5)");
+}

@@ -1,0 +1,117 @@
+//! Fig. 7: cuPC-E configuration heat maps — runtime of (β, γ) configs
+//! relative to the paper-selected cuPC-E-2-32, over β,γ ∈ {1,2,…,256}
+//! with 32 ≤ β·γ ≤ 256.
+
+use super::{median, ExpOpts};
+use crate::sim::datasets;
+use crate::skeleton::{run as run_skeleton, Config, Variant};
+use crate::stats::corr::correlation_matrix;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub beta: usize,
+    pub gamma: usize,
+    /// runtime(selected) / runtime(this): >1 = faster than selected
+    pub speed_ratio: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Map {
+    pub dataset: String,
+    pub cells: Vec<Cell>,
+}
+
+pub const POWERS: [usize; 9] = [1, 2, 4, 8, 16, 32, 64, 128, 256];
+
+pub fn configs() -> Vec<(usize, usize)> {
+    let mut v = Vec::new();
+    for &beta in &POWERS {
+        for &gamma in &POWERS {
+            let prod = beta * gamma;
+            if (32..=256).contains(&prod) {
+                v.push((beta, gamma));
+            }
+        }
+    }
+    v
+}
+
+pub fn run(opts: &ExpOpts, datasets_filter: Option<&[&str]>) -> Result<Vec<Map>> {
+    let names = opts.dataset_names();
+    let selected: Vec<String> = match datasets_filter {
+        Some(f) => names
+            .into_iter()
+            .filter(|n| f.iter().any(|x| n.starts_with(x)))
+            .collect(),
+        None => names,
+    };
+    let mut maps = Vec::new();
+    for name in selected {
+        let ds = datasets::generate(datasets::spec(&name).unwrap());
+        let corr = correlation_matrix(&ds.data, opts.base_config().threads);
+        let (n, m) = (ds.data.n, ds.data.m);
+        let time_of = |beta: usize, gamma: usize| -> Result<f64> {
+            let cfg = Config {
+                variant: Variant::CupcE,
+                beta,
+                gamma,
+                ..opts.base_config()
+            };
+            let times: Result<Vec<f64>> = (0..opts.reps.max(1))
+                .map(|_| Ok(run_skeleton(&corr, n, m, &cfg)?.total_seconds()))
+                .collect();
+            Ok(median(&times?))
+        };
+        let t_sel = time_of(2, 32)?;
+        let mut cells = Vec::new();
+        for (beta, gamma) in configs() {
+            let t = time_of(beta, gamma)?;
+            cells.push(Cell {
+                beta,
+                gamma,
+                speed_ratio: t_sel / t,
+            });
+        }
+        maps.push(Map {
+            dataset: name,
+            cells,
+        });
+    }
+    Ok(maps)
+}
+
+pub fn print(maps: &[Map]) {
+    println!("== Fig. 7 analog: cuPC-E (β,γ) speed vs selected cuPC-E-2-32 ==");
+    for map in maps {
+        println!("--- {} (ratio >1 ⇒ faster than 2-32) ---", map.dataset);
+        let betas: Vec<usize> = {
+            let mut b: Vec<usize> = map.cells.iter().map(|c| c.beta).collect();
+            b.sort_unstable();
+            b.dedup();
+            b
+        };
+        let gammas: Vec<usize> = {
+            let mut g: Vec<usize> = map.cells.iter().map(|c| c.gamma).collect();
+            g.sort_unstable();
+            g.dedup();
+            g
+        };
+        print!("{:>6}", "β\\γ");
+        for &g in &gammas {
+            print!(" {:>6}", g);
+        }
+        println!();
+        for &b in &betas {
+            print!("{:>6}", b);
+            for &g in &gammas {
+                match map.cells.iter().find(|c| c.beta == b && c.gamma == g) {
+                    Some(c) => print!(" {:>6.2}", c.speed_ratio),
+                    None => print!(" {:>6}", "-"),
+                }
+            }
+            println!();
+        }
+    }
+    println!("(paper: variation 0.3x–1.3x; dense graphs favour larger γ, sparse favour smaller)");
+}

@@ -1,0 +1,94 @@
+//! Fig. 8: cuPC-S configuration heat maps — runtime of (θ, δ) configs
+//! relative to the paper-selected cuPC-S-64-2, θ ∈ {32,64,128,256},
+//! δ ∈ {1,2,4,8}.
+
+use super::{median, ExpOpts};
+use crate::sim::datasets;
+use crate::skeleton::{run as run_skeleton, Config, Variant};
+use crate::stats::corr::correlation_matrix;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Cell {
+    pub theta: usize,
+    pub delta: usize,
+    pub speed_ratio: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct Map {
+    pub dataset: String,
+    pub cells: Vec<Cell>,
+}
+
+pub const THETAS: [usize; 4] = [32, 64, 128, 256];
+pub const DELTAS: [usize; 4] = [1, 2, 4, 8];
+
+pub fn run(opts: &ExpOpts, datasets_filter: Option<&[&str]>) -> Result<Vec<Map>> {
+    let names = opts.dataset_names();
+    let selected: Vec<String> = match datasets_filter {
+        Some(f) => names
+            .into_iter()
+            .filter(|n| f.iter().any(|x| n.starts_with(x)))
+            .collect(),
+        None => names,
+    };
+    let mut maps = Vec::new();
+    for name in selected {
+        let ds = datasets::generate(datasets::spec(&name).unwrap());
+        let corr = correlation_matrix(&ds.data, opts.base_config().threads);
+        let (n, m) = (ds.data.n, ds.data.m);
+        let time_of = |theta: usize, delta: usize| -> Result<f64> {
+            let cfg = Config {
+                variant: Variant::CupcS,
+                theta,
+                delta,
+                ..opts.base_config()
+            };
+            let times: Result<Vec<f64>> = (0..opts.reps.max(1))
+                .map(|_| Ok(run_skeleton(&corr, n, m, &cfg)?.total_seconds()))
+                .collect();
+            Ok(median(&times?))
+        };
+        let t_sel = time_of(64, 2)?;
+        let mut cells = Vec::new();
+        for &theta in &THETAS {
+            for &delta in &DELTAS {
+                let t = time_of(theta, delta)?;
+                cells.push(Cell {
+                    theta,
+                    delta,
+                    speed_ratio: t_sel / t,
+                });
+            }
+        }
+        maps.push(Map {
+            dataset: name,
+            cells,
+        });
+    }
+    Ok(maps)
+}
+
+pub fn print(maps: &[Map]) {
+    println!("== Fig. 8 analog: cuPC-S (θ,δ) speed vs selected cuPC-S-64-2 ==");
+    for map in maps {
+        println!("--- {} (ratio >1 ⇒ faster than 64-2) ---", map.dataset);
+        print!("{:>6}", "θ\\δ");
+        for &d in &DELTAS {
+            print!(" {:>6}", d);
+        }
+        println!();
+        for &t in &THETAS {
+            print!("{:>6}", t);
+            for &d in &DELTAS {
+                match map.cells.iter().find(|c| c.theta == t && c.delta == d) {
+                    Some(c) => print!(" {:>6.2}", c.speed_ratio),
+                    None => print!(" {:>6}", "-"),
+                }
+            }
+            println!();
+        }
+    }
+    println!("(paper: variation 0.7x–1.2x — less sensitive than cuPC-E because blocks stay loaded)");
+}

@@ -1,0 +1,118 @@
+//! Experiment harness: one module per paper table/figure (see DESIGN.md
+//! §5 for the index). Each regenerates the corresponding artifact's rows
+//! on this testbed — shapes (who wins, by what factor, where crossovers
+//! fall) are the reproduction target; absolute numbers re-baseline to
+//! this substrate (XLA-CPU PJRT, 1-core host; see EXPERIMENTS.md).
+//!
+//! Used by both `cupc experiment <id>` and the `cargo bench` targets.
+
+pub mod ablation;
+pub mod fig10;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+
+use crate::skeleton::EngineKind;
+use std::path::PathBuf;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Scale {
+    /// mini datasets (n scaled ~8× down) — CI-image friendly
+    Small,
+    /// the paper's exact (n, m) — hours of runtime
+    Paper,
+}
+
+#[derive(Clone, Debug)]
+pub struct ExpOpts {
+    pub scale: Scale,
+    pub engine: EngineKind,
+    pub reps: usize,
+    pub artifacts: PathBuf,
+}
+
+impl Default for ExpOpts {
+    fn default() -> Self {
+        ExpOpts {
+            scale: Scale::Small,
+            engine: EngineKind::Native,
+            reps: 1,
+            artifacts: PathBuf::from("artifacts"),
+        }
+    }
+}
+
+impl ExpOpts {
+    pub fn dataset_names(&self) -> Vec<String> {
+        crate::sim::datasets::TABLE2_ORDER
+            .iter()
+            .map(|b| match self.scale {
+                Scale::Small => format!("{b}-mini"),
+                Scale::Paper => b.to_string(),
+            })
+            .collect()
+    }
+
+    pub fn base_config(&self) -> crate::skeleton::Config {
+        crate::skeleton::Config {
+            engine: self.engine,
+            artifacts_dir: self.artifacts.clone(),
+            ..crate::skeleton::Config::default()
+        }
+    }
+}
+
+/// Median of a sample (sorted copy).
+pub fn median(xs: &[f64]) -> f64 {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if v.is_empty() {
+        return f64::NAN;
+    }
+    v[v.len() / 2]
+}
+
+/// Quartiles (q1, median, q3) for box plots (Fig. 10).
+pub fn quartiles(xs: &[f64]) -> (f64, f64, f64) {
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let q = |p: f64| -> f64 {
+        if v.is_empty() {
+            return f64::NAN;
+        }
+        let idx = p * (v.len() - 1) as f64;
+        let lo = idx.floor() as usize;
+        let hi = idx.ceil() as usize;
+        let frac = idx - lo as f64;
+        v[lo] * (1.0 - frac) + v[hi] * frac
+    };
+    (q(0.25), q(0.5), q(0.75))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_and_quartiles() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        let (q1, q2, q3) = quartiles(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(q2, 3.0);
+        assert_eq!(q1, 2.0);
+        assert_eq!(q3, 4.0);
+    }
+
+    #[test]
+    fn dataset_names_respect_scale() {
+        let small = ExpOpts::default();
+        assert!(small.dataset_names()[0].ends_with("-mini"));
+        let paper = ExpOpts {
+            scale: Scale::Paper,
+            ..ExpOpts::default()
+        };
+        assert_eq!(paper.dataset_names()[0], "nci60");
+    }
+}

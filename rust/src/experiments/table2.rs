@@ -1,0 +1,96 @@
+//! Table 2: serial vs multicore-CPU vs cuPC-E vs cuPC-S runtimes and
+//! speedup ratios on the six benchmark datasets.
+//!
+//! Mapping to the paper's rows (T1..T5):
+//!   T1 "Stable (R)"        — not reproducible (no R runtime offline);
+//!                            reported as n/a. T1/T2 is instead shown as
+//!                            serial/parallel-CPU, the paper's multicore
+//!                            speedup notion on this host.
+//!   T2 "Parallel-PC"       — our threaded CPU engine.
+//!   T3 "Stable.fast (C)"   — our serial native engine.
+//!   T4 cuPC-E, T5 cuPC-S   — the batched schedules.
+
+use super::{median, ExpOpts};
+use crate::sim::datasets;
+use crate::skeleton::{run as run_skeleton, Config, Variant};
+use crate::stats::corr::correlation_matrix;
+use anyhow::Result;
+
+#[derive(Debug, Clone)]
+pub struct Row {
+    pub dataset: String,
+    pub t2_parallel: f64,
+    pub t3_serial: f64,
+    pub t4_cupc_e: f64,
+    pub t5_cupc_s: f64,
+    pub edges: usize,
+    pub levels: usize,
+}
+
+pub fn run(opts: &ExpOpts) -> Result<Vec<Row>> {
+    let mut rows = Vec::new();
+    for name in opts.dataset_names() {
+        let ds = datasets::generate(datasets::spec(&name).unwrap());
+        let corr = correlation_matrix(&ds.data, opts.base_config().threads);
+        let (n, m) = (ds.data.n, ds.data.m);
+        let time_variant = |v: Variant| -> Result<(f64, usize, usize)> {
+            let cfg = Config {
+                variant: v,
+                ..opts.base_config()
+            };
+            let mut times = Vec::new();
+            let mut edges = 0;
+            let mut levels = 0;
+            for _ in 0..opts.reps.max(1) {
+                let res = run_skeleton(&corr, n, m, &cfg)?;
+                times.push(res.total_seconds());
+                edges = res.graph.n_edges();
+                levels = res.levels.len();
+            }
+            Ok((median(&times), edges, levels))
+        };
+        let (t3, edges, levels) = time_variant(Variant::Serial)?;
+        let (t2, e2, _) = time_variant(Variant::ParallelCpu)?;
+        let (t4, e4, _) = time_variant(Variant::CupcE)?;
+        let (t5, e5, _) = time_variant(Variant::CupcS)?;
+        assert_eq!(edges, e2, "{name}: parallel CPU skeleton differs");
+        assert_eq!(edges, e4, "{name}: cuPC-E skeleton differs");
+        assert_eq!(edges, e5, "{name}: cuPC-S skeleton differs");
+        rows.push(Row {
+            dataset: name,
+            t2_parallel: t2,
+            t3_serial: t3,
+            t4_cupc_e: t4,
+            t5_cupc_s: t5,
+            edges,
+            levels,
+        });
+    }
+    Ok(rows)
+}
+
+pub fn print(rows: &[Row]) {
+    println!("== Table 2 analog: runtimes (seconds) and speedups ==");
+    println!(
+        "{:<22} {:>12} {:>12} {:>10} {:>10} {:>8} {:>9} {:>9}",
+        "dataset", "parCPU(T2)", "serial(T3)", "cuPC-E", "cuPC-S", "edges", "T3/T4", "T3/T5"
+    );
+    let mut geo_e = 0.0f64;
+    let mut geo_s = 0.0f64;
+    for r in rows {
+        let se = r.t3_serial / r.t4_cupc_e;
+        let ss = r.t3_serial / r.t5_cupc_s;
+        geo_e += se.max(1e-12).ln();
+        geo_s += ss.max(1e-12).ln();
+        println!(
+            "{:<22} {:>12.3} {:>12.3} {:>10.3} {:>10.3} {:>8} {:>8.1}x {:>8.1}x",
+            r.dataset, r.t2_parallel, r.t3_serial, r.t4_cupc_e, r.t5_cupc_s, r.edges, se, ss
+        );
+    }
+    let nn = rows.len().max(1) as f64;
+    println!(
+        "geometric-mean speedup: cuPC-E {:.1}x, cuPC-S {:.1}x  (paper: 525x / 1296x on GTX-1080 vs 1-core Xeon)",
+        (geo_e / nn).exp(),
+        (geo_s / nn).exp()
+    );
+}

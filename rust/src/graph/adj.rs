@@ -1,0 +1,193 @@
+//! Dense symmetric adjacency matrix with lock-free concurrent edge
+//! removal — the Rust analogue of cuPC's `A_G` updated by many threads.
+//!
+//! Edges are stored as `AtomicU8` so the threaded CPU engine and any
+//! future multi-worker coordinator can remove edges while other workers
+//! keep testing; removal is monotone (1 → 0 only), which is exactly the
+//! property PC-stable's order-independence relies on.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+pub struct AdjMatrix {
+    n: usize,
+    a: Vec<AtomicU8>,
+}
+
+impl AdjMatrix {
+    /// Fully connected undirected graph over n variables (no self loops).
+    pub fn complete(n: usize) -> Self {
+        let mut a = Vec::with_capacity(n * n);
+        for i in 0..n {
+            for j in 0..n {
+                a.push(AtomicU8::new(u8::from(i != j)));
+            }
+        }
+        AdjMatrix { n, a }
+    }
+
+    /// Empty graph.
+    pub fn empty(n: usize) -> Self {
+        let a = (0..n * n).map(|_| AtomicU8::new(0)).collect();
+        AdjMatrix { n, a }
+    }
+
+    /// Build from a row-major 0/1 matrix (symmetrized with OR).
+    pub fn from_dense(d: &[u8], n: usize) -> Self {
+        assert_eq!(d.len(), n * n);
+        let g = AdjMatrix::empty(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && (d[i * n + j] != 0 || d[j * n + i] != 0) {
+                    g.a[i * n + j].store(1, Ordering::Relaxed);
+                }
+            }
+        }
+        g
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        self.a[i * self.n + j].load(Ordering::Relaxed) != 0
+    }
+
+    /// Remove (i,j) symmetrically. Returns true if this call removed it
+    /// (false if it was already gone — the "another thread won" case).
+    pub fn remove_edge(&self, i: usize, j: usize) -> bool {
+        let was = self.a[i * self.n + j].swap(0, Ordering::Relaxed);
+        self.a[j * self.n + i].store(0, Ordering::Relaxed);
+        was != 0
+    }
+
+    pub fn add_edge(&self, i: usize, j: usize) {
+        assert_ne!(i, j, "no self loops");
+        self.a[i * self.n + j].store(1, Ordering::Relaxed);
+        self.a[j * self.n + i].store(1, Ordering::Relaxed);
+    }
+
+    pub fn degree(&self, i: usize) -> usize {
+        (0..self.n).filter(|&j| self.has_edge(i, j)).count()
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&j| self.has_edge(i, j)).collect()
+    }
+
+    pub fn n_edges(&self) -> usize {
+        let mut c = 0;
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.has_edge(i, j) {
+                    c += 1;
+                }
+            }
+        }
+        c
+    }
+
+    pub fn edges(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.has_edge(i, j) {
+                    v.push((i, j));
+                }
+            }
+        }
+        v
+    }
+
+    /// Snapshot into a plain dense matrix — the `G → G'` copy of
+    /// PC-stable (Algorithm 1 line 5): conditioning sets are drawn from
+    /// the frozen copy while removals mutate the live graph.
+    pub fn snapshot(&self) -> Vec<u8> {
+        self.a.iter().map(|x| x.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Deep copy (used by engines that restart from the same input).
+    pub fn clone_graph(&self) -> AdjMatrix {
+        AdjMatrix::from_dense(&self.snapshot(), self.n)
+    }
+}
+
+impl std::fmt::Debug for AdjMatrix {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "AdjMatrix(n={}, edges={})", self.n, self.n_edges())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complete_graph_edge_count() {
+        let g = AdjMatrix::complete(10);
+        assert_eq!(g.n_edges(), 45);
+        assert_eq!(g.max_degree(), 9);
+        assert!(!g.has_edge(3, 3));
+    }
+
+    #[test]
+    fn remove_is_symmetric_and_idempotent() {
+        let g = AdjMatrix::complete(4);
+        assert!(g.remove_edge(1, 2));
+        assert!(!g.has_edge(1, 2));
+        assert!(!g.has_edge(2, 1));
+        assert!(!g.remove_edge(1, 2), "second removal must report false");
+        assert!(!g.remove_edge(2, 1));
+        assert_eq!(g.n_edges(), 5);
+    }
+
+    #[test]
+    fn snapshot_is_frozen() {
+        let g = AdjMatrix::complete(3);
+        let snap = g.snapshot();
+        g.remove_edge(0, 1);
+        assert_eq!(snap[1], 1, "snapshot must not see later removals");
+        assert!(!g.has_edge(0, 1));
+    }
+
+    #[test]
+    fn neighbors_sorted() {
+        let g = AdjMatrix::complete(5);
+        g.remove_edge(2, 0);
+        g.remove_edge(2, 4);
+        assert_eq!(g.neighbors(2), vec![1, 3]);
+    }
+
+    #[test]
+    fn from_dense_symmetrizes() {
+        let mut d = vec![0u8; 9];
+        d[1] = 1; // only 0->1 set
+        let g = AdjMatrix::from_dense(&d, 3);
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 0));
+        assert_eq!(g.n_edges(), 1);
+    }
+
+    #[test]
+    fn concurrent_removal_exactly_one_winner() {
+        let g = std::sync::Arc::new(AdjMatrix::complete(64));
+        let wins = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let g = g.clone();
+                let wins = wins.clone();
+                s.spawn(move || {
+                    if g.remove_edge(10, 20) {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(wins.load(Ordering::Relaxed), 1);
+    }
+}

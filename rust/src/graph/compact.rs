@@ -1,0 +1,135 @@
+//! The compacted adjacency `A'_G` of the paper (Fig. 2): for every row i,
+//! the sorted list of current neighbors. Built from a frozen snapshot of
+//! `A_G` at the start of each level (the `G'` of PC-stable), it is the
+//! structure conditioning sets are drawn from.
+//!
+//! The paper compacts on the GPU with a parallel scan; here compaction is
+//! a cheap O(n²) pass the coordinator performs once per level (measured
+//! in the level timings, as the paper includes it too).
+
+/// Compacted adjacency: CSR-like, rows sorted ascending.
+#[derive(Clone, Debug)]
+pub struct CompactAdj {
+    n: usize,
+    /// concatenated neighbor lists
+    items: Vec<u32>,
+    /// row offsets, len n+1
+    offsets: Vec<u32>,
+}
+
+impl CompactAdj {
+    /// Build from a dense row-major 0/1 snapshot.
+    pub fn from_snapshot(snap: &[u8], n: usize) -> Self {
+        assert_eq!(snap.len(), n * n);
+        let mut items = Vec::new();
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        for i in 0..n {
+            for j in 0..n {
+                if snap[i * n + j] != 0 {
+                    items.push(j as u32);
+                }
+            }
+            offsets.push(items.len() as u32);
+        }
+        CompactAdj { n, items, offsets }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Neighbors of row i (sorted).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[u32] {
+        &self.items[self.offsets[i] as usize..self.offsets[i + 1] as usize]
+    }
+
+    /// n'_i — number of neighbors of i.
+    #[inline]
+    pub fn row_len(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// n' = max_i n'_i.
+    pub fn max_row_len(&self) -> usize {
+        (0..self.n).map(|i| self.row_len(i)).max().unwrap_or(0)
+    }
+
+    /// Total directed entries (2 × undirected edge count).
+    pub fn total_entries(&self) -> usize {
+        self.items.len()
+    }
+
+    /// The row with j removed, materialized into `out` (the candidate
+    /// pool `adj(Vi, G') \ {Vj}` of Algorithm 1 line 8).
+    pub fn row_without(&self, i: usize, j: usize, out: &mut Vec<u32>) {
+        out.clear();
+        out.extend(self.row(i).iter().copied().filter(|&x| x as usize != j));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::adj::AdjMatrix;
+
+    fn example_graph() -> AdjMatrix {
+        // the Fig. 2 style example: 5 nodes, some removals
+        let g = AdjMatrix::complete(5);
+        g.remove_edge(0, 3);
+        g.remove_edge(1, 4);
+        g.remove_edge(2, 3);
+        g
+    }
+
+    #[test]
+    fn rows_match_neighbors() {
+        let g = example_graph();
+        let c = CompactAdj::from_snapshot(&g.snapshot(), g.n());
+        for i in 0..5 {
+            let want: Vec<u32> = g.neighbors(i).iter().map(|&x| x as u32).collect();
+            assert_eq!(c.row(i), &want[..], "row {i}");
+            assert_eq!(c.row_len(i), want.len());
+        }
+    }
+
+    #[test]
+    fn max_row_len() {
+        let g = example_graph();
+        let c = CompactAdj::from_snapshot(&g.snapshot(), g.n());
+        assert_eq!(c.max_row_len(), 3);
+        assert_eq!(c.total_entries(), 2 * g.n_edges());
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = AdjMatrix::empty(4);
+        let c = CompactAdj::from_snapshot(&g.snapshot(), 4);
+        assert_eq!(c.max_row_len(), 0);
+        assert_eq!(c.total_entries(), 0);
+        assert!(c.row(2).is_empty());
+    }
+
+    #[test]
+    fn row_without_filters() {
+        let g = example_graph();
+        let c = CompactAdj::from_snapshot(&g.snapshot(), g.n());
+        let mut out = Vec::new();
+        c.row_without(0, 2, &mut out);
+        assert_eq!(out, vec![1, 4]);
+        c.row_without(0, 9, &mut out); // j not present: row unchanged
+        assert_eq!(out, vec![1, 2, 4]);
+    }
+
+    #[test]
+    fn compaction_is_frozen_snapshot() {
+        // removals after compaction must not affect it: the G' semantics.
+        let g = example_graph();
+        let c = CompactAdj::from_snapshot(&g.snapshot(), g.n());
+        let before = c.row(0).to_vec();
+        g.remove_edge(0, 1);
+        assert_eq!(c.row(0), &before[..]);
+    }
+}

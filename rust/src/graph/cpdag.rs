@@ -1,0 +1,207 @@
+//! Completed partially directed acyclic graph (CPDAG): the mixed graph
+//! PC-stable outputs after orientation. Directed edges i→j are those
+//! oriented the same way in every DAG of the Markov equivalence class;
+//! the rest stay undirected.
+
+/// Edge mark between an ordered pair.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Mark {
+    None,
+    /// undirected i — j
+    Undirected,
+    /// directed i → j
+    Directed,
+}
+
+pub struct Cpdag {
+    n: usize,
+    /// m[i*n+j]: 0 none, 1 undirected, 2 directed i→j
+    m: Vec<u8>,
+}
+
+impl Cpdag {
+    pub fn new(n: usize) -> Self {
+        Cpdag {
+            n,
+            m: vec![0; n * n],
+        }
+    }
+
+    /// Start from an undirected skeleton snapshot.
+    pub fn from_skeleton(snap: &[u8], n: usize) -> Self {
+        let mut g = Cpdag::new(n);
+        for i in 0..n {
+            for j in 0..n {
+                if i != j && snap[i * n + j] != 0 {
+                    g.m[i * n + j] = 1;
+                }
+            }
+        }
+        g
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn mark(&self, i: usize, j: usize) -> Mark {
+        match self.m[i * self.n + j] {
+            0 => Mark::None,
+            1 => Mark::Undirected,
+            _ => Mark::Directed,
+        }
+    }
+
+    /// Any connection between i and j?
+    pub fn adjacent(&self, i: usize, j: usize) -> bool {
+        self.m[i * self.n + j] != 0 || self.m[j * self.n + i] != 0
+    }
+
+    pub fn is_undirected(&self, i: usize, j: usize) -> bool {
+        self.m[i * self.n + j] == 1 && self.m[j * self.n + i] == 1
+    }
+
+    /// i → j (and not j → i)?
+    pub fn is_directed(&self, i: usize, j: usize) -> bool {
+        self.m[i * self.n + j] == 2
+    }
+
+    /// Orient i → j, overwriting the undirected mark.
+    pub fn orient(&mut self, i: usize, j: usize) {
+        self.m[i * self.n + j] = 2;
+        self.m[j * self.n + i] = 0;
+    }
+
+    /// Orient only if currently undirected. Returns whether it acted.
+    pub fn orient_if_undirected(&mut self, i: usize, j: usize) -> bool {
+        if self.is_undirected(i, j) {
+            self.orient(i, j);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn undirected_edges(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for i in 0..self.n {
+            for j in (i + 1)..self.n {
+                if self.is_undirected(i, j) {
+                    v.push((i, j));
+                }
+            }
+        }
+        v
+    }
+
+    pub fn directed_edges(&self) -> Vec<(usize, usize)> {
+        let mut v = Vec::new();
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if self.is_directed(i, j) {
+                    v.push((i, j));
+                }
+            }
+        }
+        v
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.undirected_edges().len() + self.directed_edges().len()
+    }
+
+    /// Parents of j (i with i→j).
+    pub fn parents(&self, j: usize) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.is_directed(i, j)).collect()
+    }
+
+    /// All neighbors regardless of mark.
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        (0..self.n).filter(|&j| self.adjacent(i, j)).collect()
+    }
+
+    /// Skeleton as dense 0/1 (symmetric).
+    pub fn skeleton(&self) -> Vec<u8> {
+        let mut s = vec![0u8; self.n * self.n];
+        for i in 0..self.n {
+            for j in 0..self.n {
+                if self.adjacent(i, j) {
+                    s[i * self.n + j] = 1;
+                }
+            }
+        }
+        s
+    }
+
+    /// Equality on marks (for order-independence tests).
+    pub fn same_as(&self, other: &Cpdag) -> bool {
+        self.n == other.n && self.m == other.m
+    }
+}
+
+impl std::fmt::Debug for Cpdag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Cpdag(n={}, directed={}, undirected={})",
+            self.n,
+            self.directed_edges().len(),
+            self.undirected_edges().len()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn from_skeleton_all_undirected() {
+        let snap = vec![0, 1, 1, 1, 0, 1, 1, 1, 0];
+        let g = Cpdag::from_skeleton(&snap, 3);
+        assert_eq!(g.undirected_edges().len(), 3);
+        assert!(g.directed_edges().is_empty());
+    }
+
+    #[test]
+    fn orient_replaces_undirected() {
+        let snap = vec![0, 1, 1, 0];
+        let mut g = Cpdag::from_skeleton(&snap, 2);
+        assert!(g.is_undirected(0, 1));
+        g.orient(0, 1);
+        assert!(g.is_directed(0, 1));
+        assert!(!g.is_directed(1, 0));
+        assert!(!g.is_undirected(0, 1));
+        assert!(g.adjacent(1, 0));
+        assert_eq!(g.parents(1), vec![0]);
+    }
+
+    #[test]
+    fn orient_if_undirected_noop_on_directed() {
+        let snap = vec![0, 1, 1, 0];
+        let mut g = Cpdag::from_skeleton(&snap, 2);
+        assert!(g.orient_if_undirected(0, 1));
+        assert!(!g.orient_if_undirected(1, 0), "must not flip an arrow");
+        assert!(g.is_directed(0, 1));
+    }
+
+    #[test]
+    fn skeleton_roundtrip() {
+        let snap = vec![0, 1, 0, 1, 0, 1, 0, 1, 0];
+        let mut g = Cpdag::from_skeleton(&snap, 3);
+        g.orient(0, 1);
+        assert_eq!(g.skeleton(), snap);
+        assert_eq!(g.n_edges(), 2);
+    }
+
+    #[test]
+    fn same_as_detects_differences() {
+        let snap = vec![0, 1, 1, 0];
+        let a = Cpdag::from_skeleton(&snap, 2);
+        let mut b = Cpdag::from_skeleton(&snap, 2);
+        assert!(a.same_as(&b));
+        b.orient(0, 1);
+        assert!(!a.same_as(&b));
+    }
+}

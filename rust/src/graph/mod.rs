@@ -1,0 +1,8 @@
+//! Graph substrate: dense adjacency with atomic edge removal, the
+//! compacted representation `A'_G` of the paper (Fig. 2), separation-set
+//! storage, and the CPDAG mixed graph produced by orientation.
+
+pub mod adj;
+pub mod compact;
+pub mod cpdag;
+pub mod sepset;

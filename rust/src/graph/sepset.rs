@@ -1,0 +1,118 @@
+//! Separation-set storage: SepSet[i,j] = the conditioning set S that
+//! rendered Vi ⊥ Vj | S during skeleton discovery. Needed by the
+//! v-structure orientation step (a v-structure i → k ← j is declared iff
+//! k ∉ SepSet(i,j)).
+//!
+//! Concurrent writers are fine: each (i,j) is written at most once per
+//! run because only the thread that *wins* the edge removal stores S
+//! (matching the paper's "store S in SepSet" right after removal).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+pub struct SepSets {
+    inner: Mutex<HashMap<(u32, u32), Vec<u32>>>,
+}
+
+impl Default for SepSets {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SepSets {
+    pub fn new() -> Self {
+        SepSets {
+            inner: Mutex::new(HashMap::new()),
+        }
+    }
+
+    fn key(i: usize, j: usize) -> (u32, u32) {
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        (a as u32, b as u32)
+    }
+
+    /// Record S for the removed edge (i,j). First write wins.
+    pub fn store(&self, i: usize, j: usize, s: &[u32]) {
+        let mut g = self.inner.lock().unwrap();
+        g.entry(Self::key(i, j)).or_insert_with(|| s.to_vec());
+    }
+
+    pub fn get(&self, i: usize, j: usize) -> Option<Vec<u32>> {
+        self.inner.lock().unwrap().get(&Self::key(i, j)).cloned()
+    }
+
+    pub fn contains(&self, i: usize, j: usize, k: usize) -> bool {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&Self::key(i, j))
+            .map(|s| s.contains(&(k as u32)))
+            .unwrap_or(false)
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic dump sorted by key (for tests / golden comparisons).
+    pub fn sorted_entries(&self) -> Vec<((u32, u32), Vec<u32>)> {
+        let g = self.inner.lock().unwrap();
+        let mut v: Vec<_> = g.iter().map(|(k, s)| (*k, s.clone())).collect();
+        v.sort();
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_and_get_symmetric() {
+        let s = SepSets::new();
+        s.store(3, 1, &[7, 9]);
+        assert_eq!(s.get(1, 3), Some(vec![7, 9]));
+        assert_eq!(s.get(3, 1), Some(vec![7, 9]));
+        assert!(s.get(1, 2).is_none());
+    }
+
+    #[test]
+    fn first_write_wins() {
+        let s = SepSets::new();
+        s.store(0, 1, &[5]);
+        s.store(1, 0, &[6]);
+        assert_eq!(s.get(0, 1), Some(vec![5]));
+    }
+
+    #[test]
+    fn contains_checks_membership() {
+        let s = SepSets::new();
+        s.store(2, 4, &[1, 3]);
+        assert!(s.contains(2, 4, 3));
+        assert!(!s.contains(2, 4, 9));
+        assert!(!s.contains(0, 1, 3), "missing pair is not separated");
+    }
+
+    #[test]
+    fn empty_set_is_stored() {
+        let s = SepSets::new();
+        s.store(0, 1, &[]);
+        assert_eq!(s.get(0, 1), Some(vec![]));
+        assert!(!s.contains(0, 1, 0));
+    }
+
+    #[test]
+    fn sorted_entries_deterministic() {
+        let s = SepSets::new();
+        s.store(5, 2, &[0]);
+        s.store(1, 3, &[4]);
+        let e = s.sorted_entries();
+        assert_eq!(e[0].0, (1, 3));
+        assert_eq!(e[1].0, (2, 5));
+    }
+}

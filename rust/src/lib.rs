@@ -1,0 +1,39 @@
+//! # cupc — parallel PC-stable causal structure learning
+//!
+//! A reproduction of *"cuPC: CUDA-based Parallel PC Algorithm for Causal
+//! Structure Learning on GPU"* (Zarebavani et al., IEEE TPDS 2019) as a
+//! three-layer Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the coordinator: the PC-stable level loop,
+//!   adjacency compaction, combination enumeration, batch packing, early
+//!   termination, sepset bookkeeping and edge orientation.
+//! * **L2/L1 (python/compile, build-time only)** — JAX computations
+//!   wrapping Pallas kernels for the CI-test hot spot, AOT-lowered to HLO
+//!   text artifacts.
+//! * **Runtime** — [`runtime`] loads the artifacts through the XLA PJRT
+//!   CPU client and executes them from the L3 hot loop. Python is never
+//!   on the request path.
+//!
+//! Entry point: [`api::pc_stable_corr`] / [`api::pc_stable_data`]
+//! (or the `cupc` binary).
+
+pub mod api;
+pub mod data;
+pub mod experiments;
+pub mod graph;
+pub mod metrics;
+pub mod orient;
+pub mod runtime;
+pub mod sim;
+pub mod skeleton;
+pub mod stats;
+pub mod util;
+
+pub mod prelude {
+    //! Convenient re-exports for downstream users.
+    pub use crate::api::{pc_stable_corr, pc_stable_data, PcResult};
+    pub use crate::graph::adj::AdjMatrix;
+    pub use crate::graph::cpdag::Cpdag;
+    pub use crate::skeleton::{Config, EngineKind, Variant};
+    pub use crate::stats::corr::correlation_matrix;
+}

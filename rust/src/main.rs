@@ -1,0 +1,21 @@
+//! `cupc` — command-line leader for the cuPC reproduction.
+//!
+//! Subcommands:
+//!   run         PC-stable on a dataset (registry name or CSV file)
+//!   simulate    generate a synthetic dataset CSV (paper §5.6 protocol)
+//!   experiment  regenerate a paper table/figure (table2, fig5..fig10)
+//!   engines     smoke-check the native and XLA engines against each other
+
+mod cmd;
+
+fn main() {
+    let args = cupc::util::cli::Args::from_env();
+    let code = match cmd::dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}

@@ -1,0 +1,166 @@
+//! Structure-recovery metrics: SHD, TDR/precision/recall/F1 on
+//! skeletons, plus level-timing aggregation helpers used by the
+//! experiment harness.
+
+use crate::graph::cpdag::Cpdag;
+use crate::skeleton::LevelStats;
+
+/// Skeleton confusion counts between an estimated dense 0/1 skeleton and
+/// the ground truth (both symmetric, n×n).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SkeletonMetrics {
+    pub tp: usize,
+    pub fp: usize,
+    pub fn_: usize,
+    pub precision: f64,
+    pub recall: f64,
+    pub f1: f64,
+    /// true discovery rate == precision (paper's TDR)
+    pub tdr: f64,
+}
+
+pub fn skeleton_metrics(est: &[u8], truth: &[u8], n: usize) -> SkeletonMetrics {
+    assert_eq!(est.len(), n * n);
+    assert_eq!(truth.len(), n * n);
+    let (mut tp, mut fp, mut fn_) = (0usize, 0usize, 0usize);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            let e = est[i * n + j] != 0;
+            let t = truth[i * n + j] != 0;
+            match (e, t) {
+                (true, true) => tp += 1,
+                (true, false) => fp += 1,
+                (false, true) => fn_ += 1,
+                _ => {}
+            }
+        }
+    }
+    let precision = if tp + fp > 0 {
+        tp as f64 / (tp + fp) as f64
+    } else {
+        1.0
+    };
+    let recall = if tp + fn_ > 0 {
+        tp as f64 / (tp + fn_) as f64
+    } else {
+        1.0
+    };
+    let f1 = if precision + recall > 0.0 {
+        2.0 * precision * recall / (precision + recall)
+    } else {
+        0.0
+    };
+    SkeletonMetrics {
+        tp,
+        fp,
+        fn_,
+        precision,
+        recall,
+        f1,
+        tdr: precision,
+    }
+}
+
+/// Structural Hamming distance between two CPDAGs: number of ordered
+/// pairs whose mark differs (missing vs undirected vs each direction),
+/// counted once per unordered pair.
+pub fn shd(a: &Cpdag, b: &Cpdag) -> usize {
+    assert_eq!(a.n(), b.n());
+    let n = a.n();
+    let code = |g: &Cpdag, i: usize, j: usize| -> u8 {
+        if g.is_undirected(i, j) {
+            1
+        } else if g.is_directed(i, j) {
+            2
+        } else if g.is_directed(j, i) {
+            3
+        } else {
+            0
+        }
+    };
+    let mut d = 0;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            if code(a, i, j) != code(b, i, j) {
+                d += 1;
+            }
+        }
+    }
+    d
+}
+
+/// Percent of total runtime per level (Fig. 6 rows).
+pub fn level_time_shares(levels: &[LevelStats]) -> Vec<(usize, f64)> {
+    let total: f64 = levels.iter().map(|l| l.seconds).sum();
+    levels
+        .iter()
+        .map(|l| {
+            (
+                l.level,
+                if total > 0.0 {
+                    100.0 * l.seconds / total
+                } else {
+                    0.0
+                },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_recovery() {
+        let t = vec![0, 1, 1, 0];
+        let m = skeleton_metrics(&t, &t, 2);
+        assert_eq!(m.tp, 1);
+        assert_eq!(m.fp, 0);
+        assert_eq!(m.f1, 1.0);
+        assert_eq!(m.tdr, 1.0);
+    }
+
+    #[test]
+    fn false_positive_counted() {
+        let truth = vec![0u8; 9];
+        let mut est = vec![0u8; 9];
+        est[1] = 1;
+        est[3] = 1;
+        let m = skeleton_metrics(&est, &truth, 3);
+        assert_eq!(m.fp, 1);
+        assert_eq!(m.tp, 0);
+        assert_eq!(m.precision, 0.0);
+    }
+
+    #[test]
+    fn shd_counts_mark_differences() {
+        let skel = vec![0, 1, 1, 0];
+        let a = Cpdag::from_skeleton(&skel, 2);
+        let mut b = Cpdag::from_skeleton(&skel, 2);
+        assert_eq!(shd(&a, &b), 0);
+        b.orient(0, 1);
+        assert_eq!(shd(&a, &b), 1);
+        let c = Cpdag::new(2); // empty
+        assert_eq!(shd(&a, &c), 1);
+    }
+
+    #[test]
+    fn time_shares_sum_to_100() {
+        let levels = vec![
+            LevelStats {
+                level: 0,
+                seconds: 1.0,
+                ..Default::default()
+            },
+            LevelStats {
+                level: 1,
+                seconds: 3.0,
+                ..Default::default()
+            },
+        ];
+        let shares = level_time_shares(&levels);
+        assert!((shares[0].1 - 25.0).abs() < 1e-9);
+        assert!((shares[1].1 - 75.0).abs() < 1e-9);
+    }
+}

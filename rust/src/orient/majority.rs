@@ -1,0 +1,205 @@
+//! Majority-rule v-structure orientation (Colombo & Maathuis 2014, the
+//! "MPC" variant): decide each unshielded triple i — k — j by the
+//! *fraction* of separating sets of (i, j) that contain k, instead of
+//! the single first-found sepset.
+//!
+//! Why it exists here: the skeleton of PC-stable is schedule-invariant,
+//! but the stored sepset is whichever separating set a schedule finds
+//! *first* — so cuPC-E, cuPC-S, and the serial loop can legitimately
+//! orient a triple differently (the paper inherits this from PC-stable
+//! and does not address it). Re-testing every unshielded triple with a
+//! deterministic census makes the full CPDAG schedule-invariant, which
+//! the test suite asserts across all five schedules.
+
+use crate::graph::cpdag::Cpdag;
+use crate::skeleton::comb::{n_sets_row, CombRange};
+use crate::stats::fisher::{independent, tau};
+use crate::stats::pcorr::{ci_statistic, CiWorkspace, Corr};
+
+/// Decision for one unshielded triple.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum TripleKind {
+    /// k in a minority of separating sets → collider i → k ← j
+    Collider,
+    /// k in a majority → non-collider (leave undirected)
+    NonCollider,
+    /// exactly 50/50 or no separating set found → ambiguous; leave
+    /// undirected (conservative)
+    Ambiguous,
+}
+
+/// Census over all separating sets of (i, j) drawn from adj(i) and
+/// adj(j) in the *final* skeleton, sizes 0..=max_level: returns
+/// (#sepsets containing k, #sepsets total).
+#[allow(clippy::too_many_arguments)]
+fn sepset_census(
+    corr: &Corr,
+    m: usize,
+    alpha: f64,
+    g: &Cpdag,
+    i: usize,
+    j: usize,
+    k: usize,
+    max_level: usize,
+    ws: &mut CiWorkspace,
+) -> (usize, usize) {
+    let mut with_k = 0usize;
+    let mut total = 0usize;
+    let mut ids: Vec<usize> = Vec::new();
+    for anchor in [i, j] {
+        let nbrs: Vec<usize> = g
+            .neighbors(anchor)
+            .into_iter()
+            .filter(|&x| x != i && x != j)
+            .collect();
+        for l in 0..=max_level.min(nbrs.len()) {
+            let taul = tau(m, l, alpha);
+            let total_sets = n_sets_row(nbrs.len(), l);
+            let mut combs = CombRange::new(nbrs.len(), l, 0, total_sets);
+            while let Some(pos) = combs.next_comb() {
+                ids.clear();
+                ids.extend(pos.iter().map(|&p| nbrs[p as usize]));
+                let z = ci_statistic(corr, i, j, &ids, ws);
+                if independent(z, taul) {
+                    total += 1;
+                    if ids.contains(&k) {
+                        with_k += 1;
+                    }
+                }
+            }
+        }
+    }
+    (with_k, total)
+}
+
+/// Classify an unshielded triple by the majority rule.
+#[allow(clippy::too_many_arguments)]
+pub fn classify_triple(
+    corr: &Corr,
+    m: usize,
+    alpha: f64,
+    g: &Cpdag,
+    i: usize,
+    k: usize,
+    j: usize,
+    max_level: usize,
+    ws: &mut CiWorkspace,
+) -> TripleKind {
+    let (with_k, total) = sepset_census(corr, m, alpha, g, i, j, k, max_level, ws);
+    if total == 0 {
+        return TripleKind::Ambiguous;
+    }
+    let frac = with_k as f64 / total as f64;
+    if frac < 0.5 {
+        TripleKind::Collider
+    } else if frac > 0.5 {
+        TripleKind::NonCollider
+    } else {
+        TripleKind::Ambiguous
+    }
+}
+
+/// Orient all v-structures by the majority rule. `max_level` bounds the
+/// census conditioning-set size (use the skeleton run's deepest level).
+pub fn orient_v_structures_majority(
+    g: &mut Cpdag,
+    corr: &Corr,
+    m: usize,
+    alpha: f64,
+    max_level: usize,
+) {
+    let n = g.n();
+    let mut ws = CiWorkspace::new(crate::skeleton::engine::NATIVE_MAX_LEVEL);
+    let mut colliders: Vec<(usize, usize, usize)> = Vec::new();
+    for k in 0..n {
+        let nbrs = g.neighbors(k);
+        for ai in 0..nbrs.len() {
+            for bi in (ai + 1)..nbrs.len() {
+                let (i, j) = (nbrs[ai], nbrs[bi]);
+                if g.adjacent(i, j) {
+                    continue;
+                }
+                if classify_triple(corr, m, alpha, g, i, k, j, max_level, &mut ws)
+                    == TripleKind::Collider
+                {
+                    colliders.push((i, k, j));
+                }
+            }
+        }
+    }
+    for (i, k, j) in colliders {
+        g.orient_if_undirected(i, k);
+        g.orient_if_undirected(j, k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{dag::WeightedDag, sem};
+    use crate::stats::corr::correlation_matrix;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn collider_detected_by_majority() {
+        let dag = WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![], vec![(0, 0.8), (1, 0.8)]],
+        };
+        let data = sem::sample(&dag, 5000, &mut Pcg::seeded(1));
+        let c = correlation_matrix(&data, 1);
+        let corr = Corr::new(&c, 3);
+        // skeleton: 0-2, 1-2 (0,1 non-adjacent)
+        let mut g = Cpdag::new(3);
+        let skel = vec![0, 0, 1, 0, 0, 1, 1, 1, 0];
+        g = Cpdag::from_skeleton(&skel, 3);
+        orient_v_structures_majority(&mut g, &corr, data.m, 0.01, 2);
+        assert!(g.is_directed(0, 2));
+        assert!(g.is_directed(1, 2));
+    }
+
+    #[test]
+    fn mediator_not_oriented_by_majority() {
+        let dag = WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![(0, 0.9)], vec![(1, 0.9)]],
+        };
+        let data = sem::sample(&dag, 5000, &mut Pcg::seeded(2));
+        let c = correlation_matrix(&data, 1);
+        let corr = Corr::new(&c, 3);
+        let skel = vec![0, 1, 0, 1, 0, 1, 0, 1, 0];
+        let mut g = Cpdag::from_skeleton(&skel, 3);
+        orient_v_structures_majority(&mut g, &corr, data.m, 0.01, 2);
+        assert!(g.is_undirected(0, 1));
+        assert!(g.is_undirected(1, 2));
+    }
+
+    /// The motivating property: with the majority rule the final CPDAG
+    /// is identical across all schedules (sepset contents no longer
+    /// matter — only the skeleton, which is schedule-invariant).
+    #[test]
+    fn cpdag_schedule_invariant_under_majority() {
+        use crate::skeleton::{run as run_skeleton, Config, Variant};
+        let dag = WeightedDag::random_er(25, 0.15, &mut Pcg::seeded(5));
+        let data = sem::sample(&dag, 400, &mut Pcg::seeded(6));
+        let c = correlation_matrix(&data, 1);
+        let mut cpdags = Vec::new();
+        for v in [Variant::Serial, Variant::CupcE, Variant::CupcS] {
+            let cfg = Config {
+                variant: v,
+                ..Config::default()
+            };
+            let res = run_skeleton(&c, data.n, data.m, &cfg).unwrap();
+            let deepest = res.levels.len().saturating_sub(1);
+            let corr = Corr::new(&c, data.n);
+            let mut g = Cpdag::from_skeleton(&res.graph.snapshot(), data.n);
+            orient_v_structures_majority(&mut g, &corr, data.m, cfg.alpha, deepest);
+            crate::orient::meek::apply_meek_rules(&mut g);
+            cpdags.push((v, g));
+        }
+        let (v0, first) = &cpdags[0];
+        for (v, g) in &cpdags[1..] {
+            assert!(first.same_as(g), "{v:?} CPDAG differs from {v0:?}");
+        }
+    }
+}

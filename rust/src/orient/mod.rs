@@ -1,0 +1,40 @@
+//! Edge orientation — the second step of PC-stable: extract v-structures
+//! from the sepsets, then apply Meek's rules to orient as many remaining
+//! edges as possible. Fast relative to skeleton discovery (the paper
+//! leaves it on the CPU; so do we).
+
+pub mod majority;
+pub mod meek;
+pub mod vstruct;
+
+use crate::graph::adj::AdjMatrix;
+use crate::graph::cpdag::Cpdag;
+use crate::graph::sepset::SepSets;
+
+/// Full orientation: skeleton + sepsets → CPDAG (standard PC-stable:
+/// v-structures from the first-found sepsets, then Meek rules).
+pub fn orient(graph: &AdjMatrix, sepsets: &SepSets) -> Cpdag {
+    let mut g = Cpdag::from_skeleton(&graph.snapshot(), graph.n());
+    vstruct::orient_v_structures(&mut g, sepsets);
+    meek::apply_meek_rules(&mut g);
+    g
+}
+
+/// Majority-rule orientation (Colombo–Maathuis MPC): re-tests every
+/// unshielded triple against a census of separating sets, making the
+/// CPDAG independent of which schedule found which sepset first. Needs
+/// the correlation matrix and the deepest level the skeleton reached.
+pub fn orient_majority(
+    graph: &AdjMatrix,
+    corr: &[f64],
+    m: usize,
+    alpha: f64,
+    max_level: usize,
+) -> Cpdag {
+    let n = graph.n();
+    let mut g = Cpdag::from_skeleton(&graph.snapshot(), n);
+    let view = crate::stats::pcorr::Corr::new(corr, n);
+    majority::orient_v_structures_majority(&mut g, &view, m, alpha, max_level);
+    meek::apply_meek_rules(&mut g);
+    g
+}

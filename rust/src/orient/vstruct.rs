@@ -1,0 +1,93 @@
+//! V-structure extraction: for every unshielded triple i — k — j (i, j
+//! non-adjacent), orient i → k ← j iff k ∉ SepSet(i, j). This is the
+//! only place observational data determines arrowheads directly.
+
+use crate::graph::cpdag::Cpdag;
+use crate::graph::sepset::SepSets;
+
+/// Orient all v-structures in place. Conflicting colliders (a later
+/// triple wanting to re-orient an existing arrowhead the other way) keep
+/// the first orientation — the pcalg default behaviour.
+pub fn orient_v_structures(g: &mut Cpdag, sepsets: &SepSets) {
+    let n = g.n();
+    // collect candidates first so iteration order can't see half-applied
+    // orientations (PC-stable's order-independence at the triple level)
+    let mut colliders: Vec<(usize, usize, usize)> = Vec::new();
+    for k in 0..n {
+        let nbrs = g.neighbors(k);
+        for ai in 0..nbrs.len() {
+            for bi in (ai + 1)..nbrs.len() {
+                let (i, j) = (nbrs[ai], nbrs[bi]);
+                if g.adjacent(i, j) {
+                    continue; // shielded
+                }
+                // unshielded triple i - k - j: collider iff k not in sepset(i,j)
+                if !sepsets.contains(i, j, k) {
+                    colliders.push((i, k, j));
+                }
+            }
+        }
+    }
+    for (i, k, j) in colliders {
+        g.orient_if_undirected(i, k);
+        g.orient_if_undirected(j, k);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skel(n: usize, edges: &[(usize, usize)]) -> Cpdag {
+        let mut s = vec![0u8; n * n];
+        for &(a, b) in edges {
+            s[a * n + b] = 1;
+            s[b * n + a] = 1;
+        }
+        Cpdag::from_skeleton(&s, n)
+    }
+
+    #[test]
+    fn collider_is_oriented() {
+        // 0 - 2 - 1, 0 and 1 not adjacent, sepset(0,1) = {} (no 2)
+        let mut g = skel(3, &[(0, 2), (1, 2)]);
+        let sep = SepSets::new();
+        sep.store(0, 1, &[]);
+        orient_v_structures(&mut g, &sep);
+        assert!(g.is_directed(0, 2));
+        assert!(g.is_directed(1, 2));
+    }
+
+    #[test]
+    fn mediator_stays_undirected() {
+        // chain: sepset(0,1) = {2} → no collider at 2
+        let mut g = skel(3, &[(0, 2), (1, 2)]);
+        let sep = SepSets::new();
+        sep.store(0, 1, &[2]);
+        orient_v_structures(&mut g, &sep);
+        assert!(g.is_undirected(0, 2));
+        assert!(g.is_undirected(1, 2));
+    }
+
+    #[test]
+    fn shielded_triple_ignored() {
+        // triangle: no unshielded triples at all
+        let mut g = skel(3, &[(0, 1), (0, 2), (1, 2)]);
+        let sep = SepSets::new();
+        orient_v_structures(&mut g, &sep);
+        assert_eq!(g.directed_edges().len(), 0);
+    }
+
+    #[test]
+    fn missing_sepset_means_collider() {
+        // pair removed at level 0 with empty sepset — k ∉ ∅ → collider.
+        let mut g = skel(4, &[(0, 2), (1, 2), (2, 3)]);
+        let sep = SepSets::new();
+        sep.store(0, 1, &[]);
+        sep.store(0, 3, &[2]);
+        sep.store(1, 3, &[2]);
+        orient_v_structures(&mut g, &sep);
+        assert!(g.is_directed(0, 2) && g.is_directed(1, 2));
+        assert!(g.is_undirected(2, 3));
+    }
+}

@@ -1,0 +1,455 @@
+//! Artifact manifest + compile-once executable cache.
+//!
+//! `python/compile/aot.py` writes `artifacts/manifest.json` describing
+//! every HLO-text artifact (kind, level, batch geometry). The store
+//! parses it (with a small built-in JSON reader — no serde offline),
+//! compiles each artifact on first use through the PJRT CPU client and
+//! caches the loaded executable for the rest of the process lifetime.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// Metadata for one artifact, mirroring aot.py's manifest entries.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub kind: String,
+    pub l: usize,
+    pub b: usize,
+    pub k: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub max_level: usize,
+    pub b0: usize,
+    pub be: usize,
+    pub bs: usize,
+    pub k: usize,
+    pub artifacts: HashMap<String, ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let v = json::parse(text)?;
+        let obj = v.as_object().ok_or_else(|| anyhow!("manifest: not an object"))?;
+        let get_usize = |k: &str| -> Result<usize> {
+            obj.get(k)
+                .and_then(|x| x.as_f64())
+                .map(|f| f as usize)
+                .ok_or_else(|| anyhow!("manifest: missing numeric field {k}"))
+        };
+        let mut artifacts = HashMap::new();
+        let arts = obj
+            .get("artifacts")
+            .and_then(|x| x.as_object())
+            .ok_or_else(|| anyhow!("manifest: missing artifacts object"))?;
+        for (name, meta) in arts {
+            let mo = meta
+                .as_object()
+                .ok_or_else(|| anyhow!("manifest: artifact {name} not an object"))?;
+            let gets = |k: &str| mo.get(k).and_then(|x| x.as_str()).map(|s| s.to_string());
+            let getn = |k: &str| mo.get(k).and_then(|x| x.as_f64()).map(|f| f as usize);
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: gets("file").ok_or_else(|| anyhow!("{name}: missing file"))?,
+                    kind: gets("kind").ok_or_else(|| anyhow!("{name}: missing kind"))?,
+                    l: getn("l").unwrap_or(0),
+                    b: getn("b").ok_or_else(|| anyhow!("{name}: missing b"))?,
+                    k: getn("k").unwrap_or(0),
+                },
+            );
+        }
+        Ok(Manifest {
+            max_level: get_usize("max_level")?,
+            b0: get_usize("b0")?,
+            be: get_usize("be")?,
+            bs: get_usize("bs")?,
+            k: get_usize("k")?,
+            artifacts,
+        })
+    }
+}
+
+/// Compile-once cache of loaded PJRT executables.
+pub struct ArtifactStore {
+    dir: PathBuf,
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl ArtifactStore {
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(ArtifactStore {
+            dir: dir.to_path_buf(),
+            manifest,
+            client,
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Fetch (compiling on first use) the executable for `name`.
+    pub fn get(&mut self, name: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .artifacts
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let path = self.dir.join(&meta.file);
+            if !path.exists() {
+                bail!("artifact file missing: {} (run `make artifacts`)", path.display());
+            }
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+            self.cache.insert(name.to_string(), exe);
+        }
+        Ok(self.cache.get(name).unwrap())
+    }
+
+    /// Number of compiled-and-cached executables (for perf accounting).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Compile every artifact up front — pulls PJRT compilation out of
+    /// the level loop so per-level timings measure execution only.
+    pub fn compile_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.artifacts.keys().cloned().collect();
+        for n in names {
+            self.get(&n)?;
+        }
+        Ok(())
+    }
+
+    /// Compile the artifacts PC runs touch on virtually every dataset
+    /// (level 0 and conditioning sets up to `max_l`); deeper levels
+    /// compile lazily on first use. Keeps startup latency bounded while
+    /// still keeping compilation out of the common levels' timings.
+    pub fn compile_common(&mut self, max_l: usize) -> Result<()> {
+        let names: Vec<String> = self
+            .manifest
+            .artifacts
+            .iter()
+            .filter(|(_, meta)| meta.kind == "level0" || meta.l <= max_l)
+            .map(|(n, _)| n.clone())
+            .collect();
+        for n in names {
+            self.get(&n)?;
+        }
+        Ok(())
+    }
+}
+
+thread_local! {
+    /// Process-wide (per-thread) store registry: artifact compilation is
+    /// paid once per process, not once per `run_skeleton` call. PJRT
+    /// types are not Send, hence thread-local rather than a global.
+    static STORES: std::cell::RefCell<HashMap<PathBuf, std::rc::Rc<std::cell::RefCell<ArtifactStore>>>> =
+        std::cell::RefCell::new(HashMap::new());
+}
+
+/// Fetch (or create + eagerly compile) the shared store for a directory.
+pub fn shared_store(dir: &Path) -> Result<std::rc::Rc<std::cell::RefCell<ArtifactStore>>> {
+    let key = dir
+        .canonicalize()
+        .unwrap_or_else(|_| dir.to_path_buf());
+    STORES.with(|s| {
+        let mut map = s.borrow_mut();
+        if let Some(store) = map.get(&key) {
+            return Ok(store.clone());
+        }
+        let mut store = ArtifactStore::open(dir)?;
+        store.compile_all()?;
+        let rc = std::rc::Rc::new(std::cell::RefCell::new(store));
+        map.insert(key, rc.clone());
+        Ok(rc)
+    })
+}
+
+/// Minimal JSON parser (objects, arrays, strings, numbers, bools, null)
+/// — sufficient for manifest.json; serde is unavailable offline.
+pub(crate) mod json {
+    use anyhow::{bail, Result};
+    use std::collections::BTreeMap;
+
+    #[derive(Debug, Clone, PartialEq)]
+    pub enum Value {
+        Null,
+        Bool(bool),
+        Num(f64),
+        Str(String),
+        Arr(Vec<Value>),
+        Obj(BTreeMap<String, Value>),
+    }
+
+    impl Value {
+        pub fn as_object(&self) -> Option<&BTreeMap<String, Value>> {
+            match self {
+                Value::Obj(m) => Some(m),
+                _ => None,
+            }
+        }
+        pub fn as_f64(&self) -> Option<f64> {
+            match self {
+                Value::Num(f) => Some(*f),
+                _ => None,
+            }
+        }
+        pub fn as_str(&self) -> Option<&str> {
+            match self {
+                Value::Str(s) => Some(s),
+                _ => None,
+            }
+        }
+    }
+
+    pub fn parse(text: &str) -> Result<Value> {
+        let bytes = text.as_bytes();
+        let mut pos = 0usize;
+        let v = parse_value(bytes, &mut pos)?;
+        skip_ws(bytes, &mut pos);
+        if pos != bytes.len() {
+            bail!("trailing garbage at byte {pos}");
+        }
+        Ok(v)
+    }
+
+    fn skip_ws(b: &[u8], p: &mut usize) {
+        while *p < b.len() && (b[*p] as char).is_ascii_whitespace() {
+            *p += 1;
+        }
+    }
+
+    fn parse_value(b: &[u8], p: &mut usize) -> Result<Value> {
+        skip_ws(b, p);
+        if *p >= b.len() {
+            bail!("unexpected end of input");
+        }
+        match b[*p] {
+            b'{' => parse_object(b, p),
+            b'[' => parse_array(b, p),
+            b'"' => Ok(Value::Str(parse_string(b, p)?)),
+            b't' => {
+                expect(b, p, "true")?;
+                Ok(Value::Bool(true))
+            }
+            b'f' => {
+                expect(b, p, "false")?;
+                Ok(Value::Bool(false))
+            }
+            b'n' => {
+                expect(b, p, "null")?;
+                Ok(Value::Null)
+            }
+            _ => parse_number(b, p),
+        }
+    }
+
+    fn expect(b: &[u8], p: &mut usize, word: &str) -> Result<()> {
+        if b.len() - *p < word.len() || &b[*p..*p + word.len()] != word.as_bytes() {
+            bail!("expected {word} at byte {p}");
+        }
+        *p += word.len();
+        Ok(())
+    }
+
+    fn parse_object(b: &[u8], p: &mut usize) -> Result<Value> {
+        *p += 1; // {
+        let mut map = BTreeMap::new();
+        skip_ws(b, p);
+        if *p < b.len() && b[*p] == b'}' {
+            *p += 1;
+            return Ok(Value::Obj(map));
+        }
+        loop {
+            skip_ws(b, p);
+            let key = parse_string(b, p)?;
+            skip_ws(b, p);
+            if *p >= b.len() || b[*p] != b':' {
+                bail!("expected ':' at byte {p}");
+            }
+            *p += 1;
+            let val = parse_value(b, p)?;
+            map.insert(key, val);
+            skip_ws(b, p);
+            match b.get(*p) {
+                Some(b',') => *p += 1,
+                Some(b'}') => {
+                    *p += 1;
+                    return Ok(Value::Obj(map));
+                }
+                _ => bail!("expected ',' or '}}' at byte {p}"),
+            }
+        }
+    }
+
+    fn parse_array(b: &[u8], p: &mut usize) -> Result<Value> {
+        *p += 1; // [
+        let mut arr = Vec::new();
+        skip_ws(b, p);
+        if *p < b.len() && b[*p] == b']' {
+            *p += 1;
+            return Ok(Value::Arr(arr));
+        }
+        loop {
+            arr.push(parse_value(b, p)?);
+            skip_ws(b, p);
+            match b.get(*p) {
+                Some(b',') => *p += 1,
+                Some(b']') => {
+                    *p += 1;
+                    return Ok(Value::Arr(arr));
+                }
+                _ => bail!("expected ',' or ']' at byte {p}"),
+            }
+        }
+    }
+
+    fn parse_string(b: &[u8], p: &mut usize) -> Result<String> {
+        if b.get(*p) != Some(&b'"') {
+            bail!("expected string at byte {p}");
+        }
+        *p += 1;
+        let mut s = String::new();
+        while *p < b.len() {
+            match b[*p] {
+                b'"' => {
+                    *p += 1;
+                    return Ok(s);
+                }
+                b'\\' => {
+                    *p += 1;
+                    match b.get(*p) {
+                        Some(b'n') => s.push('\n'),
+                        Some(b't') => s.push('\t'),
+                        Some(b'r') => s.push('\r'),
+                        Some(b'"') => s.push('"'),
+                        Some(b'\\') => s.push('\\'),
+                        Some(b'/') => s.push('/'),
+                        Some(b'u') => {
+                            let hex = std::str::from_utf8(&b[*p + 1..*p + 5])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            s.push(char::from_u32(code).unwrap_or('?'));
+                            *p += 4;
+                        }
+                        _ => bail!("bad escape at byte {p}"),
+                    }
+                    *p += 1;
+                }
+                c => {
+                    // collect UTF-8 bytes verbatim
+                    let start = *p;
+                    let len = utf8_len(c);
+                    s.push_str(std::str::from_utf8(&b[start..start + len])?);
+                    *p += len;
+                }
+            }
+        }
+        bail!("unterminated string")
+    }
+
+    fn utf8_len(first: u8) -> usize {
+        match first {
+            0x00..=0x7f => 1,
+            0xc0..=0xdf => 2,
+            0xe0..=0xef => 3,
+            _ => 4,
+        }
+    }
+
+    fn parse_number(b: &[u8], p: &mut usize) -> Result<Value> {
+        let start = *p;
+        while *p < b.len()
+            && matches!(b[*p], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            *p += 1;
+        }
+        let s = std::str::from_utf8(&b[start..*p])?;
+        Ok(Value::Num(s.parse::<f64>()?))
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+
+        #[test]
+        fn parses_nested() {
+            let v = parse(r#"{"a": 1, "b": {"c": [1, 2.5, "x"], "d": true}, "e": null}"#)
+                .unwrap();
+            let o = v.as_object().unwrap();
+            assert_eq!(o.get("a").unwrap().as_f64(), Some(1.0));
+            let b = o.get("b").unwrap().as_object().unwrap();
+            assert_eq!(b.get("d").unwrap(), &Value::Bool(true));
+            match b.get("c").unwrap() {
+                Value::Arr(a) => {
+                    assert_eq!(a.len(), 3);
+                    assert_eq!(a[2].as_str(), Some("x"));
+                }
+                _ => panic!(),
+            }
+        }
+
+        #[test]
+        fn parses_escapes() {
+            let v = parse(r#""a\nb\t\"q\"""#).unwrap();
+            assert_eq!(v.as_str(), Some("a\nb\t\"q\""));
+        }
+
+        #[test]
+        fn rejects_garbage() {
+            assert!(parse("{").is_err());
+            assert!(parse("[1,]").is_err());
+            assert!(parse("{} x").is_err());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "max_level": 8, "b0": 4096, "be": 4096, "bs": 256, "k": 32,
+      "artifacts": {
+        "level0": {"kind": "level0", "b": 4096, "file": "level0.hlo.txt", "sha256": "x"},
+        "ci_e_l2": {"kind": "ci_e", "l": 2, "b": 4096, "file": "ci_e_l2.hlo.txt", "sha256": "y"}
+      }
+    }"#;
+
+    #[test]
+    fn manifest_parses() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.max_level, 8);
+        assert_eq!(m.be, 4096);
+        assert_eq!(m.artifacts.len(), 2);
+        let a = &m.artifacts["ci_e_l2"];
+        assert_eq!(a.l, 2);
+        assert_eq!(a.kind, "ci_e");
+        assert_eq!(a.file, "ci_e_l2.hlo.txt");
+    }
+
+    #[test]
+    fn manifest_missing_fields_rejected() {
+        assert!(Manifest::parse(r#"{"max_level": 8}"#).is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

@@ -1,0 +1,31 @@
+//! XLA PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them from the coordinator's hot
+//! loop. Python is never on this path — the artifacts are plain files
+//! and the `xla` crate drives the PJRT CPU client directly.
+
+pub mod artifacts;
+pub mod xla_engine;
+
+pub use artifacts::{ArtifactStore, Manifest};
+pub use xla_engine::XlaEngine;
+
+use crate::skeleton::engine::{CiEngine, NativeEngine, WithFallback};
+use crate::skeleton::{Config, EngineKind};
+use anyhow::Result;
+
+/// Construct the engine selected by the config. The XLA engine is
+/// composed with a native fallback for levels beyond the AOT range.
+pub fn engine_from_config(cfg: &Config) -> Result<Box<dyn CiEngine>> {
+    match cfg.engine {
+        EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        EngineKind::Xla => {
+            let xla = XlaEngine::new(&cfg.artifacts_dir)?;
+            // keep the native mirror on the same batch geometry
+            let native = NativeEngine::with_batches(xla.batch_e(), xla.batch_s(), xla.k());
+            Ok(Box::new(WithFallback {
+                primary: xla,
+                fallback: native,
+            }))
+        }
+    }
+}

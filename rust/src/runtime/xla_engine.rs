@@ -1,0 +1,204 @@
+//! The XLA-backed CI engine: executes the AOT Pallas/JAX kernels through
+//! the PJRT CPU client. Batches of arbitrary size are chunked to the
+//! artifact's static batch dimension and zero-padded (zero blocks are
+//! numerically inert: ρ = 0, z = 0, and padded verdicts are discarded by
+//! the packers' apply step anyway).
+
+use super::artifacts::{shared_store, ArtifactStore};
+use crate::skeleton::engine::CiEngine;
+use anyhow::{anyhow, Result};
+use std::cell::RefCell;
+use std::path::Path;
+use std::rc::Rc;
+
+pub struct XlaEngine {
+    /// shared, process-wide compiled-executable store (compilation is a
+    /// one-time cost per process, not per run — PJRT compile latency
+    /// must not pollute the level-loop measurements)
+    store: Rc<RefCell<ArtifactStore>>,
+    b0: usize,
+    be: usize,
+    bs: usize,
+    k: usize,
+    max_level: usize,
+    /// number of PJRT execute() dispatches (perf accounting)
+    pub dispatches: u64,
+}
+
+impl XlaEngine {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let store = shared_store(artifacts_dir)?;
+        let (b0, be, bs, k, max_level) = {
+            let s = store.borrow();
+            let m = &s.manifest;
+            (m.b0, m.be, m.bs, m.k, m.max_level)
+        };
+        Ok(XlaEngine {
+            b0,
+            be,
+            bs,
+            k,
+            max_level,
+            store,
+            dispatches: 0,
+        })
+    }
+
+    /// Run one executable over f32 buffers with given logical shapes.
+    fn exec(
+        &mut self,
+        name: &str,
+        inputs: &[(&[f32], &[i64])],
+        out_len: usize,
+    ) -> Result<Vec<f32>> {
+        let mut store = self.store.borrow_mut();
+        let exe = store.get(name)?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        self.dispatches += 1;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True → 1-tuple
+        let out = lit.to_tuple1().map_err(|e| anyhow!("tuple1 {name}: {e:?}"))?;
+        let v = out
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("to_vec {name}: {e:?}"))?;
+        debug_assert_eq!(v.len(), out_len);
+        Ok(v)
+    }
+
+    fn check_level(&self, l: usize) -> Result<()> {
+        if l == 0 || l > self.max_level {
+            Err(anyhow!(
+                "no artifact for level {l} (AOT range 1..={})",
+                self.max_level
+            ))
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Pad `src` to `len` with zeros into a fresh buffer.
+fn pad(src: &[f32], len: usize) -> Vec<f32> {
+    let mut v = Vec::with_capacity(len);
+    v.extend_from_slice(src);
+    v.resize(len, 0.0);
+    v
+}
+
+impl CiEngine for XlaEngine {
+    fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>> {
+        let b0 = self.b0;
+        let mut out = Vec::with_capacity(c_ij.len());
+        for chunk in c_ij.chunks(b0) {
+            let buf = pad(chunk, b0);
+            let z = self.exec("level0", &[(&buf, &[b0 as i64])], b0)?;
+            out.extend_from_slice(&z[..chunk.len()]);
+        }
+        Ok(out)
+    }
+
+    fn ci_e(
+        &mut self,
+        l: usize,
+        b: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+    ) -> Result<Vec<f32>> {
+        self.check_level(l)?;
+        debug_assert_eq!(c_ij.len(), b);
+        let be = self.be;
+        let name = format!("ci_e_l{l}");
+        let mut out = Vec::with_capacity(b);
+        let mut off = 0usize;
+        while off < b {
+            let nb = (b - off).min(be);
+            let cb = pad(&c_ij[off..off + nb], be);
+            let m1b = pad(&m1[off * 2 * l..(off + nb) * 2 * l], be * 2 * l);
+            let m2b = pad(&m2[off * l * l..(off + nb) * l * l], be * l * l);
+            let z = self.exec(
+                &name,
+                &[
+                    (&cb, &[be as i64]),
+                    (&m1b, &[be as i64, 2, l as i64]),
+                    (&m2b, &[be as i64, l as i64, l as i64]),
+                ],
+                be,
+            )?;
+            out.extend_from_slice(&z[..nb]);
+            off += nb;
+        }
+        Ok(out)
+    }
+
+    fn ci_s(
+        &mut self,
+        l: usize,
+        rows: usize,
+        k: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        _valid: &[u32], // full-width kernel; padding discarded by apply
+    ) -> Result<Vec<f32>> {
+        self.check_level(l)?;
+        assert_eq!(
+            k, self.k,
+            "ci_s packer K={k} must match the artifact K={}",
+            self.k
+        );
+        let bs = self.bs;
+        let name = format!("ci_s_l{l}");
+        let mut out = Vec::with_capacity(rows * k);
+        let mut row = 0usize;
+        while row < rows {
+            let nr = (rows - row).min(bs);
+            let cb = pad(&c_ij[row * k..(row + nr) * k], bs * k);
+            let m1b = pad(&m1[row * k * 2 * l..(row + nr) * k * 2 * l], bs * k * 2 * l);
+            let m2b = pad(&m2[row * l * l..(row + nr) * l * l], bs * l * l);
+            let z = self.exec(
+                &name,
+                &[
+                    (&cb, &[bs as i64, k as i64]),
+                    (&m1b, &[bs as i64, k as i64, 2, l as i64]),
+                    (&m2b, &[bs as i64, l as i64, l as i64]),
+                ],
+                bs * k,
+            )?;
+            out.extend_from_slice(&z[..nr * k]);
+            row += nr;
+        }
+        Ok(out)
+    }
+
+    fn max_level(&self) -> usize {
+        self.max_level
+    }
+
+    fn batch_e(&self) -> usize {
+        self.be
+    }
+
+    fn batch_s(&self) -> usize {
+        self.bs
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "xla"
+    }
+}

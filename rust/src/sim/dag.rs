@@ -1,0 +1,186 @@
+//! Random DAG generation, following the paper's §5.6 protocol:
+//! a lower-triangular adjacency with independent Bernoulli(d) entries and
+//! edge weights drawn uniformly from [0.1, 1].
+
+use crate::util::rng::Pcg;
+
+/// A weighted DAG over variables 0..n, edges j → i only for j < i
+/// (topological order = variable order, as in the paper).
+#[derive(Clone)]
+pub struct WeightedDag {
+    pub n: usize,
+    /// weights[i] = list of (parent j, weight) with j < i
+    pub parents: Vec<Vec<(u32, f64)>>,
+}
+
+impl WeightedDag {
+    /// Erdős–Rényi-style lower-triangular DAG: each (i, j), j < i, is an
+    /// edge with probability `d`, weight ~ U[0.1, 1] (paper §5.6).
+    pub fn random_er(n: usize, d: f64, rng: &mut Pcg) -> Self {
+        let mut parents = vec![Vec::new(); n];
+        for i in 1..n {
+            for j in 0..i {
+                if rng.bernoulli(d) {
+                    parents[i].push((j as u32, rng.uniform_in(0.1, 1.0)));
+                }
+            }
+        }
+        WeightedDag { n, parents }
+    }
+
+    /// GRN-like topology: scale-free-ish in-degree via preferential
+    /// attachment, bounded by `max_parents`. Used for the gene-expression
+    /// dataset analogs where ER graphs would be too homogeneous.
+    pub fn random_grn(n: usize, avg_parents: f64, max_parents: usize, rng: &mut Pcg) -> Self {
+        let mut parents = vec![Vec::new(); n];
+        let mut popularity = vec![1.0f64; n]; // attachment weights
+        for i in 1..n {
+            // Poisson-ish number of parents via repeated Bernoulli
+            let lam = avg_parents.min(i as f64);
+            let mut k = 0usize;
+            let acc = rng.uniform();
+            let mut p = (-lam).exp();
+            let mut cdf = p;
+            while acc > cdf && k < max_parents {
+                k += 1;
+                p *= lam / k as f64;
+                cdf += p;
+            }
+            let k = k.min(i);
+            // sample k distinct predecessors ∝ popularity
+            let mut chosen = std::collections::HashSet::new();
+            let total: f64 = popularity[..i].iter().sum();
+            let mut guard = 0;
+            while chosen.len() < k && guard < 50 * k + 50 {
+                guard += 1;
+                let mut r = rng.uniform() * total;
+                let mut pick = 0usize;
+                for (idx, w) in popularity[..i].iter().enumerate() {
+                    r -= w;
+                    if r <= 0.0 {
+                        pick = idx;
+                        break;
+                    }
+                }
+                chosen.insert(pick);
+            }
+            // sort before weight assignment: HashSet iteration order is
+            // per-instance random and must not leak into the stream
+            let mut chosen: Vec<usize> = chosen.into_iter().collect();
+            chosen.sort_unstable();
+            for j in chosen {
+                parents[i].push((j as u32, rng.uniform_in(0.1, 1.0)));
+                popularity[j] += 1.0;
+            }
+        }
+        WeightedDag { n, parents }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.parents.iter().map(|p| p.len()).sum()
+    }
+
+    /// True undirected skeleton as dense 0/1.
+    pub fn skeleton_dense(&self) -> Vec<u8> {
+        let n = self.n;
+        let mut s = vec![0u8; n * n];
+        for (i, ps) in self.parents.iter().enumerate() {
+            for &(j, _) in ps {
+                s[i * n + j as usize] = 1;
+                s[j as usize * n + i] = 1;
+            }
+        }
+        s
+    }
+
+    /// Directed adjacency (i row, j col = 1 if j → i? No: standard
+    /// a[parent][child] = 1).
+    pub fn directed_dense(&self) -> Vec<u8> {
+        let n = self.n;
+        let mut a = vec![0u8; n * n];
+        for (i, ps) in self.parents.iter().enumerate() {
+            for &(j, _) in ps {
+                a[j as usize * n + i] = 1;
+            }
+        }
+        a
+    }
+
+    pub fn max_degree(&self) -> usize {
+        let n = self.n;
+        let mut deg = vec![0usize; n];
+        for (i, ps) in self.parents.iter().enumerate() {
+            deg[i] += ps.len();
+            for &(j, _) in ps {
+                deg[j as usize] += 1;
+            }
+        }
+        deg.into_iter().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn er_density_is_respected() {
+        let mut rng = Pcg::seeded(1);
+        let n = 100;
+        let d = 0.1;
+        let g = WeightedDag::random_er(n, d, &mut rng);
+        let expected = d * (n * (n - 1) / 2) as f64;
+        let got = g.n_edges() as f64;
+        assert!(
+            (got - expected).abs() < 0.2 * expected,
+            "edges={got} expected≈{expected}"
+        );
+    }
+
+    #[test]
+    fn er_is_lower_triangular() {
+        let mut rng = Pcg::seeded(2);
+        let g = WeightedDag::random_er(50, 0.2, &mut rng);
+        for (i, ps) in g.parents.iter().enumerate() {
+            for &(j, w) in ps {
+                assert!((j as usize) < i);
+                assert!((0.1..=1.0).contains(&w));
+            }
+        }
+    }
+
+    #[test]
+    fn skeleton_symmetric_and_matches_edges() {
+        let mut rng = Pcg::seeded(3);
+        let g = WeightedDag::random_er(30, 0.15, &mut rng);
+        let s = g.skeleton_dense();
+        let n = g.n;
+        let mut count = 0;
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(s[i * n + j], s[j * n + i]);
+                if i < j && s[i * n + j] != 0 {
+                    count += 1;
+                }
+            }
+        }
+        assert_eq!(count, g.n_edges());
+    }
+
+    #[test]
+    fn grn_bounded_parents() {
+        let mut rng = Pcg::seeded(4);
+        let g = WeightedDag::random_grn(200, 2.0, 5, &mut rng);
+        for ps in &g.parents {
+            assert!(ps.len() <= 5);
+        }
+        assert!(g.n_edges() > 100, "edges={}", g.n_edges());
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let g1 = WeightedDag::random_er(40, 0.1, &mut Pcg::seeded(9));
+        let g2 = WeightedDag::random_er(40, 0.1, &mut Pcg::seeded(9));
+        assert_eq!(g1.skeleton_dense(), g2.skeleton_dense());
+    }
+}

@@ -1,0 +1,79 @@
+//! Linear structural equation model sampling (paper §5.6):
+//! Vi = Ni + Σ_{j<i} A[i,j]·Vj with independent standard-normal noise,
+//! sampled in topological order.
+
+use super::dag::WeightedDag;
+use crate::stats::corr::DataMatrix;
+use crate::util::rng::Pcg;
+
+/// Sample `m` observations from the linear SEM induced by `dag`.
+/// Returns a row-major (m × n) data matrix.
+pub fn sample(dag: &WeightedDag, m: usize, rng: &mut Pcg) -> DataMatrix {
+    let n = dag.n;
+    let mut x = vec![0.0f64; m * n];
+    for s in 0..m {
+        let row = &mut x[s * n..(s + 1) * n];
+        for i in 0..n {
+            let mut v = rng.normal();
+            for &(j, w) in &dag.parents[i] {
+                v += w * row[j as usize];
+            }
+            row[i] = v;
+        }
+    }
+    DataMatrix::new(x, m, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::corr::correlation_matrix;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let dag = WeightedDag::random_er(10, 0.3, &mut Pcg::seeded(5));
+        let a = sample(&dag, 20, &mut Pcg::seeded(6));
+        let b = sample(&dag, 20, &mut Pcg::seeded(6));
+        assert_eq!(a.x, b.x);
+    }
+
+    #[test]
+    fn child_correlates_with_parent() {
+        // single edge 0 → 1 with strong weight
+        let dag = WeightedDag {
+            n: 2,
+            parents: vec![vec![], vec![(0, 0.9)]],
+        };
+        let data = sample(&dag, 4000, &mut Pcg::seeded(7));
+        let c = correlation_matrix(&data, 1);
+        // rho = 0.9 / sqrt(1 + 0.81) ≈ 0.669
+        assert!((c[1] - 0.669).abs() < 0.05, "c01={}", c[1]);
+    }
+
+    #[test]
+    fn disconnected_variables_uncorrelated() {
+        let dag = WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![], vec![(1, 0.8)]],
+        };
+        let data = sample(&dag, 8000, &mut Pcg::seeded(8));
+        let c = correlation_matrix(&data, 1);
+        assert!(c[1].abs() < 0.05, "c01={}", c[1]); // 0 vs 1
+        assert!(c[2].abs() < 0.05, "c02={}", c[2]); // 0 vs 2
+        assert!(c[1 * 3 + 2] > 0.5, "c12={}", c[5]);
+    }
+
+    #[test]
+    fn noise_gives_unit_ish_variance_for_roots() {
+        let dag = WeightedDag {
+            n: 1,
+            parents: vec![vec![]],
+        };
+        let data = sample(&dag, 10000, &mut Pcg::seeded(9));
+        let mean: f64 = data.x.iter().sum::<f64>() / data.x.len() as f64;
+        let var: f64 =
+            data.x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / data.x.len() as f64;
+        assert!(mean.abs() < 0.05);
+        assert!((var - 1.0).abs() < 0.05);
+    }
+}

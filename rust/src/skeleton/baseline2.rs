@@ -1,0 +1,66 @@
+//! GPU baseline algorithm 2 of Fig. 5: every edge a block, **all CI
+//! tests of the edge fully parallel** — no early termination inside the
+//! edge's flight. In the batched schedule this is cuPC-E with γ = ∞
+//! (the whole combination range packed in a single round), keeping the
+//! same compaction, staging and cross-edge termination.
+
+use super::{Config, SkeletonResult};
+use anyhow::Result;
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    let cfg2 = Config {
+        gamma: usize::MAX / 2,
+        beta: 1,
+        ..cfg.clone()
+    };
+    super::gpu_e::run(corr, n, m, &cfg2)
+}
+
+/// Engine-injected variant for tests and the bench harness.
+pub fn run_with_engine(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    engine: &mut dyn super::engine::CiEngine,
+) -> Result<SkeletonResult> {
+    let cfg2 = Config {
+        gamma: usize::MAX / 2,
+        beta: 1,
+        ..cfg.clone()
+    };
+    super::gpu_e::run_with_engine(corr, n, m, &cfg2, engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::engine::NativeEngine;
+    use crate::sim::datasets;
+    use crate::stats::corr::correlation_matrix;
+
+    #[test]
+    fn baseline2_tests_at_least_as_many_as_cupce() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 40,
+            m: 100,
+            topology: datasets::Topology::Er(0.1),
+            seed: 13,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let mut e1 = NativeEngine::new();
+        let r_b2 = run_with_engine(&c, ds.data.n, ds.data.m, &cfg, &mut e1).unwrap();
+        let mut e2 = NativeEngine::new();
+        let r_e = crate::skeleton::gpu_e::run_with_engine(&c, ds.data.n, ds.data.m, &cfg, &mut e2)
+            .unwrap();
+        assert_eq!(r_b2.graph.snapshot(), r_e.graph.snapshot());
+        assert!(
+            r_b2.total_tests() >= r_e.total_tests(),
+            "full fan-out cannot avoid tests: {} vs {}",
+            r_b2.total_tests(),
+            r_e.total_tests()
+        );
+    }
+}

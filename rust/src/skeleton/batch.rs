@@ -1,0 +1,357 @@
+//! Batch packing: the L3 gather stage.
+//!
+//! cuPC stages a row of `A'_G` in GPU shared memory and lets threads
+//! gather `M0/M1/M2` from the resident correlation matrix. With AOT
+//! kernels of static shape, the gather moves here: the packer reads the
+//! f32 correlation matrix and emits densely packed `c_ij / M1 / M2`
+//! buffers plus per-slot metadata, and the apply step replays verdicts
+//! in deterministic order (first independent verdict wins — the batched
+//! analogue of the paper's in-kernel edge-removal race, made
+//! deterministic).
+
+use crate::graph::adj::AdjMatrix;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::independent;
+
+/// f32 copy of the correlation matrix (the artifact dtype).
+pub struct Corr32 {
+    pub c: Vec<f32>,
+    pub n: usize,
+}
+
+impl Corr32 {
+    pub fn from_f64(corr: &[f64], n: usize) -> Self {
+        assert_eq!(corr.len(), n * n);
+        Corr32 {
+            c: corr.iter().map(|&x| x as f32).collect(),
+            n,
+        }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f32 {
+        self.c[i * self.n + j]
+    }
+}
+
+/// One packed cuPC-E test slot: edge (i, j) with conditioning set S.
+#[derive(Clone, Debug)]
+pub struct SlotMeta {
+    pub i: u32,
+    pub j: u32,
+}
+
+/// Packed batch for the ci_e kernels.
+pub struct EBatch {
+    pub l: usize,
+    pub c_ij: Vec<f32>,
+    pub m1: Vec<f32>,
+    pub m2: Vec<f32>,
+    pub meta: Vec<SlotMeta>,
+    /// conditioning-set variable ids, l per slot
+    pub svals: Vec<u32>,
+}
+
+impl EBatch {
+    pub fn new(l: usize, cap: usize) -> Self {
+        EBatch {
+            l,
+            c_ij: Vec::with_capacity(cap),
+            m1: Vec::with_capacity(cap * 2 * l),
+            m2: Vec::with_capacity(cap * l * l),
+            meta: Vec::with_capacity(cap),
+            svals: Vec::with_capacity(cap * l),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    pub fn clear(&mut self) {
+        self.c_ij.clear();
+        self.m1.clear();
+        self.m2.clear();
+        self.meta.clear();
+        self.svals.clear();
+    }
+
+    /// Gather one test (i, j | S) from the correlation matrix.
+    pub fn push(&mut self, corr: &Corr32, i: usize, j: usize, s: &[u32]) {
+        debug_assert_eq!(s.len(), self.l);
+        self.c_ij.push(corr.at(i, j));
+        for &sv in s {
+            self.m1.push(corr.at(i, sv as usize));
+        }
+        for &sv in s {
+            self.m1.push(corr.at(j, sv as usize));
+        }
+        for &sa in s {
+            for &sb in s {
+                self.m2.push(corr.at(sa as usize, sb as usize));
+            }
+        }
+        self.meta.push(SlotMeta {
+            i: i as u32,
+            j: j as u32,
+        });
+        self.svals.extend_from_slice(s);
+    }
+
+    /// Apply verdicts in slot order: the first independent verdict for a
+    /// still-present edge removes it and stores S. Returns (#removed,
+    /// #tests-that-were-already-moot). `z.len() >= self.len()` (engines
+    /// may return padded tails).
+    pub fn apply(&self, z: &[f32], tau: f64, graph: &AdjMatrix, sepsets: &SepSets) -> (usize, usize) {
+        let mut removed = 0;
+        let mut moot = 0;
+        for (idx, meta) in self.meta.iter().enumerate() {
+            let (i, j) = (meta.i as usize, meta.j as usize);
+            if !graph.has_edge(i, j) {
+                moot += 1;
+                continue;
+            }
+            if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+                sepsets.store(i, j, &self.svals[idx * self.l..(idx + 1) * self.l]);
+                removed += 1;
+            }
+        }
+        (removed, moot)
+    }
+}
+
+/// Packed batch for the ci_s kernels: `rows` conditioning sets × `k`
+/// candidate tests each. Rows may be partially filled; invalid slots are
+/// padded with the row's first candidate and masked out in apply.
+pub struct SBatch {
+    pub l: usize,
+    pub k: usize,
+    pub c_ij: Vec<f32>,
+    pub m1: Vec<f32>,
+    pub m2: Vec<f32>,
+    /// per-slot metadata; `valid = false` marks padding
+    pub meta: Vec<(SlotMeta, bool)>,
+    /// conditioning-set variable ids, l per ROW
+    pub svals: Vec<u32>,
+    /// number of valid (non-padding) slots per row — lets the native
+    /// engine skip padding entirely (the XLA kernel computes the full
+    /// K width regardless; padded verdicts are discarded in apply)
+    pub valid: Vec<u32>,
+    rows: usize,
+}
+
+impl SBatch {
+    pub fn new(l: usize, k: usize, row_cap: usize) -> Self {
+        SBatch {
+            l,
+            k,
+            c_ij: Vec::with_capacity(row_cap * k),
+            m1: Vec::with_capacity(row_cap * k * 2 * l),
+            m2: Vec::with_capacity(row_cap * l * l),
+            meta: Vec::with_capacity(row_cap * k),
+            svals: Vec::with_capacity(row_cap * l),
+            valid: Vec::with_capacity(row_cap),
+            rows: 0,
+        }
+    }
+
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.rows == 0
+    }
+
+    pub fn clear(&mut self) {
+        self.c_ij.clear();
+        self.m1.clear();
+        self.m2.clear();
+        self.meta.clear();
+        self.svals.clear();
+        self.valid.clear();
+        self.rows = 0;
+    }
+
+    /// Gather one conditioning set S for anchor i with up to k candidate
+    /// partners `js` (all != i and ∉ S). Empty `js` is a no-op.
+    pub fn push_row(&mut self, corr: &Corr32, i: usize, s: &[u32], js: &[u32]) {
+        debug_assert_eq!(s.len(), self.l);
+        debug_assert!(js.len() <= self.k);
+        if js.is_empty() {
+            return;
+        }
+        // M2 once per row
+        for &sa in s {
+            for &sb in s {
+                self.m2.push(corr.at(sa as usize, sb as usize));
+            }
+        }
+        self.svals.extend_from_slice(s);
+        self.valid.push(js.len() as u32);
+        // valid slots gather; padding slots zero-fill (numerically inert)
+        for &ju in js {
+            let j = ju as usize;
+            self.c_ij.push(corr.at(i, j));
+            for &sv in s {
+                self.m1.push(corr.at(i, sv as usize));
+            }
+            for &sv in s {
+                self.m1.push(corr.at(j, sv as usize));
+            }
+            self.meta.push((
+                SlotMeta {
+                    i: i as u32,
+                    j: ju,
+                },
+                true,
+            ));
+        }
+        for _ in js.len()..self.k {
+            self.c_ij.push(0.0);
+            self.m1.extend(std::iter::repeat(0.0).take(2 * self.l));
+            self.meta.push((SlotMeta { i: i as u32, j: 0 }, false));
+        }
+        self.rows += 1;
+    }
+
+    /// Apply verdicts: slot order within valid slots, first win removes.
+    pub fn apply(&self, z: &[f32], tau: f64, graph: &AdjMatrix, sepsets: &SepSets) -> (usize, usize) {
+        let mut removed = 0;
+        let mut moot = 0;
+        for (idx, (meta, valid)) in self.meta.iter().enumerate() {
+            if !valid {
+                continue;
+            }
+            let (i, j) = (meta.i as usize, meta.j as usize);
+            if !graph.has_edge(i, j) {
+                moot += 1;
+                continue;
+            }
+            if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+                let row = idx / self.k;
+                sepsets.store(i, j, &self.svals[row * self.l..(row + 1) * self.l]);
+                removed += 1;
+            }
+        }
+        (removed, moot)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_corr() -> Corr32 {
+        // 4 vars, easy recognizable entries c[i][j] = 0.1*(i+1) + 0.01*(j+1) sym’d
+        let n = 4;
+        let mut c = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..n {
+                let v = if i == j {
+                    1.0
+                } else {
+                    0.1 * (i.min(j) + 1) as f64 + 0.01 * (i.max(j) + 1) as f64
+                };
+                c[i * n + j] = v;
+            }
+        }
+        Corr32::from_f64(&c, n)
+    }
+
+    #[test]
+    fn ebatch_packs_gathered_blocks() {
+        let corr = tiny_corr();
+        let mut b = EBatch::new(2, 8);
+        b.push(&corr, 0, 1, &[2, 3]);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b.c_ij[0], corr.at(0, 1));
+        // m1 row0 = C[0,2], C[0,3]; row1 = C[1,2], C[1,3]
+        assert_eq!(&b.m1[..4], &[
+            corr.at(0, 2),
+            corr.at(0, 3),
+            corr.at(1, 2),
+            corr.at(1, 3)
+        ]);
+        // m2 = [[C22, C23],[C32, C33]]
+        assert_eq!(&b.m2[..4], &[1.0, corr.at(2, 3), corr.at(3, 2), 1.0]);
+        assert_eq!(&b.svals[..2], &[2, 3]);
+    }
+
+    #[test]
+    fn ebatch_apply_removes_first_win_only() {
+        let corr = tiny_corr();
+        let g = AdjMatrix::complete(4);
+        let sep = SepSets::new();
+        let mut b = EBatch::new(1, 8);
+        b.push(&corr, 0, 1, &[2]);
+        b.push(&corr, 0, 1, &[3]); // duplicate edge, different S
+        let z = vec![0.0f32, 0.0]; // both say independent
+        let (removed, moot) = b.apply(&z, 0.1, &g, &sep);
+        assert_eq!(removed, 1);
+        assert_eq!(moot, 1, "second slot was moot after first removal");
+        assert_eq!(sep.get(0, 1), Some(vec![2]), "first S wins");
+    }
+
+    #[test]
+    fn ebatch_apply_respects_tau() {
+        let corr = tiny_corr();
+        let g = AdjMatrix::complete(4);
+        let sep = SepSets::new();
+        let mut b = EBatch::new(1, 8);
+        b.push(&corr, 0, 1, &[2]);
+        let (removed, _) = b.apply(&[5.0], 0.1, &g, &sep);
+        assert_eq!(removed, 0);
+        assert!(g.has_edge(0, 1));
+        assert!(sep.get(0, 1).is_none());
+    }
+
+    #[test]
+    fn sbatch_pads_invalid_slots() {
+        let corr = tiny_corr();
+        let mut b = SBatch::new(1, 4, 8);
+        b.push_row(&corr, 0, &[3], &[1, 2]);
+        assert_eq!(b.rows(), 1);
+        assert_eq!(b.meta.len(), 4);
+        assert!(b.meta[0].1 && b.meta[1].1);
+        assert!(!b.meta[2].1 && !b.meta[3].1);
+        // padding slots are zero-filled (numerically inert)
+        assert_eq!(b.c_ij[2], 0.0);
+        assert_eq!(b.valid, vec![2]);
+        // m2 stored once per row
+        assert_eq!(b.m2.len(), 1);
+        assert_eq!(b.svals, vec![3]);
+    }
+
+    #[test]
+    fn sbatch_empty_candidates_is_noop() {
+        let corr = tiny_corr();
+        let mut b = SBatch::new(2, 4, 8);
+        b.push_row(&corr, 0, &[1, 2], &[]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn sbatch_apply_ignores_padding() {
+        let corr = tiny_corr();
+        let g = AdjMatrix::complete(4);
+        let sep = SepSets::new();
+        let mut b = SBatch::new(1, 4, 8);
+        b.push_row(&corr, 0, &[3], &[1]);
+        // all 4 slots "independent", but only slot 0 is valid
+        let z = vec![0.0f32; 4];
+        let (removed, _) = b.apply(&z, 0.1, &g, &sep);
+        assert_eq!(removed, 1);
+        assert!(!g.has_edge(0, 1));
+        assert!(g.has_edge(0, 2), "padded slot must not remove");
+        assert_eq!(sep.get(0, 1), Some(vec![3]));
+    }
+}

@@ -1,0 +1,108 @@
+//! Conditional-set sharing census (paper Fig. 9 / §5.5): for a given
+//! level, how many rows of `A'_G` contain each distinct conditioning set
+//! S? The histogram quantifies how much *global* sharing could save over
+//! cuPC-S's local sharing — the paper's argument for local-only.
+
+use crate::graph::compact::CompactAdj;
+use std::collections::HashMap;
+
+/// For level `l`, count for every distinct S (drawn as an l-subset of
+/// some row) the number of distinct rows whose compacted row contains S.
+/// Returns the multiset of those counts (one entry per distinct S).
+///
+/// Exact enumeration is exponential in l; this is used with l = 2 as in
+/// the paper's Fig. 9.
+pub fn set_row_counts(comp: &CompactAdj, l: usize) -> Vec<u32> {
+    assert_eq!(l, 2, "census implemented for level 2 (paper Fig. 9)");
+    let mut counts: HashMap<(u32, u32), u32> = HashMap::new();
+    for i in 0..comp.n() {
+        let row = comp.row(i);
+        for a in 0..row.len() {
+            for b in (a + 1)..row.len() {
+                *counts.entry((row[a], row[b])).or_insert(0) += 1;
+            }
+        }
+    }
+    counts.into_values().collect()
+}
+
+/// Histogram of `set_row_counts` with the paper's binning: bins of width
+/// `bin_width` over [1, max]; returns (bin_lo, share%) with shares in
+/// percent of distinct sets.
+pub fn histogram(counts: &[u32], bin_width: u32, max_bins: usize) -> Vec<(u32, f64)> {
+    let total = counts.len().max(1) as f64;
+    let mut bins = vec![0usize; max_bins];
+    for &c in counts {
+        let b = (((c.saturating_sub(1)) / bin_width) as usize).min(max_bins - 1);
+        bins[b] += 1;
+    }
+    bins.into_iter()
+        .enumerate()
+        .map(|(idx, cnt)| (idx as u32 * bin_width + 1, 100.0 * cnt as f64 / total))
+        .collect()
+}
+
+/// Share (in %) of distinct sets appearing in at most `threshold` rows —
+/// the paper's "about 95% of the redundant conditional sets S appear in
+/// at most 40 rows".
+pub fn share_at_most(counts: &[u32], threshold: u32) -> f64 {
+    if counts.is_empty() {
+        return 100.0;
+    }
+    let c = counts.iter().filter(|&&x| x <= threshold).count();
+    100.0 * c as f64 / counts.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::adj::AdjMatrix;
+
+    #[test]
+    fn census_counts_shared_pairs() {
+        // star around 0: rows 1..4 all contain {0}; pairs only exist in
+        // row 0 = {1,2,3,4}
+        let g = AdjMatrix::empty(5);
+        for j in 1..5 {
+            g.add_edge(0, j);
+        }
+        let comp = CompactAdj::from_snapshot(&g.snapshot(), 5);
+        let counts = set_row_counts(&comp, 2);
+        // row 0 contributes C(4,2) = 6 distinct pairs, each in 1 row
+        assert_eq!(counts.len(), 6);
+        assert!(counts.iter().all(|&c| c == 1));
+    }
+
+    #[test]
+    fn census_detects_multi_row_sharing() {
+        // triangle 0-1-2 plus hub 3 connected to all: pair {3, x} appears
+        // in multiple rows
+        let g = AdjMatrix::empty(4);
+        g.add_edge(0, 1);
+        g.add_edge(1, 2);
+        g.add_edge(0, 2);
+        for j in 0..3 {
+            g.add_edge(3, j);
+        }
+        let comp = CompactAdj::from_snapshot(&g.snapshot(), 4);
+        let counts = set_row_counts(&comp, 2);
+        assert!(counts.iter().any(|&c| c >= 2), "counts={counts:?}");
+    }
+
+    #[test]
+    fn histogram_shares_sum_to_100() {
+        let counts = vec![1, 1, 2, 5, 40, 41, 200];
+        let h = histogram(&counts, 40, 5);
+        let total: f64 = h.iter().map(|(_, s)| s).sum();
+        assert!((total - 100.0).abs() < 1e-9);
+        assert_eq!(h[0].0, 1);
+        assert_eq!(h[1].0, 41);
+    }
+
+    #[test]
+    fn share_at_most_works() {
+        let counts = vec![1, 2, 3, 100];
+        assert!((share_at_most(&counts, 40) - 75.0).abs() < 1e-9);
+        assert_eq!(share_at_most(&[], 40), 100.0);
+    }
+}

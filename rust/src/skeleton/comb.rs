@@ -1,0 +1,320 @@
+//! Lexicographic combination indexing — the paper's Algorithm 6
+//! (Buckles–Lybanon, TOMS algorithm 515).
+//!
+//! `comb_at(n, l, t)` returns the t-th combination (0-based values) of
+//! choosing `l` elements from `{0..n-1}` in lexicographic order, without
+//! enumerating. cuPC calls this per-thread to derive its conditioning set
+//! on the fly; here the batch packers call it per batch slot, which keeps
+//! the packer stateless and trivially shardable — the same property the
+//! paper exploits.
+//!
+//! The cuPC-E variant `comb_at_skip` additionally skips a forbidden
+//! position `p` (the index of Vj inside the row), matching §4.2's
+//! "increment all values ≥ p".
+
+/// Binomial coefficient with saturation (fits experiment scales; u128
+/// intermediate to delay overflow).
+pub fn binom(n: usize, k: usize) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num: u128 = 1;
+    for i in 0..k {
+        num = num * (n - i) as u128 / (i + 1) as u128;
+        if num > u64::MAX as u128 {
+            return u64::MAX;
+        }
+    }
+    num as u64
+}
+
+/// t-th lexicographic l-combination of {0,..,n-1} into `out` (ascending).
+/// Implements the paper's Algorithm 6 (1-based internally, shifted to
+/// 0-based on output, exactly as §4.2 describes for cuPC-S).
+pub fn comb_at(n: usize, l: usize, t: u64, out: &mut [u32]) {
+    debug_assert!(l <= n, "comb_at: l={l} > n={n}");
+    debug_assert!(t < binom(n, l), "comb_at: t={t} out of range");
+    debug_assert_eq!(out.len(), l);
+    let mut sum: u64 = 0;
+    let mut prev: usize = 0; // O_t[c-1], 1-based value
+    for c in 0..l {
+        let mut v = prev; // O_t[c] starts from O_t[c-1]
+        loop {
+            v += 1;
+            let add = binom(n - v, l - (c + 1));
+            sum += add;
+            if sum > t {
+                sum -= add;
+                break;
+            }
+        }
+        out[c] = (v - 1) as u32; // shift to 0-based
+        prev = v;
+    }
+}
+
+/// cuPC-E variant: t-th combination of l elements drawn from row
+/// positions {0..row_len-1} **excluding** position `p` (where Vj sits).
+/// Equivalent to `comb_at(row_len - 1, l, t)` followed by incrementing
+/// every value ≥ p (paper §4.2 last paragraph).
+pub fn comb_at_skip(row_len: usize, l: usize, t: u64, p: usize, out: &mut [u32]) {
+    comb_at(row_len - 1, l, t, out);
+    for v in out.iter_mut() {
+        if *v as usize >= p {
+            *v += 1;
+        }
+    }
+}
+
+/// Iterator over a contiguous range of lexicographic combinations.
+///
+/// `comb_at` costs O(t · l) per call (the paper's GPU threads pay this
+/// once per thread, in parallel); calling it per *test* in a sequential
+/// packer is quadratic in the range length. The iterator seeds with one
+/// `comb_at` and then advances by the O(1)-amortized lexicographic
+/// successor — the §Perf hot-path fix for level-1-heavy workloads.
+pub struct CombRange {
+    n: usize,
+    l: usize,
+    cur: Vec<u32>,
+    remaining: u64,
+    fresh: bool,
+}
+
+impl CombRange {
+    /// Combinations t ∈ [t0, t0 + count) of l elements from {0..n-1}.
+    pub fn new(n: usize, l: usize, t0: u64, count: u64) -> Self {
+        let mut cur = vec![0u32; l];
+        if count > 0 {
+            comb_at(n, l, t0, &mut cur);
+        }
+        CombRange {
+            n,
+            l,
+            cur,
+            remaining: count,
+            fresh: true,
+        }
+    }
+
+    /// Advance to the next combination; returns the current one or None.
+    pub fn next_comb(&mut self) -> Option<&[u32]> {
+        if self.remaining == 0 {
+            return None;
+        }
+        if self.fresh {
+            self.fresh = false;
+        } else {
+            // lexicographic successor: bump the rightmost bumpable digit
+            let l = self.l;
+            let mut c = l;
+            loop {
+                debug_assert!(c > 0, "advanced past the last combination");
+                c -= 1;
+                if self.cur[c] < (self.n - l + c) as u32 {
+                    self.cur[c] += 1;
+                    for d in (c + 1)..l {
+                        self.cur[d] = self.cur[d - 1] + 1;
+                    }
+                    break;
+                }
+            }
+        }
+        self.remaining -= 1;
+        Some(&self.cur)
+    }
+}
+
+/// Range iterator for the cuPC-E skip-p variant: combinations are drawn
+/// in the reduced (row_len − 1) space and remapped around position p.
+pub struct CombRangeSkip {
+    inner: CombRange,
+    p: u32,
+    out: Vec<u32>,
+}
+
+impl CombRangeSkip {
+    pub fn new(row_len: usize, l: usize, t0: u64, count: u64, p: usize) -> Self {
+        CombRangeSkip {
+            inner: CombRange::new(row_len - 1, l, t0, count),
+            p: p as u32,
+            out: vec![0u32; l],
+        }
+    }
+
+    pub fn next_comb(&mut self) -> Option<&[u32]> {
+        let p = self.p;
+        let cur = self.inner.next_comb()?;
+        for (dst, &v) in self.out.iter_mut().zip(cur) {
+            *dst = if v >= p { v + 1 } else { v };
+        }
+        Some(&self.out)
+    }
+}
+
+/// Number of conditioning sets for one edge in cuPC-E at level l:
+/// C(n'_i − 1, l)  (paper §3.3).
+pub fn n_sets_edge(row_len: usize, l: usize) -> u64 {
+    if row_len == 0 {
+        return 0;
+    }
+    binom(row_len - 1, l)
+}
+
+/// Number of conditioning sets for one row in cuPC-S at level l:
+/// C(n'_i, l)  (paper §3.4).
+pub fn n_sets_row(row_len: usize, l: usize) -> u64 {
+    binom(row_len, l)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binom_basics() {
+        assert_eq!(binom(5, 2), 10);
+        assert_eq!(binom(6, 0), 1);
+        assert_eq!(binom(6, 6), 1);
+        assert_eq!(binom(4, 5), 0);
+        assert_eq!(binom(52, 5), 2_598_960);
+    }
+
+    #[test]
+    fn paper_example_n3_l2() {
+        // O_0=[1,2], O_1=[1,3], O_2=[2,3] (1-based) → 0-based.
+        let mut out = [0u32; 2];
+        comb_at(3, 2, 0, &mut out);
+        assert_eq!(out, [0, 1]);
+        comb_at(3, 2, 1, &mut out);
+        assert_eq!(out, [0, 2]);
+        comb_at(3, 2, 2, &mut out);
+        assert_eq!(out, [1, 2]);
+    }
+
+    #[test]
+    fn full_enumeration_is_lexicographic_bijection() {
+        // property test across several (n, l)
+        for (n, l) in [(5, 2), (6, 3), (7, 1), (8, 4), (6, 6)] {
+            let total = binom(n, l);
+            let mut prev: Option<Vec<u32>> = None;
+            let mut seen = std::collections::HashSet::new();
+            for t in 0..total {
+                let mut out = vec![0u32; l];
+                comb_at(n, l, t, &mut out);
+                // strictly ascending elements in range
+                for w in out.windows(2) {
+                    assert!(w[0] < w[1]);
+                }
+                assert!(*out.last().unwrap() < n as u32);
+                // lexicographically increasing over t
+                if let Some(p) = &prev {
+                    assert!(*p < out, "t={t} not lex-ordered for n={n} l={l}");
+                }
+                assert!(seen.insert(out.clone()), "duplicate at t={t}");
+                prev = Some(out);
+            }
+            assert_eq!(seen.len() as u64, total);
+        }
+    }
+
+    #[test]
+    fn skip_variant_never_contains_p() {
+        for row_len in [3usize, 5, 8] {
+            for l in 1..(row_len - 1) {
+                for p in 0..row_len {
+                    let total = binom(row_len - 1, l);
+                    for t in 0..total {
+                        let mut out = vec![0u32; l];
+                        comb_at_skip(row_len, l, t, p, &mut out);
+                        assert!(
+                            !out.contains(&(p as u32)),
+                            "row_len={row_len} l={l} p={p} t={t} out={out:?}"
+                        );
+                        for &v in &out {
+                            assert!((v as usize) < row_len);
+                        }
+                        for w in out.windows(2) {
+                            assert!(w[0] < w[1]);
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn skip_variant_is_bijection() {
+        let row_len = 6;
+        let l = 2;
+        let p = 3;
+        let total = binom(row_len - 1, l);
+        let mut seen = std::collections::HashSet::new();
+        for t in 0..total {
+            let mut out = vec![0u32; l];
+            comb_at_skip(row_len, l, t, p, &mut out);
+            seen.insert(out);
+        }
+        assert_eq!(seen.len() as u64, total);
+    }
+
+    #[test]
+    fn set_counters() {
+        assert_eq!(n_sets_edge(6, 2), binom(5, 2));
+        assert_eq!(n_sets_edge(0, 2), 0);
+        assert_eq!(n_sets_row(6, 2), 15); // paper Fig. 4: C(6,2) = 15
+    }
+
+    #[test]
+    fn comb_range_matches_comb_at() {
+        for (n, l) in [(6usize, 2usize), (8, 3), (5, 1), (7, 7)] {
+            let total = binom(n, l);
+            for t0 in [0u64, 1, total / 2, total.saturating_sub(1)] {
+                let count = (total - t0).min(5);
+                let mut it = CombRange::new(n, l, t0, count);
+                for t in t0..t0 + count {
+                    let mut want = vec![0u32; l];
+                    comb_at(n, l, t, &mut want);
+                    let got = it.next_comb().unwrap();
+                    assert_eq!(got, &want[..], "n={n} l={l} t={t}");
+                }
+                assert!(it.next_comb().is_none());
+            }
+        }
+    }
+
+    #[test]
+    fn comb_range_skip_matches_comb_at_skip() {
+        let (row_len, l, p) = (7usize, 3usize, 2usize);
+        let total = binom(row_len - 1, l);
+        let mut it = CombRangeSkip::new(row_len, l, 0, total, p);
+        for t in 0..total {
+            let mut want = vec![0u32; l];
+            comb_at_skip(row_len, l, t, p, &mut want);
+            let got = it.next_comb().unwrap();
+            assert_eq!(got, &want[..], "t={t}");
+        }
+        assert!(it.next_comb().is_none());
+    }
+
+    #[test]
+    fn comb_range_empty() {
+        let mut it = CombRange::new(5, 2, 0, 0);
+        assert!(it.next_comb().is_none());
+    }
+
+    #[test]
+    fn fig3_example() {
+        // paper Fig. 3(d): row 2 = {0,1,3,4,5,6}, j=5 at position p=4,
+        // l=2 → 10 combinations from the 5 remaining elements; when t=9
+        // (last), P={3,5} i.e. 0-based positions {3,5} → S={V4, V6}.
+        let row: Vec<u32> = vec![0, 1, 3, 4, 5, 6];
+        let p = 4; // position of j=5
+        let mut out = [0u32; 2];
+        comb_at_skip(6, 2, 9, p, &mut out);
+        assert_eq!(out, [3, 5]);
+        let s: Vec<u32> = out.iter().map(|&x| row[x as usize]).collect();
+        assert_eq!(s, vec![4, 6]);
+    }
+}

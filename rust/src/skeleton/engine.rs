@@ -1,0 +1,381 @@
+//! The CI-test engine abstraction: batched z-statistic evaluation.
+//!
+//! Two implementations share identical semantics:
+//! * [`NativeEngine`] — pure-Rust mirror of the Pallas kernels (f64
+//!   internally; always available, used for cross-checking and as the
+//!   fallback above the AOT-compiled level range).
+//! * `runtime::XlaEngine` — executes the AOT HLO artifacts on the PJRT
+//!   CPU client (the production path; see `rust/src/runtime`).
+//!
+//! Packed-batch layout (matches python/compile/model.py):
+//! * ci_e: `c_ij[B]`, `m1[B·2·l]`, `m2[B·l·l]` → `z[B]`
+//! * ci_s: `c_ij[R·K]`, `m1[R·K·2·l]`, `m2[R·l·l]` → `z[R·K]`
+//! * level0: `c_ij[B]` → `z[B]`
+
+use crate::stats::chol::{pinv_fast, PinvScratch};
+use crate::stats::fisher::fisher_z;
+use anyhow::Result;
+
+/// Batched CI-statistic evaluation. Inputs are f32 (the artifact dtype);
+/// outputs are |Fisher z| per test. Any batch length is accepted — the
+/// engine handles padding/chunking internally.
+pub trait CiEngine {
+    /// |z| of raw correlations (level 0).
+    fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>>;
+
+    /// cuPC-E batch: one (i,j,S) test per slot; `b` slots.
+    fn ci_e(&mut self, l: usize, b: usize, c_ij: &[f32], m1: &[f32], m2: &[f32])
+        -> Result<Vec<f32>>;
+
+    /// cuPC-S batch: `rows` conditioning sets × `k` tests each. The
+    /// pseudo-inverse of each row's M2 is computed once (the cuPC-S
+    /// saving) regardless of engine.
+    /// `valid[r]` = number of non-padding slots in row r (len == rows);
+    /// engines may skip the padded tail (the XLA kernel ignores this and
+    /// computes the full K width — padded verdicts are discarded later).
+    fn ci_s(
+        &mut self,
+        l: usize,
+        rows: usize,
+        k: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        valid: &[u32],
+    ) -> Result<Vec<f32>>;
+
+    /// Highest conditioning-set size this engine supports natively
+    /// (the driver falls back to [`NativeEngine`] above it).
+    fn max_level(&self) -> usize;
+
+    /// Preferred ci_e batch capacity (packers flush at this size).
+    fn batch_e(&self) -> usize;
+
+    /// Preferred ci_s row capacity.
+    fn batch_s(&self) -> usize;
+
+    /// Tests per conditioning set in ci_s batches.
+    fn k(&self) -> usize;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Pure-Rust engine mirroring the Pallas kernels.
+pub struct NativeEngine {
+    sc: PinvScratch,
+    m2inv: Vec<f64>,
+    m2f: Vec<f64>,
+    batch_e: usize,
+    batch_s: usize,
+    k: usize,
+}
+
+pub const NATIVE_MAX_LEVEL: usize = 32;
+
+impl Default for NativeEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl NativeEngine {
+    pub fn new() -> Self {
+        // Batch geometry matches the AOT artifacts so that schedules
+        // (rounds, early-termination points) are identical across engines.
+        Self::with_batches(4096, 256, 32)
+    }
+
+    pub fn with_batches(batch_e: usize, batch_s: usize, k: usize) -> Self {
+        let max_l = NATIVE_MAX_LEVEL;
+        NativeEngine {
+            sc: PinvScratch::new(max_l),
+            m2inv: vec![0.0; max_l * max_l],
+            m2f: vec![0.0; max_l * max_l],
+            batch_e,
+            batch_s,
+            k,
+        }
+    }
+
+    /// z for one packed test given a precomputed M2⁻¹.
+    #[inline]
+    fn z_from_packed(c_ij: f32, m1: &[f32], m2inv: &[f64], l: usize) -> f32 {
+        // w = M1 M2⁻¹ (2×l), H = M0 − w M1ᵀ
+        let (mut h00, mut h01, mut h11) = (0.0f64, 0.0f64, 0.0f64);
+        for r in 0..2 {
+            for c in 0..l {
+                let mut acc = 0.0f64;
+                for k in 0..l {
+                    acc += m1[r * l + k] as f64 * m2inv[k * l + c];
+                }
+                // accumulate H terms on the fly
+                match r {
+                    0 => {
+                        h00 += acc * m1[c] as f64;
+                        h01 += acc * m1[l + c] as f64;
+                    }
+                    _ => {
+                        h11 += acc * m1[l + c] as f64;
+                    }
+                }
+            }
+        }
+        let h00 = 1.0 - h00;
+        let h11 = 1.0 - h11;
+        let h01 = c_ij as f64 - h01;
+        let rho = h01 / (h00 * h11).max(1e-12).sqrt();
+        fisher_z(rho) as f32
+    }
+
+    fn pinv_f32(&mut self, m2: &[f32], l: usize) {
+        for (dst, src) in self.m2f[..l * l].iter_mut().zip(m2) {
+            *dst = *src as f64;
+        }
+        let (m2f, m2inv) = (&self.m2f[..l * l], &mut self.m2inv[..l * l]);
+        pinv_fast(m2f, l, &mut self.sc, m2inv);
+    }
+}
+
+impl CiEngine for NativeEngine {
+    fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>> {
+        Ok(c_ij.iter().map(|&c| fisher_z(c as f64) as f32).collect())
+    }
+
+    fn ci_e(
+        &mut self,
+        l: usize,
+        b: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(c_ij.len(), b);
+        debug_assert_eq!(m1.len(), b * 2 * l);
+        debug_assert_eq!(m2.len(), b * l * l);
+        let mut z = Vec::with_capacity(b);
+        for s in 0..b {
+            self.pinv_f32(&m2[s * l * l..(s + 1) * l * l], l);
+            let m2inv = &self.m2inv[..l * l];
+            z.push(Self::z_from_packed(
+                c_ij[s],
+                &m1[s * 2 * l..(s + 1) * 2 * l],
+                m2inv,
+                l,
+            ));
+        }
+        Ok(z)
+    }
+
+    fn ci_s(
+        &mut self,
+        l: usize,
+        rows: usize,
+        k: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        valid: &[u32],
+    ) -> Result<Vec<f32>> {
+        debug_assert_eq!(c_ij.len(), rows * k);
+        debug_assert_eq!(m1.len(), rows * k * 2 * l);
+        debug_assert_eq!(m2.len(), rows * l * l);
+        debug_assert_eq!(valid.len(), rows);
+        let mut z = vec![0.0f32; rows * k];
+        for r in 0..rows {
+            // ONE pinv per row — the cuPC-S saving, mirrored natively.
+            self.pinv_f32(&m2[r * l * l..(r + 1) * l * l], l);
+            // skip the padded tail (CUDA's inactive lanes, for free here)
+            for t in 0..(valid[r] as usize).min(k) {
+                let s = r * k + t;
+                let m2inv = &self.m2inv[..l * l];
+                z[s] = Self::z_from_packed(
+                    c_ij[s],
+                    &m1[s * 2 * l..(s + 1) * 2 * l],
+                    m2inv,
+                    l,
+                );
+            }
+        }
+        Ok(z)
+    }
+
+    fn max_level(&self) -> usize {
+        NATIVE_MAX_LEVEL
+    }
+
+    fn batch_e(&self) -> usize {
+        self.batch_e
+    }
+
+    fn batch_s(&self) -> usize {
+        self.batch_s
+    }
+
+    fn k(&self) -> usize {
+        self.k
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+/// Build the engine selected by the config (Xla engines are constructed
+/// through `runtime::engine_from_config` to keep this module free of PJRT
+/// types; this helper stays for native-only callers and tests).
+pub fn native_engine() -> NativeEngine {
+    NativeEngine::new()
+}
+
+/// Composes a primary engine with a fallback used above the primary's
+/// AOT-compiled level range (the XLA artifacts cover ℓ ≤ 8; deeper
+/// levels — rare, dense-graph territory — run through the native mirror
+/// with identical semantics).
+pub struct WithFallback<P, F> {
+    pub primary: P,
+    pub fallback: F,
+}
+
+impl<P: CiEngine, F: CiEngine> CiEngine for WithFallback<P, F> {
+    fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>> {
+        self.primary.level0(c_ij)
+    }
+
+    fn ci_e(
+        &mut self,
+        l: usize,
+        b: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+    ) -> Result<Vec<f32>> {
+        if l <= self.primary.max_level() {
+            self.primary.ci_e(l, b, c_ij, m1, m2)
+        } else {
+            self.fallback.ci_e(l, b, c_ij, m1, m2)
+        }
+    }
+
+    fn ci_s(
+        &mut self,
+        l: usize,
+        rows: usize,
+        k: usize,
+        c_ij: &[f32],
+        m1: &[f32],
+        m2: &[f32],
+        valid: &[u32],
+    ) -> Result<Vec<f32>> {
+        if l <= self.primary.max_level() {
+            self.primary.ci_s(l, rows, k, c_ij, m1, m2, valid)
+        } else {
+            self.fallback.ci_s(l, rows, k, c_ij, m1, m2, valid)
+        }
+    }
+
+    fn max_level(&self) -> usize {
+        self.primary.max_level().max(self.fallback.max_level())
+    }
+
+    fn batch_e(&self) -> usize {
+        self.primary.batch_e()
+    }
+
+    fn batch_s(&self) -> usize {
+        self.primary.batch_s()
+    }
+
+    fn k(&self) -> usize {
+        self.primary.k()
+    }
+
+    fn name(&self) -> &'static str {
+        "fallback-composed"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level0_matches_fisher() {
+        let mut e = NativeEngine::new();
+        let z = e.level0(&[0.0, 0.5, -0.5, 0.99]).unwrap();
+        assert_eq!(z[0], 0.0);
+        assert!((z[1] - 0.54930615).abs() < 1e-5);
+        assert!((z[1] - z[2]).abs() < 1e-7);
+        assert!(z[3] > 2.0);
+    }
+
+    #[test]
+    fn ci_e_l1_closed_form() {
+        // rho(0,1|2) = (c01 - c02*c12)/sqrt((1-c02²)(1-c12²))
+        let (c01, c02, c12) = (0.56f32, 0.8f32, 0.7f32);
+        let mut e = NativeEngine::new();
+        let c_ij = [c01];
+        let m1 = [c02, c12]; // C[i,S], C[j,S]
+        let m2 = [1.0f32];
+        let z = e.ci_e(1, 1, &c_ij, &m1, &m2).unwrap();
+        assert!(z[0].abs() < 1e-5, "chain: conditioning kills rho, z={}", z[0]);
+    }
+
+    #[test]
+    fn ci_s_equals_ci_e_per_test() {
+        // same (i,j,S) evaluated via both paths must agree exactly.
+        let l = 2;
+        let c_ij = [0.3f32, -0.2];
+        let m1 = [
+            0.5f32, 0.1, 0.4, 0.2, // test 0: C[i,S]=(.5,.1), C[j,S]=(.4,.2)
+            0.6, 0.2, 0.1, 0.3, // test 1
+        ];
+        let m2 = [1.0f32, 0.4, 0.4, 1.0];
+        let mut e = NativeEngine::new();
+        // ci_s: 1 row, k=2 sharing the same m2
+        let z_s = e.ci_s(l, 1, 2, &c_ij, &m1, &m2, &[2]).unwrap();
+        // ci_e: 2 slots with m2 duplicated
+        let m2_dup = [m2[0], m2[1], m2[2], m2[3], m2[0], m2[1], m2[2], m2[3]];
+        let z_e = e.ci_e(l, 2, &c_ij, &m1, &m2_dup).unwrap();
+        assert_eq!(z_s, z_e);
+    }
+
+    #[test]
+    fn batch_geometry_defaults_match_artifacts() {
+        let e = NativeEngine::new();
+        assert_eq!(e.batch_e(), 4096);
+        assert_eq!(e.batch_s(), 256);
+        assert_eq!(e.k(), 32);
+    }
+}
+
+#[cfg(test)]
+mod micro {
+    use super::*;
+
+    /// coarse throughput probe — run with:
+    ///   cargo test --release micro_throughput -- --ignored --nocapture
+    #[test]
+    #[ignore]
+    fn micro_throughput() {
+        let mut e = NativeEngine::new();
+        for l in [1usize, 2, 3, 4, 8] {
+            let b = 100_000;
+            let c_ij = vec![0.3f32; b];
+            let m1 = vec![0.2f32; b * 2 * l];
+            let mut m2 = vec![0.1f32; b * l * l];
+            for s in 0..b {
+                for d in 0..l {
+                    m2[s * l * l + d * l + d] = 1.0;
+                }
+            }
+            let t = std::time::Instant::now();
+            let z = e.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+            let dt = t.elapsed().as_secs_f64();
+            println!("ci_e l={l}: {:.1} ns/test (z0={})", dt / b as f64 * 1e9, z[0]);
+        }
+        let c = vec![0.5f32; 1_000_000];
+        let t = std::time::Instant::now();
+        let _ = e.level0(&c).unwrap();
+        println!("level0: {:.1} ns/test", t.elapsed().as_secs_f64() / 1e6 * 1e9);
+    }
+}

@@ -1,0 +1,228 @@
+//! cuPC-E (paper Algorithm 4, §3.3) as a batched schedule.
+//!
+//! The CUDA grid of `n × n'/β` blocks with `γ × β` threads becomes a
+//! *round* structure: in round r, every live edge (i, j) contributes its
+//! conditioning sets with indices `t ∈ [r·γ, (r+1)·γ)` — γ tests in
+//! flight per edge, the paper's first degree of parallelism — while all
+//! edges contribute simultaneously — the second degree. Edges are packed
+//! in groups of β (the block shape), batches flush at the engine's
+//! capacity, and verdicts apply before the next round, which reproduces
+//! cuPC-E's early-termination semantics (§4.1 cases: removed edges are
+//! skipped at pack time; within a flight the first verdict wins):
+//! γ = 1 avoids all unnecessary tests but serializes; γ = ∞ is fully
+//! parallel but wasteful — the baselines of Fig. 5.
+
+use super::batch::{Corr32, EBatch};
+use super::comb::{n_sets_edge, CombRangeSkip};
+use super::engine::CiEngine;
+use super::level0::run_level0;
+use super::{should_continue, Config, LevelStats, SkeletonResult};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::compact::CompactAdj;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::tau;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// One live edge's combination cursor within a level.
+struct EdgeTask {
+    i: u32,
+    j: u32,
+    /// position of j inside row i of G'
+    p: u32,
+    /// n'_i
+    row_len: u32,
+    /// C(n'_i − 1, ℓ)
+    total: u64,
+}
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    let mut engine = crate::runtime::engine_from_config(cfg)?;
+    run_with_engine(corr, n, m, cfg, engine.as_mut())
+}
+
+pub fn run_with_engine(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    engine: &mut dyn CiEngine,
+) -> Result<SkeletonResult> {
+    let graph = AdjMatrix::complete(n);
+    let sepsets = SepSets::new();
+    let corr32 = Corr32::from_f64(corr, n);
+    let mut levels = Vec::new();
+
+    levels.push(run_level0(corr, n, m, cfg, engine, &graph, &sepsets)?);
+
+    let gamma = cfg.gamma.max(1) as u64;
+    let beta = cfg.beta.max(1);
+    let mut l = 1usize;
+    while should_continue(&graph, l, cfg) {
+        let t = Timer::start();
+        let taul = tau(m, l, cfg.alpha);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+
+        // Build the edge-task list from G' (ordered pairs, row-major —
+        // the same visit order as the CUDA grid).
+        let mut tasks: Vec<EdgeTask> = Vec::new();
+        for i in 0..n {
+            let row = comp.row(i);
+            let nr = row.len();
+            if nr < l + 1 {
+                continue; // §4.1 case I
+            }
+            let total = n_sets_edge(nr, l);
+            if total == 0 {
+                continue;
+            }
+            for (p, &j) in row.iter().enumerate() {
+                tasks.push(EdgeTask {
+                    i: i as u32,
+                    j,
+                    p: p as u32,
+                    row_len: nr as u32,
+                    total,
+                });
+            }
+        }
+
+        let mut tests = 0u64;
+        let mut removed = 0usize;
+        let mut batch = EBatch::new(l, engine.batch_e());
+        let mut ids = vec![0u32; l];
+        let max_total = tasks.iter().map(|e| e.total).max().unwrap_or(0);
+        let mut round = 0u64;
+        while round * gamma < max_total {
+            let lo = round * gamma;
+            // β-grouped pass over the tasks (pack order = block shape)
+            for group in tasks.chunks(beta) {
+                for task in group {
+                    if lo >= task.total {
+                        continue; // this edge's sets are exhausted
+                    }
+                    let (i, j) = (task.i as usize, task.j as usize);
+                    if !graph.has_edge(i, j) {
+                        continue; // removed earlier: skip at pack time
+                    }
+                    let hi = ((round + 1) * gamma).min(task.total);
+                    let row = comp.row(i);
+                    let mut combs =
+                        CombRangeSkip::new(task.row_len as usize, l, lo, hi - lo, task.p as usize);
+                    while let Some(sbuf) = combs.next_comb() {
+                        for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                            *dst = row[pos as usize];
+                        }
+                        batch.push(&corr32, i, j, &ids);
+                        tests += 1;
+                        if batch.len() >= engine.batch_e() {
+                            removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+                        }
+                    }
+                }
+            }
+            // end of round: everything in flight lands before round r+1
+            if !batch.is_empty() {
+                removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+            }
+            round += 1;
+        }
+
+        levels.push(LevelStats {
+            level: l,
+            tests,
+            removed,
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        });
+        if cfg.verbose {
+            eprintln!(
+                "[cupc-e] level {l}: {tests} tests, removed {removed}, {} edges left",
+                graph.n_edges()
+            );
+        }
+        l += 1;
+    }
+
+    Ok(SkeletonResult {
+        graph,
+        sepsets,
+        levels,
+    })
+}
+
+fn flush(
+    batch: &mut EBatch,
+    engine: &mut dyn CiEngine,
+    taul: f64,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> Result<usize> {
+    let z = engine.ci_e(batch.l, batch.len(), &batch.c_ij, &batch.m1, &batch.m2)?;
+    let (removed, _moot) = batch.apply(&z, taul, graph, sepsets);
+    batch.clear();
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::engine::NativeEngine;
+    use crate::sim::datasets;
+    use crate::stats::corr::correlation_matrix;
+
+    fn run_native(corr: &[f64], n: usize, m: usize, cfg: &Config) -> SkeletonResult {
+        let mut e = NativeEngine::new();
+        run_with_engine(corr, n, m, cfg, &mut e).unwrap()
+    }
+
+    #[test]
+    fn matches_serial_on_er_graph() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 50,
+            m: 150,
+            topology: datasets::Topology::Er(0.08),
+            seed: 11,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let res_e = run_native(&c, ds.data.n, ds.data.m, &cfg);
+        let res_s = crate::skeleton::serial::run(&c, ds.data.n, ds.data.m, &cfg).unwrap();
+        assert_eq!(
+            res_e.graph.snapshot(),
+            res_s.graph.snapshot(),
+            "cuPC-E must produce the PC-stable skeleton"
+        );
+    }
+
+    #[test]
+    fn gamma_tradeoff_wastes_tests_but_same_result() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 40,
+            m: 100,
+            topology: datasets::Topology::Er(0.1),
+            seed: 13,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let lo = Config {
+            gamma: 1,
+            ..Config::default()
+        };
+        let hi = Config {
+            gamma: 512,
+            ..Config::default()
+        };
+        let r_lo = run_native(&c, ds.data.n, ds.data.m, &lo);
+        let r_hi = run_native(&c, ds.data.n, ds.data.m, &hi);
+        assert_eq!(r_lo.graph.snapshot(), r_hi.graph.snapshot());
+        assert!(
+            r_hi.total_tests() >= r_lo.total_tests(),
+            "larger flights cannot test less: {} vs {}",
+            r_hi.total_tests(),
+            r_lo.total_tests()
+        );
+    }
+}

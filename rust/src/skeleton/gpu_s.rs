@@ -1,0 +1,247 @@
+//! cuPC-S (paper Algorithm 5, §3.4) as a batched schedule.
+//!
+//! Threads are assigned to *conditioning sets*, not edges: for each row i
+//! of G', the `C(n'_i, ℓ)` sets S are walked in rounds of θ×δ in flight;
+//! each set computes `pinv(C[S,S])` once and applies it to every live
+//! candidate j ∈ row(i) \ S (paper key feature V — the dominant saving).
+//! Candidates beyond the kernel's K-slot width spill into additional
+//! batch rows (re-computing that pinv, the same duplication a CUDA
+//! thread avoids by looping — bounded by ⌈n'_i/K⌉). Sharing is *local*
+//! (within a row), matching §5.5's analysis that global sharing does not
+//! pay for its search.
+
+use super::batch::{Corr32, SBatch};
+use super::comb::{n_sets_row, CombRange};
+use super::engine::CiEngine;
+use super::level0::run_level0;
+use super::{should_continue, Config, LevelStats, SkeletonResult};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::compact::CompactAdj;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::tau;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    let mut engine = crate::runtime::engine_from_config(cfg)?;
+    run_with_engine(corr, n, m, cfg, engine.as_mut())
+}
+
+pub fn run_with_engine(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    engine: &mut dyn CiEngine,
+) -> Result<SkeletonResult> {
+    let graph = AdjMatrix::complete(n);
+    let sepsets = SepSets::new();
+    let corr32 = Corr32::from_f64(corr, n);
+    let mut levels = Vec::new();
+
+    levels.push(run_level0(corr, n, m, cfg, engine, &graph, &sepsets)?);
+
+    let k = engine.k();
+    let flight = (cfg.theta.max(1) * cfg.delta.max(1)) as u64; // sets in flight per row per round
+    let mut l = 1usize;
+    while should_continue(&graph, l, cfg) {
+        let t = Timer::start();
+        let taul = tau(m, l, cfg.alpha);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+
+        let mut tests = 0u64;
+        let mut removed = 0usize;
+        let mut batch = SBatch::new(l, k, engine.batch_s());
+        let mut ids = vec![0u32; l];
+        let mut cand: Vec<u32> = Vec::new();
+
+        // rows with enough neighbors, and their set counts
+        let rows: Vec<(usize, u64)> = (0..n)
+            .filter(|&i| comp.row_len(i) >= l + 1)
+            .map(|i| (i, n_sets_row(comp.row_len(i), l)))
+            .collect();
+        let max_total = rows.iter().map(|&(_, t)| t).max().unwrap_or(0);
+
+        let mut round = 0u64;
+        while round * flight < max_total {
+            let lo = round * flight;
+            for &(i, total) in &rows {
+                if lo >= total {
+                    continue;
+                }
+                let row = comp.row(i);
+                // §4.1: skip the whole row if no live edge remains
+                if !row.iter().any(|&j| graph.has_edge(i, j as usize)) {
+                    continue;
+                }
+                let hi = ((round + 1) * flight).min(total);
+                let mut combs = CombRange::new(row.len(), l, lo, hi - lo);
+                while let Some(sbuf) = combs.next_comb() {
+                    for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                        *dst = row[pos as usize];
+                    }
+                    // candidates: row members not in S with live edges
+                    cand.clear();
+                    for &ju in row {
+                        if ids.contains(&ju) {
+                            continue;
+                        }
+                        if graph.has_edge(i, ju as usize) {
+                            cand.push(ju);
+                        }
+                    }
+                    // spill into K-wide rows
+                    for chunk in cand.chunks(k) {
+                        batch.push_row(&corr32, i, &ids, chunk);
+                        tests += chunk.len() as u64;
+                        if batch.rows() >= engine.batch_s() {
+                            removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+                        }
+                    }
+                }
+            }
+            if !batch.is_empty() {
+                removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+            }
+            round += 1;
+        }
+
+        levels.push(LevelStats {
+            level: l,
+            tests,
+            removed,
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        });
+        if cfg.verbose {
+            eprintln!(
+                "[cupc-s] level {l}: {tests} tests, removed {removed}, {} edges left",
+                graph.n_edges()
+            );
+        }
+        l += 1;
+    }
+
+    Ok(SkeletonResult {
+        graph,
+        sepsets,
+        levels,
+    })
+}
+
+fn flush(
+    batch: &mut SBatch,
+    engine: &mut dyn CiEngine,
+    taul: f64,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> Result<usize> {
+    let z = engine.ci_s(
+        batch.l,
+        batch.rows(),
+        batch.k,
+        &batch.c_ij,
+        &batch.m1,
+        &batch.m2,
+        &batch.valid,
+    )?;
+    let (removed, _moot) = batch.apply(&z, taul, graph, sepsets);
+    batch.clear();
+    Ok(removed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::engine::NativeEngine;
+    use crate::sim::datasets;
+    use crate::stats::corr::correlation_matrix;
+
+    fn run_native(corr: &[f64], n: usize, m: usize, cfg: &Config) -> SkeletonResult {
+        let mut e = NativeEngine::new();
+        run_with_engine(corr, n, m, cfg, &mut e).unwrap()
+    }
+
+    #[test]
+    fn matches_serial_skeleton() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 50,
+            m: 150,
+            topology: datasets::Topology::Er(0.08),
+            seed: 11,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let res_s = run_native(&c, ds.data.n, ds.data.m, &cfg);
+        let serial = crate::skeleton::serial::run(&c, ds.data.n, ds.data.m, &cfg).unwrap();
+        assert_eq!(
+            res_s.graph.snapshot(),
+            serial.graph.snapshot(),
+            "cuPC-S must produce the PC-stable skeleton"
+        );
+    }
+
+    #[test]
+    fn matches_cupc_e_skeleton_and_sepset_keys() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 45,
+            m: 200,
+            topology: datasets::Topology::Grn(1.6, 6),
+            seed: 21,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let res_s = run_native(&c, ds.data.n, ds.data.m, &cfg);
+        let mut e = NativeEngine::new();
+        let res_e =
+            crate::skeleton::gpu_e::run_with_engine(&c, ds.data.n, ds.data.m, &cfg, &mut e)
+                .unwrap();
+        assert_eq!(res_s.graph.snapshot(), res_e.graph.snapshot());
+        // same removed pairs (sepset contents may differ in S but the
+        // key set must coincide)
+        let keys = |r: &SkeletonResult| {
+            r.sepsets
+                .sorted_entries()
+                .into_iter()
+                .map(|(k, _)| k)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&res_s), keys(&res_e));
+    }
+
+    #[test]
+    fn theta_delta_config_does_not_change_result() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 40,
+            m: 120,
+            topology: datasets::Topology::Er(0.1),
+            seed: 31,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let a = run_native(
+            &c,
+            ds.data.n,
+            ds.data.m,
+            &Config {
+                theta: 32,
+                delta: 1,
+                ..Config::default()
+            },
+        );
+        let b = run_native(
+            &c,
+            ds.data.n,
+            ds.data.m,
+            &Config {
+                theta: 256,
+                delta: 8,
+                ..Config::default()
+            },
+        );
+        assert_eq!(a.graph.snapshot(), b.graph.snapshot());
+    }
+}

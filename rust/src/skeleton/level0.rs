@@ -1,0 +1,92 @@
+//! Level 0 (paper Algorithm 3): one CI test per pair, no conditioning.
+//!
+//! The CUDA 2-D grid over the n×n matrix becomes a packed batch of the
+//! upper-triangle correlations; τ comparison and removal happen in apply
+//! order. Shared by all GPU-schedule variants (serial/threaded CPU
+//! engines do level 0 inline).
+
+use super::engine::CiEngine;
+use super::{Config, LevelStats};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::{independent, tau};
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Run level 0 on the (still complete) graph. Returns its stats.
+pub fn run_level0(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    engine: &mut dyn CiEngine,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> Result<LevelStats> {
+    let t = Timer::start();
+    let tau0 = tau(m, 0, cfg.alpha);
+    // pack the upper triangle
+    let mut c_ij = Vec::with_capacity(n * (n - 1) / 2);
+    let mut pairs = Vec::with_capacity(n * (n - 1) / 2);
+    for i in 0..n {
+        for j in (i + 1)..n {
+            c_ij.push(corr[i * n + j] as f32);
+            pairs.push((i as u32, j as u32));
+        }
+    }
+    let mut removed = 0;
+    // chunk through the engine at its preferred batch size
+    let chunk = engine.batch_e().max(1);
+    for (cs, ps) in c_ij.chunks(chunk).zip(pairs.chunks(chunk)) {
+        let z = engine.level0(cs)?;
+        for (idx, &(i, j)) in ps.iter().enumerate() {
+            if independent(z[idx] as f64, tau0) && graph.remove_edge(i as usize, j as usize) {
+                sepsets.store(i as usize, j as usize, &[]);
+                removed += 1;
+            }
+        }
+    }
+    Ok(LevelStats {
+        level: 0,
+        tests: c_ij.len() as u64,
+        removed,
+        edges_after: graph.n_edges(),
+        seconds: t.elapsed_s(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::skeleton::engine::NativeEngine;
+
+    #[test]
+    fn removes_only_weak_correlations() {
+        // 3 vars: c01 strong, c02 ~ 0, c12 strong
+        let c = vec![1.0, 0.9, 0.001, 0.9, 1.0, 0.8, 0.001, 0.8, 1.0];
+        let g = AdjMatrix::complete(3);
+        let sep = SepSets::new();
+        let cfg = Config::default();
+        let mut e = NativeEngine::new();
+        let stats = run_level0(&c, 3, 1000, &cfg, &mut e, &g, &sep).unwrap();
+        assert_eq!(stats.tests, 3);
+        assert_eq!(stats.removed, 1);
+        assert!(!g.has_edge(0, 2));
+        assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
+        assert_eq!(sep.get(0, 2), Some(vec![]));
+        assert_eq!(stats.edges_after, 2);
+    }
+
+    #[test]
+    fn small_m_removes_everything() {
+        // tau = inf when m - 3 <= 0: every pair "independent"
+        let c = vec![1.0, 0.9, 0.9, 1.0];
+        let g = AdjMatrix::complete(2);
+        let sep = SepSets::new();
+        let cfg = Config::default();
+        let mut e = NativeEngine::new();
+        let stats = run_level0(&c, 2, 3, &cfg, &mut e, &g, &sep).unwrap();
+        assert_eq!(stats.removed, 1);
+        assert_eq!(g.n_edges(), 0);
+    }
+}

@@ -1,0 +1,227 @@
+//! Skeleton discovery — the computationally intensive first step of
+//! PC-stable (paper Algorithm 1) and the subject of cuPC.
+//!
+//! Five schedules are implemented over a common engine abstraction:
+//!
+//! * [`serial`] — single-threaded reference (the paper's "Stable.fast").
+//! * [`parallel_cpu`] — multi-threaded CPU (the paper's "Parallel-PC").
+//! * [`gpu_e`] — the cuPC-E schedule (Algorithm 4): edges × per-edge
+//!   conditioning sets, batched through the AOT kernels.
+//! * [`gpu_s`] — the cuPC-S schedule (Algorithm 5): conditioning sets
+//!   shared across the tests of a row, one pseudo-inverse per set.
+//! * [`baseline1`] / [`baseline2`] — the two GPU baselines of Fig. 5,
+//!   expressed as degenerate cuPC-E configurations (γ=1 / γ=∞).
+//!
+//! All schedules produce the *identical* skeleton and sepsets on the same
+//! input — PC-stable's order-independence — which the test suite checks.
+
+pub mod batch;
+pub mod baseline1;
+pub mod baseline2;
+pub mod census;
+pub mod comb;
+pub mod engine;
+pub mod gpu_e;
+pub mod gpu_s;
+pub mod level0;
+pub mod parallel_cpu;
+pub mod serial;
+
+use crate::graph::adj::AdjMatrix;
+use crate::graph::sepset::SepSets;
+use anyhow::Result;
+use std::path::PathBuf;
+
+/// Which schedule runs the level loop.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Variant {
+    /// single-threaded CPU reference (pcalg "Stable.fast" analog)
+    Serial,
+    /// multi-threaded CPU (paper's "Parallel-PC" analog)
+    ParallelCpu,
+    /// cuPC-E (Algorithm 4)
+    CupcE,
+    /// cuPC-S (Algorithm 5)
+    CupcS,
+    /// Fig. 5 baseline 1: per-edge tests sequential (γ = 1)
+    Baseline1,
+    /// Fig. 5 baseline 2: per-edge tests fully parallel (γ = ∞)
+    Baseline2,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "serial" | "stable" | "stable.fast" => Variant::Serial,
+            "parcpu" | "parallel-cpu" | "parallel-pc" => Variant::ParallelCpu,
+            "cupe" | "cupc-e" | "e" => Variant::CupcE,
+            "cups" | "cupc-s" | "s" => Variant::CupcS,
+            "baseline1" | "b1" => Variant::Baseline1,
+            "baseline2" | "b2" => Variant::Baseline2,
+            _ => return None,
+        })
+    }
+}
+
+/// Which CI-test backend evaluates batches for the GPU-schedule variants.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum EngineKind {
+    /// Pure-Rust mirror of the kernels (always available).
+    Native,
+    /// AOT Pallas/JAX kernels through the XLA PJRT runtime.
+    Xla,
+}
+
+/// How v-structures are decided in the orientation step.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OrientRule {
+    /// first-found sepset per removed edge (classic PC-stable; fast,
+    /// but the CPDAG can depend on the schedule)
+    Standard,
+    /// majority vote over a census of separating sets (Colombo &
+    /// Maathuis MPC; schedule-invariant CPDAG)
+    Majority,
+}
+
+/// Run configuration. The β/γ (cuPC-E) and θ/δ (cuPC-S) knobs carry the
+/// paper's meaning translated to the batch engine: γ = conditioning sets
+/// in flight per edge per round, β = edges grouped contiguously when
+/// packing, θ×δ = conditioning sets in flight per row per round.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub alpha: f64,
+    /// hard cap on the level loop (None: run to the PC-stable stop rule)
+    pub max_level: Option<usize>,
+    pub variant: Variant,
+    pub engine: EngineKind,
+    pub threads: usize,
+    pub beta: usize,
+    pub gamma: usize,
+    pub theta: usize,
+    pub delta: usize,
+    pub artifacts_dir: PathBuf,
+    /// print per-level progress to stderr
+    pub verbose: bool,
+    /// v-structure decision rule for the orientation step
+    pub orient: OrientRule,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            alpha: 0.01,
+            max_level: None,
+            variant: Variant::CupcS,
+            engine: EngineKind::Native,
+            threads: available_threads(),
+            // paper-selected configs: cuPC-E-2-32 and cuPC-S-64-2
+            beta: 2,
+            gamma: 32,
+            theta: 64,
+            delta: 2,
+            artifacts_dir: PathBuf::from("artifacts"),
+            verbose: false,
+            orient: OrientRule::Standard,
+        }
+    }
+}
+
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|x| x.get())
+        .unwrap_or(1)
+}
+
+/// Per-level bookkeeping (drives Fig. 6 and the EXPERIMENTS tables).
+#[derive(Clone, Debug, Default)]
+pub struct LevelStats {
+    pub level: usize,
+    /// CI tests actually evaluated
+    pub tests: u64,
+    /// edges removed in this level
+    pub removed: usize,
+    /// edges remaining after the level
+    pub edges_after: usize,
+    /// wall-clock seconds including compaction overheads (as the paper
+    /// measures: "the reported runtime of every level includes all the
+    /// corresponding overheads such as forming A'_G")
+    pub seconds: f64,
+}
+
+/// Output of skeleton discovery.
+pub struct SkeletonResult {
+    pub graph: AdjMatrix,
+    pub sepsets: SepSets,
+    pub levels: Vec<LevelStats>,
+}
+
+impl SkeletonResult {
+    pub fn total_seconds(&self) -> f64 {
+        self.levels.iter().map(|l| l.seconds).sum()
+    }
+
+    pub fn total_tests(&self) -> u64 {
+        self.levels.iter().map(|l| l.tests).sum()
+    }
+}
+
+/// The PC-stable stop rule (Algorithm 1 line 17): continue while the
+/// maximum degree − 1 ≥ next level, plus the optional user cap.
+pub fn should_continue(graph: &AdjMatrix, next_level: usize, cfg: &Config) -> bool {
+    if let Some(cap) = cfg.max_level {
+        if next_level > cap {
+            return false;
+        }
+    }
+    graph.max_degree() > next_level
+}
+
+/// Dispatch a full skeleton run on a correlation matrix.
+///
+/// `corr` is row-major n×n, `m` the sample count behind it.
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    match cfg.variant {
+        Variant::Serial => serial::run(corr, n, m, cfg),
+        Variant::ParallelCpu => parallel_cpu::run(corr, n, m, cfg),
+        Variant::CupcE => gpu_e::run(corr, n, m, cfg),
+        Variant::CupcS => gpu_s::run(corr, n, m, cfg),
+        Variant::Baseline1 => baseline1::run(corr, n, m, cfg),
+        Variant::Baseline2 => baseline2::run(corr, n, m, cfg),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn variant_parsing() {
+        assert_eq!(Variant::parse("cups"), Some(Variant::CupcS));
+        assert_eq!(Variant::parse("CUPC-E"), Some(Variant::CupcE));
+        assert_eq!(Variant::parse("serial"), Some(Variant::Serial));
+        assert_eq!(Variant::parse("b2"), Some(Variant::Baseline2));
+        assert_eq!(Variant::parse("nope"), None);
+    }
+
+    #[test]
+    fn default_config_is_paper_selected() {
+        let c = Config::default();
+        assert_eq!((c.beta, c.gamma), (2, 32));
+        assert_eq!((c.theta, c.delta), (64, 2));
+        assert_eq!(c.alpha, 0.01);
+    }
+
+    #[test]
+    fn stop_rule() {
+        let g = AdjMatrix::complete(4); // max degree 3
+        let cfg = Config::default();
+        assert!(should_continue(&g, 1, &cfg));
+        assert!(should_continue(&g, 2, &cfg));
+        assert!(!should_continue(&g, 3, &cfg));
+        let capped = Config {
+            max_level: Some(1),
+            ..Config::default()
+        };
+        assert!(!should_continue(&g, 2, &capped));
+    }
+}

@@ -1,0 +1,162 @@
+//! Multi-threaded CPU skeleton — the paper's "Parallel-PC" baseline (T2).
+//!
+//! PC-stable's order-independence makes each level embarrassingly
+//! parallel: rows of G' are sharded across worker threads; removals go
+//! through the atomic adjacency (monotone 1→0), and threads observe
+//! removals made by others mid-level exactly like cuPC's in-kernel
+//! monitoring (§4.1). The *level* result equals the serial one because
+//! conditioning sets are drawn from the frozen snapshot.
+
+use super::comb::{n_sets_edge, CombRangeSkip};
+use super::{should_continue, Config, LevelStats, SkeletonResult};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::compact::CompactAdj;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::{independent, tau};
+use crate::stats::pcorr::{ci_statistic, CiWorkspace, Corr};
+use crate::util::timer::Timer;
+use anyhow::Result;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    let graph = AdjMatrix::complete(n);
+    let sepsets = SepSets::new();
+    let nthreads = cfg.threads.max(1);
+    let mut levels = Vec::new();
+
+    // level 0 sharded over pair blocks
+    let t0 = Timer::start();
+    let tau0 = tau(m, 0, cfg.alpha);
+    let tests0 = AtomicU64::new(0);
+    let removed0 = AtomicUsize::new(0);
+    let next_row = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..nthreads {
+            scope.spawn(|| {
+                let view = Corr::new(corr, n);
+                let mut ws = CiWorkspace::new(1);
+                loop {
+                    let i = next_row.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    for j in (i + 1)..n {
+                        tests0.fetch_add(1, Ordering::Relaxed);
+                        let z = ci_statistic(&view, i, j, &[], &mut ws);
+                        if independent(z, tau0) && graph.remove_edge(i, j) {
+                            sepsets.store(i, j, &[]);
+                            removed0.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+        }
+    });
+    levels.push(LevelStats {
+        level: 0,
+        tests: tests0.into_inner(),
+        removed: removed0.into_inner(),
+        edges_after: graph.n_edges(),
+        seconds: t0.elapsed_s(),
+    });
+
+    let mut l = 1usize;
+    while should_continue(&graph, l, cfg) {
+        let t = Timer::start();
+        let taul = tau(m, l, cfg.alpha);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+        let tests = AtomicU64::new(0);
+        let removed = AtomicUsize::new(0);
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..nthreads {
+                scope.spawn(|| {
+                    let view = Corr::new(corr, n);
+                    let mut ws = CiWorkspace::new(crate::skeleton::engine::NATIVE_MAX_LEVEL);
+                    let mut ids: Vec<usize> = Vec::with_capacity(l);
+                    let mut local_tests = 0u64;
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        let row = comp.row(i);
+                        let nr = row.len();
+                        if nr < l + 1 {
+                            continue;
+                        }
+                        for (p, &ju) in row.iter().enumerate() {
+                            let j = ju as usize;
+                            let total = n_sets_edge(nr, l);
+                            let mut combs = CombRangeSkip::new(nr, l, 0, total, p);
+                            while let Some(sbuf) = combs.next_comb() {
+                                // monitor removals by other threads (§4.1)
+                                if !graph.has_edge(i, j) {
+                                    break;
+                                }
+                                ids.clear();
+                                ids.extend(sbuf.iter().map(|&x| row[x as usize] as usize));
+                                local_tests += 1;
+                                let z = ci_statistic(&view, i, j, &ids, &mut ws);
+                                if independent(z, taul) && graph.remove_edge(i, j) {
+                                    let sv: Vec<u32> =
+                                        ids.iter().map(|&x| x as u32).collect();
+                                    sepsets.store(i, j, &sv);
+                                    removed.fetch_add(1, Ordering::Relaxed);
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                    tests.fetch_add(local_tests, Ordering::Relaxed);
+                });
+            }
+        });
+        levels.push(LevelStats {
+            level: l,
+            tests: tests.into_inner(),
+            removed: removed.into_inner(),
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        });
+        l += 1;
+    }
+
+    Ok(SkeletonResult {
+        graph,
+        sepsets,
+        levels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::datasets;
+    use crate::stats::corr::correlation_matrix;
+
+    #[test]
+    fn matches_serial_skeleton() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 60,
+            m: 120,
+            topology: datasets::Topology::Er(0.06),
+            seed: 42,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg_p = Config {
+            threads: 4,
+            ..Config::default()
+        };
+        let res_p = run(&c, ds.data.n, ds.data.m, &cfg_p).unwrap();
+        let res_s = crate::skeleton::serial::run(&c, ds.data.n, ds.data.m, &cfg_p).unwrap();
+        assert_eq!(
+            res_p.graph.snapshot(),
+            res_s.graph.snapshot(),
+            "order-independence: parallel and serial skeletons must match"
+        );
+        assert_eq!(res_p.levels.len(), res_s.levels.len());
+    }
+}

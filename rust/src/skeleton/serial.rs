@@ -1,0 +1,145 @@
+//! Serial PC-stable skeleton — the paper's "Stable.fast" baseline (T3):
+//! a faithful single-threaded implementation of Algorithm 1 with the
+//! native CI test, per-edge early exit, and the same G' snapshot
+//! semantics as every other variant.
+
+use super::comb::{n_sets_edge, CombRangeSkip};
+use super::{should_continue, Config, LevelStats, SkeletonResult};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::compact::CompactAdj;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::{independent, tau};
+use crate::stats::pcorr::{ci_statistic, CiWorkspace, Corr};
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    let graph = AdjMatrix::complete(n);
+    let sepsets = SepSets::new();
+    let view = Corr::new(corr, n);
+    let mut ws = CiWorkspace::new(crate::skeleton::engine::NATIVE_MAX_LEVEL);
+    let mut levels = Vec::new();
+
+    // level 0: raw correlations
+    let t0 = Timer::start();
+    let tau0 = tau(m, 0, cfg.alpha);
+    let mut tests0 = 0u64;
+    let mut removed0 = 0usize;
+    for i in 0..n {
+        for j in (i + 1)..n {
+            tests0 += 1;
+            let z = ci_statistic(&view, i, j, &[], &mut ws);
+            if independent(z, tau0) {
+                graph.remove_edge(i, j);
+                sepsets.store(i, j, &[]);
+                removed0 += 1;
+            }
+        }
+    }
+    levels.push(LevelStats {
+        level: 0,
+        tests: tests0,
+        removed: removed0,
+        edges_after: graph.n_edges(),
+        seconds: t0.elapsed_s(),
+    });
+
+    // levels >= 1
+    let mut l = 1usize;
+    let mut row_buf: Vec<usize> = Vec::new();
+    while should_continue(&graph, l, cfg) {
+        let t = Timer::start();
+        let taul = tau(m, l, cfg.alpha);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+        let mut tests = 0u64;
+        let mut removed = 0usize;
+        // ordered pairs: row i of G', each j in the row (the paper's
+        // by-row processing; each undirected edge is visited from both
+        // endpoints, with different candidate pools)
+        for i in 0..n {
+            let row = comp.row(i);
+            let nr = row.len();
+            if nr < l + 1 {
+                continue; // early termination case I (§4.1)
+            }
+            for (p, &ju) in row.iter().enumerate() {
+                let j = ju as usize;
+                if !graph.has_edge(i, j) {
+                    continue; // removed earlier this level
+                }
+                let total = n_sets_edge(nr, l);
+                let mut combs = CombRangeSkip::new(nr, l, 0, total, p);
+                while let Some(sbuf) = combs.next_comb() {
+                    // map row positions -> variable ids
+                    row_buf.clear();
+                    row_buf.extend(sbuf.iter().map(|&x| row[x as usize] as usize));
+                    tests += 1;
+                    let z = ci_statistic(&view, i, j, &row_buf, &mut ws);
+                    if independent(z, taul) {
+                        graph.remove_edge(i, j);
+                        let sv: Vec<u32> = row_buf.iter().map(|&x| x as u32).collect();
+                        sepsets.store(i, j, &sv);
+                        removed += 1;
+                        break; // per-edge early exit (Algorithm 1 line 14)
+                    }
+                }
+            }
+        }
+        levels.push(LevelStats {
+            level: l,
+            tests,
+            removed,
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        });
+        l += 1;
+    }
+
+    Ok(SkeletonResult {
+        graph,
+        sepsets,
+        levels,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::{datasets, sem};
+    use crate::stats::corr::correlation_matrix;
+
+    #[test]
+    fn chain_graph_recovers_skeleton() {
+        // 0 -> 1 -> 2: skeleton 0-1, 1-2, no 0-2
+        let dag = crate::sim::dag::WeightedDag {
+            n: 3,
+            parents: vec![vec![], vec![(0, 0.9)], vec![(1, 0.9)]],
+        };
+        let data = sem::sample(&dag, 5000, &mut crate::util::rng::Pcg::seeded(3));
+        let c = correlation_matrix(&data, 1);
+        let cfg = Config::default();
+        let res = run(&c, 3, data.m, &cfg).unwrap();
+        assert!(res.graph.has_edge(0, 1));
+        assert!(res.graph.has_edge(1, 2));
+        assert!(!res.graph.has_edge(0, 2));
+        assert_eq!(res.sepsets.get(0, 2), Some(vec![1]));
+        assert!(res.levels.len() >= 2);
+    }
+
+    #[test]
+    fn mini_dataset_converges() {
+        let ds = datasets::generate(datasets::spec("nci60-mini").unwrap());
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config {
+            max_level: Some(3),
+            ..Config::default()
+        };
+        let res = run(&c, ds.data.n, ds.data.m, &cfg).unwrap();
+        // sane: fewer edges than complete, more than zero
+        let complete = ds.data.n * (ds.data.n - 1) / 2;
+        let e = res.graph.n_edges();
+        assert!(e > 0 && e < complete / 2, "edges={e}");
+        assert!(res.total_tests() > 0);
+    }
+}

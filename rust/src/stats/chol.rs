@@ -1,0 +1,455 @@
+//! Small dense linear algebra for conditioning sets (ℓ ≤ ~16).
+//!
+//! Mirrors `python/compile/kernels/linalg.py` operation-for-operation:
+//! Cholesky-Banachiewicz factorization (optionally rank-revealing, zeroing
+//! deficient columns — Courrieu's "full-rank Cholesky" with static shape),
+//! forward-substitution triangular inverse, SPD inverse, and the paper's
+//! Algorithm 7 Moore-Penrose pseudo-inverse. Row-major `&[f64]` matrices,
+//! caller-provided scratch to keep the hot loop allocation-free.
+
+/// Jitter matching `linalg.CHOL_EPS` (f32 kernels use 1e-8; we keep the
+/// same constant so Native and XLA engines agree numerically).
+pub const CHOL_EPS: f64 = 1e-8;
+
+/// In-place lower Cholesky of the row-major `l×l` matrix `a` into `out`.
+/// If `rank_tol > 0`, pivots with squared norm below it zero their column
+/// (rank-revealing); otherwise pivots are clamped to CHOL_EPS.
+pub fn cholesky(a: &[f64], l: usize, rank_tol: f64, out: &mut [f64]) {
+    debug_assert_eq!(a.len(), l * l);
+    debug_assert_eq!(out.len(), l * l);
+    out.fill(0.0);
+    for k in 0..l {
+        let mut s = a[k * l + k];
+        for m in 0..k {
+            s -= out[k * l + m] * out[k * l + m];
+        }
+        let (dkk, inv_dkk) = if rank_tol > 0.0 {
+            if s > rank_tol {
+                let d = s.max(CHOL_EPS).sqrt();
+                (d, 1.0 / d)
+            } else {
+                (0.0, 0.0)
+            }
+        } else {
+            let d = s.max(CHOL_EPS).sqrt();
+            (d, 1.0 / d)
+        };
+        out[k * l + k] = dkk;
+        for i in (k + 1)..l {
+            let mut s = a[i * l + k];
+            for m in 0..k {
+                s -= out[i * l + m] * out[k * l + m];
+            }
+            out[i * l + k] = s * inv_dkk;
+        }
+    }
+}
+
+/// Inverse of a lower-triangular matrix by forward substitution.
+/// Zero pivots (from rank-revealing Cholesky) produce zero columns.
+pub fn tril_inverse(lmat: &[f64], l: usize, out: &mut [f64]) {
+    debug_assert_eq!(lmat.len(), l * l);
+    out.fill(0.0);
+    for j in 0..l {
+        for i in j..l {
+            let mut s = if i == j { 1.0 } else { 0.0 };
+            for k in j..i {
+                s -= lmat[i * l + k] * out[k * l + j];
+            }
+            let d = lmat[i * l + i];
+            out[i * l + j] = if d != 0.0 { s / d } else { 0.0 };
+        }
+    }
+}
+
+/// out = a × b for row-major `l×l` matrices.
+pub fn matmul(a: &[f64], b: &[f64], l: usize, out: &mut [f64]) {
+    out.fill(0.0);
+    for i in 0..l {
+        for k in 0..l {
+            let aik = a[i * l + k];
+            if aik == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                out[i * l + j] += aik * b[k * l + j];
+            }
+        }
+    }
+}
+
+/// out = aᵀ × a.
+pub fn gram(a: &[f64], l: usize, out: &mut [f64]) {
+    out.fill(0.0);
+    for k in 0..l {
+        for i in 0..l {
+            let aki = a[k * l + i];
+            if aki == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                out[i * l + j] += aki * a[k * l + j];
+            }
+        }
+    }
+}
+
+/// SPD inverse via Cholesky: A⁻¹ = L⁻ᵀ L⁻¹. `scratch` needs 2·l² slots.
+pub fn spd_inverse(a: &[f64], l: usize, scratch: &mut [f64], out: &mut [f64]) {
+    let (lmat, linv) = scratch.split_at_mut(l * l);
+    cholesky(a, l, 0.0, lmat);
+    tril_inverse(lmat, l, linv);
+    // out = linvᵀ × linv
+    out.fill(0.0);
+    for k in 0..l {
+        for i in 0..l {
+            let lki = linv[k * l + i];
+            if lki == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                out[i * l + j] += lki * linv[k * l + j];
+            }
+        }
+    }
+}
+
+/// Scratch buffer for [`pinv`]; reuse across calls to avoid allocation.
+pub struct PinvScratch {
+    mtm: Vec<f64>,
+    lmat: Vec<f64>,
+    ltl: Vec<f64>,
+    r: Vec<f64>,
+    t1: Vec<f64>,
+    t2: Vec<f64>,
+    spd: Vec<f64>,
+}
+
+impl PinvScratch {
+    pub fn new(max_l: usize) -> Self {
+        let s = max_l * max_l;
+        PinvScratch {
+            mtm: vec![0.0; s],
+            lmat: vec![0.0; s],
+            ltl: vec![0.0; s],
+            r: vec![0.0; s],
+            t1: vec![0.0; s],
+            t2: vec![0.0; s],
+            spd: vec![0.0; 2 * s],
+        }
+    }
+}
+
+/// Moore-Penrose pseudo-inverse, paper Algorithm 7 (Courrieu):
+/// L = full-rank-chol(M2ᵀM2); R = (LᵀL + εI)⁻¹; M2⁺ = L·R·R·Lᵀ·M2ᵀ.
+/// Mirrors `linalg.batched_pinv` including the 1×1 fast path and the
+/// relative rank tolerance.
+pub fn pinv(m2: &[f64], l: usize, sc: &mut PinvScratch, out: &mut [f64]) {
+    debug_assert_eq!(m2.len(), l * l);
+    if l == 1 {
+        let x = m2[0];
+        out[0] = x / (x * x + CHOL_EPS);
+        return;
+    }
+    let n2 = l * l;
+    gram(m2, l, &mut sc.mtm[..n2]);
+    // rank tolerance relative to the largest diagonal entry
+    let mut maxd: f64 = 0.0;
+    for d in 0..l {
+        maxd = maxd.max(sc.mtm[d * l + d]);
+    }
+    let rank_tol = maxd * 1e-6 + CHOL_EPS;
+    cholesky(&sc.mtm[..n2], l, rank_tol, &mut sc.lmat[..n2]);
+    // LᵀL + eps I
+    gram(&sc.lmat[..n2], l, &mut sc.ltl[..n2]);
+    for d in 0..l {
+        sc.ltl[d * l + d] += CHOL_EPS;
+    }
+    spd_inverse(&sc.ltl[..n2], l, &mut sc.spd[..2 * n2], &mut sc.r[..n2]);
+    // t1 = L R ; t2 = t1 R ; t1 = t2 Lᵀ ; out = t1 M2ᵀ
+    matmul(&sc.lmat[..n2], &sc.r[..n2], l, &mut sc.t1[..n2]);
+    matmul(&sc.t1[..n2], &sc.r[..n2], l, &mut sc.t2[..n2]);
+    // t1 = t2 × Lᵀ
+    sc.t1[..n2].fill(0.0);
+    for i in 0..l {
+        for k in 0..l {
+            let v = sc.t2[i * l + k];
+            if v == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                sc.t1[i * l + j] += v * sc.lmat[j * l + k];
+            }
+        }
+    }
+    // out = t1 × M2ᵀ
+    out.fill(0.0);
+    for i in 0..l {
+        for k in 0..l {
+            let v = sc.t1[i * l + k];
+            if v == 0.0 {
+                continue;
+            }
+            for j in 0..l {
+                out[i * l + j] += v * m2[j * l + k];
+            }
+        }
+    }
+}
+
+/// Fast-path pseudo-inverse: identical result to [`pinv`] on
+/// well-conditioned correlation submatrices (the overwhelmingly common
+/// case in a PC run) at a fraction of the cost, falling back to the full
+/// Algorithm 7 when conditioning is poor.
+///
+/// * l = 1: closed form.
+/// * l = 2, 3: direct adjugate inverse guarded by a determinant check.
+/// * l ≥ 4: plain Cholesky inverse (A⁻¹ = L⁻ᵀL⁻¹) guarded by the pivot
+///   magnitudes; Algorithm 7 when any pivot degenerates.
+///
+/// The XLA kernels keep the full Algorithm 7 — batched einsums amortize
+/// it; this path only serves the sequential native mirror (§Perf L3).
+pub fn pinv_fast(m2: &[f64], l: usize, sc: &mut PinvScratch, out: &mut [f64]) {
+    const DET_TOL: f64 = 1e-6;
+    match l {
+        1 => {
+            let x = m2[0];
+            out[0] = x / (x * x + CHOL_EPS);
+        }
+        2 => {
+            let (a, b, c, d) = (m2[0], m2[1], m2[2], m2[3]);
+            let det = a * d - b * c;
+            let scale = a.abs().max(b.abs()).max(c.abs()).max(d.abs());
+            if det.abs() > DET_TOL * scale * scale {
+                let inv = 1.0 / det;
+                out[0] = d * inv;
+                out[1] = -b * inv;
+                out[2] = -c * inv;
+                out[3] = a * inv;
+            } else {
+                pinv(m2, l, sc, out);
+            }
+        }
+        3 => {
+            let m = m2;
+            let c00 = m[4] * m[8] - m[5] * m[7];
+            let c01 = m[5] * m[6] - m[3] * m[8];
+            let c02 = m[3] * m[7] - m[4] * m[6];
+            let det = m[0] * c00 + m[1] * c01 + m[2] * c02;
+            let scale = m.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+            if det.abs() > DET_TOL * scale * scale * scale {
+                let inv = 1.0 / det;
+                out[0] = c00 * inv;
+                out[1] = (m[2] * m[7] - m[1] * m[8]) * inv;
+                out[2] = (m[1] * m[5] - m[2] * m[4]) * inv;
+                out[3] = c01 * inv;
+                out[4] = (m[0] * m[8] - m[2] * m[6]) * inv;
+                out[5] = (m[2] * m[3] - m[0] * m[5]) * inv;
+                out[6] = c02 * inv;
+                out[7] = (m[1] * m[6] - m[0] * m[7]) * inv;
+                out[8] = (m[0] * m[4] - m[1] * m[3]) * inv;
+            } else {
+                pinv(m2, l, sc, out);
+            }
+        }
+        _ => {
+            // Cholesky with rank detection reusing the scratch buffers
+            let n2 = l * l;
+            let maxd = (0..l).fold(0.0f64, |a, d| a.max(m2[d * l + d]));
+            let rank_tol = maxd * 1e-6 + CHOL_EPS;
+            cholesky(m2, l, rank_tol, &mut sc.lmat[..n2]);
+            let full_rank = (0..l).all(|d| sc.lmat[d * l + d] > 0.0);
+            if full_rank {
+                tril_inverse(&sc.lmat[..n2], l, &mut sc.t1[..n2]);
+                // out = t1ᵀ t1
+                out.fill(0.0);
+                for k in 0..l {
+                    for i in 0..l {
+                        let v = sc.t1[k * l + i];
+                        if v == 0.0 {
+                            continue;
+                        }
+                        for j in 0..=i {
+                            out[i * l + j] += v * sc.t1[k * l + j];
+                        }
+                    }
+                }
+                for i in 0..l {
+                    for j in (i + 1)..l {
+                        out[i * l + j] = out[j * l + i];
+                    }
+                }
+            } else {
+                pinv(m2, l, sc, out);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn random_spd(rng: &mut Pcg, l: usize) -> Vec<f64> {
+        // A = B Bᵀ + 0.1 I
+        let b: Vec<f64> = (0..l * l).map(|_| rng.normal()).collect();
+        let mut a = vec![0.0; l * l];
+        for i in 0..l {
+            for j in 0..l {
+                let mut s = if i == j { 0.1 } else { 0.0 };
+                for k in 0..l {
+                    s += b[i * l + k] * b[j * l + k];
+                }
+                a[i * l + j] = s;
+            }
+        }
+        a
+    }
+
+    fn max_abs_diff(a: &[f64], b: &[f64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Pcg::seeded(1);
+        for l in [1, 2, 3, 5, 8] {
+            let a = random_spd(&mut rng, l);
+            let mut lo = vec![0.0; l * l];
+            cholesky(&a, l, 0.0, &mut lo);
+            // rec = lo loᵀ
+            let mut rec = vec![0.0; l * l];
+            for i in 0..l {
+                for j in 0..l {
+                    for k in 0..l {
+                        rec[i * l + j] += lo[i * l + k] * lo[j * l + k];
+                    }
+                }
+            }
+            assert!(max_abs_diff(&rec, &a) < 1e-9, "l={l}");
+        }
+    }
+
+    #[test]
+    fn tril_inverse_identity() {
+        let mut rng = Pcg::seeded(2);
+        for l in [2, 4, 7] {
+            let a = random_spd(&mut rng, l);
+            let mut lo = vec![0.0; l * l];
+            cholesky(&a, l, 0.0, &mut lo);
+            let mut li = vec![0.0; l * l];
+            tril_inverse(&lo, l, &mut li);
+            let mut eye = vec![0.0; l * l];
+            matmul(&lo, &li, l, &mut eye);
+            for i in 0..l {
+                for j in 0..l {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!((eye[i * l + j] - want).abs() < 1e-9);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn spd_inverse_identity() {
+        let mut rng = Pcg::seeded(3);
+        for l in [2, 3, 6] {
+            let a = random_spd(&mut rng, l);
+            let mut scratch = vec![0.0; 2 * l * l];
+            let mut inv = vec![0.0; l * l];
+            spd_inverse(&a, l, &mut scratch, &mut inv);
+            let mut eye = vec![0.0; l * l];
+            matmul(&a, &inv, l, &mut eye);
+            for i in 0..l {
+                for j in 0..l {
+                    let want = if i == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (eye[i * l + j] - want).abs() < 1e-6,
+                        "l={l} i={i} j={j} got={}",
+                        eye[i * l + j]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_matches_inverse_when_nonsingular() {
+        let mut rng = Pcg::seeded(4);
+        for l in [1, 2, 3, 5, 8] {
+            let a = random_spd(&mut rng, l);
+            let mut sc = PinvScratch::new(l);
+            let mut p = vec![0.0; l * l];
+            pinv(&a, l, &mut sc, &mut p);
+            let mut scratch = vec![0.0; 2 * l * l];
+            let mut inv = vec![0.0; l * l];
+            spd_inverse(&a, l, &mut scratch, &mut inv);
+            assert!(max_abs_diff(&p, &inv) < 1e-3, "l={l}");
+        }
+    }
+
+    #[test]
+    fn pinv_rank_deficient_penrose() {
+        // all-ones correlation (duplicated variables): pinv = J / l².
+        for l in [2, 3, 4] {
+            let a = vec![1.0; l * l];
+            let mut sc = PinvScratch::new(l);
+            let mut p = vec![0.0; l * l];
+            pinv(&a, l, &mut sc, &mut p);
+            let want = 1.0 / (l * l) as f64;
+            for v in &p {
+                assert!((v - want).abs() < 1e-3, "l={l} got={v} want={want}");
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_fast_matches_pinv_well_conditioned() {
+        let mut rng = Pcg::seeded(6);
+        for l in [1usize, 2, 3, 4, 6, 8] {
+            for _ in 0..20 {
+                let a = random_spd(&mut rng, l);
+                let mut sc1 = PinvScratch::new(l);
+                let mut sc2 = PinvScratch::new(l);
+                let mut slow = vec![0.0; l * l];
+                let mut fast = vec![0.0; l * l];
+                pinv(&a, l, &mut sc1, &mut slow);
+                pinv_fast(&a, l, &mut sc2, &mut fast);
+                let scale = slow.iter().fold(1.0f64, |m, &x| m.max(x.abs()));
+                assert!(
+                    max_abs_diff(&slow, &fast) < 1e-3 * scale,
+                    "l={l} diff={}",
+                    max_abs_diff(&slow, &fast)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_fast_rank_deficient_falls_back() {
+        for l in [2usize, 3, 4] {
+            let a = vec![1.0; l * l]; // all-ones: rank 1
+            let mut sc = PinvScratch::new(l);
+            let mut fast = vec![0.0; l * l];
+            pinv_fast(&a, l, &mut sc, &mut fast);
+            let want = 1.0 / (l * l) as f64;
+            for v in &fast {
+                assert!((v - want).abs() < 1e-3, "l={l} got={v}");
+            }
+        }
+    }
+
+    #[test]
+    fn pinv_1x1_fast_path() {
+        let mut sc = PinvScratch::new(1);
+        let mut p = vec![0.0];
+        pinv(&[2.0], 1, &mut sc, &mut p);
+        assert!((p[0] - 0.5).abs() < 1e-6);
+        pinv(&[0.0], 1, &mut sc, &mut p);
+        assert_eq!(p[0], 0.0);
+    }
+}

@@ -1,0 +1,286 @@
+//! Sample correlation matrix from a data matrix (m samples × n variables).
+//!
+//! Standardize each column, then compute the gram matrix with a
+//! cache-blocked kernel, optionally sharded across threads (the image may
+//! have 1 core, but the code path is exercised and tested regardless).
+
+/// Column-major-free: data is row-major `m×n` (sample-major), the natural
+/// CSV layout.
+pub struct DataMatrix {
+    pub x: Vec<f64>,
+    pub m: usize,
+    pub n: usize,
+}
+
+impl DataMatrix {
+    pub fn new(x: Vec<f64>, m: usize, n: usize) -> Self {
+        assert_eq!(x.len(), m * n, "data length {} != m*n = {}", x.len(), m * n);
+        DataMatrix { x, m, n }
+    }
+
+    #[inline]
+    pub fn at(&self, sample: usize, var: usize) -> f64 {
+        self.x[sample * self.n + var]
+    }
+}
+
+/// Standardize columns to zero mean / unit variance. Returns the
+/// variable-major (n×m) standardized matrix for cache-friendly grams.
+/// Constant columns standardize to all-zeros (correlation 0 with all).
+pub fn standardize_var_major(data: &DataMatrix) -> Vec<f64> {
+    let (m, n) = (data.m, data.n);
+    let mut out = vec![0.0; n * m];
+    for v in 0..n {
+        let mut mean = 0.0;
+        for s in 0..m {
+            mean += data.at(s, v);
+        }
+        mean /= m as f64;
+        let mut var = 0.0;
+        for s in 0..m {
+            let d = data.at(s, v) - mean;
+            var += d * d;
+        }
+        let sd = (var / m as f64).sqrt();
+        let inv = if sd > 1e-12 { 1.0 / (sd * (m as f64).sqrt()) } else { 0.0 };
+        for s in 0..m {
+            // scaling by 1/sqrt(m) here makes the gram directly the correlation
+            out[v * m + s] = (data.at(s, v) - mean) * inv;
+        }
+    }
+    out
+}
+
+/// Correlation matrix (n×n, row-major) from data, blocked gram over the
+/// standardized variable-major matrix, optionally multi-threaded.
+pub fn correlation_matrix(data: &DataMatrix, threads: usize) -> Vec<f64> {
+    let (m, n) = (data.m, data.n);
+    let xs = standardize_var_major(data);
+    let mut c = vec![0.0; n * n];
+    let nthreads = threads.max(1);
+
+    // Parallelize over row-blocks of the upper triangle.
+    let block = 32usize;
+    let row_blocks: Vec<usize> = (0..n).step_by(block).collect();
+    if nthreads == 1 {
+        for &i0 in &row_blocks {
+            gram_block(&xs, m, n, i0, block, &mut c);
+        }
+    } else {
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        let c_ptr = SendPtr(c.as_mut_ptr());
+        std::thread::scope(|scope| {
+            for _ in 0..nthreads {
+                scope.spawn(|| {
+                    let c_ptr = &c_ptr;
+                    loop {
+                        let k = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                        if k >= row_blocks.len() {
+                            break;
+                        }
+                        let i0 = row_blocks[k];
+                        // SAFETY: each row-block [i0, i0+block) writes a
+                        // disjoint set of rows of c (and their mirrored
+                        // columns are written by the owner of the row only
+                        // via the symmetric fill below, also disjoint).
+                        let c_slice = unsafe {
+                            std::slice::from_raw_parts_mut(c_ptr.0, n * n)
+                        };
+                        gram_block(&xs, m, n, i0, block, c_slice);
+                    }
+                });
+            }
+        });
+    }
+    // mirror the upper triangle and set the diagonal exactly
+    for i in 0..n {
+        c[i * n + i] = 1.0;
+        for j in (i + 1)..n {
+            c[j * n + i] = c[i * n + j];
+        }
+    }
+    c
+}
+
+struct SendPtr(*mut f64);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Fill rows [i0, i0+block) of the upper triangle of c with xs·xsᵀ.
+fn gram_block(xs: &[f64], m: usize, n: usize, i0: usize, block: usize, c: &mut [f64]) {
+    let i1 = (i0 + block).min(n);
+    for i in i0..i1 {
+        let xi = &xs[i * m..(i + 1) * m];
+        for j in i..n {
+            let xj = &xs[j * m..(j + 1) * m];
+            let mut acc = 0.0;
+            for k in 0..m {
+                acc += xi[k] * xj[k];
+            }
+            c[i * n + j] = acc;
+        }
+    }
+}
+
+/// Spearman rank correlation matrix — the "Rank PC" variant (Harris &
+/// Drton 2013, cited in the paper §2.3) for non-Gaussian monotone data:
+/// replace each column by its ranks, then Pearson-correlate the ranks.
+/// The result feeds the exact same CI-test machinery.
+pub fn spearman_correlation_matrix(data: &DataMatrix, threads: usize) -> Vec<f64> {
+    let (m, n) = (data.m, data.n);
+    let mut ranked = vec![0.0f64; m * n];
+    let mut idx: Vec<usize> = (0..m).collect();
+    for v in 0..n {
+        idx.sort_by(|&a, &b| {
+            data.at(a, v)
+                .partial_cmp(&data.at(b, v))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        // average ranks for ties
+        let mut s = 0usize;
+        while s < m {
+            let mut e = s;
+            while e + 1 < m && data.at(idx[e + 1], v) == data.at(idx[s], v) {
+                e += 1;
+            }
+            let avg = (s + e) as f64 / 2.0 + 1.0;
+            for &sample in &idx[s..=e] {
+                ranked[sample * n + v] = avg;
+            }
+            s = e + 1;
+        }
+        idx.sort_unstable(); // restore for the next column's stable reuse
+    }
+    let rd = DataMatrix::new(ranked, m, n);
+    correlation_matrix(&rd, threads)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    fn toy_data() -> DataMatrix {
+        let mut rng = Pcg::seeded(10);
+        let m = 500;
+        let n = 5;
+        let mut x = vec![0.0; m * n];
+        for s in 0..m {
+            let a = rng.normal();
+            let b = rng.normal();
+            x[s * n] = a;
+            x[s * n + 1] = 0.9 * a + 0.4359 * rng.normal(); // corr ~0.9
+            x[s * n + 2] = b;
+            x[s * n + 3] = -b; // corr -1
+            x[s * n + 4] = 3.14; // constant
+        }
+        DataMatrix::new(x, m, n)
+    }
+
+    #[test]
+    fn correlation_diagonal_is_one() {
+        let d = toy_data();
+        let c = correlation_matrix(&d, 1);
+        for i in 0..d.n {
+            assert_eq!(c[i * d.n + i], 1.0);
+        }
+    }
+
+    #[test]
+    fn correlation_symmetric() {
+        let d = toy_data();
+        let c = correlation_matrix(&d, 1);
+        for i in 0..d.n {
+            for j in 0..d.n {
+                assert_eq!(c[i * d.n + j], c[j * d.n + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn correlated_pair_detected() {
+        let d = toy_data();
+        let c = correlation_matrix(&d, 1);
+        assert!(c[1] > 0.85, "c01={}", c[1]);
+        assert!((c[2 * d.n + 3] + 1.0).abs() < 1e-9, "c23={}", c[2 * d.n + 3]);
+    }
+
+    #[test]
+    fn constant_column_is_zero_correlated() {
+        let d = toy_data();
+        let c = correlation_matrix(&d, 1);
+        for i in 0..4 {
+            assert_eq!(c[i * d.n + 4], 0.0);
+        }
+    }
+
+    #[test]
+    fn threaded_matches_serial() {
+        let mut rng = Pcg::seeded(77);
+        let m = 100;
+        let n = 67; // awkward non-multiple of block size
+        let x: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        let d = DataMatrix::new(x, m, n);
+        let c1 = correlation_matrix(&d, 1);
+        let c4 = correlation_matrix(&d, 4);
+        let md = c1
+            .iter()
+            .zip(&c4)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(md < 1e-12, "max diff {md}");
+    }
+
+    #[test]
+    fn bounds() {
+        let d = toy_data();
+        let c = correlation_matrix(&d, 1);
+        for v in &c {
+            assert!(*v >= -1.0 - 1e-9 && *v <= 1.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn spearman_detects_monotone_nonlinear() {
+        // y = exp(x): Pearson < 1 but Spearman == 1 exactly
+        let mut rng = Pcg::seeded(21);
+        let m = 300;
+        let mut x = vec![0.0; m * 2];
+        for s in 0..m {
+            let v = rng.normal();
+            x[s * 2] = v;
+            x[s * 2 + 1] = (3.0 * v).exp();
+        }
+        let d = DataMatrix::new(x, m, 2);
+        let pearson = correlation_matrix(&d, 1)[1];
+        let spearman = spearman_correlation_matrix(&d, 1)[1];
+        assert!(spearman > 0.999, "spearman={spearman}");
+        assert!(pearson < 0.9, "pearson={pearson}");
+    }
+
+    #[test]
+    fn spearman_handles_ties() {
+        let x = vec![1.0, 5.0, 1.0, 7.0, 2.0, 9.0, 2.0, 11.0];
+        let d = DataMatrix::new(x, 4, 2);
+        let s = spearman_correlation_matrix(&d, 1);
+        assert!(s[1].is_finite());
+        assert!(s[1] > 0.8, "tied ranks should still correlate: {}", s[1]);
+    }
+
+    #[test]
+    fn spearman_equals_pearson_on_ranks_of_gaussian() {
+        let mut rng = Pcg::seeded(22);
+        let m = 500;
+        let mut x = vec![0.0; m * 2];
+        for s in 0..m {
+            let a = rng.normal();
+            x[s * 2] = a;
+            x[s * 2 + 1] = 0.8 * a + 0.6 * rng.normal();
+        }
+        let d = DataMatrix::new(x, m, 2);
+        let p = correlation_matrix(&d, 1)[1];
+        let sp = spearman_correlation_matrix(&d, 1)[1];
+        // for bivariate normal, spearman ~ (6/pi) asin(rho/2) ≈ rho
+        assert!((p - sp).abs() < 0.05, "pearson={p} spearman={sp}");
+    }
+}

@@ -1,0 +1,87 @@
+//! Fisher's z-transform and the CI-test threshold τ (paper eq. 6-7).
+
+use super::normal::phi_inv;
+
+/// |½ ln((1+ρ)/(1−ρ))| with ρ clamped away from ±1, matching
+/// `python/compile/kernels/linalg.py::fisher_z` exactly.
+#[inline]
+pub fn fisher_z(rho: f64) -> f64 {
+    let r = rho.clamp(-0.999_999_9, 0.999_999_9);
+    (0.5 * ((1.0 + r) / (1.0 - r)).ln()).abs()
+}
+
+/// τ = Φ⁻¹(1 − α/2) / sqrt(m − |S| − 3)   (paper eq. 7).
+///
+/// `m` = sample count, `l` = conditioning-set size, `alpha` = significance.
+/// Returns +∞ when m − l − 3 ≤ 0: with too few samples the test cannot
+/// reject the independence null at any z, matching pcalg's convention
+/// (p-value 1 ⇒ independent ⇒ edge removed).
+pub fn tau(m: usize, l: usize, alpha: f64) -> f64 {
+    let dof = m as f64 - l as f64 - 3.0;
+    if dof <= 0.0 {
+        return f64::INFINITY;
+    }
+    phi_inv(1.0 - alpha / 2.0) / dof.sqrt()
+}
+
+/// The CI decision: independent ⟺ z ≤ τ.
+#[inline]
+pub fn independent(z: f64, tau: f64) -> bool {
+    z <= tau
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fisher_z_zero_at_zero() {
+        assert_eq!(fisher_z(0.0), 0.0);
+    }
+
+    #[test]
+    fn fisher_z_symmetric_abs() {
+        for r in [0.1, 0.5, 0.9, 0.99] {
+            assert!((fisher_z(r) - fisher_z(-r)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn fisher_z_is_atanh() {
+        for r in [-0.9, -0.3, 0.0, 0.2, 0.7] {
+            assert!((fisher_z(r) - (r as f64).atanh().abs()).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn fisher_z_finite_at_one() {
+        assert!(fisher_z(1.0).is_finite());
+        assert!(fisher_z(-1.0).is_finite());
+    }
+
+    #[test]
+    fn tau_alpha001_m100() {
+        // phi_inv(0.995) = 2.5758...; sqrt(100-0-3) = 9.849
+        let t = tau(100, 0, 0.01);
+        assert!((t - 2.575829304 / (97.0f64).sqrt()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn tau_decreases_with_m() {
+        assert!(tau(1000, 2, 0.01) < tau(100, 2, 0.01));
+    }
+
+    #[test]
+    fn tau_increases_with_l() {
+        assert!(tau(50, 10, 0.01) > tau(50, 1, 0.01));
+    }
+
+    #[test]
+    fn tau_infinite_when_underpowered() {
+        let t = tau(4, 1, 0.01);
+        assert!(t.is_infinite());
+        // underpowered test never removes an edge... except z==inf is
+        // impossible since fisher_z is clamped finite.
+        assert!(independent(fisher_z(1.0), t));
+    }
+}

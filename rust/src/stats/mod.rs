@@ -1,0 +1,9 @@
+//! Statistical substrate: normal quantiles, Fisher-z CI testing, small
+//! dense linear algebra (the paper's Algorithm 7) and correlation
+//! matrices — everything the PC engines need, implemented from scratch.
+
+pub mod chol;
+pub mod corr;
+pub mod fisher;
+pub mod normal;
+pub mod pcorr;

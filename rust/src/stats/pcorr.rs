@@ -1,0 +1,193 @@
+//! Partial correlation ρ(Vi, Vj | S) from a correlation matrix
+//! (paper eq. 3-5) — the *native* (pure Rust) CI-test path, used by the
+//! serial/threaded CPU engines and as the cross-check oracle for the XLA
+//! engine.
+
+use super::chol::{pinv_fast, PinvScratch};
+use super::fisher::fisher_z;
+
+/// Reusable workspace for CI tests up to conditioning-set size `max_l`.
+pub struct CiWorkspace {
+    max_l: usize,
+    m1: Vec<f64>,    // 2×l   rows (C[i,S]; C[j,S])
+    m2: Vec<f64>,    // l×l   C[S,S]
+    m2inv: Vec<f64>, // l×l
+    w: Vec<f64>,     // 2×l   M1 × M2⁻¹
+    sc: PinvScratch,
+}
+
+impl CiWorkspace {
+    pub fn new(max_l: usize) -> Self {
+        let l = max_l.max(1);
+        CiWorkspace {
+            max_l: l,
+            m1: vec![0.0; 2 * l],
+            m2: vec![0.0; l * l],
+            m2inv: vec![0.0; l * l],
+            w: vec![0.0; 2 * l],
+            sc: PinvScratch::new(l),
+        }
+    }
+}
+
+/// Correlation matrix view: row-major `n×n` f64 with unit diagonal.
+pub struct Corr<'a> {
+    pub c: &'a [f64],
+    pub n: usize,
+}
+
+impl<'a> Corr<'a> {
+    pub fn new(c: &'a [f64], n: usize) -> Self {
+        debug_assert_eq!(c.len(), n * n);
+        Corr { c, n }
+    }
+
+    #[inline]
+    pub fn at(&self, i: usize, j: usize) -> f64 {
+        self.c[i * self.n + j]
+    }
+}
+
+/// ρ(Vi, Vj | S). `s` holds variable indices, `|s| = l`. With `l == 0`
+/// this is just C[i,j].
+pub fn partial_corr(corr: &Corr, i: usize, j: usize, s: &[usize], ws: &mut CiWorkspace) -> f64 {
+    let l = s.len();
+    if l == 0 {
+        return corr.at(i, j);
+    }
+    assert!(l <= ws.max_l, "conditioning set {l} exceeds workspace {}", ws.max_l);
+    // gather M1 = (C[i,S]; C[j,S]) and M2 = C[S,S]
+    for (a, &sa) in s.iter().enumerate() {
+        ws.m1[a] = corr.at(i, sa);
+        ws.m1[l + a] = corr.at(j, sa);
+        for (b, &sb) in s.iter().enumerate() {
+            ws.m2[a * l + b] = corr.at(sa, sb);
+        }
+    }
+    pinv_fast(&ws.m2[..l * l], l, &mut ws.sc, &mut ws.m2inv[..l * l]);
+    // w = M1 × M2⁻¹  (2×l)
+    for r in 0..2 {
+        for col in 0..l {
+            let mut acc = 0.0;
+            for k in 0..l {
+                acc += ws.m1[r * l + k] * ws.m2inv[k * l + col];
+            }
+            ws.w[r * l + col] = acc;
+        }
+    }
+    // H = M0 − w × M1ᵀ, M0 = [[1, c_ij],[c_ij, 1]]
+    let mut h00 = 0.0;
+    let mut h01 = 0.0;
+    let mut h11 = 0.0;
+    for k in 0..l {
+        h00 += ws.w[k] * ws.m1[k];
+        h01 += ws.w[k] * ws.m1[l + k];
+        h11 += ws.w[l + k] * ws.m1[l + k];
+    }
+    let c_ij = corr.at(i, j);
+    let h00 = 1.0 - h00;
+    let h11 = 1.0 - h11;
+    let h01 = c_ij - h01;
+    h01 / (h00 * h11).max(1e-12).sqrt()
+}
+
+/// |Fisher z| of the partial correlation — the statistic compared to τ.
+pub fn ci_statistic(corr: &Corr, i: usize, j: usize, s: &[usize], ws: &mut CiWorkspace) -> f64 {
+    fisher_z(partial_corr(corr, i, j, s, ws))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Correlation of the chain X0 -> X1 -> X2 with unit coefficients
+    /// r01, r12; r02 = r01*r12 (Markov). Conditioning on X1 must zero it.
+    fn chain_corr() -> Vec<f64> {
+        let r01 = 0.8;
+        let r12 = 0.7;
+        let r02 = r01 * r12;
+        vec![1.0, r01, r02, r01, 1.0, r12, r02, r12, 1.0]
+    }
+
+    #[test]
+    fn level0_is_raw_correlation() {
+        let c = chain_corr();
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        assert!((partial_corr(&corr, 0, 2, &[], &mut ws) - 0.56).abs() < 1e-12);
+    }
+
+    #[test]
+    fn conditioning_on_mediator_zeroes_rho() {
+        let c = chain_corr();
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        let rho = partial_corr(&corr, 0, 2, &[1], &mut ws);
+        assert!(rho.abs() < 1e-6, "rho={rho}");
+    }
+
+    #[test]
+    fn conditioning_on_irrelevant_keeps_rho() {
+        // 4 vars: 0-1 correlated, 2,3 independent of them
+        let n = 4;
+        let mut c = vec![0.0; n * n];
+        for i in 0..n {
+            c[i * n + i] = 1.0;
+        }
+        c[1] = 0.6;
+        c[n] = 0.6; // C[0,1]
+        let corr = Corr::new(&c, n);
+        let mut ws = CiWorkspace::new(4);
+        let rho = partial_corr(&corr, 0, 1, &[2, 3], &mut ws);
+        assert!((rho - 0.6).abs() < 1e-6, "rho={rho}");
+    }
+
+    #[test]
+    fn symmetric_in_i_j() {
+        let c = chain_corr();
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        let a = partial_corr(&corr, 0, 2, &[1], &mut ws);
+        let b = partial_corr(&corr, 2, 0, &[1], &mut ws);
+        assert!((a - b).abs() < 1e-12);
+    }
+
+    #[test]
+    fn collider_conditioning_creates_dependence() {
+        // X0 -> X2 <- X1 with X0 ⟂ X1: conditioning on the collider X2
+        // induces |rho(0,1|2)| > 0.
+        let a = 0.7;
+        let b = 0.7;
+        // model: x2 = a x0 + b x1 + e; var(x2) = a²+b²+σ²=1 with σ² chosen
+        let s2 = 1.0 - a * a - b * b;
+        assert!(s2 > 0.0);
+        let c = vec![1.0, 0.0, a, 0.0, 1.0, b, a, b, 1.0];
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        let rho0 = partial_corr(&corr, 0, 1, &[], &mut ws);
+        let rho1 = partial_corr(&corr, 0, 1, &[2], &mut ws);
+        assert!(rho0.abs() < 1e-12);
+        assert!(rho1.abs() > 0.3, "rho1={rho1}");
+    }
+
+    #[test]
+    fn statistic_is_abs_fisher_z() {
+        let c = chain_corr();
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        let z = ci_statistic(&corr, 0, 1, &[], &mut ws);
+        assert!((z - (0.8f64).atanh()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicated_variable_in_s_is_finite() {
+        // S = {1, 1} makes M2 singular; pinv must keep things finite.
+        let c = chain_corr();
+        let corr = Corr::new(&c, 3);
+        let mut ws = CiWorkspace::new(4);
+        let rho = partial_corr(&corr, 0, 2, &[1, 1], &mut ws);
+        assert!(rho.is_finite());
+        // and the answer should still be ~0 (conditioning on X1 twice)
+        assert!(rho.abs() < 1e-3, "rho={rho}");
+    }
+}

@@ -1,0 +1,7 @@
+//! Small self-contained utilities (no external crates are available
+//! offline besides `xla`/`anyhow`, so RNG, CLI parsing and timing are
+//! implemented here).
+
+pub mod cli;
+pub mod rng;
+pub mod timer;

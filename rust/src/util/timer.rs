@@ -1,0 +1,63 @@
+//! Wall-clock timing helpers for the experiment harness.
+
+use std::time::Instant;
+
+/// A simple scope timer returning elapsed seconds.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn elapsed_s(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` `reps` times (after `warmup` discarded runs) and return the
+/// median wall-clock seconds. The poor man's criterion (criterion is not
+/// available offline).
+pub fn median_time<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> f64 {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<f64> = (0..reps.max(1))
+        .map(|_| {
+            let t = Timer::start();
+            f();
+            t.elapsed_s()
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(t.elapsed_s() >= 0.004);
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn median_time_runs_all_reps() {
+        let mut count = 0;
+        let m = median_time(2, 3, || count += 1);
+        assert_eq!(count, 5);
+        assert!(m >= 0.0);
+    }
+}

@@ -1,0 +1,164 @@
+//! Cross-module integration tests on the native path: recovery quality,
+//! order-independence properties, CSV round trips, orientation
+//! correctness on textbook structures.
+
+use cupc::data::csv::{parse_csv, write_csv};
+use cupc::metrics::{shd, skeleton_metrics};
+use cupc::prelude::*;
+use cupc::sim::{dag::WeightedDag, datasets, sem};
+use cupc::util::rng::Pcg;
+
+#[test]
+fn recovery_improves_with_samples() {
+    let dag = WeightedDag::random_er(40, 0.08, &mut Pcg::seeded(70));
+    let truth = dag.skeleton_dense();
+    let mut f1s = Vec::new();
+    for m in [50usize, 500, 5000] {
+        let data = sem::sample(&dag, m, &mut Pcg::seeded(71));
+        let res = cupc::api::pc_stable_data(&data, &Config::default()).unwrap();
+        let metr = skeleton_metrics(&res.skeleton.graph.snapshot(), &truth, 40);
+        f1s.push(metr.f1);
+    }
+    assert!(
+        f1s[2] > f1s[0],
+        "more samples must improve recovery: {f1s:?}"
+    );
+    assert!(f1s[2] > 0.9, "5000 samples should recover well: {f1s:?}");
+}
+
+#[test]
+fn permutation_invariance_of_skeleton() {
+    // relabeling variables must relabel the skeleton identically
+    // (PC-stable order-independence, the paper's §2.4 argument).
+    let n = 25;
+    let dag = WeightedDag::random_er(n, 0.12, &mut Pcg::seeded(80));
+    let data = sem::sample(&dag, 600, &mut Pcg::seeded(81));
+    let res = cupc::api::pc_stable_data(&data, &Config::default()).unwrap();
+    let skel = res.skeleton.graph.snapshot();
+
+    // permute columns of the data
+    let mut perm: Vec<usize> = (0..n).collect();
+    Pcg::seeded(82).shuffle(&mut perm);
+    let mut xp = vec![0.0; data.m * n];
+    for s in 0..data.m {
+        for v in 0..n {
+            xp[s * n + perm[v]] = data.at(s, v);
+        }
+    }
+    let datap = cupc::stats::corr::DataMatrix::new(xp, data.m, n);
+    let resp = cupc::api::pc_stable_data(&datap, &Config::default()).unwrap();
+    let skelp = resp.skeleton.graph.snapshot();
+
+    for i in 0..n {
+        for j in 0..n {
+            assert_eq!(
+                skel[i * n + j],
+                skelp[perm[i] * n + perm[j]],
+                "edge ({i},{j}) not permutation-consistent"
+            );
+        }
+    }
+}
+
+#[test]
+fn csv_roundtrip_preserves_result() {
+    let ds = datasets::generate_er(20, 150, 0.15, 5);
+    let tmp = std::env::temp_dir().join("cupc_it_roundtrip.csv");
+    write_csv(&tmp, &ds.data).unwrap();
+    let text = std::fs::read_to_string(&tmp).unwrap();
+    let (data2, _) = parse_csv(&text).unwrap();
+    std::fs::remove_file(&tmp).ok();
+
+    let r1 = cupc::api::pc_stable_data(&ds.data, &Config::default()).unwrap();
+    let r2 = cupc::api::pc_stable_data(&data2, &Config::default()).unwrap();
+    // CSV writer uses full f64 formatting; skeletons must coincide
+    assert_eq!(r1.skeleton.graph.snapshot(), r2.skeleton.graph.snapshot());
+    assert!(r1.cpdag.same_as(&r2.cpdag));
+}
+
+#[test]
+fn alpha_monotonicity() {
+    // stricter alpha (smaller) removes more edges (higher tau).
+    let ds = datasets::generate_er(30, 200, 0.15, 6);
+    let run_alpha = |alpha: f64| {
+        let cfg = Config {
+            alpha,
+            ..Config::default()
+        };
+        cupc::api::pc_stable_data(&ds.data, &cfg)
+            .unwrap()
+            .skeleton
+            .graph
+            .n_edges()
+    };
+    let strict = run_alpha(0.001);
+    let loose = run_alpha(0.1);
+    assert!(
+        strict <= loose,
+        "alpha=0.001 gives {strict} edges > alpha=0.1 {loose}"
+    );
+}
+
+#[test]
+fn max_level_caps_the_loop() {
+    let ds = datasets::generate_er(40, 300, 0.2, 7);
+    let cfg = Config {
+        max_level: Some(1),
+        ..Config::default()
+    };
+    let res = cupc::api::pc_stable_data(&ds.data, &cfg).unwrap();
+    assert!(res.skeleton.levels.len() <= 2, "levels 0 and 1 only");
+}
+
+#[test]
+fn collider_and_chain_textbook_orientations() {
+    // two components: collider 0→2←1 and chain 3→4→5
+    let dag = WeightedDag {
+        n: 6,
+        parents: vec![
+            vec![],
+            vec![],
+            vec![(0, 0.8), (1, 0.8)],
+            vec![],
+            vec![(3, 0.9)],
+            vec![(4, 0.9)],
+        ],
+    };
+    let data = sem::sample(&dag, 8000, &mut Pcg::seeded(90));
+    let res = cupc::api::pc_stable_data(&data, &Config::default()).unwrap();
+    // collider oriented
+    assert!(res.cpdag.is_directed(0, 2));
+    assert!(res.cpdag.is_directed(1, 2));
+    // chain undirected (Markov-equivalent both ways)
+    assert!(res.cpdag.is_undirected(3, 4));
+    assert!(res.cpdag.is_undirected(4, 5));
+    // no cross-component edges
+    for i in 0..3 {
+        for j in 3..6 {
+            assert!(!res.cpdag.adjacent(i, j));
+        }
+    }
+}
+
+#[test]
+fn shd_zero_between_identical_runs() {
+    let ds = datasets::generate_er(15, 300, 0.2, 8);
+    let a = cupc::api::pc_stable_data(&ds.data, &Config::default()).unwrap();
+    let b = cupc::api::pc_stable_data(&ds.data, &Config::default()).unwrap();
+    assert_eq!(shd(&a.cpdag, &b.cpdag), 0);
+}
+
+#[test]
+fn sepsets_are_separating_in_truth_for_strong_signal() {
+    // with plenty of samples, any stored sepset must d-separate in the
+    // estimated graph's terms: spot-check that removed pairs are indeed
+    // non-adjacent and their sepset members were neighbors at removal.
+    let ds = datasets::generate_er(25, 3000, 0.1, 9);
+    let res = cupc::api::pc_stable_data(&ds.data, &Config::default()).unwrap();
+    for ((i, j), s) in res.skeleton.sepsets.sorted_entries() {
+        assert!(!res.skeleton.graph.has_edge(i as usize, j as usize));
+        for v in s {
+            assert!(v as usize != i as usize && v as usize != j as usize);
+        }
+    }
+}
