@@ -1,149 +1,170 @@
 //! `cupc engines` — cross-check the native engine against the XLA
-//! artifacts on random batches (the runtime smoke test).
+//! artifacts on random batches (the runtime smoke test). Requires the
+//! `xla` cargo feature; without it the subcommand explains how to get it.
 
-use anyhow::{bail, Result};
-use cupc::runtime::XlaEngine;
-use cupc::skeleton::engine::{CiEngine, NativeEngine};
+#[cfg(not(feature = "xla"))]
+use anyhow::Result;
+#[cfg(not(feature = "xla"))]
 use cupc::util::cli::Args;
-use cupc::util::rng::Pcg;
-use std::path::Path;
 
-pub fn main(args: &Args) -> Result<()> {
-    let dir = args.get_or("artifacts", "artifacts");
-    let mut xla = XlaEngine::new(Path::new(&dir))?;
-    let mut nat = NativeEngine::new();
-    let mut rng = Pcg::seeded(args.get_u64("seed", 0));
-
-    // level 0
-    let c: Vec<f32> = (0..5000).map(|_| rng.uniform_in(-0.95, 0.95) as f32).collect();
-    let zx = xla.level0(&c)?;
-    let zn = nat.level0(&c)?;
-    let d0 = max_diff(&zx, &zn);
-    println!("level0   : {} tests, max |Δz| = {d0:.2e}", c.len());
-
-    for l in 1..=xla.max_level() {
-        let b = 600usize;
-        let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
-        let zx = xla.ci_e(l, b, &c_ij, &m1, &m2)?;
-        let zn = nat.ci_e(l, b, &c_ij, &m1, &m2)?;
-        let de = max_diff(&zx, &zn);
-
-        let rows = 40usize;
-        let k = xla.k();
-        let (cs, m1s, m2s) = random_s_batch(&mut rng, rows, k, l);
-        let valid = vec![k as u32; rows];
-        let zxs = xla.ci_s(l, rows, k, &cs, &m1s, &m2s, &valid)?;
-        let zns = nat.ci_s(l, rows, k, &cs, &m1s, &m2s, &valid)?;
-        let ds = max_diff(&zxs, &zns);
-        println!("level {l:>2} : ci_e max |Δz| = {de:.2e}   ci_s max |Δz| = {ds:.2e}");
-        if de > 2e-3 || ds > 2e-3 {
-            bail!("engines disagree at level {l}: ci_e {de:.2e}, ci_s {ds:.2e}");
-        }
-    }
-    println!("engines agree (dispatches: {})", xla.dispatches);
-    Ok(())
+#[cfg(not(feature = "xla"))]
+pub fn main(_args: &Args) -> Result<()> {
+    anyhow::bail!(
+        "the `engines` cross-check drives the XLA PJRT runtime and this binary was built \
+         without it; rebuild with `cargo build --features xla` (and run `make artifacts` \
+         for the AOT kernels) to enable it"
+    )
 }
 
-fn max_diff(a: &[f32], b: &[f32]) -> f32 {
-    a.iter()
-        .zip(b)
-        .map(|(x, y)| (x - y).abs())
-        .fold(0.0f32, f32::max)
-}
+#[cfg(feature = "xla")]
+pub use with_xla::main;
 
-/// Random but *valid* correlation blocks: sample (2+l) standardized
-/// variables, correlate, slice — same construction as the pytest oracle.
-pub fn random_batch(rng: &mut Pcg, b: usize, l: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let nv = 2 + l;
-    let m = 64;
-    let mut c_ij = Vec::with_capacity(b);
-    let mut m1 = Vec::with_capacity(b * 2 * l);
-    let mut m2 = Vec::with_capacity(b * l * l);
-    let mut corr = vec![0.0f64; nv * nv];
-    for _ in 0..b {
-        random_corr(rng, nv, m, &mut corr);
-        c_ij.push(corr[1] as f32);
-        for s in 0..l {
-            m1.push(corr[2 + s] as f32); // C[0, 2+s]
-        }
-        for s in 0..l {
-            m1.push(corr[nv + 2 + s] as f32); // C[1, 2+s]
-        }
-        for a in 0..l {
-            for bb in 0..l {
-                m2.push(corr[(2 + a) * nv + 2 + bb] as f32);
+#[cfg(feature = "xla")]
+mod with_xla {
+    use anyhow::{bail, Result};
+    use cupc::runtime::XlaEngine;
+    use cupc::skeleton::engine::{CiEngine, NativeEngine};
+    use cupc::util::cli::Args;
+    use cupc::util::rng::Pcg;
+    use std::path::Path;
+
+    pub fn main(args: &Args) -> Result<()> {
+        let dir = args.get_or("artifacts", "artifacts");
+        let mut xla = XlaEngine::new(Path::new(&dir))?;
+        let mut nat = NativeEngine::new();
+        let mut rng = Pcg::seeded(args.get_u64("seed", 0));
+
+        // level 0
+        let c: Vec<f32> = (0..5000).map(|_| rng.uniform_in(-0.95, 0.95) as f32).collect();
+        let zx = xla.level0(&c)?;
+        let zn = nat.level0(&c)?;
+        let d0 = max_diff(&zx, &zn);
+        println!("level0   : {} tests, max |Δz| = {d0:.2e}", c.len());
+
+        for l in 1..=xla.max_level() {
+            let b = 600usize;
+            let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
+            let zx = xla.ci_e(l, b, &c_ij, &m1, &m2)?;
+            let zn = nat.ci_e(l, b, &c_ij, &m1, &m2)?;
+            let de = max_diff(&zx, &zn);
+
+            let rows = 40usize;
+            let k = xla.k();
+            let (cs, m1s, m2s) = random_s_batch(&mut rng, rows, k, l);
+            let valid = vec![k as u32; rows];
+            let zxs = xla.ci_s(l, rows, k, &cs, &m1s, &m2s, &valid)?;
+            let zns = nat.ci_s(l, rows, k, &cs, &m1s, &m2s, &valid)?;
+            let ds = max_diff(&zxs, &zns);
+            println!("level {l:>2} : ci_e max |Δz| = {de:.2e}   ci_s max |Δz| = {ds:.2e}");
+            if de > 2e-3 || ds > 2e-3 {
+                bail!("engines disagree at level {l}: ci_e {de:.2e}, ci_s {ds:.2e}");
             }
         }
+        println!("engines agree (dispatches: {})", xla.dispatches);
+        Ok(())
     }
-    (c_ij, m1, m2)
-}
 
-pub fn random_s_batch(
-    rng: &mut Pcg,
-    rows: usize,
-    k: usize,
-    l: usize,
-) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-    let nv = 1 + k + l;
-    let m = 64;
-    let mut c_ij = Vec::with_capacity(rows * k);
-    let mut m1 = Vec::with_capacity(rows * k * 2 * l);
-    let mut m2 = Vec::with_capacity(rows * l * l);
-    let mut corr = vec![0.0f64; nv * nv];
-    for _ in 0..rows {
-        random_corr(rng, nv, m, &mut corr);
-        for j in 0..k {
-            c_ij.push(corr[1 + j] as f32);
-        }
-        for j in 0..k {
+    fn max_diff(a: &[f32], b: &[f32]) -> f32 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Random but *valid* correlation blocks: sample (2+l) standardized
+    /// variables, correlate, slice — same construction as the pytest oracle.
+    pub fn random_batch(rng: &mut Pcg, b: usize, l: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let nv = 2 + l;
+        let m = 64;
+        let mut c_ij = Vec::with_capacity(b);
+        let mut m1 = Vec::with_capacity(b * 2 * l);
+        let mut m2 = Vec::with_capacity(b * l * l);
+        let mut corr = vec![0.0f64; nv * nv];
+        for _ in 0..b {
+            random_corr(rng, nv, m, &mut corr);
+            c_ij.push(corr[1] as f32);
             for s in 0..l {
-                m1.push(corr[1 + k + s] as f32); // C[0, S]
+                m1.push(corr[2 + s] as f32); // C[0, 2+s]
             }
             for s in 0..l {
-                m1.push(corr[(1 + j) * nv + 1 + k + s] as f32); // C[j, S]
+                m1.push(corr[nv + 2 + s] as f32); // C[1, 2+s]
+            }
+            for a in 0..l {
+                for bb in 0..l {
+                    m2.push(corr[(2 + a) * nv + 2 + bb] as f32);
+                }
             }
         }
-        for a in 0..l {
-            for bb in 0..l {
-                m2.push(corr[(1 + k + a) * nv + (1 + k + bb)] as f32);
-            }
-        }
+        (c_ij, m1, m2)
     }
-    (c_ij, m1, m2)
-}
 
-fn random_corr(rng: &mut Pcg, nv: usize, m: usize, out: &mut [f64]) {
-    // X: m×nv with light cross-mixing, standardized, C = XᵀX/m
-    let mut x = vec![0.0f64; m * nv];
-    for row in 0..m {
-        let shared = rng.normal() * 0.5;
+    pub fn random_s_batch(
+        rng: &mut Pcg,
+        rows: usize,
+        k: usize,
+        l: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let nv = 1 + k + l;
+        let m = 64;
+        let mut c_ij = Vec::with_capacity(rows * k);
+        let mut m1 = Vec::with_capacity(rows * k * 2 * l);
+        let mut m2 = Vec::with_capacity(rows * l * l);
+        let mut corr = vec![0.0f64; nv * nv];
+        for _ in 0..rows {
+            random_corr(rng, nv, m, &mut corr);
+            for j in 0..k {
+                c_ij.push(corr[1 + j] as f32);
+            }
+            for j in 0..k {
+                for s in 0..l {
+                    m1.push(corr[1 + k + s] as f32); // C[0, S]
+                }
+                for s in 0..l {
+                    m1.push(corr[(1 + j) * nv + 1 + k + s] as f32); // C[j, S]
+                }
+            }
+            for a in 0..l {
+                for bb in 0..l {
+                    m2.push(corr[(1 + k + a) * nv + (1 + k + bb)] as f32);
+                }
+            }
+        }
+        (c_ij, m1, m2)
+    }
+
+    fn random_corr(rng: &mut Pcg, nv: usize, m: usize, out: &mut [f64]) {
+        // X: m×nv with light cross-mixing, standardized, C = XᵀX/m
+        let mut x = vec![0.0f64; m * nv];
+        for row in 0..m {
+            let shared = rng.normal() * 0.5;
+            for v in 0..nv {
+                x[row * nv + v] = rng.normal() + shared;
+            }
+        }
         for v in 0..nv {
-            x[row * nv + v] = rng.normal() + shared;
-        }
-    }
-    for v in 0..nv {
-        let mut mean = 0.0;
-        for row in 0..m {
-            mean += x[row * nv + v];
-        }
-        mean /= m as f64;
-        let mut var = 0.0;
-        for row in 0..m {
-            let d = x[row * nv + v] - mean;
-            var += d * d;
-        }
-        let inv = 1.0 / (var / m as f64).sqrt().max(1e-12);
-        for row in 0..m {
-            x[row * nv + v] = (x[row * nv + v] - mean) * inv;
-        }
-    }
-    for a in 0..nv {
-        for b in 0..nv {
-            let mut acc = 0.0;
+            let mut mean = 0.0;
             for row in 0..m {
-                acc += x[row * nv + a] * x[row * nv + b];
+                mean += x[row * nv + v];
             }
-            out[a * nv + b] = acc / m as f64;
+            mean /= m as f64;
+            let mut var = 0.0;
+            for row in 0..m {
+                let d = x[row * nv + v] - mean;
+                var += d * d;
+            }
+            let inv = 1.0 / (var / m as f64).sqrt().max(1e-12);
+            for row in 0..m {
+                x[row * nv + v] = (x[row * nv + v] - mean) * inv;
+            }
+        }
+        for a in 0..nv {
+            for b in 0..nv {
+                let mut acc = 0.0;
+                for row in 0..m {
+                    acc += x[row * nv + a] * x[row * nv + b];
+                }
+                out[a * nv + b] = acc / m as f64;
+            }
         }
     }
 }

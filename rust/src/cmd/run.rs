@@ -9,8 +9,18 @@ use cupc::util::cli::Args;
 use std::path::PathBuf;
 
 pub fn config_from_args(args: &Args) -> Result<Config> {
-    let mut cfg = Config::default();
-    cfg.alpha = args.get_f64("alpha", cfg.alpha);
+    let base = Config::default();
+    let mut cfg = Config {
+        alpha: args.get_f64("alpha", base.alpha),
+        threads: args.get_usize("threads", base.threads),
+        beta: args.get_usize("beta", base.beta),
+        gamma: args.get_usize("gamma", base.gamma),
+        theta: args.get_usize("theta", base.theta),
+        delta: args.get_usize("delta", base.delta),
+        artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
+        verbose: args.has_flag("verbose"),
+        ..base
+    };
     if let Some(l) = args.get("max-level") {
         cfg.max_level = Some(l.parse().context("--max-level")?);
     }
@@ -18,23 +28,16 @@ pub fn config_from_args(args: &Args) -> Result<Config> {
         cfg.variant = Variant::parse(v)
             .with_context(|| format!("unknown variant {v:?}"))?;
     }
-    match args.get_or("engine", "native").as_str() {
-        "native" => cfg.engine = EngineKind::Native,
-        "xla" => cfg.engine = EngineKind::Xla,
+    cfg.engine = match args.get_or("engine", "native").as_str() {
+        "native" => EngineKind::Native,
+        "xla" => EngineKind::Xla,
         other => bail!("unknown engine {other:?} (native|xla)"),
-    }
-    cfg.threads = args.get_usize("threads", cfg.threads);
-    cfg.beta = args.get_usize("beta", cfg.beta);
-    cfg.gamma = args.get_usize("gamma", cfg.gamma);
-    cfg.theta = args.get_usize("theta", cfg.theta);
-    cfg.delta = args.get_usize("delta", cfg.delta);
-    cfg.artifacts_dir = PathBuf::from(args.get_or("artifacts", "artifacts"));
-    cfg.verbose = args.has_flag("verbose");
-    match args.get_or("orient", "standard").as_str() {
-        "standard" => cfg.orient = cupc::skeleton::OrientRule::Standard,
-        "majority" => cfg.orient = cupc::skeleton::OrientRule::Majority,
+    };
+    cfg.orient = match args.get_or("orient", "standard").as_str() {
+        "standard" => cupc::skeleton::OrientRule::Standard,
+        "majority" => cupc::skeleton::OrientRule::Majority,
         other => bail!("unknown orient rule {other:?} (standard|majority)"),
-    }
+    };
     Ok(cfg)
 }
 

@@ -9,7 +9,15 @@ use crate::stats::corr::DataMatrix;
 use anyhow::{bail, Context, Result};
 
 /// Parse CSV text into a data matrix (+ optional column names).
+///
+/// Tolerates a UTF-8 BOM, CRLF line endings, trailing newlines, blank
+/// lines and `#` comments. Ragged rows are a clear error (never a
+/// panic), reported with the 1-based line number.
 pub fn parse_csv(text: &str) -> Result<(DataMatrix, Option<Vec<String>>)> {
+    // Excel and friends prepend a BOM; without stripping it the first
+    // field of a headerless file fails to parse as a number and the row
+    // would silently be taken for a header.
+    let text = text.strip_prefix('\u{feff}').unwrap_or(text);
     let mut rows: Vec<Vec<f64>> = Vec::new();
     let mut header: Option<Vec<String>> = None;
     let mut n: Option<usize> = None;
@@ -135,5 +143,89 @@ mod tests {
         assert_eq!(h.unwrap(), vec!["v0", "v1"]);
         assert_eq!(d.x, d2.x);
         std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn header_detection_no_header_when_all_numeric() {
+        // an all-numeric first row is data, not a header
+        let (d, h) = parse_csv("0.5,1.5\n2.5,3.5\n").unwrap();
+        assert!(h.is_none());
+        assert_eq!(d.m, 2);
+        assert_eq!(d.at(0, 0), 0.5);
+    }
+
+    #[test]
+    fn trailing_newlines_and_missing_final_newline() {
+        let with = parse_csv("1,2\n3,4\n\n\n").unwrap().0;
+        let without = parse_csv("1,2\n3,4").unwrap().0;
+        assert_eq!(with.x, without.x);
+        assert_eq!((with.m, with.n), (2, 2));
+    }
+
+    #[test]
+    fn crlf_line_endings() {
+        let (d, h) = parse_csv("a,b\r\n1,2\r\n3,4\r\n").unwrap();
+        assert_eq!(h.unwrap(), vec!["a", "b"]);
+        assert_eq!((d.m, d.n), (2, 2));
+        assert_eq!(d.at(1, 1), 4.0);
+    }
+
+    #[test]
+    fn utf8_bom_does_not_fake_a_header() {
+        // BOM + numeric first row: still headerless data
+        let (d, h) = parse_csv("\u{feff}1,2\n3,4\n").unwrap();
+        assert!(h.is_none(), "BOM must not turn a data row into a header");
+        assert_eq!((d.m, d.n), (2, 2));
+        // BOM + real header still detected
+        let (d2, h2) = parse_csv("\u{feff}x,y\n1,2\n").unwrap();
+        assert_eq!(h2.unwrap(), vec!["x", "y"]);
+        assert_eq!(d2.m, 1);
+    }
+
+    #[test]
+    fn ragged_row_is_a_clear_error_with_line_number() {
+        let err = parse_csv("1,2,3\n4,5\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("expected 3"), "{msg}");
+
+        // ragged against a header's width, CRLF included
+        let err = parse_csv("a,b\r\n1,2,3\r\n").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("line 2"), "{msg}");
+        assert!(msg.contains("expected 2"), "{msg}");
+    }
+
+    #[test]
+    fn header_only_file_is_an_error() {
+        let err = parse_csv("a,b,c\n").unwrap_err();
+        assert!(format!("{err:#}").contains("no data rows"));
+    }
+
+    #[test]
+    fn semicolon_separator() {
+        let (d, h) = parse_csv("x;y\n1.5;2.5\n").unwrap();
+        assert_eq!(h.unwrap(), vec!["x", "y"]);
+        assert_eq!(d.at(0, 1), 2.5);
+    }
+
+    #[test]
+    fn roundtrip_preserves_awkward_values_exactly() {
+        // Display-formatted f64 is the shortest exact representation, so
+        // write_csv → parse_csv must be bit-exact even for awkward values.
+        let vals = vec![
+            0.1,
+            -1.0 / 3.0,
+            1e-300,
+            -2.5e17,
+            f64::MIN_POSITIVE,
+            123456789.123456789,
+        ];
+        let d = DataMatrix::new(vals.clone(), 3, 2);
+        let tmp = std::env::temp_dir().join("cupc_test_awkward_roundtrip.csv");
+        write_csv(&tmp, &d).unwrap();
+        let (d2, _) = load_csv(&tmp).unwrap();
+        std::fs::remove_file(&tmp).ok();
+        assert_eq!(d2.x, vals, "roundtrip must be bit-exact");
     }
 }

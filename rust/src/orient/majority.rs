@@ -150,9 +150,8 @@ mod tests {
         let c = correlation_matrix(&data, 1);
         let corr = Corr::new(&c, 3);
         // skeleton: 0-2, 1-2 (0,1 non-adjacent)
-        let mut g = Cpdag::new(3);
         let skel = vec![0, 0, 1, 0, 0, 1, 1, 1, 0];
-        g = Cpdag::from_skeleton(&skel, 3);
+        let mut g = Cpdag::from_skeleton(&skel, 3);
         orient_v_structures_majority(&mut g, &corr, data.m, 0.01, 2);
         assert!(g.is_directed(0, 2));
         assert!(g.is_directed(1, 2));

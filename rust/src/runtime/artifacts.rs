@@ -6,9 +6,13 @@
 //! compiles each artifact on first use through the PJRT CPU client and
 //! caches the loaded executable for the rest of the process lifetime.
 
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, Context, Result};
+#[cfg(feature = "xla")]
+use anyhow::bail;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "xla")]
+use std::path::PathBuf;
 
 /// Metadata for one artifact, mirroring aot.py's manifest entries.
 #[derive(Clone, Debug)]
@@ -82,6 +86,7 @@ impl Manifest {
 }
 
 /// Compile-once cache of loaded PJRT executables.
+#[cfg(feature = "xla")]
 pub struct ArtifactStore {
     dir: PathBuf,
     pub manifest: Manifest,
@@ -89,6 +94,7 @@ pub struct ArtifactStore {
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
+#[cfg(feature = "xla")]
 impl ArtifactStore {
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
@@ -159,6 +165,7 @@ impl ArtifactStore {
     }
 }
 
+#[cfg(feature = "xla")]
 thread_local! {
     /// Process-wide (per-thread) store registry: artifact compilation is
     /// paid once per process, not once per `run_skeleton` call. PJRT
@@ -168,6 +175,7 @@ thread_local! {
 }
 
 /// Fetch (or create + eagerly compile) the shared store for a directory.
+#[cfg(feature = "xla")]
 pub fn shared_store(dir: &Path) -> Result<std::rc::Rc<std::cell::RefCell<ArtifactStore>>> {
     let key = dir
         .canonicalize()

@@ -2,22 +2,38 @@
 //! `python/compile/aot.py` and executes them from the coordinator's hot
 //! loop. Python is never on this path — the artifacts are plain files
 //! and the `xla` crate drives the PJRT CPU client directly.
+//!
+//! The PJRT-dependent pieces ([`xla_engine`], the artifact store) are
+//! behind the off-by-default `xla` cargo feature so a clean checkout
+//! builds hermetically. The manifest parser stays unconditional — it has
+//! no PJRT dependency and the experiment tooling reads manifests too.
 
 pub mod artifacts;
+#[cfg(feature = "xla")]
 pub mod xla_engine;
 
-pub use artifacts::{ArtifactStore, Manifest};
+pub use artifacts::Manifest;
+#[cfg(feature = "xla")]
+pub use artifacts::ArtifactStore;
+#[cfg(feature = "xla")]
 pub use xla_engine::XlaEngine;
 
-use crate::skeleton::engine::{CiEngine, NativeEngine, WithFallback};
+use crate::skeleton::engine::{CiEngine, NativeEngine};
+#[cfg(feature = "xla")]
+use crate::skeleton::engine::WithFallback;
 use crate::skeleton::{Config, EngineKind};
 use anyhow::Result;
 
 /// Construct the engine selected by the config. The XLA engine is
 /// composed with a native fallback for levels beyond the AOT range.
+///
+/// Without the `xla` cargo feature, selecting [`EngineKind::Xla`] is a
+/// descriptive runtime error (never a panic): the native engine is the
+/// only compiled-in backend.
 pub fn engine_from_config(cfg: &Config) -> Result<Box<dyn CiEngine>> {
     match cfg.engine {
         EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        #[cfg(feature = "xla")]
         EngineKind::Xla => {
             let xla = XlaEngine::new(&cfg.artifacts_dir)?;
             // keep the native mirror on the same batch geometry
@@ -27,5 +43,32 @@ pub fn engine_from_config(cfg: &Config) -> Result<Box<dyn CiEngine>> {
                 fallback: native,
             }))
         }
+        #[cfg(not(feature = "xla"))]
+        EngineKind::Xla => Err(anyhow::anyhow!(
+            "engine `xla` is not available: this build has the `xla` cargo feature disabled \
+             (artifacts dir was {:?}); rebuild with `cargo build --features xla` and provide \
+             the AOT artifacts, or select the always-available native engine",
+            cfg.artifacts_dir
+        )),
+    }
+}
+
+#[cfg(all(test, not(feature = "xla")))]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xla_engine_kind_is_a_descriptive_error_without_the_feature() {
+        let cfg = Config {
+            engine: EngineKind::Xla,
+            ..Config::default()
+        };
+        let err = match engine_from_config(&cfg) {
+            Ok(_) => panic!("EngineKind::Xla must not construct without the xla feature"),
+            Err(e) => e,
+        };
+        let msg = format!("{err:#}");
+        assert!(msg.contains("xla"), "unhelpful error: {msg}");
+        assert!(msg.contains("native"), "should point at the fallback: {msg}");
     }
 }

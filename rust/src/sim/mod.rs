@@ -3,4 +3,5 @@
 
 pub mod dag;
 pub mod datasets;
+pub mod scenarios;
 pub mod sem;

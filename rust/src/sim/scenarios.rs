@@ -1,0 +1,177 @@
+//! Conformance scenario grid: a reusable set of simulated workloads over
+//! which every schedule ([`crate::skeleton::Variant`]) must produce the
+//! *identical* PC-stable result — the paper's §2.4 order-independence
+//! invariant turned into an executable gate (used by
+//! `tests/conformance_engines.rs`, and available to benches/examples).
+//!
+//! The grid crosses ER densities × sample counts × significance levels ×
+//! `max_level` caps, all seeded through [`Pcg`] so every point is fully
+//! deterministic. Sizes are chosen so the whole grid runs across all six
+//! variants in CI-image time.
+
+use super::dag::WeightedDag;
+use super::sem;
+use crate::skeleton::{Config, OrientRule, Variant};
+use crate::stats::corr::correlation_matrix;
+use crate::util::rng::Pcg;
+
+/// One grid point: a simulated dataset plus the run parameters every
+/// variant is held to.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: &'static str,
+    /// number of variables
+    pub n: usize,
+    /// number of samples
+    pub m: usize,
+    /// ER edge density of the ground-truth DAG
+    pub density: f64,
+    /// CI-test significance level
+    pub alpha: f64,
+    /// optional cap on the level loop
+    pub max_level: Option<usize>,
+    /// master seed (graph stream and sample stream derive from it)
+    pub seed: u64,
+}
+
+impl Scenario {
+    /// The run configuration for this scenario under `variant`.
+    ///
+    /// Orientation uses [`OrientRule::Majority`] so the *CPDAG* — not just
+    /// the skeleton — is schedule-invariant and can be compared bitwise
+    /// across variants (first-found sepsets are schedule-dependent; the
+    /// majority census is not).
+    pub fn config(&self, variant: Variant) -> Config {
+        Config {
+            alpha: self.alpha,
+            max_level: self.max_level,
+            variant,
+            threads: 2,
+            orient: OrientRule::Majority,
+            ..Config::default()
+        }
+    }
+
+    /// Generate the scenario's input: ground-truth DAG, sampled data, and
+    /// the correlation matrix the skeleton runs on. Deterministic in
+    /// `seed` (graph and noise draw from separate Pcg streams).
+    pub fn generate(&self) -> ScenarioInput {
+        let dag = WeightedDag::random_er(self.n, self.density, &mut Pcg::new(self.seed, 1));
+        let data = sem::sample(&dag, self.m, &mut Pcg::new(self.seed, 2));
+        let corr = correlation_matrix(&data, 1);
+        ScenarioInput {
+            truth: dag,
+            corr,
+            n: self.n,
+            m: self.m,
+        }
+    }
+}
+
+/// Generated workload for one scenario.
+pub struct ScenarioInput {
+    pub truth: WeightedDag,
+    /// row-major n×n correlation matrix
+    pub corr: Vec<f64>,
+    pub n: usize,
+    pub m: usize,
+}
+
+/// The six schedules under conformance test, in a fixed order.
+pub const ALL_VARIANTS: [Variant; 6] = [
+    Variant::Serial,
+    Variant::ParallelCpu,
+    Variant::CupcE,
+    Variant::CupcS,
+    Variant::Baseline1,
+    Variant::Baseline2,
+];
+
+/// The default conformance grid: ≥ 8 points crossing density (sparse →
+/// dense), sample count (underpowered → comfortable), alpha (0.01 /
+/// 0.05) and `max_level` caps (uncapped, 1, 2, 3).
+pub fn default_grid() -> Vec<Scenario> {
+    fn sc(
+        name: &'static str,
+        n: usize,
+        m: usize,
+        density: f64,
+        alpha: f64,
+        max_level: Option<usize>,
+        seed: u64,
+    ) -> Scenario {
+        Scenario {
+            name,
+            n,
+            m,
+            density,
+            alpha,
+            max_level,
+            seed,
+        }
+    }
+    vec![
+        sc("sparse-a01", 16, 200, 0.10, 0.01, None, 901),
+        sc("sparse-a05", 16, 200, 0.10, 0.05, None, 902),
+        sc("mid-lowm", 24, 150, 0.15, 0.01, None, 903),
+        sc("mid-highm", 24, 600, 0.15, 0.01, None, 904),
+        sc("dense-cap2", 24, 300, 0.30, 0.01, Some(2), 905),
+        sc("dense-a05-cap2", 24, 300, 0.30, 0.05, Some(2), 906),
+        sc("wide-lowm", 32, 120, 0.08, 0.01, None, 907),
+        sc("wide-cap1", 32, 400, 0.12, 0.01, Some(1), 908),
+        sc("dense-cap3", 20, 500, 0.35, 0.01, Some(3), 909),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_has_at_least_eight_points_with_unique_names() {
+        let grid = default_grid();
+        assert!(grid.len() >= 8, "grid too small: {}", grid.len());
+        let mut names: Vec<&str> = grid.iter().map(|s| s.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), grid.len(), "duplicate scenario names");
+    }
+
+    #[test]
+    fn grid_crosses_the_advertised_axes() {
+        let grid = default_grid();
+        let distinct = |f: fn(&Scenario) -> u64| {
+            let mut v: Vec<u64> = grid.iter().map(f).collect();
+            v.sort_unstable();
+            v.dedup();
+            v.len()
+        };
+        assert!(distinct(|s| (s.density * 1000.0) as u64) >= 3, "densities");
+        assert!(distinct(|s| s.m as u64) >= 3, "sample counts");
+        assert!(distinct(|s| (s.alpha * 1000.0) as u64) >= 2, "alphas");
+        assert!(
+            distinct(|s| s.max_level.map(|l| l as u64 + 1).unwrap_or(0)) >= 3,
+            "max_level caps"
+        );
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let sc = &default_grid()[0];
+        let a = sc.generate();
+        let b = sc.generate();
+        assert_eq!(a.corr, b.corr);
+        assert_eq!(a.truth.skeleton_dense(), b.truth.skeleton_dense());
+        assert_eq!((a.n, a.m), (sc.n, sc.m));
+    }
+
+    #[test]
+    fn config_carries_scenario_parameters() {
+        let sc = &default_grid()[4];
+        let cfg = sc.config(Variant::CupcS);
+        assert_eq!(cfg.alpha, sc.alpha);
+        assert_eq!(cfg.max_level, sc.max_level);
+        assert_eq!(cfg.variant, Variant::CupcS);
+        assert_eq!(cfg.orient, OrientRule::Majority);
+    }
+}

@@ -304,6 +304,84 @@ mod tests {
         assert!(it.next_comb().is_none());
     }
 
+    /// Full enumeration over a neighbor set yields exactly C(n, l)
+    /// combinations, in lexicographic order, with no duplicates — the
+    /// invariant the batch packers rely on to shard work.
+    #[test]
+    fn range_enumeration_is_exactly_binom_ordered_unique() {
+        for (n, l) in [(5usize, 2usize), (6, 3), (8, 1), (9, 4), (7, 5)] {
+            let total = binom(n, l);
+            let mut it = CombRange::new(n, l, 0, total);
+            let mut seen = std::collections::HashSet::new();
+            let mut prev: Option<Vec<u32>> = None;
+            let mut count = 0u64;
+            while let Some(c) = it.next_comb() {
+                count += 1;
+                let c = c.to_vec();
+                for w in c.windows(2) {
+                    assert!(w[0] < w[1], "not strictly ascending: {c:?}");
+                }
+                assert!(*c.last().unwrap() < n as u32);
+                if let Some(p) = &prev {
+                    assert!(*p < c, "order violation at #{count} for n={n} l={l}");
+                }
+                assert!(seen.insert(c.clone()), "duplicate {c:?}");
+                prev = Some(c);
+            }
+            assert_eq!(count, total, "n={n} l={l}: expected C(n,l) combinations");
+        }
+    }
+
+    /// Edge case n == l: the single combination is the whole set.
+    #[test]
+    fn n_equals_l_single_full_combination() {
+        for n in [1usize, 2, 4, 7] {
+            assert_eq!(binom(n, n), 1);
+            let mut out = vec![0u32; n];
+            comb_at(n, n, 0, &mut out);
+            let want: Vec<u32> = (0..n as u32).collect();
+            assert_eq!(out, want);
+
+            let mut it = CombRange::new(n, n, 0, 1);
+            assert_eq!(it.next_comb().unwrap(), &want[..]);
+            assert!(it.next_comb().is_none());
+        }
+    }
+
+    /// Edge case l == 0: exactly one combination — the empty set (the
+    /// level-0 CI test's conditioning set).
+    #[test]
+    fn l_zero_single_empty_combination() {
+        for n in [1usize, 3, 10] {
+            assert_eq!(binom(n, 0), 1);
+            let mut out: Vec<u32> = vec![];
+            comb_at(n, 0, 0, &mut out);
+            assert!(out.is_empty());
+
+            let mut it = CombRange::new(n, 0, 0, 1);
+            let first = it.next_comb().expect("one empty combination");
+            assert!(first.is_empty());
+            assert!(it.next_comb().is_none());
+        }
+    }
+
+    /// The skip-p iterator enumerates exactly C(row_len − 1, l) sets for
+    /// every position p — the per-edge count cuPC-E assigns to threads.
+    #[test]
+    fn skip_variant_count_matches_n_sets_edge() {
+        let (row_len, l) = (7usize, 3usize);
+        for p in 0..row_len {
+            let total = n_sets_edge(row_len, l);
+            assert_eq!(total, binom(row_len - 1, l));
+            let mut it = CombRangeSkip::new(row_len, l, 0, total, p);
+            let mut count = 0u64;
+            while it.next_comb().is_some() {
+                count += 1;
+            }
+            assert_eq!(count, total, "p={p}");
+        }
+    }
+
     #[test]
     fn fig3_example() {
         // paper Fig. 3(d): row 2 = {0,1,3,4,5,6}, j=5 at position p=4,

@@ -12,8 +12,13 @@
 //! * [`baseline1`] / [`baseline2`] — the two GPU baselines of Fig. 5,
 //!   expressed as degenerate cuPC-E configurations (γ=1 / γ=∞).
 //!
-//! All schedules produce the *identical* skeleton and sepsets on the same
-//! input — PC-stable's order-independence — which the test suite checks.
+//! All schedules produce the *identical* skeleton — and the identical set
+//! of removed pairs (sepset keys) — on the same input: PC-stable's
+//! order-independence. The stored sepset *contents* are whichever
+//! separating set a schedule finds first (schedule-dependent; use
+//! [`OrientRule::Majority`] for a schedule-invariant CPDAG). The
+//! cross-engine conformance suite (`tests/conformance_engines.rs`)
+//! enforces all of this over the `sim::scenarios` grid.
 
 pub mod batch;
 pub mod baseline1;

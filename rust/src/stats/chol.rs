@@ -452,4 +452,144 @@ mod tests {
         pinv(&[0.0], 1, &mut sc, &mut p);
         assert_eq!(p[0], 0.0);
     }
+
+    /// Dense Gauss-Jordan inverse with partial pivoting — an independent
+    /// reference implementation (no Cholesky machinery shared with the
+    /// code under test). Returns None when a pivot degenerates.
+    fn gauss_jordan_inverse(a: &[f64], l: usize) -> Option<Vec<f64>> {
+        let mut aug = vec![0.0f64; l * 2 * l];
+        for i in 0..l {
+            for j in 0..l {
+                aug[i * 2 * l + j] = a[i * l + j];
+            }
+            aug[i * 2 * l + l + i] = 1.0;
+        }
+        for col in 0..l {
+            // partial pivot
+            let mut piv = col;
+            for r in (col + 1)..l {
+                if aug[r * 2 * l + col].abs() > aug[piv * 2 * l + col].abs() {
+                    piv = r;
+                }
+            }
+            if aug[piv * 2 * l + col].abs() < 1e-12 {
+                return None;
+            }
+            if piv != col {
+                for c in 0..2 * l {
+                    aug.swap(col * 2 * l + c, piv * 2 * l + c);
+                }
+            }
+            let inv_p = 1.0 / aug[col * 2 * l + col];
+            for c in 0..2 * l {
+                aug[col * 2 * l + c] *= inv_p;
+            }
+            for r in 0..l {
+                if r == col {
+                    continue;
+                }
+                let f = aug[r * 2 * l + col];
+                if f == 0.0 {
+                    continue;
+                }
+                for c in 0..2 * l {
+                    aug[r * 2 * l + c] -= f * aug[col * 2 * l + c];
+                }
+            }
+        }
+        let mut out = vec![0.0f64; l * l];
+        for i in 0..l {
+            for j in 0..l {
+                out[i * l + j] = aug[i * 2 * l + l + j];
+            }
+        }
+        Some(out)
+    }
+
+    /// max |(A·X − I)_{ij}|
+    fn identity_residual(a: &[f64], x: &[f64], l: usize) -> f64 {
+        let mut worst = 0.0f64;
+        for i in 0..l {
+            for j in 0..l {
+                let mut acc = 0.0;
+                for k in 0..l {
+                    acc += a[i * l + k] * x[k * l + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                worst = worst.max((acc - want).abs());
+            }
+        }
+        worst
+    }
+
+    /// Property sweep for `pinv_fast` across l = 1..=12 on random seeded
+    /// SPD matrices: A·A⁻¹ ≈ I and agreement with an independent
+    /// Gauss-Jordan reference inverse.
+    #[test]
+    fn pinv_fast_property_sweep_l1_to_12() {
+        let mut rng = Pcg::seeded(31);
+        for l in 1..=12usize {
+            let mut sc = PinvScratch::new(l);
+            for rep in 0..10 {
+                let a = random_spd(&mut rng, l);
+                let mut fast = vec![0.0; l * l];
+                pinv_fast(&a, l, &mut sc, &mut fast);
+
+                // tolerance: the 1×1 closed form carries the CHOL_EPS
+                // jitter (error ≈ 1e-8/x²), so 1e-4 relative bounds every
+                // path with margin
+                let resid = identity_residual(&a, &fast, l);
+                assert!(resid < 1e-4, "l={l} rep={rep}: |A·A⁻¹ − I| = {resid}");
+
+                let gj = gauss_jordan_inverse(&a, l)
+                    .unwrap_or_else(|| panic!("l={l} rep={rep}: SPD matrix must invert"));
+                let scale = gj.iter().fold(1.0f64, |m, &x| m.max(x.abs()));
+                let diff = max_abs_diff(&fast, &gj);
+                assert!(
+                    diff < 1e-4 * scale,
+                    "l={l} rep={rep}: pinv_fast vs Gauss-Jordan diff = {diff} (scale {scale})"
+                );
+            }
+        }
+    }
+
+    /// Near-singular case: A = B·Bᵀ with rank l−1 plus a whisper of
+    /// jitter. The fast path must detect the degenerate pivot, fall back
+    /// to Algorithm 7, stay finite, and satisfy the Penrose condition
+    /// A·A⁺·A ≈ A.
+    #[test]
+    fn pinv_fast_near_singular_falls_back_finite_and_penrose() {
+        let mut rng = Pcg::seeded(32);
+        for l in 2..=8usize {
+            // rank-deficient gram: B is l×(l−1)
+            let r = l - 1;
+            let b: Vec<f64> = (0..l * r).map(|_| rng.normal()).collect();
+            let mut a = vec![0.0f64; l * l];
+            for i in 0..l {
+                for j in 0..l {
+                    let mut s = if i == j { 1e-10 } else { 0.0 };
+                    for k in 0..r {
+                        s += b[i * r + k] * b[j * r + k];
+                    }
+                    a[i * l + j] = s;
+                }
+            }
+            let mut sc = PinvScratch::new(l);
+            let mut p = vec![0.0; l * l];
+            pinv_fast(&a, l, &mut sc, &mut p);
+            assert!(p.iter().all(|v| v.is_finite()), "l={l}: non-finite entries");
+
+            // Penrose 1: A·A⁺·A ≈ A (relative to A's scale)
+            let mut ap = vec![0.0f64; l * l];
+            matmul(&a, &p, l, &mut ap);
+            let mut apa = vec![0.0f64; l * l];
+            matmul(&ap, &a, l, &mut apa);
+            let scale = a.iter().fold(1e-12f64, |m, &x| m.max(x.abs()));
+            let diff = max_abs_diff(&apa, &a);
+            assert!(
+                diff < 1e-3 * scale,
+                "l={l}: |A·A⁺·A − A| = {diff} (scale {scale})"
+            );
+        }
+    }
 }

@@ -1,7 +1,11 @@
 //! Integration tests over the XLA PJRT runtime: these require the AOT
 //! artifacts (`make artifacts`) and exercise the production path —
 //! skipped gracefully when artifacts are absent so `cargo test` works in
-//! a fresh checkout.
+//! a fresh checkout. The whole file is compile-gated behind the `xla`
+//! cargo feature: without it there is no PJRT runtime to test (see
+//! `tests/xla_gate.rs` for the feature-off behaviour).
+
+#![cfg(feature = "xla")]
 
 use cupc::prelude::*;
 use cupc::runtime::XlaEngine;

@@ -1,0 +1,54 @@
+//! The XLA engine gate: selecting `EngineKind::Xla` must degrade to a
+//! *descriptive error* — never a panic — both when the binary was built
+//! without the `xla` cargo feature and when the feature is on but the
+//! artifacts directory is missing. This is the contract `Config` users
+//! (CLI, experiments, library callers) rely on.
+
+use cupc::prelude::*;
+use cupc::runtime::engine_from_config;
+use std::path::PathBuf;
+
+fn xla_config() -> Config {
+    Config {
+        engine: EngineKind::Xla,
+        artifacts_dir: PathBuf::from("/nonexistent/cupc-artifacts"),
+        ..Config::default()
+    }
+}
+
+#[test]
+fn xla_engine_construction_errors_descriptively() {
+    let err = match engine_from_config(&xla_config()) {
+        Ok(_) => panic!("EngineKind::Xla must not succeed without artifacts/runtime"),
+        Err(e) => e,
+    };
+    let msg = format!("{err:#}").to_lowercase();
+    // feature off → points at the missing `xla` feature; feature on →
+    // points at the missing manifest. Either way the message is actionable.
+    assert!(
+        msg.contains("xla") || msg.contains("manifest"),
+        "unhelpful error: {msg}"
+    );
+}
+
+#[test]
+fn full_run_with_xla_engine_is_an_error_not_a_panic() {
+    // A 3-variable chain correlation; the run must fail cleanly at engine
+    // construction, before any CI test executes.
+    let corr = vec![1.0, 0.8, 0.56, 0.8, 1.0, 0.7, 0.56, 0.7, 1.0];
+    for variant in [Variant::CupcE, Variant::CupcS, Variant::Baseline1, Variant::Baseline2] {
+        let cfg = Config {
+            variant,
+            ..xla_config()
+        };
+        let res = cupc::api::pc_stable_corr(&corr, 3, 500, &cfg);
+        assert!(res.is_err(), "{variant:?} must propagate the engine error");
+    }
+}
+
+#[test]
+fn native_engine_is_always_available() {
+    let cfg = Config::default();
+    assert_eq!(cfg.engine, EngineKind::Native);
+    assert!(engine_from_config(&cfg).is_ok());
+}

@@ -1,0 +1,215 @@
+//! Minimal, dependency-free shim of the `anyhow` error-handling API.
+//!
+//! The build environment for this workspace has no network access, so the
+//! real `anyhow` crate cannot be fetched from crates.io. This shim covers
+//! exactly the surface the `cupc` crate uses:
+//!
+//! * [`Result<T>`] — alias with the error type defaulted to [`Error`]
+//! * [`Error`] — an error carrying a chain of context frames
+//! * [`anyhow!`] — construct an [`Error`] from format arguments
+//! * [`bail!`] — early-return an error from format arguments
+//! * [`ensure!`] — bail unless a condition holds
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`, wrapping the underlying error with an outer message
+//!
+//! Formatting matches anyhow's conventions: `{}` prints the outermost
+//! message, `{:#}` prints the whole chain separated by `": "`, and `{:?}`
+//! prints the outermost message followed by a `Caused by:` list.
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// An error value holding a chain of messages, outermost context first.
+pub struct Error {
+    /// frames[0] is the outermost context; the last frame is the root cause
+    frames: Vec<String>,
+}
+
+impl Error {
+    /// Create an error from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error {
+            frames: vec![message.to_string()],
+        }
+    }
+
+    /// Wrap this error with an outer context message (anyhow's
+    /// `Error::context`).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.frames.insert(0, context.to_string());
+        self
+    }
+
+    /// Iterate the chain from the outermost message to the root cause.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.frames.iter().map(|s| s.as_str())
+    }
+
+    /// The root cause (innermost message).
+    pub fn root_cause(&self) -> &str {
+        self.frames.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the full chain, outermost first, ": "-separated.
+            write!(f, "{}", self.frames.join(": "))
+        } else {
+            write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.frames.first().map(String::as_str).unwrap_or(""))?;
+        if self.frames.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for frame in &self.frames[1..] {
+                write!(f, "\n    {frame}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Any std error converts into [`Error`], capturing its source chain.
+/// (Coherent because [`Error`] itself does not implement
+/// `std::error::Error`, mirroring the real anyhow.)
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut frames = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            frames.push(s.to_string());
+            src = s.source();
+        }
+        Error { frames }
+    }
+}
+
+/// Attach context to fallible values, converting the error to [`Error`].
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from format arguments.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        bail!("root cause {}", 42);
+    }
+
+    #[test]
+    fn display_outermost_only() {
+        let e = anyhow!("boom");
+        assert_eq!(format!("{e}"), "boom");
+    }
+
+    #[test]
+    fn alternate_prints_chain() {
+        let e = fails().context("outer").unwrap_err();
+        assert_eq!(format!("{e:#}"), "outer: root cause 42");
+        assert_eq!(format!("{e}"), "outer");
+    }
+
+    #[test]
+    fn with_context_lazy() {
+        let e: Result<()> = fails().with_context(|| format!("step {}", 7));
+        let e = e.unwrap_err();
+        assert_eq!(format!("{e:#}"), "step 7: root cause 42");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(format!("{e}"), "missing value");
+        let some: Option<u32> = Some(5);
+        assert_eq!(some.context("unused").unwrap(), 5);
+    }
+
+    #[test]
+    fn std_error_converts_via_question_mark() {
+        fn parse() -> Result<i32> {
+            let v: i32 = "not-a-number".parse()?;
+            Ok(v)
+        }
+        let e = parse().unwrap_err();
+        assert!(format!("{e}").contains("invalid digit"), "{e}");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = fails().context("outer").unwrap_err();
+        let dbg = format!("{e:?}");
+        assert!(dbg.starts_with("outer"), "{dbg}");
+        assert!(dbg.contains("Caused by:"), "{dbg}");
+        assert!(dbg.contains("root cause 42"), "{dbg}");
+    }
+
+    #[test]
+    fn ensure_fires_only_on_false() {
+        fn check(x: i32) -> Result<i32> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert!(check(-1).is_err());
+    }
+}
