@@ -1,18 +1,19 @@
 //! Shared bench plumbing: flag parsing for `cargo bench -- --scale ...`.
 //! (criterion is unavailable offline; each bench is a harness=false main
 //! that regenerates one paper table/figure via cupc::experiments.)
+//!
+//! All argv access goes through [`cupc::util::cli::bench_argv`], which
+//! strips the `--bench` flag cargo injects when dispatching bench
+//! binaries — parsing raw `std::env::args` here used to misparse
+//! `cargo bench -- --graphs N` invocations.
 
 use cupc::experiments::{ExpOpts, Scale};
 use cupc::skeleton::EngineKind;
-use cupc::util::cli::Args;
+use cupc::util::cli::{bench_argv, Args};
 use std::path::PathBuf;
 
 pub fn opts_from_env() -> ExpOpts {
-    let argv: Vec<String> = std::env::args()
-        .skip(1)
-        .filter(|a| a != "--bench") // cargo bench appends this
-        .collect();
-    let args = Args::parse(argv);
+    let args = Args::parse(bench_argv());
     let scale = match args.get_or("scale", "small").as_str() {
         "paper" => Scale::Paper,
         _ => Scale::Small,
@@ -31,6 +32,5 @@ pub fn opts_from_env() -> ExpOpts {
 
 #[allow(dead_code)]
 pub fn graphs_from_env(default: usize) -> usize {
-    let argv: Vec<String> = std::env::args().skip(1).collect();
-    Args::parse(argv).get_usize("graphs", default)
+    Args::parse(bench_argv()).get_usize("graphs", default)
 }

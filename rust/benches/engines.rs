@@ -1,0 +1,195 @@
+//! `cargo bench --bench engines` — the tracked ns/test baseline for the
+//! CI-test kernels (the promoted `micro` probe that used to hide in
+//! `skeleton/engine.rs`), plus the threads=1 vs threads=N speedup of the
+//! parallel pack→evaluate→apply pipeline on the Table-2 minis.
+//!
+//! Writes `BENCH_engines.json` (override with `-- --out path`) so
+//! packing/engine changes have a tracked baseline to diff against.
+//!
+//! Flags: `--reps R` (median of R, default 3), `--threads N` (parallel
+//! run width, default all cores), `--seed S`, `--full` (all six minis
+//! instead of the three fastest), `--out FILE`.
+
+use cupc::experiments::median;
+use cupc::sim::batches::{random_batch, random_s_batch};
+use cupc::sim::datasets;
+use cupc::skeleton::engine::{CiEngine, NativeEngine};
+use cupc::skeleton::{available_threads, run as run_skeleton, Config, EngineKind, Variant};
+use cupc::stats::corr::correlation_matrix;
+use cupc::util::cli::{bench_argv, Args};
+use cupc::util::rng::Pcg;
+use cupc::util::timer::median_time;
+
+struct KernelRow {
+    kernel: &'static str,
+    l: usize,
+    batch: usize,
+    ns_per_test: f64,
+}
+
+struct PipelineRow {
+    dataset: String,
+    variant: &'static str,
+    threads: usize,
+    secs_t1: f64,
+    secs_tn: f64,
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::parse(bench_argv());
+    let reps = args.get_usize("reps", 3);
+    // cargo runs bench binaries with cwd = the package root (rust/);
+    // anchor the default to the repo root where the baseline is tracked
+    let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
+    let out = args.get_or("out", default_out);
+    let threads = args.get_usize("threads", available_threads());
+    let mut rng = Pcg::seeded(args.get_u64("seed", 0));
+
+    // ── kernel ns/test across levels and batch sizes ────────────────
+    let mut kernels: Vec<KernelRow> = Vec::new();
+    let mut engine = NativeEngine::new();
+    {
+        let c = vec![0.5f32; 1_000_000];
+        let secs = median_time(1, reps, || {
+            engine.level0(&c).unwrap();
+        });
+        kernels.push(KernelRow {
+            kernel: "level0",
+            l: 0,
+            batch: c.len(),
+            ns_per_test: secs * 1e9 / c.len() as f64,
+        });
+    }
+    for l in 1..=8usize {
+        for &b in &[256usize, 1024, 4096] {
+            let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
+            let secs = median_time(1, reps, || {
+                engine.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+            });
+            kernels.push(KernelRow {
+                kernel: "ci_e",
+                l,
+                batch: b,
+                ns_per_test: secs * 1e9 / b as f64,
+            });
+        }
+        let k = engine.k();
+        for &rows in &[8usize, 32, 128] {
+            let (c_ij, m1, m2) = random_s_batch(&mut rng, rows, k, l);
+            let valid = vec![k as u32; rows];
+            let tests = rows * k;
+            let secs = median_time(1, reps, || {
+                engine.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid).unwrap();
+            });
+            kernels.push(KernelRow {
+                kernel: "ci_s",
+                l,
+                batch: rows,
+                ns_per_test: secs * 1e9 / tests as f64,
+            });
+        }
+    }
+    println!("== engine kernels: ns/test (median of {reps}) ==");
+    println!("{:<8} {:>3} {:>7} {:>12}", "kernel", "l", "batch", "ns/test");
+    for r in &kernels {
+        println!("{:<8} {:>3} {:>7} {:>12.1}", r.kernel, r.l, r.batch, r.ns_per_test);
+    }
+
+    // ── pipeline speedup on the Table-2 minis ───────────────────────
+    let names: Vec<&str> = if args.has_flag("full") {
+        datasets::TABLE2_ORDER.to_vec()
+    } else {
+        vec!["nci60", "mcc", "br51"]
+    };
+    let mut pipeline: Vec<PipelineRow> = Vec::new();
+    println!("\n== pipeline: threads=1 vs threads={threads} on the Table-2 minis ==");
+    println!(
+        "{:<24} {:<8} {:>10} {:>10} {:>8}",
+        "dataset", "variant", "t1 (s)", "tN (s)", "speedup"
+    );
+    for base in &names {
+        let name = format!("{base}-mini");
+        let ds = datasets::generate(datasets::spec(&name).unwrap());
+        let corr = correlation_matrix(&ds.data, threads);
+        for (vname, v) in [("cupc-e", Variant::CupcE), ("cupc-s", Variant::CupcS)] {
+            let time_with = |t: usize| -> anyhow::Result<f64> {
+                let cfg = Config {
+                    variant: v,
+                    engine: EngineKind::Native,
+                    threads: t,
+                    ..Config::default()
+                };
+                let mut times = Vec::new();
+                for _ in 0..reps.max(1) {
+                    let res = run_skeleton(&corr, ds.data.n, ds.data.m, &cfg)?;
+                    times.push(res.total_seconds());
+                }
+                Ok(median(&times))
+            };
+            let secs_t1 = time_with(1)?;
+            let secs_tn = time_with(threads)?;
+            println!(
+                "{:<24} {:<8} {:>10.4} {:>10.4} {:>7.2}x",
+                name,
+                vname,
+                secs_t1,
+                secs_tn,
+                secs_t1 / secs_tn.max(1e-12)
+            );
+            pipeline.push(PipelineRow {
+                dataset: name.clone(),
+                variant: vname,
+                threads,
+                secs_t1,
+                secs_tn,
+            });
+        }
+    }
+
+    write_json(&out, reps, threads, &kernels, &pipeline)?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+/// Hand-rolled JSON (serde is unavailable offline); schema is consumed
+/// by humans and diff tools only.
+fn write_json(
+    path: &str,
+    reps: usize,
+    threads: usize,
+    kernels: &[KernelRow],
+    pipeline: &[PipelineRow],
+) -> anyhow::Result<()> {
+    let mut j = String::new();
+    j.push_str("{\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v1\",\n");
+    j.push_str(&format!("  \"reps\": {reps},\n"));
+    j.push_str(&format!("  \"threads\": {threads},\n"));
+    j.push_str("  \"kernels\": [\n");
+    for (i, r) in kernels.iter().enumerate() {
+        let sep = if i + 1 < kernels.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"kernel\": \"{}\", \"l\": {}, \"batch\": {}, \"ns_per_test\": {:.2}}}{sep}\n",
+            r.kernel, r.l, r.batch, r.ns_per_test
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"pipeline\": [\n");
+    for (i, r) in pipeline.iter().enumerate() {
+        let sep = if i + 1 < pipeline.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"dataset\": \"{}\", \"variant\": \"{}\", \"threads\": {}, \
+             \"seconds_threads1\": {:.6}, \"seconds_threadsN\": {:.6}, \"speedup\": {:.3}}}{sep}\n",
+            r.dataset,
+            r.variant,
+            r.threads,
+            r.secs_t1,
+            r.secs_tn,
+            r.secs_t1 / r.secs_tn.max(1e-12)
+        ));
+    }
+    j.push_str("  ]\n");
+    j.push_str("}\n");
+    std::fs::write(path, j)?;
+    Ok(())
+}

@@ -1,6 +1,10 @@
 //! `cupc engines` — cross-check the native engine against the XLA
 //! artifacts on random batches (the runtime smoke test). Requires the
 //! `xla` cargo feature; without it the subcommand explains how to get it.
+//!
+//! Batch generation lives in `cupc::sim::batches` so the ns/test bench
+//! (`cargo bench --bench engines`) drives the kernels with the exact
+//! same input distribution.
 
 #[cfg(not(feature = "xla"))]
 use anyhow::Result;
@@ -23,6 +27,7 @@ pub use with_xla::main;
 mod with_xla {
     use anyhow::{bail, Result};
     use cupc::runtime::XlaEngine;
+    use cupc::sim::batches::{random_batch, random_s_batch};
     use cupc::skeleton::engine::{CiEngine, NativeEngine};
     use cupc::util::cli::Args;
     use cupc::util::rng::Pcg;
@@ -69,102 +74,5 @@ mod with_xla {
             .zip(b)
             .map(|(x, y)| (x - y).abs())
             .fold(0.0f32, f32::max)
-    }
-
-    /// Random but *valid* correlation blocks: sample (2+l) standardized
-    /// variables, correlate, slice — same construction as the pytest oracle.
-    pub fn random_batch(rng: &mut Pcg, b: usize, l: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let nv = 2 + l;
-        let m = 64;
-        let mut c_ij = Vec::with_capacity(b);
-        let mut m1 = Vec::with_capacity(b * 2 * l);
-        let mut m2 = Vec::with_capacity(b * l * l);
-        let mut corr = vec![0.0f64; nv * nv];
-        for _ in 0..b {
-            random_corr(rng, nv, m, &mut corr);
-            c_ij.push(corr[1] as f32);
-            for s in 0..l {
-                m1.push(corr[2 + s] as f32); // C[0, 2+s]
-            }
-            for s in 0..l {
-                m1.push(corr[nv + 2 + s] as f32); // C[1, 2+s]
-            }
-            for a in 0..l {
-                for bb in 0..l {
-                    m2.push(corr[(2 + a) * nv + 2 + bb] as f32);
-                }
-            }
-        }
-        (c_ij, m1, m2)
-    }
-
-    pub fn random_s_batch(
-        rng: &mut Pcg,
-        rows: usize,
-        k: usize,
-        l: usize,
-    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
-        let nv = 1 + k + l;
-        let m = 64;
-        let mut c_ij = Vec::with_capacity(rows * k);
-        let mut m1 = Vec::with_capacity(rows * k * 2 * l);
-        let mut m2 = Vec::with_capacity(rows * l * l);
-        let mut corr = vec![0.0f64; nv * nv];
-        for _ in 0..rows {
-            random_corr(rng, nv, m, &mut corr);
-            for j in 0..k {
-                c_ij.push(corr[1 + j] as f32);
-            }
-            for j in 0..k {
-                for s in 0..l {
-                    m1.push(corr[1 + k + s] as f32); // C[0, S]
-                }
-                for s in 0..l {
-                    m1.push(corr[(1 + j) * nv + 1 + k + s] as f32); // C[j, S]
-                }
-            }
-            for a in 0..l {
-                for bb in 0..l {
-                    m2.push(corr[(1 + k + a) * nv + (1 + k + bb)] as f32);
-                }
-            }
-        }
-        (c_ij, m1, m2)
-    }
-
-    fn random_corr(rng: &mut Pcg, nv: usize, m: usize, out: &mut [f64]) {
-        // X: m×nv with light cross-mixing, standardized, C = XᵀX/m
-        let mut x = vec![0.0f64; m * nv];
-        for row in 0..m {
-            let shared = rng.normal() * 0.5;
-            for v in 0..nv {
-                x[row * nv + v] = rng.normal() + shared;
-            }
-        }
-        for v in 0..nv {
-            let mut mean = 0.0;
-            for row in 0..m {
-                mean += x[row * nv + v];
-            }
-            mean /= m as f64;
-            let mut var = 0.0;
-            for row in 0..m {
-                let d = x[row * nv + v] - mean;
-                var += d * d;
-            }
-            let inv = 1.0 / (var / m as f64).sqrt().max(1e-12);
-            for row in 0..m {
-                x[row * nv + v] = (x[row * nv + v] - mean) * inv;
-            }
-        }
-        for a in 0..nv {
-            for b in 0..nv {
-                let mut acc = 0.0;
-                for row in 0..m {
-                    acc += x[row * nv + a] * x[row * nv + b];
-                }
-                out[a * nv + b] = acc / m as f64;
-            }
-        }
     }
 }

@@ -1,0 +1,179 @@
+//! Random packed-batch generators for the CI engines — *valid*
+//! correlation structure, not arbitrary floats: each slot is built by
+//! sampling standardized variables, correlating, and slicing, the same
+//! construction as the pytest oracle in python/compile.
+//!
+//! Shared by the `cupc engines` cross-check (XLA vs native) and the
+//! `cargo bench --bench engines` ns/test baseline, so both drive the
+//! kernels with the exact same input distribution.
+
+use crate::util::rng::Pcg;
+
+/// A random ci_e batch: `b` slots at level `l`, laid out as
+/// `c_ij[b]`, `m1[b·2·l]`, `m2[b·l·l]`.
+pub fn random_batch(rng: &mut Pcg, b: usize, l: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let nv = 2 + l;
+    let m = 64;
+    let mut c_ij = Vec::with_capacity(b);
+    let mut m1 = Vec::with_capacity(b * 2 * l);
+    let mut m2 = Vec::with_capacity(b * l * l);
+    let mut corr = vec![0.0f64; nv * nv];
+    for _ in 0..b {
+        random_corr(rng, nv, m, &mut corr);
+        c_ij.push(corr[1] as f32);
+        for s in 0..l {
+            m1.push(corr[2 + s] as f32); // C[0, 2+s]
+        }
+        for s in 0..l {
+            m1.push(corr[nv + 2 + s] as f32); // C[1, 2+s]
+        }
+        for a in 0..l {
+            for bb in 0..l {
+                m2.push(corr[(2 + a) * nv + 2 + bb] as f32);
+            }
+        }
+    }
+    (c_ij, m1, m2)
+}
+
+/// A random ci_s batch: `rows` conditioning sets × `k` tests at level
+/// `l`, laid out as `c_ij[rows·k]`, `m1[rows·k·2·l]`, `m2[rows·l·l]`.
+pub fn random_s_batch(
+    rng: &mut Pcg,
+    rows: usize,
+    k: usize,
+    l: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let nv = 1 + k + l;
+    let m = 64;
+    let mut c_ij = Vec::with_capacity(rows * k);
+    let mut m1 = Vec::with_capacity(rows * k * 2 * l);
+    let mut m2 = Vec::with_capacity(rows * l * l);
+    let mut corr = vec![0.0f64; nv * nv];
+    for _ in 0..rows {
+        random_corr(rng, nv, m, &mut corr);
+        for j in 0..k {
+            c_ij.push(corr[1 + j] as f32);
+        }
+        for j in 0..k {
+            for s in 0..l {
+                m1.push(corr[1 + k + s] as f32); // C[0, S]
+            }
+            for s in 0..l {
+                m1.push(corr[(1 + j) * nv + 1 + k + s] as f32); // C[j, S]
+            }
+        }
+        for a in 0..l {
+            for bb in 0..l {
+                m2.push(corr[(1 + k + a) * nv + (1 + k + bb)] as f32);
+            }
+        }
+    }
+    (c_ij, m1, m2)
+}
+
+/// Fill `out` with a valid nv×nv correlation matrix: X is m×nv with
+/// light cross-mixing, standardized per column, C = XᵀX/m.
+fn random_corr(rng: &mut Pcg, nv: usize, m: usize, out: &mut [f64]) {
+    let mut x = vec![0.0f64; m * nv];
+    for row in 0..m {
+        let shared = rng.normal() * 0.5;
+        for v in 0..nv {
+            x[row * nv + v] = rng.normal() + shared;
+        }
+    }
+    for v in 0..nv {
+        let mut mean = 0.0;
+        for row in 0..m {
+            mean += x[row * nv + v];
+        }
+        mean /= m as f64;
+        let mut var = 0.0;
+        for row in 0..m {
+            let d = x[row * nv + v] - mean;
+            var += d * d;
+        }
+        let inv = 1.0 / (var / m as f64).sqrt().max(1e-12);
+        for row in 0..m {
+            x[row * nv + v] = (x[row * nv + v] - mean) * inv;
+        }
+    }
+    for a in 0..nv {
+        for b in 0..nv {
+            let mut acc = 0.0;
+            for row in 0..m {
+                acc += x[row * nv + a] * x[row * nv + b];
+            }
+            out[a * nv + b] = acc / m as f64;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e_batch_shapes_and_ranges() {
+        let mut rng = Pcg::seeded(7);
+        let (b, l) = (11usize, 3usize);
+        let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
+        assert_eq!(c_ij.len(), b);
+        assert_eq!(m1.len(), b * 2 * l);
+        assert_eq!(m2.len(), b * l * l);
+        for &c in &c_ij {
+            assert!(c.abs() <= 1.0 + 1e-5, "correlation out of range: {c}");
+        }
+        // M2 diagonals are exactly 1 (standardized variables)
+        for s in 0..b {
+            for d in 0..l {
+                let v = m2[s * l * l + d * l + d];
+                assert!((v - 1.0).abs() < 1e-5, "m2 diag {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn s_batch_shapes_and_symmetry() {
+        let mut rng = Pcg::seeded(8);
+        let (rows, k, l) = (5usize, 4usize, 2usize);
+        let (c_ij, m1, m2) = random_s_batch(&mut rng, rows, k, l);
+        assert_eq!(c_ij.len(), rows * k);
+        assert_eq!(m1.len(), rows * k * 2 * l);
+        assert_eq!(m2.len(), rows * l * l);
+        for r in 0..rows {
+            for a in 0..l {
+                for b in 0..l {
+                    let ab = m2[r * l * l + a * l + b];
+                    let ba = m2[r * l * l + b * l + a];
+                    assert!((ab - ba).abs() < 1e-6, "m2 not symmetric");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic_in_the_seed() {
+        let a = random_batch(&mut Pcg::seeded(42), 4, 2);
+        let b = random_batch(&mut Pcg::seeded(42), 4, 2);
+        assert_eq!(a, b);
+    }
+
+    /// The batches must be consumable by the native engine (valid enough
+    /// correlation structure for the pinv path).
+    #[test]
+    fn native_engine_accepts_generated_batches() {
+        use crate::skeleton::engine::{CiEngine, NativeEngine};
+        let mut rng = Pcg::seeded(9);
+        let mut e = NativeEngine::new();
+        let l = 4;
+        let (c_ij, m1, m2) = random_batch(&mut rng, 6, l);
+        let z = e.ci_e(l, 6, &c_ij, &m1, &m2).unwrap();
+        assert_eq!(z.len(), 6);
+        assert!(z.iter().all(|v| v.is_finite()));
+        let (cs, m1s, m2s) = random_s_batch(&mut rng, 3, 2, l);
+        let zs = e.ci_s(l, 3, 2, &cs, &m1s, &m2s, &[2, 2, 2]).unwrap();
+        assert_eq!(zs.len(), 6);
+        assert!(zs.iter().all(|v| v.is_finite()));
+    }
+}

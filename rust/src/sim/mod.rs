@@ -1,6 +1,7 @@
 //! Synthetic data generation: random DAGs, linear-SEM sampling (the
 //! paper's §5.6 protocol) and the Table-1 dataset analogs.
 
+pub mod batches;
 pub mod dag;
 pub mod datasets;
 pub mod scenarios;

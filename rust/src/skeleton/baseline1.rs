@@ -3,7 +3,9 @@
 //! sequential** in its thread. In the batched schedule this is exactly
 //! cuPC-E with γ = 1 (one conditioning set in flight per edge per round),
 //! keeping the same compaction, gather staging and early termination, as
-//! the paper's comparison does.
+//! the paper's comparison does — including the multi-threaded
+//! pack→evaluate→apply pipeline when `Config::threads > 1` on the
+//! native engine.
 
 use super::{Config, SkeletonResult};
 use anyhow::Result;

@@ -2,7 +2,10 @@
 //! tests of the edge fully parallel** — no early termination inside the
 //! edge's flight. In the batched schedule this is cuPC-E with γ = ∞
 //! (the whole combination range packed in a single round), keeping the
-//! same compaction, staging and cross-edge termination.
+//! same compaction and staging; with one round per level there is no
+//! intra-level early termination at all — the extreme the paper's Fig. 5
+//! penalizes. Inherits gpu_e's multi-threaded pipeline when
+//! `Config::threads > 1` on the native engine.
 
 use super::{Config, SkeletonResult};
 use anyhow::Result;

@@ -108,22 +108,108 @@ impl EBatch {
     /// still-present edge removes it and stores S. Returns (#removed,
     /// #tests-that-were-already-moot). `z.len() >= self.len()` (engines
     /// may return padded tails).
-    pub fn apply(&self, z: &[f32], tau: f64, graph: &AdjMatrix, sepsets: &SepSets) -> (usize, usize) {
+    pub fn apply(
+        &self,
+        z: &[f32],
+        tau: f64,
+        graph: &AdjMatrix,
+        sepsets: &SepSets,
+    ) -> (usize, usize) {
+        apply_e_slots(self.l, z, &self.meta, &self.svals, tau, graph, sepsets)
+    }
+
+    /// Filter the evaluated batch's *independence candidates* (slots
+    /// with |z| ≤ τ) into `out` in canonical slot order, then clear the
+    /// batch for reuse. Dependent verdicts can never change state, so
+    /// the parallel pipeline drops them — and the heavy M1/M2 gather —
+    /// as soon as z is known, bounding the deferred-apply memory of a
+    /// round at the number of candidates instead of the number of tests.
+    pub fn drain_independent(&mut self, z: &[f32], tau: f64, out: &mut Removals) {
+        debug_assert!(z.len() >= self.len());
+        debug_assert_eq!(out.l, self.l);
+        for (idx, meta) in self.meta.iter().enumerate() {
+            if independent(z[idx] as f64, tau) {
+                out.meta.push(meta.clone());
+                out.svals
+                    .extend_from_slice(&self.svals[idx * self.l..(idx + 1) * self.l]);
+            }
+        }
+        self.clear();
+    }
+}
+
+/// Independence candidates detached from evaluated batches: (i, j, S)
+/// entries in canonical slot order whose test said independent. Shared
+/// by the cuPC-E and cuPC-S pipelines (see
+/// [`EBatch::drain_independent`] / [`SBatch::drain_independent`]).
+pub struct Removals {
+    l: usize,
+    meta: Vec<SlotMeta>,
+    /// conditioning-set variable ids, l per retained entry
+    svals: Vec<u32>,
+}
+
+impl Removals {
+    pub fn new(l: usize) -> Self {
+        Removals {
+            l,
+            meta: Vec::new(),
+            svals: Vec::new(),
+        }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.meta.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.meta.is_empty()
+    }
+
+    /// Apply in canonical order: the first entry whose edge is still
+    /// present removes it and stores its S (later candidates for the
+    /// same edge are moot). Returns the number of edges removed —
+    /// identical to replaying the full verdict stream through
+    /// [`EBatch::apply`] / [`SBatch::apply`].
+    pub fn apply(&self, graph: &AdjMatrix, sepsets: &SepSets) -> usize {
         let mut removed = 0;
-        let mut moot = 0;
         for (idx, meta) in self.meta.iter().enumerate() {
             let (i, j) = (meta.i as usize, meta.j as usize);
-            if !graph.has_edge(i, j) {
-                moot += 1;
-                continue;
-            }
-            if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+            if graph.remove_edge(i, j) {
                 sepsets.store(i, j, &self.svals[idx * self.l..(idx + 1) * self.l]);
                 removed += 1;
             }
         }
-        (removed, moot)
+        removed
     }
+}
+
+/// The shared cuPC-E apply core: slot-ordered first-win removal.
+fn apply_e_slots(
+    l: usize,
+    z: &[f32],
+    meta: &[SlotMeta],
+    svals: &[u32],
+    tau: f64,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> (usize, usize) {
+    let mut removed = 0;
+    let mut moot = 0;
+    for (idx, meta) in meta.iter().enumerate() {
+        let (i, j) = (meta.i as usize, meta.j as usize);
+        if !graph.has_edge(i, j) {
+            moot += 1;
+            continue;
+        }
+        if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+            sepsets.store(i, j, &svals[idx * l..(idx + 1) * l]);
+            removed += 1;
+        }
+    }
+    (removed, moot)
 }
 
 /// Packed batch for the ci_s kernels: `rows` conditioning sets × `k`
@@ -224,26 +310,70 @@ impl SBatch {
     }
 
     /// Apply verdicts: slot order within valid slots, first win removes.
-    pub fn apply(&self, z: &[f32], tau: f64, graph: &AdjMatrix, sepsets: &SepSets) -> (usize, usize) {
-        let mut removed = 0;
-        let mut moot = 0;
+    pub fn apply(
+        &self,
+        z: &[f32],
+        tau: f64,
+        graph: &AdjMatrix,
+        sepsets: &SepSets,
+    ) -> (usize, usize) {
+        apply_s_slots(self.l, self.k, z, &self.meta, &self.svals, tau, graph, sepsets)
+    }
+
+    /// Filter the evaluated batch's independence candidates (valid
+    /// slots with |z| ≤ τ) into `out` in canonical slot order, then
+    /// clear the batch for reuse (the cuPC-S analogue of
+    /// [`EBatch::drain_independent`]; the retained entries copy their
+    /// row's S, so row structure is not needed at apply time).
+    pub fn drain_independent(&mut self, z: &[f32], tau: f64, out: &mut Removals) {
+        debug_assert!(z.len() >= self.meta.len());
+        debug_assert_eq!(out.l, self.l);
         for (idx, (meta, valid)) in self.meta.iter().enumerate() {
             if !valid {
                 continue;
             }
-            let (i, j) = (meta.i as usize, meta.j as usize);
-            if !graph.has_edge(i, j) {
-                moot += 1;
-                continue;
-            }
-            if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+            if independent(z[idx] as f64, tau) {
                 let row = idx / self.k;
-                sepsets.store(i, j, &self.svals[row * self.l..(row + 1) * self.l]);
-                removed += 1;
+                out.meta.push(meta.clone());
+                out.svals
+                    .extend_from_slice(&self.svals[row * self.l..(row + 1) * self.l]);
             }
         }
-        (removed, moot)
+        self.clear();
     }
+}
+
+/// The shared cuPC-S apply core: slot-ordered first-win removal over the
+/// valid (non-padding) slots.
+#[allow(clippy::too_many_arguments)] // mirrors the packed-batch ABI
+fn apply_s_slots(
+    l: usize,
+    k: usize,
+    z: &[f32],
+    meta: &[(SlotMeta, bool)],
+    svals: &[u32],
+    tau: f64,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> (usize, usize) {
+    let mut removed = 0;
+    let mut moot = 0;
+    for (idx, (meta, valid)) in meta.iter().enumerate() {
+        if !valid {
+            continue;
+        }
+        let (i, j) = (meta.i as usize, meta.j as usize);
+        if !graph.has_edge(i, j) {
+            moot += 1;
+            continue;
+        }
+        if independent(z[idx] as f64, tau) && graph.remove_edge(i, j) {
+            let row = idx / k;
+            sepsets.store(i, j, &svals[row * l..(row + 1) * l]);
+            removed += 1;
+        }
+    }
+    (removed, moot)
 }
 
 #[cfg(test)]
@@ -337,6 +467,57 @@ mod tests {
         let mut b = SBatch::new(2, 4, 8);
         b.push_row(&corr, 0, &[1, 2], &[]);
         assert!(b.is_empty());
+    }
+
+    #[test]
+    fn drain_independent_matches_batch_apply() {
+        // the drained-candidate path must produce the same removals and
+        // sepsets as replaying the full verdict stream through apply
+        let corr = tiny_corr();
+        let mut b = EBatch::new(1, 8);
+        b.push(&corr, 0, 1, &[2]);
+        b.push(&corr, 0, 2, &[3]); // dependent: dropped at drain time
+        b.push(&corr, 0, 1, &[3]); // duplicate edge, moot at apply time
+        let z = vec![0.0f32, 5.0, 0.0];
+        let g1 = AdjMatrix::complete(4);
+        let s1 = SepSets::new();
+        let (direct_removed, _) = b.apply(&z, 0.1, &g1, &s1);
+        let mut out = Removals::new(1);
+        b.drain_independent(&z, 0.1, &mut out);
+        assert!(b.is_empty(), "drain clears the batch");
+        assert_eq!(b.m1.len(), 0);
+        assert_eq!(out.len(), 2, "only the independent slots are retained");
+        let g2 = AdjMatrix::complete(4);
+        let s2 = SepSets::new();
+        assert_eq!(out.apply(&g2, &s2), direct_removed);
+        assert_eq!(g1.snapshot(), g2.snapshot());
+        assert_eq!(s1.sorted_entries(), s2.sorted_entries());
+        assert_eq!(s2.get(0, 1), Some(vec![2]), "first candidate wins");
+        assert!(g2.has_edge(0, 2), "dependent verdict must not remove");
+    }
+
+    #[test]
+    fn sbatch_drain_independent_matches_batch_apply_and_skips_padding() {
+        let corr = tiny_corr();
+        let mut b = SBatch::new(1, 4, 8);
+        b.push_row(&corr, 0, &[3], &[1, 2]);
+        // slot 0 independent, slot 1 dependent, padded slots "independent"
+        // but invalid and must be ignored
+        let z = vec![0.0f32, 5.0, 0.0, 0.0];
+        let g1 = AdjMatrix::complete(4);
+        let s1 = SepSets::new();
+        let (direct_removed, _) = b.apply(&z, 0.1, &g1, &s1);
+        let mut out = Removals::new(1);
+        b.drain_independent(&z, 0.1, &mut out);
+        assert!(b.is_empty(), "drain clears the batch");
+        assert_eq!(out.len(), 1, "one valid independent slot");
+        let g2 = AdjMatrix::complete(4);
+        let s2 = SepSets::new();
+        assert_eq!(out.apply(&g2, &s2), direct_removed);
+        assert_eq!(g1.snapshot(), g2.snapshot());
+        assert_eq!(s1.sorted_entries(), s2.sorted_entries());
+        assert_eq!(s2.get(0, 1), Some(vec![3]));
+        assert!(g2.has_edge(0, 3), "padded slot must not remove");
     }
 
     #[test]

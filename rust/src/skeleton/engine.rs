@@ -33,6 +33,7 @@ pub trait CiEngine {
     /// `valid[r]` = number of non-padding slots in row r (len == rows);
     /// engines may skip the padded tail (the XLA kernel ignores this and
     /// computes the full K width — padded verdicts are discarded later).
+    #[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
     fn ci_s(
         &mut self,
         l: usize,
@@ -166,6 +167,7 @@ impl CiEngine for NativeEngine {
         Ok(z)
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn ci_s(
         &mut self,
         l: usize,
@@ -256,6 +258,7 @@ impl<P: CiEngine, F: CiEngine> CiEngine for WithFallback<P, F> {
         }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn ci_s(
         &mut self,
         l: usize,
@@ -348,34 +351,209 @@ mod tests {
     }
 }
 
+// The coarse `micro_throughput` probe that used to live here was
+// promoted to a tracked baseline: `cargo bench --bench engines` measures
+// ns/test for level0 / ci_e / ci_s across levels and batch sizes and
+// writes BENCH_engines.json (see benches/engines.rs).
+
 #[cfg(test)]
-mod micro {
+mod fallback_tests {
     use super::*;
 
-    /// coarse throughput probe — run with:
-    ///   cargo test --release micro_throughput -- --ignored --nocapture
+    /// Wraps the native engine, counting calls, with a configurable
+    /// level ceiling — a stand-in for the AOT-ranged XLA engine.
+    struct CountingEngine {
+        inner: NativeEngine,
+        max_level: usize,
+        level0_calls: usize,
+        ci_e_calls: usize,
+        ci_s_calls: usize,
+    }
+
+    impl CountingEngine {
+        fn new(max_level: usize) -> Self {
+            CountingEngine {
+                inner: NativeEngine::new(),
+                max_level,
+                level0_calls: 0,
+                ci_e_calls: 0,
+                ci_s_calls: 0,
+            }
+        }
+    }
+
+    impl CiEngine for CountingEngine {
+        fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>> {
+            self.level0_calls += 1;
+            self.inner.level0(c_ij)
+        }
+
+        fn ci_e(
+            &mut self,
+            l: usize,
+            b: usize,
+            c_ij: &[f32],
+            m1: &[f32],
+            m2: &[f32],
+        ) -> Result<Vec<f32>> {
+            self.ci_e_calls += 1;
+            self.inner.ci_e(l, b, c_ij, m1, m2)
+        }
+
+        #[allow(clippy::too_many_arguments)]
+        fn ci_s(
+            &mut self,
+            l: usize,
+            rows: usize,
+            k: usize,
+            c_ij: &[f32],
+            m1: &[f32],
+            m2: &[f32],
+            valid: &[u32],
+        ) -> Result<Vec<f32>> {
+            self.ci_s_calls += 1;
+            self.inner.ci_s(l, rows, k, c_ij, m1, m2, valid)
+        }
+
+        fn max_level(&self) -> usize {
+            self.max_level
+        }
+
+        fn batch_e(&self) -> usize {
+            self.inner.batch_e()
+        }
+
+        fn batch_s(&self) -> usize {
+            self.inner.batch_s()
+        }
+
+        fn k(&self) -> usize {
+            self.inner.k()
+        }
+
+        fn name(&self) -> &'static str {
+            "counting"
+        }
+    }
+
+    /// A tiny valid ci_e batch at level l: identity M2.
+    fn e_batch(l: usize, b: usize) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let c_ij = vec![0.3f32; b];
+        let m1 = vec![0.2f32; b * 2 * l];
+        let mut m2 = vec![0.0f32; b * l * l];
+        for s in 0..b {
+            for d in 0..l {
+                m2[s * l * l + d * l + d] = 1.0;
+            }
+        }
+        (c_ij, m1, m2)
+    }
+
     #[test]
-    #[ignore]
-    fn micro_throughput() {
-        let mut e = NativeEngine::new();
-        for l in [1usize, 2, 3, 4, 8] {
-            let b = 100_000;
-            let c_ij = vec![0.3f32; b];
-            let m1 = vec![0.2f32; b * 2 * l];
-            let mut m2 = vec![0.1f32; b * l * l];
-            for s in 0..b {
+    fn routes_ci_e_by_level() {
+        let mut f = WithFallback {
+            primary: CountingEngine::new(2),
+            fallback: CountingEngine::new(NATIVE_MAX_LEVEL),
+        };
+        for l in [1usize, 2, 3, 4] {
+            let (c_ij, m1, m2) = e_batch(l, 3);
+            f.ci_e(l, 3, &c_ij, &m1, &m2).unwrap();
+        }
+        assert_eq!(f.primary.ci_e_calls, 2, "l = 1, 2 go to the primary");
+        assert_eq!(f.fallback.ci_e_calls, 2, "l = 3, 4 fall back");
+    }
+
+    #[test]
+    fn routes_ci_s_by_level() {
+        let mut f = WithFallback {
+            primary: CountingEngine::new(2),
+            fallback: CountingEngine::new(NATIVE_MAX_LEVEL),
+        };
+        for l in [1usize, 2, 3] {
+            let (rows, k) = (2usize, 2usize);
+            let c_ij = vec![0.3f32; rows * k];
+            let m1 = vec![0.2f32; rows * k * 2 * l];
+            let mut m2 = vec![0.0f32; rows * l * l];
+            for r in 0..rows {
                 for d in 0..l {
-                    m2[s * l * l + d * l + d] = 1.0;
+                    m2[r * l * l + d * l + d] = 1.0;
                 }
             }
-            let t = std::time::Instant::now();
-            let z = e.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
-            let dt = t.elapsed().as_secs_f64();
-            println!("ci_e l={l}: {:.1} ns/test (z0={})", dt / b as f64 * 1e9, z[0]);
+            let valid = vec![k as u32; rows];
+            f.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid).unwrap();
         }
-        let c = vec![0.5f32; 1_000_000];
-        let t = std::time::Instant::now();
-        let _ = e.level0(&c).unwrap();
-        println!("level0: {:.1} ns/test", t.elapsed().as_secs_f64() / 1e6 * 1e9);
+        assert_eq!(f.primary.ci_s_calls, 2, "l = 1, 2 go to the primary");
+        assert_eq!(f.fallback.ci_s_calls, 1, "l = 3 falls back");
+    }
+
+    #[test]
+    fn level0_always_routes_to_primary_and_max_level_composes() {
+        let mut f = WithFallback {
+            primary: CountingEngine::new(1),
+            fallback: CountingEngine::new(NATIVE_MAX_LEVEL),
+        };
+        f.level0(&[0.1, 0.2]).unwrap();
+        assert_eq!(f.primary.level0_calls, 1);
+        assert_eq!(f.fallback.level0_calls, 0);
+        assert_eq!(f.max_level(), NATIVE_MAX_LEVEL, "driver sees the union");
+        assert_eq!(f.batch_e(), f.primary.batch_e(), "geometry is the primary's");
+    }
+
+    /// Equicorrelated matrix (all off-diagonals = rho): positive
+    /// definite for 0 < rho < 1, and no edge is ever removed at
+    /// m = 1000, so the level loop visits every l up to n − 2 — levels
+    /// above the primary's ceiling are guaranteed to exercise the
+    /// fallback, deterministically and with no RNG.
+    fn equi_corr(n: usize, rho: f64) -> Vec<f64> {
+        let mut c = vec![rho; n * n];
+        for i in 0..n {
+            c[i * n + i] = 1.0;
+        }
+        c
+    }
+
+    #[test]
+    fn composed_cupc_e_run_matches_pure_native() {
+        let (n, m) = (6usize, 1000usize);
+        let corr = equi_corr(n, 0.5);
+        let cfg = crate::skeleton::Config::default();
+        let mut composed = WithFallback {
+            primary: CountingEngine::new(1),
+            fallback: CountingEngine::new(NATIVE_MAX_LEVEL),
+        };
+        let res_c =
+            crate::skeleton::gpu_e::run_with_engine(&corr, n, m, &cfg, &mut composed).unwrap();
+        let mut native = NativeEngine::new();
+        let res_n =
+            crate::skeleton::gpu_e::run_with_engine(&corr, n, m, &cfg, &mut native).unwrap();
+        assert_eq!(res_c.graph.snapshot(), res_n.graph.snapshot());
+        assert_eq!(res_c.sepsets.sorted_entries(), res_n.sepsets.sorted_entries());
+        let stats = |r: &crate::skeleton::SkeletonResult| -> Vec<(usize, u64)> {
+            r.levels.iter().map(|s| (s.level, s.tests)).collect()
+        };
+        assert_eq!(stats(&res_c), stats(&res_n));
+        assert!(composed.primary.ci_e_calls > 0, "level 1 runs on the primary");
+        assert!(composed.fallback.ci_e_calls > 0, "levels > 1 fall back");
+        assert_eq!(composed.fallback.level0_calls, 0);
+    }
+
+    #[test]
+    fn composed_cupc_s_run_matches_pure_native() {
+        let (n, m) = (6usize, 1000usize);
+        let corr = equi_corr(n, 0.5);
+        let cfg = crate::skeleton::Config::default();
+        let mut composed = WithFallback {
+            primary: CountingEngine::new(1),
+            fallback: CountingEngine::new(NATIVE_MAX_LEVEL),
+        };
+        let res_c =
+            crate::skeleton::gpu_s::run_with_engine(&corr, n, m, &cfg, &mut composed).unwrap();
+        let mut native = NativeEngine::new();
+        let res_n =
+            crate::skeleton::gpu_s::run_with_engine(&corr, n, m, &cfg, &mut native).unwrap();
+        assert_eq!(res_c.graph.snapshot(), res_n.graph.snapshot());
+        assert_eq!(res_c.sepsets.sorted_entries(), res_n.sepsets.sorted_entries());
+        assert!(composed.primary.ci_s_calls > 0, "level 1 runs on the primary");
+        assert!(composed.fallback.ci_s_calls > 0, "levels > 1 fall back");
     }
 }

@@ -4,18 +4,23 @@
 //! *round* structure: in round r, every live edge (i, j) contributes its
 //! conditioning sets with indices `t ∈ [r·γ, (r+1)·γ)` — γ tests in
 //! flight per edge, the paper's first degree of parallelism — while all
-//! edges contribute simultaneously — the second degree. Edges are packed
-//! in groups of β (the block shape), batches flush at the engine's
-//! capacity, and verdicts apply before the next round, which reproduces
-//! cuPC-E's early-termination semantics (§4.1 cases: removed edges are
-//! skipped at pack time; within a flight the first verdict wins):
-//! γ = 1 avoids all unnecessary tests but serializes; γ = ∞ is fully
-//! parallel but wasteful — the baselines of Fig. 5.
+//! edges contribute simultaneously — the second degree. Each round runs
+//! the three-stage [`pipeline`](super::pipeline): the live windows are
+//! listed serially in canonical edge order, packed and evaluated in
+//! parallel shards (the graph is frozen for the whole flight, exactly
+//! the in-kernel semantics), and the verdicts land in canonical slot
+//! order before round r + 1 — which reproduces cuPC-E's
+//! early-termination semantics (§4.1 cases: edges removed in earlier
+//! rounds are skipped at pack time; within a flight the first verdict
+//! wins): γ = 1 avoids all unnecessary tests but serializes; γ = ∞ is
+//! fully parallel but wasteful — the baselines of Fig. 5. (β grouping is
+//! order-neutral in the batched schedule: groups are packed
+//! consecutively, so the slot order equals flat edge order.)
 
-use super::batch::{Corr32, EBatch};
+use super::batch::{Corr32, EBatch, Removals};
 use super::comb::{n_sets_edge, CombRangeSkip};
 use super::engine::CiEngine;
-use super::level0::run_level0;
+use super::pipeline::{use_pool, Executor, Run};
 use super::{should_continue, Config, LevelStats, SkeletonResult};
 use crate::graph::adj::AdjMatrix;
 use crate::graph::compact::CompactAdj;
@@ -37,10 +42,16 @@ struct EdgeTask {
 }
 
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
-    let mut engine = crate::runtime::engine_from_config(cfg)?;
-    run_with_engine(corr, n, m, cfg, engine.as_mut())
+    if use_pool(cfg) {
+        run_impl(corr, n, m, cfg, &mut Executor::Pool { threads: cfg.threads })
+    } else {
+        let mut engine = crate::runtime::engine_from_config(cfg)?;
+        run_impl(corr, n, m, cfg, &mut Executor::Single(engine.as_mut()))
+    }
 }
 
+/// Single-engine entry point (tests, XLA, bench harnesses): the same
+/// pipeline inline — results are bit-identical to the pool path.
 pub fn run_with_engine(
     corr: &[f64],
     n: usize,
@@ -48,15 +59,24 @@ pub fn run_with_engine(
     cfg: &Config,
     engine: &mut dyn CiEngine,
 ) -> Result<SkeletonResult> {
+    run_impl(corr, n, m, cfg, &mut Executor::Single(engine))
+}
+
+fn run_impl(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    exec: &mut Executor<'_>,
+) -> Result<SkeletonResult> {
     let graph = AdjMatrix::complete(n);
     let sepsets = SepSets::new();
     let corr32 = Corr32::from_f64(corr, n);
     let mut levels = Vec::new();
 
-    levels.push(run_level0(corr, n, m, cfg, engine, &graph, &sepsets)?);
+    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
 
     let gamma = cfg.gamma.max(1) as u64;
-    let beta = cfg.beta.max(1);
     let mut l = 1usize;
     while should_continue(&graph, l, cfg) {
         let t = Timer::start();
@@ -90,41 +110,40 @@ pub fn run_with_engine(
 
         let mut tests = 0u64;
         let mut removed = 0usize;
-        let mut batch = EBatch::new(l, engine.batch_e());
-        let mut ids = vec![0u32; l];
         let max_total = tasks.iter().map(|e| e.total).max().unwrap_or(0);
+        let mut runs: Vec<Run> = Vec::new();
         let mut round = 0u64;
         while round * gamma < max_total {
             let lo = round * gamma;
-            // β-grouped pass over the tasks (pack order = block shape)
-            for group in tasks.chunks(beta) {
-                for task in group {
-                    if lo >= task.total {
-                        continue; // this edge's sets are exhausted
-                    }
-                    let (i, j) = (task.i as usize, task.j as usize);
-                    if !graph.has_edge(i, j) {
-                        continue; // removed earlier: skip at pack time
-                    }
-                    let hi = ((round + 1) * gamma).min(task.total);
-                    let row = comp.row(i);
-                    let mut combs =
-                        CombRangeSkip::new(task.row_len as usize, l, lo, hi - lo, task.p as usize);
-                    while let Some(sbuf) = combs.next_comb() {
-                        for (dst, &pos) in ids.iter_mut().zip(sbuf) {
-                            *dst = row[pos as usize];
-                        }
-                        batch.push(&corr32, i, j, &ids);
-                        tests += 1;
-                        if batch.len() >= engine.batch_e() {
-                            removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
-                        }
-                    }
+            // stage 1 (serial): the round's live windows in canonical
+            // pack order; the graph is frozen until the apply stage
+            runs.clear();
+            for (ti, task) in tasks.iter().enumerate() {
+                if lo >= task.total {
+                    continue; // this edge's sets are exhausted
                 }
+                if !graph.has_edge(task.i as usize, task.j as usize) {
+                    continue; // removed in an earlier round
+                }
+                let hi = ((round + 1) * gamma).min(task.total);
+                runs.push(Run { task: ti, t0: lo, count: hi - lo });
             }
-            // end of round: everything in flight lands before round r+1
-            if !batch.is_empty() {
-                removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+            if runs.is_empty() {
+                break; // every unexhausted window belongs to a dead edge
+            }
+            tests += runs.iter().map(|r| r.count).sum::<u64>();
+
+            // stage 2 (parallel): pack + evaluate, engines per shard;
+            // only independence candidates come back (dependent
+            // verdicts are no-ops and are dropped with the gather)
+            let shard_results = exec.run_sharded(&runs, |shard, engine| {
+                pack_eval(shard, &tasks, &comp, &corr32, l, taul, engine)
+            })?;
+
+            // stage 3 (serial): everything in flight lands in canonical
+            // slot order before round r + 1
+            for candidates in &shard_results {
+                removed += candidates.apply(&graph, &sepsets);
             }
             round += 1;
         }
@@ -152,23 +171,60 @@ pub fn run_with_engine(
     })
 }
 
+/// Worker body: pack a shard of the round's combination windows into
+/// engine-capacity batches, evaluate them, and keep only the
+/// independence candidates (canonical slot order).
+fn pack_eval(
+    shard: &[Run],
+    tasks: &[EdgeTask],
+    comp: &CompactAdj,
+    corr32: &Corr32,
+    l: usize,
+    taul: f64,
+    engine: &mut dyn CiEngine,
+) -> Result<Removals> {
+    let cap = engine.batch_e().max(1);
+    let mut out = Removals::new(l);
+    let mut batch = EBatch::new(l, cap);
+    let mut ids = vec![0u32; l];
+    for run in shard {
+        let task = &tasks[run.task];
+        let (i, j) = (task.i as usize, task.j as usize);
+        let row = comp.row(i);
+        let mut combs =
+            CombRangeSkip::new(task.row_len as usize, l, run.t0, run.count, task.p as usize);
+        while let Some(sbuf) = combs.next_comb() {
+            for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                *dst = row[pos as usize];
+            }
+            batch.push(corr32, i, j, &ids);
+            if batch.len() >= cap {
+                flush(&mut batch, engine, taul, &mut out)?;
+            }
+        }
+    }
+    if !batch.is_empty() {
+        flush(&mut batch, engine, taul, &mut out)?;
+    }
+    Ok(out)
+}
+
 fn flush(
     batch: &mut EBatch,
     engine: &mut dyn CiEngine,
     taul: f64,
-    graph: &AdjMatrix,
-    sepsets: &SepSets,
-) -> Result<usize> {
+    out: &mut Removals,
+) -> Result<()> {
     let z = engine.ci_e(batch.l, batch.len(), &batch.c_ij, &batch.m1, &batch.m2)?;
-    let (removed, _moot) = batch.apply(&z, taul, graph, sepsets);
-    batch.clear();
-    Ok(removed)
+    batch.drain_independent(&z, taul, out);
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::skeleton::engine::NativeEngine;
+    use crate::skeleton::EngineKind;
     use crate::sim::datasets;
     use crate::stats::corr::correlation_matrix;
 
@@ -224,5 +280,42 @@ mod tests {
             r_hi.total_tests(),
             r_lo.total_tests()
         );
+    }
+
+    /// The tentpole determinism contract at module level: the pool path
+    /// must be bit-identical to the single-engine path, including
+    /// per-level test counts.
+    #[test]
+    fn pool_path_matches_single_engine_bitwise() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 48,
+            m: 200,
+            topology: datasets::Topology::Er(0.12),
+            seed: 17,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let pooled_cfg = Config {
+            variant: super::super::Variant::CupcE,
+            engine: EngineKind::Native,
+            threads: 4,
+            ..Config::default()
+        };
+        assert!(use_pool(&pooled_cfg));
+        let pooled = run(&c, ds.data.n, ds.data.m, &pooled_cfg).unwrap();
+        let single = run_native(&c, ds.data.n, ds.data.m, &pooled_cfg);
+        assert_eq!(pooled.graph.snapshot(), single.graph.snapshot());
+        assert_eq!(
+            pooled.sepsets.sorted_entries(),
+            single.sepsets.sorted_entries(),
+            "sepset contents must be thread-count invariant"
+        );
+        let stats = |r: &SkeletonResult| -> Vec<(usize, u64, usize, usize)> {
+            r.levels
+                .iter()
+                .map(|s| (s.level, s.tests, s.removed, s.edges_after))
+                .collect()
+        };
+        assert_eq!(stats(&pooled), stats(&single));
     }
 }

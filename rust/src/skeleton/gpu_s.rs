@@ -9,11 +9,19 @@
 //! thread avoids by looping — bounded by ⌈n'_i/K⌉). Sharing is *local*
 //! (within a row), matching §5.5's analysis that global sharing does not
 //! pay for its search.
+//!
+//! Each round runs the three-stage [`pipeline`](super::pipeline): live
+//! set windows are listed serially in canonical row order, packed and
+//! evaluated in parallel shards against the frozen graph (candidate
+//! lists included — the whole flight sees the state at round start,
+//! exactly the in-kernel semantics), and verdicts land in canonical slot
+//! order before the next round. Results are bit-identical for any
+//! `cfg.threads`.
 
-use super::batch::{Corr32, SBatch};
+use super::batch::{Corr32, Removals, SBatch};
 use super::comb::{n_sets_row, CombRange};
 use super::engine::CiEngine;
-use super::level0::run_level0;
+use super::pipeline::{use_pool, Executor, Run};
 use super::{should_continue, Config, LevelStats, SkeletonResult};
 use crate::graph::adj::AdjMatrix;
 use crate::graph::compact::CompactAdj;
@@ -23,10 +31,16 @@ use crate::util::timer::Timer;
 use anyhow::Result;
 
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
-    let mut engine = crate::runtime::engine_from_config(cfg)?;
-    run_with_engine(corr, n, m, cfg, engine.as_mut())
+    if use_pool(cfg) {
+        run_impl(corr, n, m, cfg, &mut Executor::Pool { threads: cfg.threads })
+    } else {
+        let mut engine = crate::runtime::engine_from_config(cfg)?;
+        run_impl(corr, n, m, cfg, &mut Executor::Single(engine.as_mut()))
+    }
 }
 
+/// Single-engine entry point (tests, XLA, bench harnesses): the same
+/// pipeline inline — results are bit-identical to the pool path.
 pub fn run_with_engine(
     corr: &[f64],
     n: usize,
@@ -34,14 +48,23 @@ pub fn run_with_engine(
     cfg: &Config,
     engine: &mut dyn CiEngine,
 ) -> Result<SkeletonResult> {
+    run_impl(corr, n, m, cfg, &mut Executor::Single(engine))
+}
+
+fn run_impl(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    exec: &mut Executor<'_>,
+) -> Result<SkeletonResult> {
     let graph = AdjMatrix::complete(n);
     let sepsets = SepSets::new();
     let corr32 = Corr32::from_f64(corr, n);
     let mut levels = Vec::new();
 
-    levels.push(run_level0(corr, n, m, cfg, engine, &graph, &sepsets)?);
+    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
 
-    let k = engine.k();
     let flight = (cfg.theta.max(1) * cfg.delta.max(1)) as u64; // sets in flight per row per round
     let mut l = 1usize;
     while should_continue(&graph, l, cfg) {
@@ -52,9 +75,6 @@ pub fn run_with_engine(
 
         let mut tests = 0u64;
         let mut removed = 0usize;
-        let mut batch = SBatch::new(l, k, engine.batch_s());
-        let mut ids = vec![0u32; l];
-        let mut cand: Vec<u32> = Vec::new();
 
         // rows with enough neighbors, and their set counts
         let rows: Vec<(usize, u64)> = (0..n)
@@ -63,46 +83,40 @@ pub fn run_with_engine(
             .collect();
         let max_total = rows.iter().map(|&(_, t)| t).max().unwrap_or(0);
 
+        let mut runs: Vec<Run> = Vec::new();
         let mut round = 0u64;
         while round * flight < max_total {
             let lo = round * flight;
-            for &(i, total) in &rows {
+            // stage 1 (serial): the round's live set windows in
+            // canonical row order; the graph is frozen until apply
+            runs.clear();
+            for (ri, &(i, total)) in rows.iter().enumerate() {
                 if lo >= total {
                     continue;
                 }
-                let row = comp.row(i);
                 // §4.1: skip the whole row if no live edge remains
-                if !row.iter().any(|&j| graph.has_edge(i, j as usize)) {
+                if !comp.row(i).iter().any(|&j| graph.has_edge(i, j as usize)) {
                     continue;
                 }
                 let hi = ((round + 1) * flight).min(total);
-                let mut combs = CombRange::new(row.len(), l, lo, hi - lo);
-                while let Some(sbuf) = combs.next_comb() {
-                    for (dst, &pos) in ids.iter_mut().zip(sbuf) {
-                        *dst = row[pos as usize];
-                    }
-                    // candidates: row members not in S with live edges
-                    cand.clear();
-                    for &ju in row {
-                        if ids.contains(&ju) {
-                            continue;
-                        }
-                        if graph.has_edge(i, ju as usize) {
-                            cand.push(ju);
-                        }
-                    }
-                    // spill into K-wide rows
-                    for chunk in cand.chunks(k) {
-                        batch.push_row(&corr32, i, &ids, chunk);
-                        tests += chunk.len() as u64;
-                        if batch.rows() >= engine.batch_s() {
-                            removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
-                        }
-                    }
-                }
+                runs.push(Run { task: ri, t0: lo, count: hi - lo });
             }
-            if !batch.is_empty() {
-                removed += flush(&mut batch, engine, taul, &graph, &sepsets)?;
+            if runs.is_empty() {
+                break; // every unexhausted row is dead
+            }
+
+            // stage 2 (parallel): pack + evaluate against the frozen
+            // graph; test counts come back per shard (they depend on
+            // the candidate lists, which are deterministic per round),
+            // and only independence candidates are retained
+            let shard_results = exec.run_sharded(&runs, |shard, engine| {
+                pack_eval(shard, &rows, &comp, &corr32, &graph, l, taul, engine)
+            })?;
+
+            // stage 3 (serial): canonical-order apply
+            for (candidates, shard_tests) in &shard_results {
+                tests += shard_tests;
+                removed += candidates.apply(&graph, &sepsets);
             }
             round += 1;
         }
@@ -130,13 +144,68 @@ pub fn run_with_engine(
     })
 }
 
+/// Worker body: pack a shard of the round's set windows into
+/// engine-capacity batches, evaluate them, and keep only the
+/// independence candidates. Returns those plus the shard's test count
+/// (one test per live candidate of each set).
+#[allow(clippy::too_many_arguments)] // worker signature mirrors the round state
+fn pack_eval(
+    shard: &[Run],
+    rows: &[(usize, u64)],
+    comp: &CompactAdj,
+    corr32: &Corr32,
+    graph: &AdjMatrix,
+    l: usize,
+    taul: f64,
+    engine: &mut dyn CiEngine,
+) -> Result<(Removals, u64)> {
+    let k = engine.k().max(1);
+    let cap = engine.batch_s().max(1);
+    let mut out = Removals::new(l);
+    let mut tests = 0u64;
+    let mut batch = SBatch::new(l, k, cap);
+    let mut ids = vec![0u32; l];
+    let mut cand: Vec<u32> = Vec::new();
+    for run in shard {
+        let (i, _) = rows[run.task];
+        let row = comp.row(i);
+        let mut combs = CombRange::new(row.len(), l, run.t0, run.count);
+        while let Some(sbuf) = combs.next_comb() {
+            for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                *dst = row[pos as usize];
+            }
+            // candidates: row members not in S with live edges
+            cand.clear();
+            for &ju in row {
+                if ids.contains(&ju) {
+                    continue;
+                }
+                if graph.has_edge(i, ju as usize) {
+                    cand.push(ju);
+                }
+            }
+            // spill into K-wide rows
+            for chunk in cand.chunks(k) {
+                batch.push_row(corr32, i, &ids, chunk);
+                tests += chunk.len() as u64;
+                if batch.rows() >= cap {
+                    flush(&mut batch, engine, taul, &mut out)?;
+                }
+            }
+        }
+    }
+    if !batch.is_empty() {
+        flush(&mut batch, engine, taul, &mut out)?;
+    }
+    Ok((out, tests))
+}
+
 fn flush(
     batch: &mut SBatch,
     engine: &mut dyn CiEngine,
     taul: f64,
-    graph: &AdjMatrix,
-    sepsets: &SepSets,
-) -> Result<usize> {
+    out: &mut Removals,
+) -> Result<()> {
     let z = engine.ci_s(
         batch.l,
         batch.rows(),
@@ -146,15 +215,15 @@ fn flush(
         &batch.m2,
         &batch.valid,
     )?;
-    let (removed, _moot) = batch.apply(&z, taul, graph, sepsets);
-    batch.clear();
-    Ok(removed)
+    batch.drain_independent(&z, taul, out);
+    Ok(())
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::skeleton::engine::NativeEngine;
+    use crate::skeleton::EngineKind;
     use crate::sim::datasets;
     use crate::stats::corr::correlation_matrix;
 
@@ -243,5 +312,42 @@ mod tests {
             },
         );
         assert_eq!(a.graph.snapshot(), b.graph.snapshot());
+    }
+
+    /// The tentpole determinism contract at module level: the pool path
+    /// must be bit-identical to the single-engine path, including
+    /// per-level test counts.
+    #[test]
+    fn pool_path_matches_single_engine_bitwise() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 48,
+            m: 200,
+            topology: datasets::Topology::Grn(1.8, 6),
+            seed: 19,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let pooled_cfg = Config {
+            variant: crate::skeleton::Variant::CupcS,
+            engine: EngineKind::Native,
+            threads: 4,
+            ..Config::default()
+        };
+        assert!(use_pool(&pooled_cfg));
+        let pooled = run(&c, ds.data.n, ds.data.m, &pooled_cfg).unwrap();
+        let single = run_native(&c, ds.data.n, ds.data.m, &pooled_cfg);
+        assert_eq!(pooled.graph.snapshot(), single.graph.snapshot());
+        assert_eq!(
+            pooled.sepsets.sorted_entries(),
+            single.sepsets.sorted_entries(),
+            "sepset contents must be thread-count invariant"
+        );
+        let stats = |r: &SkeletonResult| -> Vec<(usize, u64, usize, usize)> {
+            r.levels
+                .iter()
+                .map(|s| (s.level, s.tests, s.removed, s.edges_after))
+                .collect()
+        };
+        assert_eq!(stats(&pooled), stats(&single));
     }
 }

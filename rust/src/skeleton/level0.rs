@@ -24,6 +24,15 @@ pub fn run_level0(
     sepsets: &SepSets,
 ) -> Result<LevelStats> {
     let t = Timer::start();
+    if n < 2 {
+        // no pairs to test: short-circuit before the n·(n−1)/2 capacity
+        // math, which underflows in debug builds when n == 0
+        return Ok(LevelStats {
+            level: 0,
+            seconds: t.elapsed_s(),
+            ..LevelStats::default()
+        });
+    }
     let tau0 = tau(m, 0, cfg.alpha);
     // pack the upper triangle
     let mut c_ij = Vec::with_capacity(n * (n - 1) / 2);
@@ -75,6 +84,25 @@ mod tests {
         assert!(g.has_edge(0, 1) && g.has_edge(1, 2));
         assert_eq!(sep.get(0, 2), Some(vec![]));
         assert_eq!(stats.edges_after, 2);
+    }
+
+    /// Regression: n = 0 underflowed `n * (n - 1) / 2` in debug builds;
+    /// n = 1 has no pairs either. Both must be clean no-ops.
+    #[test]
+    fn degenerate_inputs_no_pairs_no_panic() {
+        let cfg = Config::default();
+        for n in [0usize, 1] {
+            let corr = vec![1.0; n * n];
+            let g = AdjMatrix::complete(n);
+            let sep = SepSets::new();
+            let mut e = NativeEngine::new();
+            let stats = run_level0(&corr, n, 1000, &cfg, &mut e, &g, &sep).unwrap();
+            assert_eq!(stats.level, 0, "n={n}");
+            assert_eq!(stats.tests, 0, "n={n}");
+            assert_eq!(stats.removed, 0, "n={n}");
+            assert_eq!(stats.edges_after, 0, "n={n}");
+            assert!(sep.is_empty(), "n={n}");
+        }
     }
 
     #[test]

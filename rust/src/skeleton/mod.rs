@@ -19,6 +19,11 @@
 //! [`OrientRule::Majority`] for a schedule-invariant CPDAG). The
 //! cross-engine conformance suite (`tests/conformance_engines.rs`)
 //! enforces all of this over the `sim::scenarios` grid.
+//!
+//! The batched schedules run their per-round pack + evaluate work
+//! through the multi-threaded [`pipeline`] when the native engine is
+//! selected and `Config::threads > 1`; the pipeline's ordered-apply
+//! stage keeps results bit-identical to a single-threaded run.
 
 pub mod batch;
 pub mod baseline1;
@@ -30,6 +35,7 @@ pub mod gpu_e;
 pub mod gpu_s;
 pub mod level0;
 pub mod parallel_cpu;
+pub mod pipeline;
 pub mod serial;
 
 use crate::graph::adj::AdjMatrix;
@@ -90,8 +96,11 @@ pub enum OrientRule {
 
 /// Run configuration. The β/γ (cuPC-E) and θ/δ (cuPC-S) knobs carry the
 /// paper's meaning translated to the batch engine: γ = conditioning sets
-/// in flight per edge per round, β = edges grouped contiguously when
-/// packing, θ×δ = conditioning sets in flight per row per round.
+/// in flight per edge per round, θ×δ = conditioning sets in flight per
+/// row per round. β (edges per CUDA block) is kept for CLI/experiment
+/// parity but is order-neutral here: β-groups were always packed
+/// consecutively, so the slot order equals flat edge order and only
+/// γ shapes the rounds.
 #[derive(Clone, Debug)]
 pub struct Config {
     pub alpha: f64,
@@ -99,6 +108,13 @@ pub struct Config {
     pub max_level: Option<usize>,
     pub variant: Variant,
     pub engine: EngineKind,
+    /// Worker threads. `ParallelCpu` shards rows across this many
+    /// threads; the batched schedules (`CupcE`, `CupcS` and the Fig. 5
+    /// baselines) shard each round's pack + evaluate stage across this
+    /// many scoped workers when the native engine is selected (see
+    /// [`pipeline`]) — results are bit-identical for any value. With an
+    /// injected/XLA engine the batched schedules run single-engine and
+    /// this knob is ignored.
     pub threads: usize,
     pub beta: usize,
     pub gamma: usize,
@@ -181,10 +197,30 @@ pub fn should_continue(graph: &AdjMatrix, next_level: usize, cfg: &Config) -> bo
     graph.max_degree() > next_level
 }
 
+/// The trivial result for degenerate inputs (n < 2): no pairs exist, so
+/// every schedule returns an edgeless graph, no sepsets, and a single
+/// zero-test level-0 entry without touching an engine. Shared by every
+/// schedule entry point so `n = 0` / `n = 1` can never reach the pair
+/// enumeration (whose `n·(n−1)/2` capacity math underflows on `n = 0`).
+pub fn degenerate_result(n: usize) -> SkeletonResult {
+    debug_assert!(n < 2);
+    SkeletonResult {
+        graph: AdjMatrix::complete(n),
+        sepsets: SepSets::new(),
+        levels: vec![LevelStats {
+            level: 0,
+            ..LevelStats::default()
+        }],
+    }
+}
+
 /// Dispatch a full skeleton run on a correlation matrix.
 ///
 /// `corr` is row-major n×n, `m` the sample count behind it.
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(degenerate_result(n));
+    }
     match cfg.variant {
         Variant::Serial => serial::run(corr, n, m, cfg),
         Variant::ParallelCpu => parallel_cpu::run(corr, n, m, cfg),
@@ -214,6 +250,37 @@ mod tests {
         assert_eq!((c.beta, c.gamma), (2, 32));
         assert_eq!((c.theta, c.delta), (64, 2));
         assert_eq!(c.alpha, 0.01);
+    }
+
+    /// Regression: `n = 0` used to underflow-panic in debug builds in
+    /// level 0's `n·(n−1)/2` capacity computation; n < 2 now
+    /// short-circuits in every schedule.
+    #[test]
+    fn degenerate_inputs_are_guarded_in_every_variant() {
+        for &v in &[
+            Variant::Serial,
+            Variant::ParallelCpu,
+            Variant::CupcE,
+            Variant::CupcS,
+            Variant::Baseline1,
+            Variant::Baseline2,
+        ] {
+            for n in [0usize, 1] {
+                let corr = vec![1.0; n * n];
+                let cfg = Config {
+                    variant: v,
+                    ..Config::default()
+                };
+                let res = run(&corr, n, 10, &cfg)
+                    .unwrap_or_else(|e| panic!("{v:?} failed on n={n}: {e:#}"));
+                assert_eq!(res.graph.n(), n, "{v:?} n={n}");
+                assert_eq!(res.graph.n_edges(), 0, "{v:?} n={n}");
+                assert!(res.sepsets.is_empty(), "{v:?} n={n}");
+                assert_eq!(res.levels.len(), 1, "{v:?} n={n}");
+                assert_eq!(res.levels[0].tests, 0, "{v:?} n={n}");
+                assert_eq!(res.total_tests(), 0, "{v:?} n={n}");
+            }
+        }
     }
 
     #[test]

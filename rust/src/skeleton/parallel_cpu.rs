@@ -19,6 +19,9 @@ use anyhow::Result;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(super::degenerate_result(n));
+    }
     let graph = AdjMatrix::complete(n);
     let sepsets = SepSets::new();
     let nthreads = cfg.threads.max(1);

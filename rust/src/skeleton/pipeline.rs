@@ -1,0 +1,308 @@
+//! The multi-threaded pack → evaluate → apply pipeline shared by the
+//! batched schedules (cuPC-E, cuPC-S and the Fig. 5 baselines).
+//!
+//! cuPC's speedup story is the parallel CI-test grid; with AOT batch
+//! kernels the CUDA grid becomes *rounds* (gpu_e/gpu_s), and the per-slot
+//! work — combination enumeration plus the M1/M2 gather — is the CPU-side
+//! hot spot. This module shards that work across scoped worker threads
+//! (no external deps) while keeping every schedule bit-deterministic:
+//!
+//! 1. **Stage 1 (serial, O(#tasks))** — the schedule lists the round's
+//!    live combination windows as [`Run`]s in canonical pack order. The
+//!    graph is read here and then *frozen* until stage 3.
+//! 2. **Stage 2 (parallel)** — [`Executor::run_sharded`] splits the runs
+//!    into contiguous shards balanced by slot count; each worker packs
+//!    its shard into thread-local batches, evaluates them through its own
+//!    [`NativeEngine`], and keeps only the *independence candidates*
+//!    (slots whose |z| ≤ τ) — dependent verdicts can never change state,
+//!    so they are dropped with the heavy M1/M2 buffers per flush,
+//!    bounding a round's deferred-apply memory at the candidate count
+//!    rather than the test count.
+//! 3. **Stage 3 (serial)** — candidates are applied in canonical slot
+//!    order (shards concatenated in order), so "first independent
+//!    verdict wins" resolves identically for every thread count.
+//!
+//! Determinism contract: CI evaluation is a pure function of the packed
+//! slot, and the adjacency is only mutated in stage 3, so skeletons,
+//! sepset contents, per-level removed/edges_after *and* per-level test
+//! counts are bit-identical for `threads = 1` and `threads = N`. Batch
+//! capacity and shard boundaries affect only wall-clock time. The
+//! cross-engine conformance suite pins this down
+//! (`tests/conformance_engines.rs::batched_schedules_are_thread_count_invariant`).
+//!
+//! Engines that cannot be constructed per worker (the XLA PJRT engine
+//! owns client state) keep the single-engine path: [`Executor::Single`]
+//! runs the identical pipeline inline with the injected engine.
+
+use super::engine::{CiEngine, NativeEngine};
+use super::level0::run_level0;
+use super::{Config, EngineKind, LevelStats};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::sepset::SepSets;
+use anyhow::Result;
+
+/// A contiguous chunk of one task's combination range within a round:
+/// combination indices `[t0, t0 + count)` of the task at index `task` in
+/// the round's task list. Slots inside a run follow lexicographic
+/// combination order and runs are emitted in canonical task order, so
+/// the concatenation of all runs *is* the round's canonical slot order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Run {
+    pub task: usize,
+    pub t0: u64,
+    pub count: u64,
+}
+
+/// Minimum slots per worker shard: below this, spawning a thread costs
+/// more than the gather it parallelizes. Never affects results.
+pub const MIN_SHARD_SLOTS: u64 = 512;
+
+/// Does this config take the worker-pool path? Per-worker engines are
+/// only constructible for the native backend; injected engines (XLA)
+/// run the identical pipeline single-engine.
+pub fn use_pool(cfg: &Config) -> bool {
+    cfg.engine == EngineKind::Native && cfg.threads > 1
+}
+
+/// Partition `runs` into at most `parts` contiguous shards balanced by
+/// slot count, splitting a run mid-range where a boundary falls inside
+/// it. Shard boundaries never affect results (evaluation is pure and the
+/// apply stage replays canonical order) — only load balance.
+pub fn split_runs(runs: &[Run], parts: usize) -> Vec<Vec<Run>> {
+    let total: u64 = runs.iter().map(|r| r.count).sum();
+    if total == 0 {
+        return Vec::new();
+    }
+    let max_parts = total.div_ceil(MIN_SHARD_SLOTS).max(1);
+    let parts = (parts.max(1) as u64).min(max_parts);
+    let per = total.div_ceil(parts);
+    let mut shards: Vec<Vec<Run>> = Vec::with_capacity(parts as usize);
+    let mut cur: Vec<Run> = Vec::new();
+    let mut cur_slots = 0u64;
+    for &run in runs {
+        let mut rest = run;
+        loop {
+            let room = per - cur_slots;
+            if rest.count <= room {
+                cur_slots += rest.count;
+                cur.push(rest);
+                break;
+            }
+            if room > 0 {
+                cur.push(Run {
+                    task: rest.task,
+                    t0: rest.t0,
+                    count: room,
+                });
+            }
+            shards.push(std::mem::take(&mut cur));
+            cur_slots = 0;
+            rest = Run {
+                task: rest.task,
+                t0: rest.t0 + room,
+                count: rest.count - room,
+            };
+        }
+        if cur_slots == per {
+            shards.push(std::mem::take(&mut cur));
+            cur_slots = 0;
+        }
+    }
+    if !cur.is_empty() {
+        shards.push(cur);
+    }
+    shards
+}
+
+/// How a round's shards get evaluated.
+pub enum Executor<'e> {
+    /// One engine, inline: the `threads = 1` path and the path any
+    /// injected engine (XLA, test mocks) uses.
+    Single(&'e mut dyn CiEngine),
+    /// Up to `threads` scoped workers, each owning a fresh
+    /// [`NativeEngine`] (a few KiB of scratch — cheap per round).
+    Pool { threads: usize },
+}
+
+impl Executor<'_> {
+    /// Shard `runs` and evaluate every shard with `work`, returning the
+    /// shard results in canonical shard order. `work` must be pure with
+    /// respect to shared state (it may read the frozen graph).
+    pub fn run_sharded<T, F>(&mut self, runs: &[Run], work: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&[Run], &mut dyn CiEngine) -> Result<T> + Sync,
+    {
+        match self {
+            Executor::Single(engine) => Ok(vec![work(runs, &mut **engine)?]),
+            Executor::Pool { threads } => {
+                let shards = split_runs(runs, *threads);
+                if shards.len() <= 1 {
+                    // too little work to pay for a spawn
+                    let mut engine = NativeEngine::new();
+                    let shard = shards.first().map(|s| &s[..]).unwrap_or(&[]);
+                    return Ok(vec![work(shard, &mut engine)?]);
+                }
+                let results: Vec<Result<T>> = std::thread::scope(|scope| {
+                    let handles: Vec<_> = shards
+                        .iter()
+                        .map(|shard| {
+                            let work = &work;
+                            scope.spawn(move || {
+                                let mut engine = NativeEngine::new();
+                                work(shard, &mut engine)
+                            })
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("pipeline worker panicked"))
+                        .collect()
+                });
+                results.into_iter().collect()
+            }
+        }
+    }
+
+    /// Level 0 through whichever engine the executor owns (the pool path
+    /// evaluates it on a fresh native engine — one batch sweep, not worth
+    /// sharding).
+    pub fn run_level0(
+        &mut self,
+        corr: &[f64],
+        n: usize,
+        m: usize,
+        cfg: &Config,
+        graph: &AdjMatrix,
+        sepsets: &SepSets,
+    ) -> Result<LevelStats> {
+        match self {
+            Executor::Single(engine) => run_level0(corr, n, m, cfg, &mut **engine, graph, sepsets),
+            Executor::Pool { .. } => {
+                let mut engine = NativeEngine::new();
+                run_level0(corr, n, m, cfg, &mut engine, graph, sepsets)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slots(shards: &[Vec<Run>]) -> Vec<u64> {
+        shards
+            .iter()
+            .map(|s| s.iter().map(|r| r.count).sum())
+            .collect()
+    }
+
+    fn flatten(shards: &[Vec<Run>]) -> Vec<(usize, u64)> {
+        // expand to (task, t) slot list to check order preservation
+        let mut v = Vec::new();
+        for shard in shards {
+            for r in shard {
+                for t in r.t0..r.t0 + r.count {
+                    v.push((r.task, t));
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn split_preserves_canonical_slot_order() {
+        let runs = vec![
+            Run { task: 0, t0: 0, count: 700 },
+            Run { task: 1, t0: 3, count: 900 },
+            Run { task: 2, t0: 0, count: 500 },
+        ];
+        let want = flatten(&[runs.clone()]);
+        for parts in [1usize, 2, 3, 4, 7] {
+            let shards = split_runs(&runs, parts);
+            assert!(shards.len() <= parts.max(1), "parts={parts}");
+            assert_eq!(flatten(&shards), want, "parts={parts}");
+            for s in slots(&shards) {
+                assert!(s > 0, "empty shard at parts={parts}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_balances_by_slot_count() {
+        let runs = vec![
+            Run { task: 0, t0: 0, count: 4000 },
+            Run { task: 1, t0: 0, count: 50 },
+        ];
+        let shards = split_runs(&runs, 4);
+        assert_eq!(shards.len(), 4);
+        let s = slots(&shards);
+        // ceil(4050/4) = 1013 per shard, last takes the remainder
+        assert_eq!(s, vec![1013, 1013, 1013, 1011]);
+        // the big run was split mid-range
+        assert!(shards[0][0].count < 4000);
+    }
+
+    #[test]
+    fn split_respects_min_shard_slots() {
+        let runs = vec![Run { task: 0, t0: 0, count: 100 }];
+        // far too little work for 8 shards: everything lands in one
+        let shards = split_runs(&runs, 8);
+        assert_eq!(shards.len(), 1);
+        assert_eq!(slots(&shards), vec![100]);
+    }
+
+    #[test]
+    fn split_empty_is_empty() {
+        assert!(split_runs(&[], 4).is_empty());
+        let zero = vec![Run { task: 0, t0: 0, count: 0 }];
+        assert!(split_runs(&zero, 4).is_empty());
+    }
+
+    #[test]
+    fn pool_selection_rules() {
+        let mut cfg = Config {
+            threads: 4,
+            engine: EngineKind::Native,
+            ..Config::default()
+        };
+        assert!(use_pool(&cfg));
+        cfg.threads = 1;
+        assert!(!use_pool(&cfg));
+        cfg.threads = 4;
+        cfg.engine = EngineKind::Xla;
+        assert!(!use_pool(&cfg), "injected engines keep the single path");
+    }
+
+    #[test]
+    fn executor_runs_every_shard_in_order() {
+        let runs: Vec<Run> = (0..6)
+            .map(|i| Run { task: i, t0: 0, count: 700 })
+            .collect();
+        let mut exec = Executor::Pool { threads: 3 };
+        let got = exec
+            .run_sharded(&runs, |shard, engine| {
+                assert_eq!(engine.name(), "native");
+                Ok(shard.to_vec())
+            })
+            .unwrap();
+        let rejoined: Vec<Run> = got.into_iter().flatten().collect();
+        assert_eq!(flatten(&[rejoined]), flatten(&[runs]));
+    }
+
+    #[test]
+    fn executor_propagates_worker_errors() {
+        let runs: Vec<Run> = (0..4)
+            .map(|i| Run { task: i, t0: 0, count: 600 })
+            .collect();
+        let mut exec = Executor::Pool { threads: 4 };
+        let res: Result<Vec<()>> = exec.run_sharded(&runs, |shard, _| {
+            if shard.iter().any(|r| r.task == 2) {
+                anyhow::bail!("boom on task 2")
+            }
+            Ok(())
+        });
+        let err = res.expect_err("worker error must propagate");
+        assert!(format!("{err:#}").contains("boom"));
+    }
+}

@@ -14,6 +14,9 @@ use crate::util::timer::Timer;
 use anyhow::Result;
 
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(super::degenerate_result(n));
+    }
     let graph = AdjMatrix::complete(n);
     let sepsets = SepSets::new();
     let view = Corr::new(corr, n);

@@ -76,12 +76,50 @@ impl Args {
     }
 }
 
+/// Process argv for `cargo bench` harness=false targets: skips the
+/// binary name and strips the `--bench` flag cargo injects when
+/// dispatching bench binaries. Without the strip, `--bench` followed by
+/// a non-flag token (a positional, or the value of a later option in
+/// some argv orders) is misparsed as `--bench <value>`, swallowing the
+/// token. Shared by every bench target (benches/common/mod.rs).
+pub fn bench_argv() -> Vec<String> {
+    strip_bench_flag(std::env::args().skip(1))
+}
+
+/// The testable core of [`bench_argv`].
+pub fn strip_bench_flag<I: IntoIterator<Item = String>>(argv: I) -> Vec<String> {
+    argv.into_iter().filter(|a| a != "--bench").collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn parse(s: &str) -> Args {
         Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    fn strip(s: &str) -> Vec<String> {
+        strip_bench_flag(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn strip_bench_flag_removes_every_occurrence() {
+        assert_eq!(strip("--bench --graphs 8"), vec!["--graphs", "8"]);
+        assert_eq!(strip("--graphs 8 --bench"), vec!["--graphs", "8"]);
+        assert_eq!(strip("--bench"), Vec::<String>::new());
+        // untouched when absent
+        assert_eq!(strip("--scale small"), vec!["--scale", "small"]);
+    }
+
+    /// The regression this helper fixes: `--bench` directly before a
+    /// non-flag token used to be parsed as an option eating that token.
+    #[test]
+    fn stripped_argv_keeps_positionals_after_bench_flag() {
+        let broken = Args::parse(strip("--bench nci60-mini --graphs 8"));
+        assert_eq!(broken.subcommand.as_deref(), Some("nci60-mini"));
+        assert_eq!(broken.get_usize("graphs", 0), 8);
+        assert!(broken.get("bench").is_none());
     }
 
     #[test]

@@ -102,6 +102,59 @@ fn all_six_variants_conform_on_the_full_grid() {
     }
 }
 
+/// The parallel pack→evaluate→apply pipeline must be bit-identical to a
+/// single-worker run: same skeleton, same sepset *entries* (contents,
+/// not just keys — ordered apply preserves the first-win winner), and
+/// the same per-level removed / edges_after *and* tests counts. This is
+/// the order-independence gate extended to thread counts; it must never
+/// weaken.
+#[test]
+fn batched_schedules_are_thread_count_invariant() {
+    for sc in default_grid() {
+        let input = sc.generate();
+        for v in [Variant::CupcE, Variant::CupcS] {
+            let run_threads = |threads: usize| {
+                let mut cfg = sc.config(v);
+                cfg.threads = threads;
+                pc_stable_corr(&input.corr, input.n, input.m, &cfg)
+                    .unwrap_or_else(|e| panic!("{} / {v:?} t={threads} failed: {e:#}", sc.name))
+            };
+            let r1 = run_threads(1);
+            let r4 = run_threads(4);
+            assert_eq!(
+                r1.skeleton.graph.snapshot(),
+                r4.skeleton.graph.snapshot(),
+                "{}: {v:?} skeleton differs between threads=1 and threads=4",
+                sc.name
+            );
+            assert_eq!(
+                r1.skeleton.sepsets.sorted_entries(),
+                r4.skeleton.sepsets.sorted_entries(),
+                "{}: {v:?} sepset entries differ between threads=1 and threads=4",
+                sc.name
+            );
+            let levels = |r: &cupc::api::PcResult| -> Vec<(usize, u64, usize, usize)> {
+                r.skeleton
+                    .levels
+                    .iter()
+                    .map(|l| (l.level, l.tests, l.removed, l.edges_after))
+                    .collect()
+            };
+            assert_eq!(
+                levels(&r1),
+                levels(&r4),
+                "{}: {v:?} per-level stats differ between threads=1 and threads=4",
+                sc.name
+            );
+            assert!(
+                r1.cpdag.same_as(&r4.cpdag),
+                "{}: {v:?} CPDAG differs between threads=1 and threads=4",
+                sc.name
+            );
+        }
+    }
+}
+
 /// Every sepset key corresponds exactly to a removed pair: keys are the
 /// complement of the skeleton's edge set.
 #[test]

@@ -16,6 +16,9 @@
 //! message, `{:#}` prints the whole chain separated by `": "`, and `{:?}`
 //! prints the outermost message followed by a `Caused by:` list.
 
+// Vendored shim: exempt from the workspace lint policy.
+#![allow(clippy::all)]
+
 use std::fmt;
 
 /// `Result<T, anyhow::Error>` with the error type defaulted.
