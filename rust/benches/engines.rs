@@ -1,24 +1,30 @@
 //! `cargo bench --bench engines` — the tracked ns/test baseline for the
 //! CI-test kernels (the promoted `micro` probe that used to hide in
-//! `skeleton/engine.rs`), plus the threads=1 vs threads=N speedup of the
-//! parallel pack→evaluate→apply pipeline on the Table-2 minis.
+//! `skeleton/engine.rs`), the threads=1 vs threads=N speedup of the
+//! parallel pack→evaluate→apply pipeline on the Table-2 minis, and the
+//! batch-runner throughput (jobs/sec over the scenario grid at
+//! job-threads 1 vs N, cold cache each rep).
 //!
 //! Writes `BENCH_engines.json` (override with `-- --out path`) so
-//! packing/engine changes have a tracked baseline to diff against.
+//! packing/engine/scheduler changes have a tracked baseline to diff
+//! against.
 //!
 //! Flags: `--reps R` (median of R, default 3), `--threads N` (parallel
 //! run width, default all cores), `--seed S`, `--full` (all six minis
 //! instead of the three fastest), `--out FILE`.
 
 use cupc::experiments::median;
+use cupc::service::{run_batch, BatchOptions, Cache, DataSource, JobSpec, Manifest};
 use cupc::sim::batches::{random_batch, random_s_batch};
-use cupc::sim::datasets;
+use cupc::sim::{datasets, scenarios};
 use cupc::skeleton::engine::{CiEngine, NativeEngine};
-use cupc::skeleton::{available_threads, run as run_skeleton, Config, EngineKind, Variant};
+use cupc::skeleton::{
+    available_threads, run as run_skeleton, Config, EngineKind, OrientRule, Variant,
+};
 use cupc::stats::corr::correlation_matrix;
 use cupc::util::cli::{bench_argv, Args};
 use cupc::util::rng::Pcg;
-use cupc::util::timer::median_time;
+use cupc::util::timer::{median_time, Timer};
 
 struct KernelRow {
     kernel: &'static str,
@@ -33,6 +39,13 @@ struct PipelineRow {
     threads: usize,
     secs_t1: f64,
     secs_tn: f64,
+}
+
+struct BatchRow {
+    jobs: usize,
+    job_threads: usize,
+    secs_jt1: f64,
+    secs_jtn: f64,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -146,7 +159,61 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
-    write_json(&out, reps, threads, &kernels, &pipeline)?;
+    // ── batch-runner throughput on the scenario grid ────────────────
+    let manifest = Manifest {
+        jobs: scenarios::default_grid()
+            .into_iter()
+            .map(|sc| JobSpec {
+                name: sc.name.to_string(),
+                source: DataSource::Scenario(sc.name.to_string()),
+                variant: Variant::CupcS,
+                alpha: sc.alpha,
+                max_level: sc.max_level,
+                corr: sc.corr,
+                orient: OrientRule::Standard,
+            })
+            .collect(),
+    };
+    let batch_secs = |job_threads: usize| -> anyhow::Result<f64> {
+        let mut times = Vec::new();
+        for _ in 0..reps.max(1) {
+            // a fresh cache each rep: this measures cold throughput
+            let cache = Cache::new(256 << 20);
+            let opts = BatchOptions {
+                job_threads,
+                threads,
+                cache_bytes: 256 << 20,
+                verbose: false,
+            };
+            let t = Timer::start();
+            run_batch(&manifest, &opts, &cache)?;
+            times.push(t.elapsed_s());
+        }
+        Ok(median(&times))
+    };
+    let secs_jt1 = batch_secs(1)?;
+    let secs_jtn = batch_secs(threads)?;
+    let batch = BatchRow {
+        jobs: manifest.jobs.len(),
+        job_threads: threads,
+        secs_jt1,
+        secs_jtn,
+    };
+    println!(
+        "\n== batch runner: {} scenario-grid jobs, job-threads 1 vs {} ==",
+        batch.jobs, batch.job_threads
+    );
+    println!(
+        "jt=1: {:.4}s ({:.1} jobs/s)   jt={}: {:.4}s ({:.1} jobs/s)   speedup {:.2}x",
+        secs_jt1,
+        batch.jobs as f64 / secs_jt1.max(1e-12),
+        batch.job_threads,
+        secs_jtn,
+        batch.jobs as f64 / secs_jtn.max(1e-12),
+        secs_jt1 / secs_jtn.max(1e-12)
+    );
+
+    write_json(&out, reps, threads, &kernels, &pipeline, &batch)?;
     println!("\nwrote {out}");
     Ok(())
 }
@@ -159,10 +226,11 @@ fn write_json(
     threads: usize,
     kernels: &[KernelRow],
     pipeline: &[PipelineRow],
+    batch: &BatchRow,
 ) -> anyhow::Result<()> {
     let mut j = String::new();
     j.push_str("{\n");
-    j.push_str("  \"schema\": \"cupc-bench-engines/v1\",\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v2\",\n");
     j.push_str(&format!("  \"reps\": {reps},\n"));
     j.push_str(&format!("  \"threads\": {threads},\n"));
     j.push_str("  \"kernels\": [\n");
@@ -188,7 +256,19 @@ fn write_json(
             r.secs_t1 / r.secs_tn.max(1e-12)
         ));
     }
-    j.push_str("  ]\n");
+    j.push_str("  ],\n");
+    j.push_str(&format!(
+        "  \"batch\": {{\"jobs\": {}, \"job_threads\": {}, \
+         \"seconds_jobthreads1\": {:.6}, \"seconds_jobthreadsN\": {:.6}, \
+         \"jobs_per_sec_jt1\": {:.3}, \"jobs_per_sec_jtN\": {:.3}, \"speedup\": {:.3}}}\n",
+        batch.jobs,
+        batch.job_threads,
+        batch.secs_jt1,
+        batch.secs_jtn,
+        batch.jobs as f64 / batch.secs_jt1.max(1e-12),
+        batch.jobs as f64 / batch.secs_jtn.max(1e-12),
+        batch.secs_jt1 / batch.secs_jtn.max(1e-12)
+    ));
     j.push_str("}\n");
     std::fs::write(path, j)?;
     Ok(())

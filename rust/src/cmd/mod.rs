@@ -1,5 +1,6 @@
 //! CLI subcommand dispatch (binary-only module).
 
+pub mod batch;
 pub mod engines;
 pub mod experiment;
 pub mod run;
@@ -11,6 +12,7 @@ use cupc::util::cli::Args;
 pub fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => run::main(args),
+        Some("batch") => batch::main(args),
         Some("simulate") => simulate::main(args),
         Some("experiment") => experiment::main(args),
         Some("engines") => engines::main(args),
@@ -30,6 +32,8 @@ USAGE:
            [--engine native|xla] [--alpha 0.01] [--max-level L]
            [--beta B --gamma G --theta T --delta D] [--threads N]
            [--orient standard|majority] [--verbose]
+  cupc batch --manifest jobs.json [--out results.jsonl] [--stats FILE]
+           [--job-threads J] [--threads N] [--cache-mb 256] [--verbose]
   cupc simulate --n 1000 --m 10000 --d 0.1 --seed 1 --out data.csv
   cupc experiment <table2|fig5|fig6|fig7|fig8|fig9|fig10|ablation>
            [--scale small|paper] [--engine native|xla] [--reps 1]

@@ -15,7 +15,10 @@
 //!   on the request path.
 //!
 //! Entry point: [`api::pc_stable_corr`] / [`api::pc_stable_data`]
-//! (or the `cupc` binary).
+//! (or the `cupc` binary). Fleets of runs — many datasets, alphas,
+//! correlation kinds — go through the [`service`] batch layer
+//! (`cupc batch`), which schedules jobs under one thread budget and
+//! caches correlation matrices and results content-addressed.
 
 pub mod api;
 pub mod data;
@@ -24,6 +27,7 @@ pub mod graph;
 pub mod metrics;
 pub mod orient;
 pub mod runtime;
+pub mod service;
 pub mod sim;
 pub mod skeleton;
 pub mod stats;

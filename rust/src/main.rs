@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //!   run         PC-stable on a dataset (registry name or CSV file)
+//!   batch       run a JSON manifest of jobs under one thread budget
+//!               with a shared content-addressed result cache
 //!   simulate    generate a synthetic dataset CSV (paper §5.6 protocol)
 //!   experiment  regenerate a paper table/figure (table2, fig5..fig10)
 //!   engines     smoke-check the native and XLA engines against each other

@@ -1,0 +1,503 @@
+//! Content-addressed in-process result cache with an LRU byte budget.
+//!
+//! Two layers mirror the two expensive phases of a PC job:
+//!
+//! * **data bytes + correlation kind → correlation matrix** — repeated
+//!   alphas / variants / level caps over one dataset skip the gram
+//!   computation entirely;
+//! * **correlation bytes + run parameters → [`JobResultCore`]** — an
+//!   identical job resubmitted while the cache is warm skips the whole
+//!   skeleton + orientation run.
+//!
+//! Keys are 128-bit content hashes (two independent 64-bit streams over
+//! the same bytes — not cryptographic, but a practical collision floor
+//! far below the job counts a single process sees). Values are `Arc`s,
+//! so a hit is a pointer clone and cached-vs-recomputed results are
+//! bitwise interchangeable by construction. Eviction is
+//! least-recently-touched under a byte budget; an entry larger than the
+//! whole budget is simply not cached (it would evict everything and
+//! still not fit).
+//!
+//! Determinism: the cache can change *when* work happens, never *what*
+//! it produces — values are exactly the bytes a cold computation would
+//! produce, so warm and cold batch runs render identical results files
+//! (gated by `tests/batch_runner.rs`).
+
+use super::report::JobResultCore;
+use crate::skeleton::{OrientRule, Variant};
+use crate::stats::corr::{CorrKind, DataMatrix};
+use std::collections::{HashMap, HashSet};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// 128-bit content key.
+pub type Key = (u64, u64);
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+/// splitmix64-style constant for the second, independent stream
+const MIX_OFFSET: u64 = 0x6c62272e07bb0142;
+const MIX_PRIME: u64 = 0x9e3779b97f4a7c15;
+
+/// Two-stream byte hasher: FNV-1a plus a rotate-multiply accumulator.
+/// Chunking never matters — `write(a); write(b)` ≡ `write(a ++ b)`.
+pub struct ContentHasher {
+    a: u64,
+    b: u64,
+}
+
+impl Default for ContentHasher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ContentHasher {
+    pub fn new() -> Self {
+        ContentHasher {
+            a: FNV_OFFSET,
+            b: MIX_OFFSET,
+        }
+    }
+
+    pub fn write(&mut self, bytes: &[u8]) {
+        for &x in bytes {
+            self.a = (self.a ^ x as u64).wrapping_mul(FNV_PRIME);
+            self.b = (self.b ^ x as u64).wrapping_mul(MIX_PRIME).rotate_left(17);
+        }
+    }
+
+    pub fn write_u8(&mut self, x: u8) {
+        self.write(&[x]);
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        self.write(&x.to_le_bytes());
+    }
+
+    /// Hash the exact bit patterns (not the numeric values): the cache
+    /// must distinguish inputs that differ in any bit.
+    pub fn write_f64s(&mut self, xs: &[f64]) {
+        for x in xs {
+            self.write(&x.to_le_bytes());
+        }
+    }
+
+    pub fn finish(&self) -> Key {
+        (self.a, self.b)
+    }
+}
+
+/// Key for the correlation layer: data bytes + shape + estimator kind.
+pub fn data_key(data: &DataMatrix, kind: CorrKind) -> Key {
+    let mut h = ContentHasher::new();
+    h.write_u64(data.m as u64);
+    h.write_u64(data.n as u64);
+    h.write_u8(kind.tag());
+    h.write_f64s(&data.x);
+    h.finish()
+}
+
+/// Key for the result layer: correlation bytes + shape + run parameters.
+#[allow(clippy::too_many_arguments)] // a key is its full parameter list
+pub fn result_key(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    alpha: f64,
+    max_level: Option<usize>,
+    variant: Variant,
+    orient: OrientRule,
+) -> Key {
+    let mut h = ContentHasher::new();
+    h.write_u64(n as u64);
+    h.write_u64(m as u64);
+    h.write_f64s(&[alpha]);
+    h.write_u64(max_level.map(|l| l as u64).unwrap_or(u64::MAX));
+    h.write_u8(super::job::variant_tag(variant));
+    h.write_u8(super::job::orient_tag(orient));
+    h.write_f64s(corr);
+    h.finish()
+}
+
+enum Slot {
+    Corr(Arc<Vec<f64>>),
+    Result(Arc<JobResultCore>),
+}
+
+struct Entry {
+    value: Slot,
+    bytes: usize,
+    stamp: u64,
+}
+
+/// bookkeeping overhead charged per entry on top of the payload
+const ENTRY_OVERHEAD: usize = 64;
+
+struct Inner {
+    map: HashMap<Key, Entry>,
+    clock: u64,
+    bytes: usize,
+    budget: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Thread-safe cache shared by every job worker of a batch run.
+pub struct Cache {
+    inner: Mutex<Inner>,
+    /// keys currently being computed (in-flight coalescing)
+    inflight: Mutex<HashSet<Key>>,
+    inflight_cv: Condvar,
+}
+
+/// The exclusive right to compute one key's value. Dropping the claim —
+/// normally after `put_*`, but also during unwinding — releases the key
+/// and wakes every waiter, so a failed or panicked computation can
+/// never strand the other workers.
+pub struct ComputeClaim<'a> {
+    cache: &'a Cache,
+    key: Key,
+}
+
+impl Drop for ComputeClaim<'_> {
+    fn drop(&mut self) {
+        let mut g = self.cache.inflight.lock().unwrap();
+        g.remove(&self.key);
+        drop(g);
+        self.cache.inflight_cv.notify_all();
+    }
+}
+
+/// Aggregate counters (the stats stream's trailing record).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub entries: usize,
+    pub bytes: usize,
+    pub budget: usize,
+}
+
+impl Cache {
+    pub fn new(budget_bytes: usize) -> Self {
+        Cache {
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                clock: 0,
+                bytes: 0,
+                budget: budget_bytes,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+            inflight: Mutex::new(HashSet::new()),
+            inflight_cv: Condvar::new(),
+        }
+    }
+
+    /// Claim the right to compute `key`'s value, coalescing concurrent
+    /// computations of the same content: `Some(claim)` means the caller
+    /// is the computer (put the value, then drop the claim); `None`
+    /// means another thread held the claim and has since released it —
+    /// re-check the cache (the value is there unless the computer
+    /// failed or the entry was evicted immediately, in which case a
+    /// fresh `claim_compute` will claim). Without this, N jobs over the
+    /// same dataset would each run the full gram and the amortization
+    /// would vanish exactly when jobs run concurrently.
+    pub fn claim_compute(&self, key: Key) -> Option<ComputeClaim<'_>> {
+        let mut g = self.inflight.lock().unwrap();
+        if g.insert(key) {
+            return Some(ComputeClaim { cache: self, key });
+        }
+        while g.contains(&key) {
+            g = self.inflight_cv.wait(g).unwrap();
+        }
+        None
+    }
+
+    pub fn get_corr(&self, key: Key) -> Option<Arc<Vec<f64>>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = match g.map.get_mut(&key) {
+            Some(Entry {
+                value: Slot::Corr(v),
+                stamp,
+                ..
+            }) => {
+                *stamp = clock;
+                Some(v.clone())
+            }
+            _ => None,
+        };
+        if found.is_some() {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+        }
+        found
+    }
+
+    pub fn get_result(&self, key: Key) -> Option<Arc<JobResultCore>> {
+        let mut g = self.inner.lock().unwrap();
+        g.clock += 1;
+        let clock = g.clock;
+        let found = match g.map.get_mut(&key) {
+            Some(Entry {
+                value: Slot::Result(v),
+                stamp,
+                ..
+            }) => {
+                *stamp = clock;
+                Some(v.clone())
+            }
+            _ => None,
+        };
+        if found.is_some() {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+        }
+        found
+    }
+
+    pub fn put_corr(&self, key: Key, v: Arc<Vec<f64>>) {
+        let bytes = v.len() * std::mem::size_of::<f64>() + ENTRY_OVERHEAD;
+        self.put(key, bytes, Slot::Corr(v));
+    }
+
+    pub fn put_result(&self, key: Key, v: Arc<JobResultCore>) {
+        let bytes = v.approx_bytes() + ENTRY_OVERHEAD;
+        self.put(key, bytes, Slot::Result(v));
+    }
+
+    fn put(&self, key: Key, bytes: usize, value: Slot) {
+        let mut g = self.inner.lock().unwrap();
+        if bytes > g.budget {
+            return; // larger than the whole budget: not cacheable
+        }
+        g.clock += 1;
+        let stamp = g.clock;
+        if let Some(old) = g.map.insert(key, Entry { value, bytes, stamp }) {
+            g.bytes -= old.bytes;
+        }
+        g.bytes += bytes;
+        while g.bytes > g.budget {
+            // evict the least-recently-touched entry; the entry just
+            // inserted carries the newest stamp so it survives
+            let victim = g
+                .map
+                .iter()
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(k, _)| *k);
+            match victim {
+                Some(k) if k != key => {
+                    let e = g.map.remove(&k).unwrap();
+                    g.bytes -= e.bytes;
+                    g.evictions += 1;
+                }
+                _ => break,
+            }
+        }
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len(),
+            bytes: g.bytes,
+            budget: g.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_data(seed: u64) -> DataMatrix {
+        use crate::util::rng::Pcg;
+        let (m, n) = (20, 4);
+        let mut rng = Pcg::seeded(seed);
+        let x: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        DataMatrix::new(x, m, n)
+    }
+
+    #[test]
+    fn hashing_is_stable_and_chunking_invariant() {
+        let mut one = ContentHasher::new();
+        one.write(b"abcdef");
+        let mut split = ContentHasher::new();
+        split.write(b"ab");
+        split.write(b"cdef");
+        assert_eq!(one.finish(), split.finish());
+
+        let d = toy_data(1);
+        assert_eq!(
+            data_key(&d, CorrKind::Pearson),
+            data_key(&d, CorrKind::Pearson),
+            "same input must key identically across calls"
+        );
+    }
+
+    #[test]
+    fn keys_separate_distinct_inputs() {
+        let d1 = toy_data(1);
+        let d2 = toy_data(2);
+        assert_ne!(data_key(&d1, CorrKind::Pearson), data_key(&d2, CorrKind::Pearson));
+        assert_ne!(
+            data_key(&d1, CorrKind::Pearson),
+            data_key(&d1, CorrKind::Spearman),
+            "the correlation kind is part of the identity"
+        );
+        // shape is hashed, not just bytes: 4×2 vs 2×4 of the same values
+        let a = DataMatrix::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 4, 2);
+        let b = DataMatrix::new(vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0], 2, 4);
+        assert_ne!(data_key(&a, CorrKind::Pearson), data_key(&b, CorrKind::Pearson));
+    }
+
+    #[test]
+    fn result_keys_separate_run_parameters() {
+        let corr = vec![1.0, 0.5, 0.5, 1.0];
+        let base = result_key(
+            &corr,
+            2,
+            100,
+            0.01,
+            None,
+            Variant::CupcS,
+            OrientRule::Standard,
+        );
+        for other in [
+            result_key(&corr, 2, 100, 0.05, None, Variant::CupcS, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, Some(2), Variant::CupcS, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, None, Variant::CupcE, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, None, Variant::CupcS, OrientRule::Majority),
+            result_key(&corr, 2, 200, 0.01, None, Variant::CupcS, OrientRule::Standard),
+        ] {
+            assert_ne!(base, other);
+        }
+    }
+
+    fn corr_of(len: usize, fill: f64) -> Arc<Vec<f64>> {
+        Arc::new(vec![fill; len])
+    }
+
+    #[test]
+    fn get_returns_the_exact_cached_value() {
+        let cache = Cache::new(1 << 20);
+        let v = corr_of(16, 0.25);
+        cache.put_corr((1, 1), v.clone());
+        let got = cache.get_corr((1, 1)).expect("hit");
+        assert_eq!(*got, *v, "cached value must be bitwise identical");
+        assert!(cache.get_corr((2, 2)).is_none());
+        let st = cache.stats();
+        assert_eq!((st.hits, st.misses), (1, 1));
+    }
+
+    #[test]
+    fn lru_evicts_least_recently_touched_under_byte_budget() {
+        // each entry: 16 f64 = 128 bytes + overhead 64 = 192; budget
+        // fits two entries but not three
+        let budget = 2 * 192 + 10;
+        let cache = Cache::new(budget);
+        cache.put_corr((1, 0), corr_of(16, 1.0));
+        cache.put_corr((2, 0), corr_of(16, 2.0));
+        // touch (1,0) so (2,0) becomes the LRU victim
+        assert!(cache.get_corr((1, 0)).is_some());
+        cache.put_corr((3, 0), corr_of(16, 3.0));
+        assert!(cache.get_corr((1, 0)).is_some(), "recently touched survives");
+        assert!(cache.get_corr((2, 0)).is_none(), "LRU entry evicted");
+        assert!(cache.get_corr((3, 0)).is_some(), "new entry present");
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert!(st.bytes <= st.budget, "{} > {}", st.bytes, st.budget);
+        assert_eq!(st.entries, 2);
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let cache = Cache::new(100);
+        cache.put_corr((1, 0), corr_of(1000, 0.0)); // 8064 bytes > 100
+        assert!(cache.get_corr((1, 0)).is_none());
+        assert_eq!(cache.stats().entries, 0);
+        assert_eq!(cache.stats().bytes, 0);
+    }
+
+    #[test]
+    fn reinsert_replaces_without_double_counting() {
+        let cache = Cache::new(1 << 20);
+        cache.put_corr((1, 0), corr_of(16, 1.0));
+        let before = cache.stats().bytes;
+        cache.put_corr((1, 0), corr_of(16, 2.0));
+        assert_eq!(cache.stats().bytes, before, "same size, same accounting");
+        assert_eq!(cache.stats().entries, 1);
+        assert_eq!(*cache.get_corr((1, 0)).unwrap(), vec![2.0; 16]);
+    }
+
+    #[test]
+    fn compute_claims_are_exclusive_and_reclaimable() {
+        let cache = Cache::new(1 << 20);
+        let claim = cache.claim_compute((1, 1));
+        assert!(claim.is_some(), "first claimer computes");
+        drop(claim);
+        assert!(
+            cache.claim_compute((1, 1)).is_some(),
+            "a released key is claimable again (e.g. after a failed computation)"
+        );
+        // distinct keys never interfere
+        let a = cache.claim_compute((3, 3));
+        let b = cache.claim_compute((4, 4));
+        assert!(a.is_some() && b.is_some());
+    }
+
+    #[test]
+    fn concurrent_claimers_coalesce_on_the_computer() {
+        use std::sync::mpsc;
+        let cache = Arc::new(Cache::new(1 << 20));
+        let claim = cache.claim_compute((2, 2)).unwrap();
+        let (tx, rx) = mpsc::channel();
+        let c2 = cache.clone();
+        let waiter = std::thread::spawn(move || {
+            let got = c2.claim_compute((2, 2));
+            tx.send(got.is_none()).unwrap();
+        });
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "the second claimer must block while the key is in flight"
+        );
+        cache.put_corr((2, 2), corr_of(4, 1.0));
+        drop(claim);
+        let waited = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("dropping the claim must wake the waiter");
+        assert!(waited, "the waiter gets None and re-checks the cache");
+        assert!(cache.get_corr((2, 2)).is_some(), "the value is there to re-check");
+        waiter.join().unwrap();
+    }
+
+    #[test]
+    fn corr_and_result_layers_do_not_alias() {
+        use crate::service::report::JobResultCore;
+        let cache = Cache::new(1 << 20);
+        cache.put_corr((7, 7), corr_of(4, 0.5));
+        // a result lookup on the same key must miss, not panic or alias
+        assert!(cache.get_result((7, 7)).is_none());
+        let core = Arc::new(JobResultCore {
+            n: 2,
+            m: 10,
+            levels: vec![],
+            skeleton_edges: vec![(0, 1)],
+            directed: vec![],
+            undirected: vec![(0, 1)],
+        });
+        cache.put_result((8, 8), core.clone());
+        assert_eq!(cache.get_result((8, 8)).as_deref(), Some(&*core));
+        assert!(cache.get_corr((8, 8)).is_none());
+    }
+}

@@ -1,0 +1,417 @@
+//! Job specifications and the batch manifest.
+//!
+//! A [`JobSpec`] names a data source — a CSV file, a registered
+//! [`crate::sim::datasets`] entry, or a [`crate::sim::scenarios`] grid
+//! point — plus the run parameters (schedule variant, alpha, level cap,
+//! correlation kind, orientation rule). A [`Manifest`] is an ordered
+//! list of jobs parsed from JSON (`cupc batch --manifest jobs.json`):
+//!
+//! ```json
+//! {"jobs": [
+//!   {"name": "a", "dataset": "nci60-mini", "variant": "cups", "max_level": 1},
+//!   {"csv": "data.csv", "alpha": 0.05, "corr": "spearman"},
+//!   {"scenario": "grn-mid", "orient": "majority"}
+//! ]}
+//! ```
+//!
+//! Exactly one of `csv` / `dataset` / `scenario` addresses the data.
+//! Everything else is optional: `name` defaults to `job-<index>`,
+//! `variant` to `cups`, `orient` to `standard`; `alpha`, `max_level`
+//! and `corr` default to 0.01 / uncapped / `pearson` — except for
+//! scenario sources, where they default to the grid point's own values
+//! so naming a scenario reproduces it (explicit keys, including
+//! `"max_level": null` for uncapped, always override). Dataset and
+//! scenario names are validated at parse time so a typo fails before
+//! any job runs.
+
+use crate::sim::{datasets, scenarios};
+use crate::skeleton::{Config, OrientRule, Variant};
+use crate::stats::corr::CorrKind;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Where a job's observational data comes from.
+#[derive(Clone, Debug, PartialEq)]
+pub enum DataSource {
+    /// CSV file on disk (samples × variables, optional header)
+    Csv(PathBuf),
+    /// entry of the Table-1 analog registry (`sim::datasets`)
+    Dataset(String),
+    /// point of the conformance grid (`sim::scenarios::default_grid`)
+    Scenario(String),
+}
+
+impl DataSource {
+    /// Stable display form used in report records.
+    pub fn label(&self) -> String {
+        match self {
+            DataSource::Csv(p) => format!("csv:{}", p.display()),
+            DataSource::Dataset(n) => format!("dataset:{n}"),
+            DataSource::Scenario(n) => format!("scenario:{n}"),
+        }
+    }
+}
+
+/// One PC run: data source + run parameters.
+///
+/// Determinism note: every variant except `parcpu` produces
+/// bit-reproducible records (including per-level test counts — the
+/// pipeline's thread-count invariance). `parcpu`'s per-level *test
+/// counts* and first-found sepsets are scheduling-dependent by design,
+/// so the batch determinism contract covers the deterministic
+/// schedules; `parcpu` jobs still produce the identical skeleton.
+#[derive(Clone, Debug)]
+pub struct JobSpec {
+    pub name: String,
+    pub source: DataSource,
+    pub variant: Variant,
+    pub alpha: f64,
+    pub max_level: Option<usize>,
+    pub corr: CorrKind,
+    pub orient: OrientRule,
+}
+
+impl JobSpec {
+    /// The skeleton config for this job at a leased worker width.
+    pub fn config(&self, threads: usize) -> Config {
+        Config {
+            alpha: self.alpha,
+            max_level: self.max_level,
+            variant: self.variant,
+            orient: self.orient,
+            ..Config::default()
+        }
+        .with_threads(threads)
+    }
+
+    pub fn variant_name(&self) -> &'static str {
+        variant_name(self.variant)
+    }
+
+    pub fn orient_name(&self) -> &'static str {
+        match self.orient {
+            OrientRule::Standard => "standard",
+            OrientRule::Majority => "majority",
+        }
+    }
+}
+
+/// Canonical CLI spelling of a variant.
+pub fn variant_name(v: Variant) -> &'static str {
+    match v {
+        Variant::Serial => "serial",
+        Variant::ParallelCpu => "parcpu",
+        Variant::CupcE => "cupc-e",
+        Variant::CupcS => "cupc-s",
+        Variant::Baseline1 => "baseline1",
+        Variant::Baseline2 => "baseline2",
+    }
+}
+
+/// Stable tag for content hashing (cache keys depend on it — never
+/// renumber).
+pub fn variant_tag(v: Variant) -> u8 {
+    match v {
+        Variant::Serial => 0,
+        Variant::ParallelCpu => 1,
+        Variant::CupcE => 2,
+        Variant::CupcS => 3,
+        Variant::Baseline1 => 4,
+        Variant::Baseline2 => 5,
+    }
+}
+
+/// Stable tag for content hashing.
+pub fn orient_tag(o: OrientRule) -> u8 {
+    match o {
+        OrientRule::Standard => 0,
+        OrientRule::Majority => 1,
+    }
+}
+
+/// An ordered list of jobs. Record order in the results file is
+/// manifest order regardless of scheduling.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub jobs: Vec<JobSpec>,
+}
+
+impl Manifest {
+    /// Parse a manifest document. Errors name the offending job index.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).context("parsing manifest JSON")?;
+        let jobs_json = root
+            .get("jobs")
+            .and_then(Json::as_array)
+            .context("manifest must be an object with a \"jobs\" array")?;
+        ensure!(!jobs_json.is_empty(), "manifest has no jobs");
+        let mut jobs = Vec::with_capacity(jobs_json.len());
+        for (idx, j) in jobs_json.iter().enumerate() {
+            jobs.push(parse_job(j, idx).with_context(|| format!("job #{idx}"))?);
+        }
+        let mut names: Vec<&str> = jobs.iter().map(|j| j.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            ensure!(
+                w[0] != w[1],
+                "duplicate job name {:?} (records are keyed by name)",
+                w[0]
+            );
+        }
+        Ok(Manifest { jobs })
+    }
+
+    /// Load and parse a manifest file.
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text).with_context(|| format!("manifest {}", path.display()))
+    }
+}
+
+fn parse_job(j: &Json, idx: usize) -> Result<JobSpec> {
+    ensure!(
+        matches!(j, Json::Obj(_)),
+        "each job must be a JSON object, got {j:?}"
+    );
+    let src_keys = ["csv", "dataset", "scenario"]
+        .iter()
+        .filter(|&&k| j.get(k).is_some())
+        .count();
+    ensure!(
+        src_keys == 1,
+        "exactly one of \"csv\", \"dataset\", \"scenario\" is required (found {src_keys})"
+    );
+    let source = if let Some(p) = j.get("csv") {
+        DataSource::Csv(PathBuf::from(
+            p.as_str().context("\"csv\" must be a path string")?,
+        ))
+    } else if let Some(d) = j.get("dataset") {
+        let name = d.as_str().context("\"dataset\" must be a string")?;
+        ensure!(
+            datasets::spec(name).is_some(),
+            "unknown dataset {name:?} (see `cupc` for the registry)"
+        );
+        DataSource::Dataset(name.to_string())
+    } else {
+        let name = j
+            .get("scenario")
+            .unwrap()
+            .as_str()
+            .context("\"scenario\" must be a string")?;
+        ensure!(
+            scenarios::find(name).is_some(),
+            "unknown scenario {name:?} (see sim::scenarios::default_grid)"
+        );
+        DataSource::Scenario(name.to_string())
+    };
+    // scenario sources default alpha / max_level / corr to the grid
+    // point's own values, so `{"scenario": "rank-grn"}` reproduces the
+    // conformance point instead of silently running it under the global
+    // defaults; explicit keys (including `"max_level": null`) override
+    let (default_alpha, default_max_level, default_corr) = match &source {
+        DataSource::Scenario(sname) => {
+            let sc = scenarios::find(sname).expect("scenario validated above");
+            (sc.alpha, sc.max_level, sc.corr)
+        }
+        _ => (0.01, None, CorrKind::Pearson),
+    };
+    let name = match j.get("name") {
+        Some(v) => v.as_str().context("\"name\" must be a string")?.to_string(),
+        None => format!("job-{idx}"),
+    };
+    let variant = match j.get("variant") {
+        Some(v) => {
+            let s = v.as_str().context("\"variant\" must be a string")?;
+            Variant::parse(s).with_context(|| format!("unknown variant {s:?}"))?
+        }
+        None => Variant::CupcS,
+    };
+    let alpha = match j.get("alpha") {
+        Some(v) => v.as_f64().context("\"alpha\" must be a number")?,
+        None => default_alpha,
+    };
+    ensure!(
+        alpha > 0.0 && alpha < 1.0,
+        "alpha must be in (0, 1), got {alpha}"
+    );
+    let max_level = match j.get("max_level") {
+        None => default_max_level,
+        Some(Json::Null) => None,
+        Some(v) => Some(
+            v.as_usize()
+                .context("\"max_level\" must be a non-negative integer or null")?,
+        ),
+    };
+    let corr = match j.get("corr") {
+        Some(v) => {
+            let s = v.as_str().context("\"corr\" must be a string")?;
+            CorrKind::parse(s)
+                .with_context(|| format!("unknown corr kind {s:?} (pearson|spearman)"))?
+        }
+        None => default_corr,
+    };
+    let orient = match j.get("orient") {
+        Some(v) => match v.as_str().context("\"orient\" must be a string")? {
+            "standard" => OrientRule::Standard,
+            "majority" => OrientRule::Majority,
+            other => bail!("unknown orient rule {other:?} (standard|majority)"),
+        },
+        None => OrientRule::Standard,
+    };
+    Ok(JobSpec {
+        name,
+        source,
+        variant,
+        alpha,
+        max_level,
+        corr,
+        orient,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_a_full_manifest() {
+        let m = Manifest::parse(
+            r#"{"jobs": [
+                {"name": "a", "dataset": "nci60-mini", "variant": "cupe",
+                 "alpha": 0.05, "max_level": 2, "corr": "spearman",
+                 "orient": "majority"},
+                {"csv": "some/data.csv"},
+                {"scenario": "grn-mid", "max_level": null}
+            ]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.jobs.len(), 3);
+        let a = &m.jobs[0];
+        assert_eq!(a.name, "a");
+        assert_eq!(a.source, DataSource::Dataset("nci60-mini".into()));
+        assert_eq!(a.variant, Variant::CupcE);
+        assert_eq!(a.alpha, 0.05);
+        assert_eq!(a.max_level, Some(2));
+        assert_eq!(a.corr, CorrKind::Spearman);
+        assert_eq!(a.orient, OrientRule::Majority);
+
+        let b = &m.jobs[1];
+        assert_eq!(b.name, "job-1", "name defaults to the index");
+        assert_eq!(b.source, DataSource::Csv(PathBuf::from("some/data.csv")));
+        assert_eq!(b.variant, Variant::CupcS, "variant defaults to cups");
+        assert_eq!(b.alpha, 0.01);
+        assert_eq!(b.max_level, None);
+        assert_eq!(b.corr, CorrKind::Pearson);
+        assert_eq!(b.orient, OrientRule::Standard);
+
+        assert_eq!(m.jobs[2].source, DataSource::Scenario("grn-mid".into()));
+        assert_eq!(m.jobs[2].max_level, None, "explicit null is uncapped");
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        for (text, needle) in [
+            ("[]", "\"jobs\" array"),
+            (r#"{"jobs": []}"#, "no jobs"),
+            (r#"{"jobs": [{}]}"#, "exactly one of"),
+            (
+                r#"{"jobs": [{"csv": "a.csv", "dataset": "nci60-mini"}]}"#,
+                "exactly one of",
+            ),
+            (r#"{"jobs": [{"dataset": "nope"}]}"#, "unknown dataset"),
+            (r#"{"jobs": [{"scenario": "nope"}]}"#, "unknown scenario"),
+            (
+                r#"{"jobs": [{"csv": "a.csv", "variant": "warp"}]}"#,
+                "unknown variant",
+            ),
+            (r#"{"jobs": [{"csv": "a.csv", "alpha": 1.5}]}"#, "alpha"),
+            (
+                r#"{"jobs": [{"csv": "a.csv", "max_level": -1}]}"#,
+                "max_level",
+            ),
+            (
+                r#"{"jobs": [{"csv": "a.csv", "corr": "kendall"}]}"#,
+                "unknown corr",
+            ),
+            (
+                r#"{"jobs": [{"name": "x", "csv": "a.csv"},
+                             {"name": "x", "csv": "b.csv"}]}"#,
+                "duplicate job name",
+            ),
+        ] {
+            let err = Manifest::parse(text).expect_err(text);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{text}: {msg}");
+        }
+    }
+
+    #[test]
+    fn scenario_jobs_default_to_the_grid_points_parameters() {
+        let m = Manifest::parse(r#"{"jobs": [{"scenario": "rank-grn"}]}"#).unwrap();
+        let sc = crate::sim::scenarios::find("rank-grn").unwrap();
+        let j = &m.jobs[0];
+        assert_eq!(j.alpha, sc.alpha);
+        assert_eq!(j.max_level, sc.max_level);
+        assert_eq!(j.corr, sc.corr);
+        assert_eq!(j.corr, CorrKind::Spearman, "rank-grn is a Spearman point");
+        assert_eq!(j.max_level, Some(2), "rank-grn is capped at 2");
+        // explicit keys still override, including null for uncapped
+        let m = Manifest::parse(
+            r#"{"jobs": [{"scenario": "rank-grn", "corr": "pearson",
+                          "max_level": null, "alpha": 0.05}]}"#,
+        )
+        .unwrap();
+        let j = &m.jobs[0];
+        assert_eq!(j.corr, CorrKind::Pearson);
+        assert_eq!(j.max_level, None);
+        assert_eq!(j.alpha, 0.05);
+        // non-scenario sources keep the global defaults
+        let m = Manifest::parse(r#"{"jobs": [{"csv": "a.csv"}]}"#).unwrap();
+        assert_eq!(m.jobs[0].alpha, 0.01);
+        assert_eq!(m.jobs[0].max_level, None);
+        assert_eq!(m.jobs[0].corr, CorrKind::Pearson);
+    }
+
+    #[test]
+    fn config_carries_job_parameters() {
+        let m = Manifest::parse(
+            r#"{"jobs": [{"scenario": "rank-er", "variant": "serial",
+                          "alpha": 0.05, "max_level": 3, "orient": "majority"}]}"#,
+        )
+        .unwrap();
+        let cfg = m.jobs[0].config(5);
+        assert_eq!(cfg.alpha, 0.05);
+        assert_eq!(cfg.max_level, Some(3));
+        assert_eq!(cfg.variant, Variant::Serial);
+        assert_eq!(cfg.orient, OrientRule::Majority);
+        assert_eq!(cfg.threads, 5);
+    }
+
+    #[test]
+    fn tags_are_injective() {
+        use crate::sim::scenarios::ALL_VARIANTS;
+        let mut tags: Vec<u8> = ALL_VARIANTS.iter().map(|&v| variant_tag(v)).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), ALL_VARIANTS.len());
+        assert_ne!(
+            orient_tag(OrientRule::Standard),
+            orient_tag(OrientRule::Majority)
+        );
+    }
+
+    #[test]
+    fn labels_are_stable() {
+        assert_eq!(
+            DataSource::Dataset("x".into()).label(),
+            "dataset:x"
+        );
+        assert_eq!(
+            DataSource::Csv(PathBuf::from("a/b.csv")).label(),
+            "csv:a/b.csv"
+        );
+        assert_eq!(DataSource::Scenario("s".into()).label(), "scenario:s");
+    }
+}

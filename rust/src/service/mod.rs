@@ -1,0 +1,35 @@
+//! The multi-job batch service layer — cuPC's amortization story lifted
+//! one level up.
+//!
+//! The paper amortizes fixed cost across many CI tests inside one PC
+//! run; real causal-discovery users (ParallelPC, Le et al. 2015) run
+//! *fleets* of related runs — many datasets, alphas, correlation kinds —
+//! on one machine. This subsystem batches whole PC jobs the same way
+//! the kernels batch tests:
+//!
+//! * [`job`] — [`job::JobSpec`] / [`job::Manifest`]: JSON job manifests
+//!   addressing CSV files, registry datasets, or scenario-grid points;
+//! * [`scheduler`] — [`scheduler::run_batch`]: N jobs in flight under
+//!   one global [`scheduler::ThreadBudget`] shared with each job's
+//!   skeleton pipeline (big jobs borrow idle workers from small ones);
+//! * [`cache`] — [`cache::Cache`]: content-addressed two-layer LRU
+//!   (data → correlation matrix, correlation + config → result) so
+//!   repeated alphas over one dataset skip the gram and repeated jobs
+//!   skip everything;
+//! * [`report`] — deterministic JSON-lines results plus an
+//!   observational stats sidecar.
+//!
+//! **Determinism contract** (extends the pipeline's): the rendered
+//! results stream is bit-identical for any `--job-threads`, any thread
+//! budget, and warm vs. cold cache. Scheduling and caching may only
+//! move wall-clock time. Gated end to end by `tests/batch_runner.rs`.
+
+pub mod cache;
+pub mod job;
+pub mod report;
+pub mod scheduler;
+
+pub use cache::{Cache, CacheStats};
+pub use job::{DataSource, JobSpec, Manifest};
+pub use report::{render_results, render_stats, JobReport, JobResultCore};
+pub use scheduler::{run_batch, run_job, BatchOptions, BatchOutput, ThreadBudget};

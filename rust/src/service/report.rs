@@ -1,0 +1,332 @@
+//! JSON-lines reporting for batch runs.
+//!
+//! Two streams with different contracts:
+//!
+//! * **results** ([`render_results`]) — one record per job, manifest
+//!   order, containing only *deterministic* fields (spec echo, per-level
+//!   tests/removed/edges_after, skeleton and CPDAG edge lists). The
+//!   batch determinism gate requires this stream to be bit-identical
+//!   for any `--job-threads`, any thread budget, and warm vs. cold
+//!   cache — so wall-clock timings and cache hit/miss flags are
+//!   banned here by construction.
+//! * **stats** ([`render_stats`]) — the observational sidecar: per-job
+//!   phase timings, leased worker width, cache hit/miss per layer, and
+//!   a trailing cache-summary record. Useful for throughput tracking,
+//!   never for result comparison.
+
+use super::cache::CacheStats;
+use super::job::JobSpec;
+use crate::api::PcResult;
+use crate::util::json::escape;
+use std::sync::Arc;
+
+/// One level's deterministic bookkeeping.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LevelRow {
+    pub level: usize,
+    pub tests: u64,
+    pub removed: usize,
+    pub edges_after: usize,
+}
+
+/// The deterministic core of a finished job — exactly what the result
+/// cache stores, so a cache hit and a recomputation are interchangeable
+/// by construction (asserted bitwise by the batch suite).
+#[derive(Clone, Debug, PartialEq)]
+pub struct JobResultCore {
+    pub n: usize,
+    pub m: usize,
+    pub levels: Vec<LevelRow>,
+    /// undirected skeleton edges, (i, j) with i < j, row-major order
+    pub skeleton_edges: Vec<(u32, u32)>,
+    /// CPDAG arrows i → j
+    pub directed: Vec<(u32, u32)>,
+    /// CPDAG undirected edges, (i, j) with i < j
+    pub undirected: Vec<(u32, u32)>,
+}
+
+impl JobResultCore {
+    pub fn from_pc(res: &PcResult, n: usize, m: usize) -> Self {
+        let levels = res
+            .skeleton
+            .levels
+            .iter()
+            .map(|l| LevelRow {
+                level: l.level,
+                tests: l.tests,
+                removed: l.removed,
+                edges_after: l.edges_after,
+            })
+            .collect();
+        let as_u32 = |v: Vec<(usize, usize)>| -> Vec<(u32, u32)> {
+            v.into_iter().map(|(i, j)| (i as u32, j as u32)).collect()
+        };
+        JobResultCore {
+            n,
+            m,
+            levels,
+            skeleton_edges: as_u32(res.skeleton.graph.edges()),
+            directed: as_u32(res.cpdag.directed_edges()),
+            undirected: as_u32(res.cpdag.undirected_edges()),
+        }
+    }
+
+    /// Approximate heap footprint, for the cache's byte budget.
+    pub fn approx_bytes(&self) -> usize {
+        self.levels.len() * std::mem::size_of::<LevelRow>()
+            + (self.skeleton_edges.len() + self.directed.len() + self.undirected.len())
+                * std::mem::size_of::<(u32, u32)>()
+            + std::mem::size_of::<Self>()
+    }
+}
+
+/// Everything known about a finished job. Deterministic data lives in
+/// [`JobResultCore`]; the rest is observational and only ever reaches
+/// the stats stream.
+#[derive(Clone, Debug)]
+pub struct JobReport {
+    pub core: Arc<JobResultCore>,
+    /// seconds resolving the data source (CSV read / simulation)
+    pub seconds_load: f64,
+    /// seconds in the correlation phase (≈ 0 on a cache hit)
+    pub seconds_corr: f64,
+    /// seconds in skeleton + orientation (≈ 0 on a cache hit)
+    pub seconds_run: f64,
+    pub corr_cache_hit: bool,
+    pub result_cache_hit: bool,
+    /// workers leased from the shared budget for this job
+    pub threads_used: usize,
+}
+
+fn edges_json(edges: &[(u32, u32)]) -> String {
+    let mut s = String::with_capacity(2 + edges.len() * 8);
+    s.push('[');
+    for (idx, (i, j)) in edges.iter().enumerate() {
+        if idx > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!("[{i},{j}]"));
+    }
+    s.push(']');
+    s
+}
+
+/// One deterministic JSON-lines result record.
+pub fn result_line(spec: &JobSpec, core: &JobResultCore) -> String {
+    let mut s = String::new();
+    s.push_str(&format!(
+        "{{\"job\":\"{}\",\"source\":\"{}\",\"variant\":\"{}\",\"corr\":\"{}\",\
+         \"orient\":\"{}\",\"alpha\":{},\"max_level\":{},\"n\":{},\"m\":{}",
+        escape(&spec.name),
+        escape(&spec.source.label()),
+        spec.variant_name(),
+        spec.corr.name(),
+        spec.orient_name(),
+        spec.alpha,
+        spec.max_level
+            .map(|l| l.to_string())
+            .unwrap_or_else(|| "null".into()),
+        core.n,
+        core.m
+    ));
+    s.push_str(&format!(",\"edges\":{}", core.skeleton_edges.len()));
+    s.push_str(",\"levels\":[");
+    for (idx, l) in core.levels.iter().enumerate() {
+        if idx > 0 {
+            s.push(',');
+        }
+        s.push_str(&format!(
+            "{{\"level\":{},\"tests\":{},\"removed\":{},\"edges_after\":{}}}",
+            l.level, l.tests, l.removed, l.edges_after
+        ));
+    }
+    s.push(']');
+    s.push_str(&format!(",\"skeleton\":{}", edges_json(&core.skeleton_edges)));
+    s.push_str(&format!(",\"directed\":{}", edges_json(&core.directed)));
+    s.push_str(&format!(",\"undirected\":{}", edges_json(&core.undirected)));
+    s.push('}');
+    s
+}
+
+fn hit_str(hit: bool) -> &'static str {
+    if hit {
+        "hit"
+    } else {
+        "miss"
+    }
+}
+
+/// One observational JSON-lines stats record.
+pub fn stats_line(spec: &JobSpec, rep: &JobReport) -> String {
+    format!(
+        "{{\"job\":\"{}\",\"threads\":{},\"corr_cache\":\"{}\",\"result_cache\":\"{}\",\
+         \"seconds_load\":{:.6},\"seconds_corr\":{:.6},\"seconds_run\":{:.6}}}",
+        escape(&spec.name),
+        rep.threads_used,
+        hit_str(rep.corr_cache_hit),
+        hit_str(rep.result_cache_hit),
+        rep.seconds_load,
+        rep.seconds_corr,
+        rep.seconds_run
+    )
+}
+
+/// The deterministic results stream: one line per job, manifest order,
+/// trailing newline.
+pub fn render_results(jobs: &[JobSpec], reports: &[JobReport]) -> String {
+    debug_assert_eq!(jobs.len(), reports.len());
+    let mut s = String::new();
+    for (spec, rep) in jobs.iter().zip(reports) {
+        s.push_str(&result_line(spec, &rep.core));
+        s.push('\n');
+    }
+    s
+}
+
+/// The observational stats stream: per-job lines plus a trailing cache
+/// summary record.
+pub fn render_stats(jobs: &[JobSpec], reports: &[JobReport], cache: &CacheStats) -> String {
+    debug_assert_eq!(jobs.len(), reports.len());
+    let mut s = String::new();
+    for (spec, rep) in jobs.iter().zip(reports) {
+        s.push_str(&stats_line(spec, rep));
+        s.push('\n');
+    }
+    s.push_str(&format!(
+        "{{\"cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\
+         \"bytes\":{},\"budget\":{}}}}}\n",
+        cache.hits, cache.misses, cache.evictions, cache.entries, cache.bytes, cache.budget
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::DataSource;
+    use crate::skeleton::{OrientRule, Variant};
+    use crate::stats::corr::CorrKind;
+    use crate::util::json::Json;
+
+    fn toy_spec() -> JobSpec {
+        JobSpec {
+            name: "toy \"quoted\"".into(),
+            source: DataSource::Scenario("sparse-a01".into()),
+            variant: Variant::CupcS,
+            alpha: 0.01,
+            max_level: Some(2),
+            corr: CorrKind::Pearson,
+            orient: OrientRule::Standard,
+        }
+    }
+
+    fn toy_core() -> JobResultCore {
+        JobResultCore {
+            n: 4,
+            m: 100,
+            levels: vec![
+                LevelRow {
+                    level: 0,
+                    tests: 6,
+                    removed: 2,
+                    edges_after: 4,
+                },
+                LevelRow {
+                    level: 1,
+                    tests: 8,
+                    removed: 1,
+                    edges_after: 3,
+                },
+            ],
+            skeleton_edges: vec![(0, 1), (1, 2), (2, 3)],
+            directed: vec![(0, 1)],
+            undirected: vec![(1, 2), (2, 3)],
+        }
+    }
+
+    #[test]
+    fn result_line_is_valid_json_with_the_deterministic_fields() {
+        let line = result_line(&toy_spec(), &toy_core());
+        let v = Json::parse(&line).unwrap();
+        assert_eq!(v.get("job").unwrap().as_str(), Some("toy \"quoted\""));
+        assert_eq!(v.get("source").unwrap().as_str(), Some("scenario:sparse-a01"));
+        assert_eq!(v.get("variant").unwrap().as_str(), Some("cupc-s"));
+        assert_eq!(v.get("alpha").unwrap().as_f64(), Some(0.01));
+        assert_eq!(v.get("max_level").unwrap().as_usize(), Some(2));
+        assert_eq!(v.get("edges").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("levels").unwrap().as_array().unwrap().len(), 2);
+        assert_eq!(v.get("skeleton").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("directed").unwrap().as_array().unwrap().len(), 1);
+        // no observational fields may leak into the deterministic stream
+        assert!(v.get("seconds_run").is_none());
+        assert!(v.get("corr_cache").is_none());
+        assert!(v.get("threads").is_none());
+    }
+
+    #[test]
+    fn uncapped_max_level_serializes_as_null() {
+        let mut spec = toy_spec();
+        spec.max_level = None;
+        let v = Json::parse(&result_line(&spec, &toy_core())).unwrap();
+        assert!(v.get("max_level").unwrap().is_null());
+    }
+
+    #[test]
+    fn stats_line_is_valid_json_with_the_observational_fields() {
+        let rep = JobReport {
+            core: Arc::new(toy_core()),
+            seconds_load: 0.25,
+            seconds_corr: 0.5,
+            seconds_run: 1.0,
+            corr_cache_hit: true,
+            result_cache_hit: false,
+            threads_used: 3,
+        };
+        let v = Json::parse(&stats_line(&toy_spec(), &rep)).unwrap();
+        assert_eq!(v.get("corr_cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(v.get("result_cache").unwrap().as_str(), Some("miss"));
+        assert_eq!(v.get("threads").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("seconds_run").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn render_streams_are_line_per_job() {
+        let jobs = vec![toy_spec()];
+        let reports = vec![JobReport {
+            core: Arc::new(toy_core()),
+            seconds_load: 0.0,
+            seconds_corr: 0.0,
+            seconds_run: 0.0,
+            corr_cache_hit: false,
+            result_cache_hit: false,
+            threads_used: 1,
+        }];
+        let results = render_results(&jobs, &reports);
+        assert_eq!(results.lines().count(), 1);
+        assert!(results.ends_with('\n'));
+        let cache = CacheStats {
+            hits: 1,
+            misses: 2,
+            evictions: 0,
+            entries: 3,
+            bytes: 1024,
+            budget: 4096,
+        };
+        let stats = render_stats(&jobs, &reports, &cache);
+        assert_eq!(stats.lines().count(), 2, "jobs + cache summary");
+        let last = stats.lines().last().unwrap();
+        let v = Json::parse(last).unwrap();
+        assert_eq!(
+            v.get("cache").unwrap().get("hits").unwrap().as_usize(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn approx_bytes_scales_with_edges() {
+        let small = toy_core();
+        let mut big = toy_core();
+        big.skeleton_edges = (0..1000u32).map(|i| (i, i + 1)).collect();
+        assert!(big.approx_bytes() > small.approx_bytes() + 7000);
+    }
+}

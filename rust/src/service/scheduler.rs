@@ -1,0 +1,492 @@
+//! The batch scheduler: N jobs in flight under one global worker budget.
+//!
+//! Two nested levels of parallelism share a single pool of
+//! `BatchOptions::threads` workers:
+//!
+//! * **across jobs** — up to `job_threads` jobs run concurrently;
+//! * **within a job** — each job leases workers from the shared
+//!   [`ThreadBudget`] and runs its skeleton pipeline at the leased
+//!   width ([`crate::skeleton::Config::with_threads`]).
+//!
+//! The lease policy is work-conserving: a job asks for its fair share of
+//! the *remaining* jobs (so seven small jobs split the budget) but a
+//! job that arrives when the queue has drained is handed every idle
+//! worker — big jobs borrow the workers small jobs no longer need.
+//! Leases are released on job completion, never resized mid-job.
+//!
+//! Determinism: the lease size, the number of job workers, and the
+//! cache state can only change wall-clock time. Per-job results are
+//! thread-count invariant (the pipeline contract), the correlation gram
+//! is blocked identically for any width, cache values are exactly what
+//! a cold computation produces, and reports are collected by manifest
+//! index — so the rendered results stream is bit-identical for any
+//! `job_threads`, any budget, and warm vs. cold cache
+//! (`tests/batch_runner.rs` gates all three).
+
+use super::cache::{self, Cache, CacheStats};
+use super::job::{DataSource, JobSpec, Manifest};
+use super::report::{JobReport, JobResultCore};
+use crate::api::pc_stable_corr;
+use crate::data::csv::load_csv;
+use crate::sim::{datasets, scenarios};
+use crate::skeleton::available_threads;
+use crate::stats::corr::DataMatrix;
+use crate::util::timer::Timer;
+use anyhow::{Context, Result};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+
+/// A counting budget of pipeline workers shared by every in-flight job.
+pub struct ThreadBudget {
+    state: Mutex<BudgetState>,
+    cv: Condvar,
+    total: usize,
+}
+
+struct BudgetState {
+    available: usize,
+    /// callers currently inside `lease` (for fair division)
+    waiters: usize,
+}
+
+impl ThreadBudget {
+    pub fn new(total: usize) -> Self {
+        let total = total.max(1);
+        ThreadBudget {
+            state: Mutex::new(BudgetState {
+                available: total,
+                waiters: 0,
+            }),
+            cv: Condvar::new(),
+            total,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.total
+    }
+
+    /// Lease between 1 and `want` workers, blocking while none are
+    /// available. The grant is capped at the fair share of what is idle
+    /// among concurrent leasers, so simultaneous arrivals split the
+    /// budget instead of the first one draining it.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        let want = want.max(1);
+        let mut st = self.state.lock().unwrap();
+        st.waiters += 1;
+        while st.available == 0 {
+            st = self.cv.wait(st).unwrap();
+        }
+        let fair = (st.available / st.waiters).max(1);
+        let n = fair.min(want).min(st.available);
+        st.available -= n;
+        st.waiters -= 1;
+        drop(st);
+        Lease { budget: self, n }
+    }
+
+    fn release(&self, n: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.available += n;
+        drop(st);
+        self.cv.notify_all();
+    }
+}
+
+/// A held worker allocation; returns the workers on drop.
+pub struct Lease<'a> {
+    budget: &'a ThreadBudget,
+    /// number of workers granted (≥ 1)
+    pub n: usize,
+}
+
+impl Drop for Lease<'_> {
+    fn drop(&mut self) {
+        self.budget.release(self.n);
+    }
+}
+
+/// Batch-run knobs.
+#[derive(Clone, Debug)]
+pub struct BatchOptions {
+    /// jobs in flight at once
+    pub job_threads: usize,
+    /// global pipeline-worker budget shared by all in-flight jobs
+    pub threads: usize,
+    /// cache byte budget
+    pub cache_bytes: usize,
+    /// per-job progress on stderr
+    pub verbose: bool,
+}
+
+impl Default for BatchOptions {
+    fn default() -> Self {
+        BatchOptions {
+            job_threads: 1,
+            threads: available_threads(),
+            cache_bytes: 256 << 20,
+            verbose: false,
+        }
+    }
+}
+
+/// Everything a batch run produces, reports in manifest order.
+pub struct BatchOutput {
+    pub reports: Vec<JobReport>,
+    pub cache: CacheStats,
+}
+
+fn load_data(spec: &JobSpec) -> Result<DataMatrix> {
+    match &spec.source {
+        DataSource::Csv(p) => Ok(load_csv(p)?.0),
+        DataSource::Dataset(name) => {
+            let s = datasets::spec(name).with_context(|| format!("unknown dataset {name:?}"))?;
+            Ok(datasets::generate(s).data)
+        }
+        DataSource::Scenario(name) => {
+            let sc = scenarios::find(name).with_context(|| format!("unknown scenario {name:?}"))?;
+            Ok(sc.generate_data().1)
+        }
+    }
+}
+
+/// Run one job at a leased worker width against the shared cache.
+pub fn run_job(spec: &JobSpec, threads: usize, cache: &Cache) -> Result<JobReport> {
+    let t = Timer::start();
+    let data = load_data(spec).with_context(|| format!("job {:?}", spec.name))?;
+    let seconds_load = t.elapsed_s();
+
+    let t = Timer::start();
+    let dk = cache::data_key(&data, spec.corr);
+    let (corr, corr_cache_hit) = loop {
+        if let Some(c) = cache.get_corr(dk) {
+            break (c, true);
+        }
+        // coalesce concurrent jobs over the same data: one computes the
+        // gram, the others wait on the claim and then re-check the cache
+        if let Some(claim) = cache.claim_compute(dk) {
+            let c = Arc::new(spec.corr.matrix(&data, threads));
+            cache.put_corr(dk, c.clone());
+            drop(claim);
+            break (c, false);
+        }
+    };
+    let seconds_corr = t.elapsed_s();
+
+    let t = Timer::start();
+    let rk = cache::result_key(
+        &corr,
+        data.n,
+        data.m,
+        spec.alpha,
+        spec.max_level,
+        spec.variant,
+        spec.orient,
+    );
+    let (core, result_cache_hit) = loop {
+        if let Some(c) = cache.get_result(rk) {
+            break (c, true);
+        }
+        if let Some(claim) = cache.claim_compute(rk) {
+            let cfg = spec.config(threads);
+            let res = pc_stable_corr(&corr, data.n, data.m, &cfg).map(|r| {
+                let core = Arc::new(JobResultCore::from_pc(&r, data.n, data.m));
+                cache.put_result(rk, core.clone());
+                core
+            });
+            drop(claim); // release before `?` so a failure never strands waiters
+            let core = res
+                .with_context(|| format!("job {:?} ({})", spec.name, spec.source.label()))?;
+            break (core, false);
+        }
+    };
+    let seconds_run = t.elapsed_s();
+
+    Ok(JobReport {
+        core,
+        seconds_load,
+        seconds_corr,
+        seconds_run,
+        corr_cache_hit,
+        result_cache_hit,
+        threads_used: threads,
+    })
+}
+
+/// Run every manifest job, up to `job_threads` concurrently, under one
+/// shared [`ThreadBudget`] and [`Cache`]. Reports come back in manifest
+/// order. On a job failure the batch stops claiming new jobs (jobs
+/// already in flight run to completion) and the lowest-index error is
+/// reported.
+pub fn run_batch(manifest: &Manifest, opts: &BatchOptions, cache: &Cache) -> Result<BatchOutput> {
+    let njobs = manifest.jobs.len();
+    let workers = opts.job_threads.clamp(1, njobs.max(1));
+    let budget = ThreadBudget::new(opts.threads);
+    let mut slots: Vec<Option<Result<JobReport>>> = Vec::with_capacity(njobs);
+    slots.resize_with(njobs, || None);
+
+    if workers <= 1 {
+        for (idx, spec) in manifest.jobs.iter().enumerate() {
+            let lease = budget.lease(budget.total());
+            if opts.verbose {
+                eprintln!("[batch] job {idx} {:?}: {} worker(s)", spec.name, lease.n);
+            }
+            let rep = run_job(spec, lease.n, cache);
+            let failed = rep.is_err();
+            slots[idx] = Some(rep);
+            if failed {
+                break;
+            }
+        }
+    } else {
+        let next = AtomicUsize::new(0);
+        let aborted = AtomicBool::new(false);
+        let results = Mutex::new(slots);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    if aborted.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    let idx = next.fetch_add(1, Ordering::Relaxed);
+                    if idx >= njobs {
+                        break;
+                    }
+                    let spec = &manifest.jobs[idx];
+                    // fair share of the queue that is left; the last
+                    // jobs standing borrow the drained queue's workers
+                    let remaining = njobs - idx;
+                    let want = (budget.total() / workers.min(remaining)).max(1);
+                    let lease = budget.lease(want);
+                    if opts.verbose {
+                        eprintln!("[batch] job {idx} {:?}: {} worker(s)", spec.name, lease.n);
+                    }
+                    let rep = run_job(spec, lease.n, cache);
+                    drop(lease);
+                    if rep.is_err() {
+                        aborted.store(true, Ordering::Relaxed);
+                    }
+                    results.lock().unwrap()[idx] = Some(rep);
+                });
+            }
+        });
+        slots = results.into_inner().unwrap();
+    }
+
+    let mut reports = Vec::with_capacity(njobs);
+    for (idx, slot) in slots.into_iter().enumerate() {
+        // claims are handed out in index order, so a failure (Some(Err))
+        // always precedes the skipped suffix (None) — the real error is
+        // what surfaces
+        let rep = slot
+            .with_context(|| format!("job #{idx} skipped after an earlier job failed"))?
+            .with_context(|| format!("job #{idx} failed"))?;
+        reports.push(rep);
+    }
+    Ok(BatchOutput {
+        reports,
+        cache: cache.stats(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::report::render_results;
+    use crate::skeleton::{OrientRule, Variant};
+    use crate::stats::corr::CorrKind;
+
+    fn scenario_job(name: &str, scenario: &str, alpha: f64, corr: CorrKind) -> JobSpec {
+        JobSpec {
+            name: name.to_string(),
+            source: DataSource::Scenario(scenario.to_string()),
+            variant: Variant::CupcS,
+            alpha,
+            max_level: None,
+            corr,
+            orient: OrientRule::Standard,
+        }
+    }
+
+    #[test]
+    fn budget_grants_are_bounded_and_returned() {
+        let b = ThreadBudget::new(8);
+        assert_eq!(b.total(), 8);
+        {
+            let lone = b.lease(100);
+            assert_eq!(lone.n, 8, "a lone leaser borrows the whole budget");
+        }
+        let small = b.lease(3);
+        assert_eq!(small.n, 3, "want caps the grant");
+        let rest = b.lease(100);
+        assert_eq!(rest.n, 5, "only the idle workers are grantable");
+        drop(small);
+        drop(rest);
+        assert_eq!(b.lease(100).n, 8, "drops return every worker");
+    }
+
+    #[test]
+    fn zero_budget_still_grants_one() {
+        let b = ThreadBudget::new(0);
+        assert_eq!(b.total(), 1, "a budget can never be empty");
+        assert_eq!(b.lease(1).n, 1);
+    }
+
+    #[test]
+    fn exhausted_budget_blocks_until_release() {
+        use std::sync::mpsc;
+        let b = Arc::new(ThreadBudget::new(1));
+        let first = b.lease(1);
+        let (tx, rx) = mpsc::channel();
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || {
+            let lease = b2.lease(1);
+            tx.send(lease.n).unwrap();
+            drop(lease);
+        });
+        // the waiter cannot proceed while the budget is held
+        assert!(
+            rx.recv_timeout(std::time::Duration::from_millis(100)).is_err(),
+            "lease must block while the budget is exhausted"
+        );
+        drop(first);
+        let granted = rx
+            .recv_timeout(std::time::Duration::from_secs(10))
+            .expect("release must wake the waiter");
+        assert_eq!(granted, 1);
+        waiter.join().unwrap();
+    }
+
+    /// Cold vs. warm `run_job`: the warm run is served from the cache
+    /// and its core is bitwise identical to the recomputed one — the
+    /// cache-correctness satellite at the API level.
+    #[test]
+    fn warm_job_is_cached_and_bitwise_identical() {
+        let spec = scenario_job("a", "sparse-a01", 0.01, CorrKind::Pearson);
+        let cache = Cache::new(64 << 20);
+        let cold = run_job(&spec, 2, &cache).unwrap();
+        assert!(!cold.corr_cache_hit);
+        assert!(!cold.result_cache_hit);
+        let warm = run_job(&spec, 1, &cache).unwrap();
+        assert!(warm.corr_cache_hit);
+        assert!(warm.result_cache_hit);
+        assert_eq!(cold.core, warm.core, "cached result must be bitwise equal");
+        // an independent cold run recomputes the same bytes
+        let fresh = run_job(&spec, 4, &Cache::new(64 << 20)).unwrap();
+        assert_eq!(cold.core, fresh.core);
+    }
+
+    /// Two alphas over one dataset share the correlation layer.
+    #[test]
+    fn corr_layer_is_shared_across_alphas() {
+        let cache = Cache::new(64 << 20);
+        let a = run_job(
+            &scenario_job("a", "sparse-a01", 0.01, CorrKind::Pearson),
+            1,
+            &cache,
+        )
+        .unwrap();
+        let b = run_job(
+            &scenario_job("b", "sparse-a01", 0.05, CorrKind::Pearson),
+            1,
+            &cache,
+        )
+        .unwrap();
+        assert!(!a.corr_cache_hit);
+        assert!(b.corr_cache_hit, "same data + kind must reuse the gram");
+        assert!(!b.result_cache_hit, "different alpha is a different result");
+        // Spearman over the same data is a different correlation identity
+        let c = run_job(
+            &scenario_job("c", "sparse-a01", 0.01, CorrKind::Spearman),
+            1,
+            &cache,
+        )
+        .unwrap();
+        assert!(!c.corr_cache_hit);
+    }
+
+    #[test]
+    fn run_batch_is_job_thread_invariant_and_ordered() {
+        let manifest = Manifest {
+            jobs: vec![
+                scenario_job("one", "sparse-a01", 0.01, CorrKind::Pearson),
+                scenario_job("two", "sparse-a01", 0.05, CorrKind::Pearson),
+                scenario_job("three", "grn-mid", 0.01, CorrKind::Pearson),
+                scenario_job("four", "rank-er", 0.01, CorrKind::Spearman),
+            ],
+        };
+        let run = |job_threads: usize| {
+            let cache = Cache::new(64 << 20);
+            let out = run_batch(
+                &manifest,
+                &BatchOptions {
+                    job_threads,
+                    threads: 4,
+                    ..BatchOptions::default()
+                },
+                &cache,
+            )
+            .unwrap();
+            render_results(&manifest.jobs, &out.reports)
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(4));
+        assert_eq!(serial.lines().count(), 4);
+    }
+
+    /// A failure must stop the queue: later jobs are skipped, not run.
+    #[test]
+    fn a_failing_job_stops_the_queue() {
+        let manifest = Manifest {
+            jobs: vec![
+                JobSpec {
+                    name: "bad".into(),
+                    source: DataSource::Csv("no/such/file.csv".into()),
+                    variant: Variant::CupcS,
+                    alpha: 0.01,
+                    max_level: None,
+                    corr: CorrKind::Pearson,
+                    orient: OrientRule::Standard,
+                },
+                scenario_job("later", "sparse-a01", 0.01, CorrKind::Pearson),
+            ],
+        };
+        let cache = Cache::new(1 << 20);
+        let err = run_batch(&manifest, &BatchOptions::default(), &cache)
+            .expect_err("the bad job must fail the batch");
+        assert!(format!("{err:#}").contains("job #0"), "{err:#}");
+        // the bad job dies before touching the cache, so any cache
+        // traffic would mean the second job ran after the failure
+        let st = cache.stats();
+        assert_eq!(
+            st.hits + st.misses,
+            0,
+            "the queue must stop before the next job starts: {st:?}"
+        );
+    }
+
+    #[test]
+    fn batch_errors_name_the_failing_job() {
+        let manifest = Manifest {
+            jobs: vec![JobSpec {
+                name: "missing".into(),
+                source: DataSource::Csv("definitely/not/here.csv".into()),
+                variant: Variant::CupcS,
+                alpha: 0.01,
+                max_level: None,
+                corr: CorrKind::Pearson,
+                orient: OrientRule::Standard,
+            }],
+        };
+        let err = run_batch(
+            &manifest,
+            &BatchOptions::default(),
+            &Cache::new(1 << 20),
+        )
+        .expect_err("missing CSV must fail the batch");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("missing"), "{msg}");
+        assert!(msg.contains("not/here.csv"), "{msg}");
+    }
+}

@@ -12,7 +12,7 @@ use super::sem;
 use crate::stats::corr::DataMatrix;
 use crate::util::rng::Pcg;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Copy, Debug)]
 pub enum Topology {
     /// Erdős–Rényi with edge probability d (paper §5.6 protocol)
     Er(f64),

@@ -2,17 +2,22 @@
 //! which every schedule ([`crate::skeleton::Variant`]) must produce the
 //! *identical* PC-stable result — the paper's §2.4 order-independence
 //! invariant turned into an executable gate (used by
-//! `tests/conformance_engines.rs`, and available to benches/examples).
+//! `tests/conformance_engines.rs`, the batch-determinism suite in
+//! `tests/batch_runner.rs`, and available to benches/examples; grid
+//! points are addressable by name as `service` job sources).
 //!
-//! The grid crosses ER densities × sample counts × significance levels ×
-//! `max_level` caps, all seeded through [`Pcg`] so every point is fully
-//! deterministic. Sizes are chosen so the whole grid runs across all six
-//! variants in CI-image time.
+//! The grid crosses topologies (ER densities and GRN preferential
+//! attachment) × sample counts × significance levels × `max_level` caps
+//! × correlation kinds (Pearson and Spearman "Rank PC"), all seeded
+//! through [`Pcg`] so every point is fully deterministic. Sizes are
+//! chosen so the whole grid runs across all six variants in CI-image
+//! time.
 
 use super::dag::WeightedDag;
+use super::datasets::Topology;
 use super::sem;
 use crate::skeleton::{Config, OrientRule, Variant};
-use crate::stats::corr::correlation_matrix;
+use crate::stats::corr::{CorrKind, DataMatrix};
 use crate::util::rng::Pcg;
 
 /// One grid point: a simulated dataset plus the run parameters every
@@ -24,14 +29,16 @@ pub struct Scenario {
     pub n: usize,
     /// number of samples
     pub m: usize,
-    /// ER edge density of the ground-truth DAG
-    pub density: f64,
+    /// ground-truth DAG family (ER density or GRN attachment params)
+    pub topology: Topology,
     /// CI-test significance level
     pub alpha: f64,
     /// optional cap on the level loop
     pub max_level: Option<usize>,
     /// master seed (graph stream and sample stream derive from it)
     pub seed: u64,
+    /// correlation estimator feeding the CI tests
+    pub corr: CorrKind,
 }
 
 impl Scenario {
@@ -52,13 +59,25 @@ impl Scenario {
         }
     }
 
-    /// Generate the scenario's input: ground-truth DAG, sampled data, and
-    /// the correlation matrix the skeleton runs on. Deterministic in
-    /// `seed` (graph and noise draw from separate Pcg streams).
-    pub fn generate(&self) -> ScenarioInput {
-        let dag = WeightedDag::random_er(self.n, self.density, &mut Pcg::new(self.seed, 1));
+    /// Generate the scenario's raw inputs: ground-truth DAG + sampled
+    /// data, deterministic in `seed` (graph and noise draw from separate
+    /// Pcg streams). The batch service uses this to key its
+    /// content-addressed cache on the data bytes.
+    pub fn generate_data(&self) -> (WeightedDag, DataMatrix) {
+        let mut rng_g = Pcg::new(self.seed, 1);
+        let dag = match self.topology {
+            Topology::Er(d) => WeightedDag::random_er(self.n, d, &mut rng_g),
+            Topology::Grn(avg, maxp) => WeightedDag::random_grn(self.n, avg, maxp, &mut rng_g),
+        };
         let data = sem::sample(&dag, self.m, &mut Pcg::new(self.seed, 2));
-        let corr = correlation_matrix(&data, 1);
+        (dag, data)
+    }
+
+    /// Generate the scenario's full conformance input: ground-truth DAG,
+    /// sampled data, and the correlation matrix the skeleton runs on.
+    pub fn generate(&self) -> ScenarioInput {
+        let (dag, data) = self.generate_data();
+        let corr = self.corr.matrix(&data, 1);
         ScenarioInput {
             truth: dag,
             corr,
@@ -87,9 +106,17 @@ pub const ALL_VARIANTS: [Variant; 6] = [
     Variant::Baseline2,
 ];
 
+/// Look up a grid point by name (the `service` job-source address).
+pub fn find(name: &str) -> Option<Scenario> {
+    default_grid().into_iter().find(|s| s.name == name)
+}
+
 /// The default conformance grid: ≥ 8 points crossing density (sparse →
 /// dense), sample count (underpowered → comfortable), alpha (0.01 /
-/// 0.05) and `max_level` caps (uncapped, 1, 2, 3).
+/// 0.05), `max_level` caps (uncapped, 1, 2, 3), GRN topologies and
+/// Spearman (Rank-PC) inputs. New points are appended — index-based
+/// slices in the conformance suite rely on the original nine staying
+/// put.
 pub fn default_grid() -> Vec<Scenario> {
     fn sc(
         name: &'static str,
@@ -104,10 +131,32 @@ pub fn default_grid() -> Vec<Scenario> {
             name,
             n,
             m,
-            density,
+            topology: Topology::Er(density),
             alpha,
             max_level,
             seed,
+            corr: CorrKind::Pearson,
+        }
+    }
+    fn sx(
+        name: &'static str,
+        n: usize,
+        m: usize,
+        topology: Topology,
+        alpha: f64,
+        max_level: Option<usize>,
+        seed: u64,
+        corr: CorrKind,
+    ) -> Scenario {
+        Scenario {
+            name,
+            n,
+            m,
+            topology,
+            alpha,
+            max_level,
+            seed,
+            corr,
         }
     }
     vec![
@@ -120,6 +169,14 @@ pub fn default_grid() -> Vec<Scenario> {
         sc("wide-lowm", 32, 120, 0.08, 0.01, None, 907),
         sc("wide-cap1", 32, 400, 0.12, 0.01, Some(1), 908),
         sc("dense-cap3", 20, 500, 0.35, 0.01, Some(3), 909),
+        // GRN-topology points: scale-free-ish in-degree, the
+        // gene-expression analog workload (ROADMAP scenario-grid growth)
+        sx("grn-mid", 24, 300, Topology::Grn(1.8, 5), 0.01, None, 910, CorrKind::Pearson),
+        sx("grn-a05-cap2", 28, 250, Topology::Grn(2.2, 6), 0.05, Some(2), 911, CorrKind::Pearson),
+        // Spearman (Rank-PC) points: the rank-correlation front-end over
+        // both topology families
+        sx("rank-er", 20, 300, Topology::Er(0.15), 0.01, None, 912, CorrKind::Spearman),
+        sx("rank-grn", 24, 400, Topology::Grn(1.5, 5), 0.01, Some(2), 913, CorrKind::Spearman),
     ]
 }
 
@@ -146,23 +203,66 @@ mod tests {
             v.dedup();
             v.len()
         };
-        assert!(distinct(|s| (s.density * 1000.0) as u64) >= 3, "densities");
+        let topo_tag = |s: &Scenario| match s.topology {
+            Topology::Er(d) => (d * 1000.0) as u64,
+            Topology::Grn(avg, maxp) => 1_000_000 + (avg * 1000.0) as u64 + maxp as u64,
+        };
+        assert!(distinct(topo_tag) >= 4, "topologies");
         assert!(distinct(|s| s.m as u64) >= 3, "sample counts");
         assert!(distinct(|s| (s.alpha * 1000.0) as u64) >= 2, "alphas");
         assert!(
             distinct(|s| s.max_level.map(|l| l as u64 + 1).unwrap_or(0)) >= 3,
             "max_level caps"
         );
+        assert!(
+            grid.iter()
+                .any(|s| matches!(s.topology, Topology::Grn(..))),
+            "GRN coverage"
+        );
+        assert!(
+            grid.iter().any(|s| s.corr == CorrKind::Spearman),
+            "Spearman coverage"
+        );
+        assert!(
+            grid.iter()
+                .any(|s| matches!(s.topology, Topology::Grn(..)) && s.corr == CorrKind::Spearman),
+            "GRN × Spearman crossing"
+        );
     }
 
     #[test]
     fn generation_is_deterministic() {
-        let sc = &default_grid()[0];
-        let a = sc.generate();
-        let b = sc.generate();
-        assert_eq!(a.corr, b.corr);
-        assert_eq!(a.truth.skeleton_dense(), b.truth.skeleton_dense());
-        assert_eq!((a.n, a.m), (sc.n, sc.m));
+        for sc in [&default_grid()[0], &find("rank-grn").unwrap()] {
+            let a = sc.generate();
+            let b = sc.generate();
+            assert_eq!(a.corr, b.corr, "{}", sc.name);
+            assert_eq!(a.truth.skeleton_dense(), b.truth.skeleton_dense());
+            assert_eq!((a.n, a.m), (sc.n, sc.m));
+        }
+    }
+
+    #[test]
+    fn generate_uses_the_scenario_corr_kind() {
+        let rank = find("rank-er").unwrap();
+        let (_, data) = rank.generate_data();
+        let input = rank.generate();
+        assert_eq!(
+            input.corr,
+            CorrKind::Spearman.matrix(&data, 1),
+            "rank-er must feed Spearman correlations"
+        );
+        assert_ne!(
+            input.corr,
+            CorrKind::Pearson.matrix(&data, 1),
+            "Spearman must actually differ from Pearson here"
+        );
+    }
+
+    #[test]
+    fn find_resolves_names() {
+        assert!(find("sparse-a01").is_some());
+        assert!(find("grn-mid").is_some());
+        assert!(find("no-such-scenario").is_none());
     }
 
     #[test]

@@ -1,9 +1,12 @@
 //! Level 0 (paper Algorithm 3): one CI test per pair, no conditioning.
 //!
-//! The CUDA 2-D grid over the n×n matrix becomes a packed batch of the
-//! upper-triangle correlations; τ comparison and removal happen in apply
-//! order. Shared by all GPU-schedule variants (serial/threaded CPU
-//! engines do level 0 inline).
+//! The CUDA 2-D grid over the n×n matrix becomes the canonical pair
+//! enumeration (row-major upper triangle). [`eval_range`] evaluates any
+//! contiguous slot window of that enumeration — the unit the pipeline
+//! executor shards across workers — and [`apply_candidates`] replays the
+//! independence verdicts in canonical order, so the sharded sweep is
+//! bit-identical to the single-engine one. Shared by all GPU-schedule
+//! variants (serial/threaded CPU engines do level 0 inline).
 
 use super::engine::CiEngine;
 use super::{Config, LevelStats};
@@ -13,7 +16,94 @@ use crate::stats::fisher::{independent, tau};
 use crate::util::timer::Timer;
 use anyhow::Result;
 
-/// Run level 0 on the (still complete) graph. Returns its stats.
+/// Number of unordered pairs — the level-0 test count (0 for n < 2; the
+/// guard keeps the `n·(n−1)` product out of underflow territory).
+pub fn n_pairs(n: usize) -> u64 {
+    if n < 2 {
+        0
+    } else {
+        (n as u64) * (n as u64 - 1) / 2
+    }
+}
+
+/// Map a canonical pair index `t` (row-major upper triangle: (0,1),
+/// (0,2), …, (0,n−1), (1,2), …) to its `(i, j)` pair.
+pub fn pair_at(n: usize, t: u64) -> (usize, usize) {
+    assert!(t < n_pairs(n), "pair index {t} out of range for n={n}");
+    let mut i = 0usize;
+    let mut base = 0u64;
+    loop {
+        let row = (n - 1 - i) as u64;
+        if t < base + row {
+            return (i, i + 1 + (t - base) as usize);
+        }
+        base += row;
+        i += 1;
+    }
+}
+
+/// Evaluate canonical pair slots `[t0, t0 + count)` and return the
+/// independence candidates in slot order. Pure with respect to the
+/// graph; level 0 is an elementwise map, so chunk and shard boundaries
+/// never change per-slot verdicts.
+pub fn eval_range(
+    corr: &[f64],
+    n: usize,
+    tau0: f64,
+    t0: u64,
+    count: u64,
+    engine: &mut dyn CiEngine,
+) -> Result<Vec<(u32, u32)>> {
+    let mut out = Vec::new();
+    if count == 0 {
+        return Ok(out);
+    }
+    let cap = engine.batch_e().max(1);
+    let (mut i, mut j) = pair_at(n, t0);
+    let buf_cap = cap.min(count as usize);
+    let mut c_buf: Vec<f32> = Vec::with_capacity(buf_cap);
+    let mut p_buf: Vec<(u32, u32)> = Vec::with_capacity(buf_cap);
+    let mut left = count;
+    while left > 0 {
+        c_buf.clear();
+        p_buf.clear();
+        while left > 0 && c_buf.len() < cap {
+            c_buf.push(corr[i * n + j] as f32);
+            p_buf.push((i as u32, j as u32));
+            left -= 1;
+            j += 1;
+            if j == n {
+                i += 1;
+                j = i + 1;
+            }
+        }
+        let z = engine.level0(&c_buf)?;
+        for (idx, &(a, b)) in p_buf.iter().enumerate() {
+            if independent(z[idx] as f64, tau0) {
+                out.push((a, b));
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Apply level-0 independence candidates in the order given (canonical
+/// slot order when shards are concatenated in order). Returns the number
+/// of edges removed.
+pub fn apply_candidates(graph: &AdjMatrix, sepsets: &SepSets, candidates: &[(u32, u32)]) -> usize {
+    let mut removed = 0;
+    for &(i, j) in candidates {
+        if graph.remove_edge(i as usize, j as usize) {
+            sepsets.store(i as usize, j as usize, &[]);
+            removed += 1;
+        }
+    }
+    removed
+}
+
+/// Run level 0 on the (still complete) graph through one engine. The
+/// multi-worker path shards [`eval_range`] instead — see
+/// [`super::pipeline::Executor::run_level0`].
 pub fn run_level0(
     corr: &[f64],
     n: usize,
@@ -24,9 +114,9 @@ pub fn run_level0(
     sepsets: &SepSets,
 ) -> Result<LevelStats> {
     let t = Timer::start();
-    if n < 2 {
-        // no pairs to test: short-circuit before the n·(n−1)/2 capacity
-        // math, which underflows in debug builds when n == 0
+    let total = n_pairs(n);
+    if total == 0 {
+        // no pairs to test (n < 2): a clean no-op
         return Ok(LevelStats {
             level: 0,
             seconds: t.elapsed_s(),
@@ -34,30 +124,11 @@ pub fn run_level0(
         });
     }
     let tau0 = tau(m, 0, cfg.alpha);
-    // pack the upper triangle
-    let mut c_ij = Vec::with_capacity(n * (n - 1) / 2);
-    let mut pairs = Vec::with_capacity(n * (n - 1) / 2);
-    for i in 0..n {
-        for j in (i + 1)..n {
-            c_ij.push(corr[i * n + j] as f32);
-            pairs.push((i as u32, j as u32));
-        }
-    }
-    let mut removed = 0;
-    // chunk through the engine at its preferred batch size
-    let chunk = engine.batch_e().max(1);
-    for (cs, ps) in c_ij.chunks(chunk).zip(pairs.chunks(chunk)) {
-        let z = engine.level0(cs)?;
-        for (idx, &(i, j)) in ps.iter().enumerate() {
-            if independent(z[idx] as f64, tau0) && graph.remove_edge(i as usize, j as usize) {
-                sepsets.store(i as usize, j as usize, &[]);
-                removed += 1;
-            }
-        }
-    }
+    let candidates = eval_range(corr, n, tau0, 0, total, engine)?;
+    let removed = apply_candidates(graph, sepsets, &candidates);
     Ok(LevelStats {
         level: 0,
-        tests: c_ij.len() as u64,
+        tests: total,
         removed,
         edges_after: graph.n_edges(),
         seconds: t.elapsed_s(),
@@ -116,5 +187,59 @@ mod tests {
         let stats = run_level0(&c, 2, 3, &cfg, &mut e, &g, &sep).unwrap();
         assert_eq!(stats.removed, 1);
         assert_eq!(g.n_edges(), 0);
+    }
+
+    #[test]
+    fn pair_enumeration_is_row_major_upper_triangle() {
+        assert_eq!(n_pairs(0), 0);
+        assert_eq!(n_pairs(1), 0);
+        assert_eq!(n_pairs(5), 10);
+        let n = 5;
+        let mut t = 0u64;
+        for i in 0..n {
+            for j in (i + 1)..n {
+                assert_eq!(pair_at(n, t), (i, j), "t={t}");
+                t += 1;
+            }
+        }
+        assert_eq!(t, n_pairs(n));
+    }
+
+    /// The sharding contract: evaluating the canonical sweep as any
+    /// split of contiguous windows concatenates to the full sweep's
+    /// candidate list, bit for bit.
+    #[test]
+    fn eval_range_is_split_invariant() {
+        use crate::util::rng::Pcg;
+        let n = 17;
+        let mut rng = Pcg::seeded(31);
+        let mut corr = vec![0.0; n * n];
+        for i in 0..n {
+            corr[i * n + i] = 1.0;
+            for j in (i + 1)..n {
+                let c = rng.uniform_in(-0.6, 0.6);
+                corr[i * n + j] = c;
+                corr[j * n + i] = c;
+            }
+        }
+        let m = 120;
+        let tau0 = tau(m, 0, 0.01);
+        let total = n_pairs(n);
+        let mut full_engine = NativeEngine::new();
+        let full = eval_range(&corr, n, tau0, 0, total, &mut full_engine).unwrap();
+        assert!(!full.is_empty(), "workload too easy to be a meaningful test");
+        for parts in [2u64, 3, 7, total] {
+            let mut split = Vec::new();
+            let per = total.div_ceil(parts);
+            let mut t0 = 0u64;
+            while t0 < total {
+                let count = per.min(total - t0);
+                // a fresh engine per window, like a pool worker gets
+                let mut e = NativeEngine::new();
+                split.extend(eval_range(&corr, n, tau0, t0, count, &mut e).unwrap());
+                t0 += count;
+            }
+            assert_eq!(split, full, "parts={parts}");
+        }
     }
 }

@@ -20,10 +20,11 @@
 //! cross-engine conformance suite (`tests/conformance_engines.rs`)
 //! enforces all of this over the `sim::scenarios` grid.
 //!
-//! The batched schedules run their per-round pack + evaluate work
-//! through the multi-threaded [`pipeline`] when the native engine is
-//! selected and `Config::threads > 1`; the pipeline's ordered-apply
-//! stage keeps results bit-identical to a single-threaded run.
+//! The batched schedules run their per-round pack + evaluate work —
+//! including the level-0 pair sweep — through the multi-threaded
+//! [`pipeline`] when the native engine is selected and
+//! `Config::threads > 1`; the pipeline's ordered-apply stage keeps
+//! results bit-identical to a single-threaded run.
 
 pub mod batch;
 pub mod baseline1;
@@ -143,6 +144,24 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             verbose: false,
             orient: OrientRule::Standard,
+        }
+    }
+}
+
+impl Config {
+    /// Copy of this config with the worker-thread count replaced — the
+    /// batch service's thread-budget handoff: `service::scheduler` leases
+    /// workers from one global [`service::ThreadBudget`] shared by every
+    /// in-flight job and runs each job's internal [`pipeline`] at the
+    /// leased width. Results are unaffected by construction (the
+    /// pipeline's thread-count invariance), so the lease size is purely
+    /// a throughput knob.
+    ///
+    /// [`service::ThreadBudget`]: crate::service::ThreadBudget
+    pub fn with_threads(&self, threads: usize) -> Config {
+        Config {
+            threads: threads.max(1),
+            ..self.clone()
         }
     }
 }
@@ -281,6 +300,22 @@ mod tests {
                 assert_eq!(res.total_tests(), 0, "{v:?} n={n}");
             }
         }
+    }
+
+    #[test]
+    fn with_threads_replaces_only_the_width() {
+        let base = Config {
+            alpha: 0.05,
+            max_level: Some(3),
+            variant: Variant::CupcE,
+            ..Config::default()
+        };
+        let leased = base.with_threads(7);
+        assert_eq!(leased.threads, 7);
+        assert_eq!(leased.alpha, base.alpha);
+        assert_eq!(leased.max_level, base.max_level);
+        assert_eq!(leased.variant, base.variant);
+        assert_eq!(base.with_threads(0).threads, 1, "a lease is never empty");
     }
 
     #[test]

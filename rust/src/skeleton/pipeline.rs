@@ -35,10 +35,12 @@
 //! runs the identical pipeline inline with the injected engine.
 
 use super::engine::{CiEngine, NativeEngine};
-use super::level0::run_level0;
+use super::level0::{apply_candidates, eval_range, n_pairs, run_level0};
 use super::{Config, EngineKind, LevelStats};
 use crate::graph::adj::AdjMatrix;
 use crate::graph::sepset::SepSets;
+use crate::stats::fisher::tau;
+use crate::util::timer::Timer;
 use anyhow::Result;
 
 /// A contiguous chunk of one task's combination range within a round:
@@ -164,9 +166,13 @@ impl Executor<'_> {
         }
     }
 
-    /// Level 0 through whichever engine the executor owns (the pool path
-    /// evaluates it on a fresh native engine — one batch sweep, not worth
-    /// sharding).
+    /// Level 0 through whichever engine the executor owns. The pool path
+    /// shards the canonical pair sweep across the same workers the
+    /// deeper levels use ([`eval_range`] windows, balanced by slot
+    /// count) and applies the independence candidates serially in
+    /// canonical order — bit-identical to the single-engine sweep, and
+    /// sized so small inputs still collapse to one shard
+    /// ([`MIN_SHARD_SLOTS`]).
     pub fn run_level0(
         &mut self,
         corr: &[f64],
@@ -176,13 +182,42 @@ impl Executor<'_> {
         graph: &AdjMatrix,
         sepsets: &SepSets,
     ) -> Result<LevelStats> {
-        match self {
-            Executor::Single(engine) => run_level0(corr, n, m, cfg, &mut **engine, graph, sepsets),
-            Executor::Pool { .. } => {
-                let mut engine = NativeEngine::new();
-                run_level0(corr, n, m, cfg, &mut engine, graph, sepsets)
-            }
+        if let Executor::Single(engine) = self {
+            return run_level0(corr, n, m, cfg, &mut **engine, graph, sepsets);
         }
+        let t = Timer::start();
+        let total = n_pairs(n);
+        if total == 0 {
+            return Ok(LevelStats {
+                level: 0,
+                seconds: t.elapsed_s(),
+                ..LevelStats::default()
+            });
+        }
+        let tau0 = tau(m, 0, cfg.alpha);
+        let runs = [Run {
+            task: 0,
+            t0: 0,
+            count: total,
+        }];
+        let shard_results = self.run_sharded(&runs, |shard, engine| {
+            let mut cands = Vec::new();
+            for r in shard {
+                cands.extend(eval_range(corr, n, tau0, r.t0, r.count, engine)?);
+            }
+            Ok(cands)
+        })?;
+        let mut removed = 0;
+        for cands in &shard_results {
+            removed += apply_candidates(graph, sepsets, cands);
+        }
+        Ok(LevelStats {
+            level: 0,
+            tests: total,
+            removed,
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        })
     }
 }
 
@@ -288,6 +323,50 @@ mod tests {
             .unwrap();
         let rejoined: Vec<Run> = got.into_iter().flatten().collect();
         assert_eq!(flatten(&[rejoined]), flatten(&[runs]));
+    }
+
+    /// Level 0 sharded through the pool must be bit-identical to the
+    /// single-engine sweep: same removals, same (empty) sepsets, same
+    /// test count. A large-ish n forces genuinely multiple shards
+    /// (n_pairs must exceed MIN_SHARD_SLOTS).
+    #[test]
+    fn pool_level0_matches_single_engine() {
+        use crate::util::rng::Pcg;
+        let n = 64; // 2016 pairs > MIN_SHARD_SLOTS → real sharding
+        assert!(super::super::level0::n_pairs(n) > MIN_SHARD_SLOTS);
+        let mut rng = Pcg::seeded(41);
+        let mut corr = vec![0.0; n * n];
+        for i in 0..n {
+            corr[i * n + i] = 1.0;
+            for j in (i + 1)..n {
+                let c = rng.uniform_in(-0.7, 0.7);
+                corr[i * n + j] = c;
+                corr[j * n + i] = c;
+            }
+        }
+        let m = 150;
+        let cfg = Config::default();
+        let run_with = |exec: &mut Executor<'_>| {
+            let graph = AdjMatrix::complete(n);
+            let sepsets = SepSets::new();
+            let stats = exec
+                .run_level0(&corr, n, m, &cfg, &graph, &sepsets)
+                .unwrap();
+            (graph.snapshot(), sepsets.sorted_entries(), stats)
+        };
+        let mut engine = NativeEngine::new();
+        let mut single = Executor::Single(&mut engine);
+        let (snap_s, seps_s, stats_s) = run_with(&mut single);
+        for threads in [2usize, 4] {
+            let mut pool = Executor::Pool { threads };
+            let (snap_p, seps_p, stats_p) = run_with(&mut pool);
+            assert_eq!(snap_p, snap_s, "threads={threads}");
+            assert_eq!(seps_p, seps_s, "threads={threads}");
+            assert_eq!(stats_p.tests, stats_s.tests);
+            assert_eq!(stats_p.removed, stats_s.removed);
+            assert_eq!(stats_p.edges_after, stats_s.edges_after);
+        }
+        assert!(stats_s.removed > 0, "workload must actually remove edges");
     }
 
     #[test]

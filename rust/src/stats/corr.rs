@@ -4,6 +4,52 @@
 //! cache-blocked kernel, optionally sharded across threads (the image may
 //! have 1 core, but the code path is exercised and tested regardless).
 
+/// Which correlation estimator feeds the CI tests. Pearson is the
+/// paper's default; Spearman is the "Rank PC" variant (Harris & Drton
+/// 2013, §2.3) for non-Gaussian monotone data — both produce an n×n
+/// matrix consumed by the exact same skeleton machinery.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CorrKind {
+    Pearson,
+    Spearman,
+}
+
+impl CorrKind {
+    pub fn parse(s: &str) -> Option<CorrKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "pearson" => Some(CorrKind::Pearson),
+            "spearman" | "rank" => Some(CorrKind::Spearman),
+            _ => None,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            CorrKind::Pearson => "pearson",
+            CorrKind::Spearman => "spearman",
+        }
+    }
+
+    /// Stable tag for content hashing (cache keys depend on it — never
+    /// renumber).
+    pub fn tag(self) -> u8 {
+        match self {
+            CorrKind::Pearson => 0,
+            CorrKind::Spearman => 1,
+        }
+    }
+
+    /// Compute this kind's correlation matrix. Bit-identical for any
+    /// `threads` value (the gram is blocked; blocks are computed
+    /// identically regardless of which worker owns them).
+    pub fn matrix(self, data: &DataMatrix, threads: usize) -> Vec<f64> {
+        match self {
+            CorrKind::Pearson => correlation_matrix(data, threads),
+            CorrKind::Spearman => spearman_correlation_matrix(data, threads),
+        }
+    }
+}
+
 /// Column-major-free: data is row-major `m×n` (sample-major), the natural
 /// CSV layout.
 pub struct DataMatrix {
@@ -256,6 +302,43 @@ mod tests {
         let spearman = spearman_correlation_matrix(&d, 1)[1];
         assert!(spearman > 0.999, "spearman={spearman}");
         assert!(pearson < 0.9, "pearson={pearson}");
+    }
+
+    #[test]
+    fn corr_kind_parses_and_dispatches() {
+        assert_eq!(CorrKind::parse("pearson"), Some(CorrKind::Pearson));
+        assert_eq!(CorrKind::parse("Spearman"), Some(CorrKind::Spearman));
+        assert_eq!(CorrKind::parse("rank"), Some(CorrKind::Spearman));
+        assert_eq!(CorrKind::parse("kendall"), None);
+        assert_ne!(CorrKind::Pearson.tag(), CorrKind::Spearman.tag());
+        let d = toy_data();
+        assert_eq!(
+            CorrKind::Pearson.matrix(&d, 1),
+            correlation_matrix(&d, 1),
+            "Pearson dispatch"
+        );
+        assert_eq!(
+            CorrKind::Spearman.matrix(&d, 1),
+            spearman_correlation_matrix(&d, 1),
+            "Spearman dispatch"
+        );
+    }
+
+    #[test]
+    fn threaded_matches_serial_bitwise() {
+        // the batch service caches correlation matrices across jobs that
+        // may run at different leased widths: the blocked gram must be
+        // bit-identical, not merely close, for any thread count
+        let mut rng = Pcg::seeded(78);
+        let m = 80;
+        let n = 67;
+        let x: Vec<f64> = (0..m * n).map(|_| rng.normal()).collect();
+        let d = DataMatrix::new(x, m, n);
+        assert_eq!(correlation_matrix(&d, 1), correlation_matrix(&d, 4));
+        assert_eq!(
+            spearman_correlation_matrix(&d, 1),
+            spearman_correlation_matrix(&d, 3)
+        );
     }
 
     #[test]

@@ -3,5 +3,6 @@
 //! implemented here).
 
 pub mod cli;
+pub mod json;
 pub mod rng;
 pub mod timer;

@@ -1,0 +1,172 @@
+//! Batch-runner determinism gate (ISSUE 3 acceptance criteria).
+//!
+//! Over a ≥ 6-job manifest mixing ER and GRN topologies, Pearson and
+//! Spearman correlations, CSV / registry / scenario sources, and two
+//! alphas on one dataset, the rendered results stream must be
+//! bit-identical for `--job-threads ∈ {1, 4}`, for different global
+//! thread budgets, and for warm vs. cold cache — with the cache
+//! actually firing (≥ 1 recorded hit on the sequential cold run, full
+//! result-layer hits on the warm run).
+
+use cupc::service::{render_results, run_batch, BatchOptions, Cache, Manifest};
+use cupc::util::json::Json;
+
+/// Build the mixed manifest; writes the CSV job's data to a temp file
+/// (`tag` keeps concurrently running tests off each other's file).
+fn mixed_manifest(tag: &str) -> (Manifest, std::path::PathBuf) {
+    // deterministic CSV source: a small simulated ER dataset
+    let ds = cupc::sim::datasets::generate_er(12, 150, 0.2, 42);
+    let csv_path = std::env::temp_dir().join(format!(
+        "cupc_batch_gate_{}_{tag}.csv",
+        std::process::id()
+    ));
+    cupc::data::csv::write_csv(&csv_path, &ds.data).unwrap();
+
+    let text = format!(
+        r#"{{"jobs": [
+            {{"name": "er-a01",   "scenario": "sparse-a01", "variant": "cups"}},
+            {{"name": "er-a05",   "scenario": "sparse-a01", "variant": "cups", "alpha": 0.05}},
+            {{"name": "grn",      "scenario": "grn-mid",    "variant": "cups"}},
+            {{"name": "rank-er",  "scenario": "rank-er",    "variant": "cupe", "corr": "spearman"}},
+            {{"name": "rank-grn", "scenario": "rank-grn",   "variant": "cups", "corr": "spearman", "max_level": 2}},
+            {{"name": "csv-job",  "csv": "{}",              "variant": "cupe", "alpha": 0.05, "orient": "majority"}},
+            {{"name": "registry", "dataset": "nci60-mini",  "variant": "cups", "max_level": 1}}
+        ]}}"#,
+        csv_path.display()
+    );
+    (Manifest::parse(&text).unwrap(), csv_path)
+}
+
+fn opts(job_threads: usize, threads: usize) -> BatchOptions {
+    BatchOptions {
+        job_threads,
+        threads,
+        cache_bytes: 64 << 20,
+        verbose: false,
+    }
+}
+
+#[test]
+fn batch_results_are_scheduling_and_cache_invariant() {
+    let (manifest, csv_path) = mixed_manifest("invariance");
+    assert!(
+        manifest.jobs.len() >= 6,
+        "the gate requires a ≥ 6-job manifest"
+    );
+
+    // cold run, sequential: the reference rendering
+    let cache = Cache::new(64 << 20);
+    let cold = run_batch(&manifest, &opts(1, 2), &cache).unwrap();
+    let reference = render_results(&manifest.jobs, &cold.reports);
+
+    // ≥ 1 recorded cache hit even cold: two alphas over one dataset
+    // share the correlation layer (sequential, so the hit is guaranteed)
+    assert!(
+        cold.cache.hits >= 1,
+        "expected a corr-layer hit on the cold sequential run, stats: {:?}",
+        cold.cache
+    );
+    assert!(
+        cold.reports[1].corr_cache_hit,
+        "er-a05 must reuse er-a01's correlation matrix"
+    );
+
+    // job-threads 4, cold: bit-identical results, and the in-flight
+    // coalescing still yields a corr-layer hit for the second alpha
+    // (the waiter re-checks the cache after the computer's put)
+    let cold4 = run_batch(&manifest, &opts(4, 2), &Cache::new(64 << 20)).unwrap();
+    assert_eq!(
+        reference,
+        render_results(&manifest.jobs, &cold4.reports),
+        "results.jsonl must be bit-identical for --job-threads 1 vs 4"
+    );
+    assert!(
+        cold4.cache.hits >= 1,
+        "concurrent same-data jobs must coalesce on one gram, stats: {:?}",
+        cold4.cache
+    );
+
+    // different global thread budget: bit-identical results
+    let wide = run_batch(&manifest, &opts(1, 4), &Cache::new(64 << 20)).unwrap();
+    assert_eq!(
+        reference,
+        render_results(&manifest.jobs, &wide.reports),
+        "results.jsonl must be bit-identical across thread budgets"
+    );
+
+    // warm rerun on the populated cache: bit-identical, fully served
+    // from the result layer
+    let warm = run_batch(&manifest, &opts(4, 2), &cache).unwrap();
+    assert_eq!(
+        reference,
+        render_results(&manifest.jobs, &warm.reports),
+        "results.jsonl must be bit-identical warm vs cold"
+    );
+    assert!(
+        warm.reports.iter().all(|r| r.result_cache_hit),
+        "every warm job must be served from the result cache"
+    );
+    // cached-vs-recomputed cores are bitwise equal
+    for (a, b) in cold.reports.iter().zip(&warm.reports) {
+        assert_eq!(a.core, b.core);
+    }
+
+    // every record is valid JSON carrying the deterministic fields only
+    assert_eq!(reference.lines().count(), manifest.jobs.len());
+    for line in reference.lines() {
+        let v = Json::parse(line).unwrap_or_else(|e| panic!("bad record {line:?}: {e:#}"));
+        assert!(v.get("job").is_some());
+        assert!(v.get("levels").is_some());
+        assert!(v.get("skeleton").is_some());
+        assert!(
+            v.get("seconds_run").is_none() && v.get("corr_cache").is_none(),
+            "observational fields leaked into the deterministic stream: {line}"
+        );
+    }
+
+    std::fs::remove_file(&csv_path).ok();
+}
+
+/// The manifest echo in each record pins the requested workload mix —
+/// ER + GRN topologies, Pearson + Spearman, and ≥ 2 alphas on one
+/// dataset — so the gate cannot silently lose coverage.
+#[test]
+fn gate_manifest_covers_the_required_mix() {
+    let (manifest, csv_path) = mixed_manifest("mix");
+    std::fs::remove_file(&csv_path).ok();
+    let grid = cupc::sim::scenarios::default_grid;
+    let topology_of = |name: &str| {
+        grid()
+            .into_iter()
+            .find(|s| s.name == name)
+            .map(|s| s.topology)
+    };
+    let has_grn = manifest.jobs.iter().any(|j| {
+        matches!(
+            &j.source,
+            cupc::service::DataSource::Scenario(n)
+                if matches!(topology_of(n), Some(cupc::sim::datasets::Topology::Grn(..)))
+        )
+    });
+    let has_er = manifest.jobs.iter().any(|j| {
+        matches!(
+            &j.source,
+            cupc::service::DataSource::Scenario(n)
+                if matches!(topology_of(n), Some(cupc::sim::datasets::Topology::Er(_)))
+        )
+    });
+    assert!(has_grn && has_er, "topology mix");
+    let kinds: std::collections::HashSet<&str> =
+        manifest.jobs.iter().map(|j| j.corr.name()).collect();
+    assert!(kinds.contains("pearson") && kinds.contains("spearman"), "corr mix");
+    // ≥ 2 alphas over one data source
+    let mut sparse_alphas: Vec<u64> = manifest
+        .jobs
+        .iter()
+        .filter(|j| j.source == cupc::service::DataSource::Scenario("sparse-a01".into()))
+        .map(|j| (j.alpha * 1e6) as u64)
+        .collect();
+    sparse_alphas.sort_unstable();
+    sparse_alphas.dedup();
+    assert!(sparse_alphas.len() >= 2, "two alphas on one dataset");
+}

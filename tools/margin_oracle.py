@@ -69,6 +69,45 @@ def random_er(n, d, rng):
     return parents
 
 
+def random_grn(n, avg_parents, max_parents, rng):
+    """Mirror of sim/dag.rs::random_grn, draw for draw.
+
+    Note the Rust HashSet is only ever *iterated* after a sort, so set
+    semantics (dedup) are the only thing that matters — a Python set
+    matches.
+    """
+    parents = [[] for _ in range(n)]
+    popularity = [1.0] * n
+    for i in range(1, n):
+        lam = min(avg_parents, float(i))
+        k = 0
+        acc = rng.uniform()
+        p = math.exp(-lam)
+        cdf = p
+        while acc > cdf and k < max_parents:
+            k += 1
+            p *= lam / k
+            cdf += p
+        k = min(k, i)
+        chosen = set()
+        total = sum(popularity[:i])
+        guard = 0
+        while len(chosen) < k and guard < 50 * k + 50:
+            guard += 1
+            r = rng.uniform() * total
+            pick = 0
+            for idx in range(i):
+                r -= popularity[idx]
+                if r <= 0.0:
+                    pick = idx
+                    break
+            chosen.add(pick)
+        for j in sorted(chosen):
+            parents[i].append((j, rng.uniform_in(0.1, 1.0)))
+            popularity[j] += 1.0
+    return parents
+
+
 def sem_sample(parents, n, m, rng):
     x = np.zeros((m, n))
     for s in range(m):
@@ -90,6 +129,25 @@ def correlation(x):
     c = xs.T @ xs
     np.fill_diagonal(c, 1.0)
     return c
+
+
+def spearman_correlation(x):
+    """Mirror of stats/corr.rs::spearman_correlation_matrix: average
+    ranks (ties averaged) per column, then the Pearson gram."""
+    m, n = x.shape
+    ranked = np.zeros_like(x)
+    for v in range(n):
+        order = sorted(range(m), key=lambda s: x[s, v])
+        s = 0
+        while s < m:
+            e = s
+            while e + 1 < m and x[order[e + 1], v] == x[order[s], v]:
+                e += 1
+            avg = (s + e) / 2.0 + 1.0
+            for sample in order[s:e + 1]:
+                ranked[sample, v] = avg
+            s = e + 1
+    return correlation(ranked)
 
 
 def phi_inv(p):
@@ -119,10 +177,13 @@ def partial_corr(c, i, j, S):
 from itertools import combinations
 
 
-def run_scenario(name, n, m, d, alpha, cap, seed):
-    parents = random_er(n, d, Pcg(seed, 1))
+def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson"):
+    if topology[0] == "er":
+        parents = random_er(n, topology[1], Pcg(seed, 1))
+    else:
+        parents = random_grn(n, topology[1], topology[2], Pcg(seed, 1))
     x = sem_sample(parents, n, m, Pcg(seed, 2))
-    c = correlation(x)
+    c = spearman_correlation(x) if corr_kind == "spearman" else correlation(x)
     adj = np.ones((n, n), dtype=bool)
     np.fill_diagonal(adj, False)
     min_margin = float("inf")
@@ -162,15 +223,20 @@ def run_scenario(name, n, m, d, alpha, cap, seed):
 
 
 GRID = [
-    ("sparse-a01", 16, 200, 0.10, 0.01, None, 901),
-    ("sparse-a05", 16, 200, 0.10, 0.05, None, 902),
-    ("mid-lowm", 24, 150, 0.15, 0.01, None, 903),
-    ("mid-highm", 24, 600, 0.15, 0.01, None, 904),
-    ("dense-cap2", 24, 300, 0.30, 0.01, 2, 905),
-    ("dense-a05-cap2", 24, 300, 0.30, 0.05, 2, 906),
-    ("wide-lowm", 32, 120, 0.08, 0.01, None, 907),
-    ("wide-cap1", 32, 400, 0.12, 0.01, 1, 908),
-    ("dense-cap3", 20, 500, 0.35, 0.01, 3, 909),
+    ("sparse-a01", 16, 200, ("er", 0.10), 0.01, None, 901, "pearson"),
+    ("sparse-a05", 16, 200, ("er", 0.10), 0.05, None, 902, "pearson"),
+    ("mid-lowm", 24, 150, ("er", 0.15), 0.01, None, 903, "pearson"),
+    ("mid-highm", 24, 600, ("er", 0.15), 0.01, None, 904, "pearson"),
+    ("dense-cap2", 24, 300, ("er", 0.30), 0.01, 2, 905, "pearson"),
+    ("dense-a05-cap2", 24, 300, ("er", 0.30), 0.05, 2, 906, "pearson"),
+    ("wide-lowm", 32, 120, ("er", 0.08), 0.01, None, 907, "pearson"),
+    ("wide-cap1", 32, 400, ("er", 0.12), 0.01, 1, 908, "pearson"),
+    ("dense-cap3", 20, 500, ("er", 0.35), 0.01, 3, 909, "pearson"),
+    # PR 3 grid growth: GRN topologies + Spearman (Rank-PC) inputs
+    ("grn-mid", 24, 300, ("grn", 1.8, 5), 0.01, None, 910, "pearson"),
+    ("grn-a05-cap2", 28, 250, ("grn", 2.2, 6), 0.05, 2, 911, "pearson"),
+    ("rank-er", 20, 300, ("er", 0.15), 0.01, None, 912, "spearman"),
+    ("rank-grn", 24, 400, ("grn", 1.5, 5), 0.01, 2, 913, "spearman"),
 ]
 
 if __name__ == "__main__":
