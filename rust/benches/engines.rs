@@ -183,7 +183,7 @@ fn main() -> anyhow::Result<()> {
                 job_threads,
                 threads,
                 cache_bytes: 256 << 20,
-                verbose: false,
+                ..BatchOptions::default()
             };
             let t = Timer::start();
             run_batch(&manifest, &opts, &cache)?;

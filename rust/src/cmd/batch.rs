@@ -2,22 +2,19 @@
 //! thread budget and content-addressed result cache.
 //!
 //! Writes two JSON-lines files: the deterministic results stream
-//! (bit-identical for any `--job-threads` / `--threads` and warm vs.
-//! cold cache) and an observational stats sidecar (timings, lease
-//! widths, cache hit/miss). See `service::job` for the manifest schema.
+//! (bit-identical for any `--job-threads` / `--threads`, any
+//! between-level re-lease schedule, and cold vs. warm cache — memory or
+//! disk) and an observational stats sidecar (timings, lease widths,
+//! per-layer cache outcomes). With `--cache-dir` the content-addressed
+//! layers persist on disk, so repeated invocations — and concurrent
+//! processes sharing the directory — start warm. See `service::job` for
+//! the manifest schema and `service::store` for the on-disk format.
 
 use anyhow::{Context, Result};
 use cupc::service::{render_results, render_stats, run_batch, BatchOptions, Cache, Manifest};
 use cupc::skeleton::available_threads;
 use cupc::util::cli::Args;
-
-fn hit(b: bool) -> &'static str {
-    if b {
-        "hit"
-    } else {
-        "miss"
-    }
-}
+use std::path::PathBuf;
 
 pub fn main(args: &Args) -> Result<()> {
     let manifest_path = args
@@ -32,16 +29,30 @@ pub fn main(args: &Args) -> Result<()> {
         job_threads: args.get_usize("job-threads", available_threads()),
         threads: args.get_usize("threads", available_threads()),
         cache_bytes: args.get_usize("cache-mb", 256) << 20,
+        cache_dir: args.get("cache-dir").map(PathBuf::from),
+        disk_bytes: args.get_u64("cache-disk-mb", 1024) << 20,
         verbose: args.has_flag("verbose"),
     };
 
+    if opts.cache_dir.is_none() && args.get("cache-disk-mb").is_some() {
+        eprintln!("warning: --cache-disk-mb has no effect without --cache-dir");
+    }
+
     let manifest = Manifest::load(std::path::Path::new(manifest_path))?;
     eprintln!(
-        "batch: {} jobs, job-threads {}, thread budget {}, cache {} MiB",
+        "batch: {} jobs, job-threads {}, thread budget {}, cache {} MiB{}",
         manifest.jobs.len(),
         opts.job_threads,
         opts.threads,
-        opts.cache_bytes >> 20
+        opts.cache_bytes >> 20,
+        match &opts.cache_dir {
+            Some(d) => format!(
+                ", disk cache {} ({} MiB)",
+                d.display(),
+                opts.disk_bytes >> 20
+            ),
+            None => String::new(),
+        }
     );
 
     let t = cupc::util::timer::Timer::start();
@@ -51,20 +62,27 @@ pub fn main(args: &Args) -> Result<()> {
         .with_context(|| format!("writing {out}"))?;
     std::fs::write(
         &stats_path,
-        render_stats(&manifest.jobs, &output.reports, &output.cache),
+        render_stats(
+            &manifest.jobs,
+            &output.reports,
+            &output.cache,
+            output.disk.as_ref(),
+        ),
     )
     .with_context(|| format!("writing {stats_path}"))?;
 
     println!("== batch results ==");
     for (spec, rep) in manifest.jobs.iter().zip(&output.reports) {
         println!(
-            "{:<24} {:<9} n={:<5} edges={:<6} corr={:<4} result={:<4} {:.3}s",
+            "{:<24} {:<9} n={:<5} edges={:<6} corr={:<4} result={:<4} w={}..{} {:.3}s",
             spec.name,
             spec.variant_name(),
             rep.core.n,
             rep.core.skeleton_edges.len(),
-            hit(rep.corr_cache_hit),
-            hit(rep.result_cache_hit),
+            rep.corr_cache.name(),
+            rep.result_cache.name(),
+            rep.threads_used,
+            rep.threads_peak,
             rep.seconds_load + rep.seconds_corr + rep.seconds_run
         );
     }
@@ -77,6 +95,17 @@ pub fn main(args: &Args) -> Result<()> {
         c.entries,
         c.bytes >> 10
     );
+    if let Some(d) = &output.disk {
+        println!(
+            "disk:  {} hits / {} misses / {} evictions / {} dropped, {} entries, {} KiB in use",
+            d.hits,
+            d.misses,
+            d.evictions,
+            d.dropped,
+            d.entries,
+            d.bytes >> 10
+        );
+    }
     println!("wrote {out} + {stats_path} in {:.3}s", t.elapsed_s());
     Ok(())
 }

@@ -33,7 +33,8 @@ USAGE:
            [--beta B --gamma G --theta T --delta D] [--threads N]
            [--orient standard|majority] [--verbose]
   cupc batch --manifest jobs.json [--out results.jsonl] [--stats FILE]
-           [--job-threads J] [--threads N] [--cache-mb 256] [--verbose]
+           [--job-threads J] [--threads N] [--cache-mb 256]
+           [--cache-dir DIR] [--cache-disk-mb 1024] [--verbose]
   cupc simulate --n 1000 --m 10000 --d 0.1 --seed 1 --out data.csv
   cupc experiment <table2|fig5|fig6|fig7|fig8|fig9|fig10|ablation>
            [--scale small|paper] [--engine native|xla] [--reps 1]

@@ -22,6 +22,12 @@
 //! it produces — values are exactly the bytes a cold computation would
 //! produce, so warm and cold batch runs render identical results files
 //! (gated by `tests/batch_runner.rs`).
+//!
+//! This module is the in-process tier; [`super::store::DiskStore`]
+//! persists the same two content-addressed layers (same [`Key`]s) under
+//! `--cache-dir` so they survive the process and are shared across
+//! concurrent invocations. The scheduler probes memory first, then
+//! disk, then recomputes — populating both tiers on the way out.
 
 use super::report::JobResultCore;
 use crate::skeleton::{OrientRule, Variant};

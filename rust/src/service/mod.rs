@@ -11,25 +11,36 @@
 //!   addressing CSV files, registry datasets, or scenario-grid points;
 //! * [`scheduler`] — [`scheduler::run_batch`]: N jobs in flight under
 //!   one global [`scheduler::ThreadBudget`] shared with each job's
-//!   skeleton pipeline (big jobs borrow idle workers from small ones);
+//!   skeleton pipeline; leases are *elastic*
+//!   ([`scheduler::ElasticLease`]): jobs re-lease between skeleton
+//!   levels, so a long tail level absorbs workers freed by finished
+//!   jobs instead of leaving them idle;
 //! * [`cache`] — [`cache::Cache`]: content-addressed two-layer LRU
 //!   (data → correlation matrix, correlation + config → result) so
 //!   repeated alphas over one dataset skip the gram and repeated jobs
 //!   skip everything;
+//! * [`store`] — [`store::DiskStore`]: the same two layers spilled to a
+//!   persistent `--cache-dir` (versioned, checksummed, LRU-evicted by
+//!   byte budget), so repeated `cupc batch` *invocations* — including
+//!   concurrent processes — share warm grams and results; corruption is
+//!   always a miss, never an error;
 //! * [`report`] — deterministic JSON-lines results plus an
 //!   observational stats sidecar.
 //!
 //! **Determinism contract** (extends the pipeline's): the rendered
 //! results stream is bit-identical for any `--job-threads`, any thread
-//! budget, and warm vs. cold cache. Scheduling and caching may only
-//! move wall-clock time. Gated end to end by `tests/batch_runner.rs`.
+//! budget, any between-level re-lease schedule, and cold / warm-memory /
+//! warm-disk cache. Scheduling and caching may only move wall-clock
+//! time. Gated end to end by `tests/batch_runner.rs`.
 
 pub mod cache;
 pub mod job;
 pub mod report;
 pub mod scheduler;
+pub mod store;
 
 pub use cache::{Cache, CacheStats};
 pub use job::{DataSource, JobSpec, Manifest};
-pub use report::{render_results, render_stats, JobReport, JobResultCore};
-pub use scheduler::{run_batch, run_job, BatchOptions, BatchOutput, ThreadBudget};
+pub use report::{render_results, render_stats, CacheOutcome, JobReport, JobResultCore};
+pub use scheduler::{run_batch, run_job, BatchOptions, BatchOutput, ElasticLease, ThreadBudget};
+pub use store::{DiskStats, DiskStore};

@@ -16,9 +16,37 @@
 
 use super::cache::CacheStats;
 use super::job::JobSpec;
+use super::store::DiskStats;
 use crate::api::PcResult;
 use crate::util::json::escape;
 use std::sync::Arc;
+
+/// Where a cached layer was served from (observational — stats stream
+/// only; the results stream must not depend on cache state).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CacheOutcome {
+    /// computed fresh this run (and written to every configured tier)
+    Miss,
+    /// served from the in-process cache
+    Mem,
+    /// loaded from the persistent store (`--cache-dir`)
+    Disk,
+}
+
+impl CacheOutcome {
+    /// Stable spelling used in the stats sidecar (CI greps these).
+    pub fn name(self) -> &'static str {
+        match self {
+            CacheOutcome::Miss => "miss",
+            CacheOutcome::Mem => "mem",
+            CacheOutcome::Disk => "disk",
+        }
+    }
+
+    pub fn is_hit(self) -> bool {
+        !matches!(self, CacheOutcome::Miss)
+    }
+}
 
 /// One level's deterministic bookkeeping.
 #[derive(Clone, Debug, PartialEq)]
@@ -78,6 +106,106 @@ impl JobResultCore {
                 * std::mem::size_of::<(u32, u32)>()
             + std::mem::size_of::<Self>()
     }
+
+    /// Stable little-endian binary encoding for the persistent store
+    /// (`service::store`). The layout is versioned by the store's
+    /// schema header, not here — any layout change must bump
+    /// [`super::store::SCHEMA_VERSION`] so old entries degrade to
+    /// misses instead of misparsing.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(
+            8 * (3 + 4 * self.levels.len())
+                + 8 * (self.skeleton_edges.len()
+                    + self.directed.len()
+                    + self.undirected.len())
+                + 24,
+        );
+        let push_u64 = |b: &mut Vec<u8>, x: u64| b.extend_from_slice(&x.to_le_bytes());
+        push_u64(&mut b, self.n as u64);
+        push_u64(&mut b, self.m as u64);
+        push_u64(&mut b, self.levels.len() as u64);
+        for l in &self.levels {
+            push_u64(&mut b, l.level as u64);
+            push_u64(&mut b, l.tests);
+            push_u64(&mut b, l.removed as u64);
+            push_u64(&mut b, l.edges_after as u64);
+        }
+        for list in [&self.skeleton_edges, &self.directed, &self.undirected] {
+            push_u64(&mut b, list.len() as u64);
+            for &(i, j) in list.iter() {
+                b.extend_from_slice(&i.to_le_bytes());
+                b.extend_from_slice(&j.to_le_bytes());
+            }
+        }
+        b
+    }
+
+    /// Inverse of [`JobResultCore::to_bytes`]. `None` on any structural
+    /// mismatch (short buffer, trailing bytes, counts that don't fit) —
+    /// the store treats that as entry corruption, i.e. a miss.
+    pub fn from_bytes(b: &[u8]) -> Option<JobResultCore> {
+        struct Rd<'a> {
+            b: &'a [u8],
+            pos: usize,
+        }
+        impl Rd<'_> {
+            fn u64(&mut self) -> Option<u64> {
+                let end = self.pos.checked_add(8)?;
+                let v = u64::from_le_bytes(self.b.get(self.pos..end)?.try_into().ok()?);
+                self.pos = end;
+                Some(v)
+            }
+            fn u32(&mut self) -> Option<u32> {
+                let end = self.pos.checked_add(4)?;
+                let v = u32::from_le_bytes(self.b.get(self.pos..end)?.try_into().ok()?);
+                self.pos = end;
+                Some(v)
+            }
+            /// a claimed element count is only trusted if the bytes for
+            /// it are actually present (guards allocation on corruption)
+            fn len(&mut self, elem_bytes: usize) -> Option<usize> {
+                let n = usize::try_from(self.u64()?).ok()?;
+                let need = n.checked_mul(elem_bytes)?;
+                if self.b.len() - self.pos < need {
+                    return None;
+                }
+                Some(n)
+            }
+        }
+        let mut r = Rd { b, pos: 0 };
+        let n = usize::try_from(r.u64()?).ok()?;
+        let m = usize::try_from(r.u64()?).ok()?;
+        let nlevels = r.len(32)?;
+        let mut levels = Vec::with_capacity(nlevels);
+        for _ in 0..nlevels {
+            levels.push(LevelRow {
+                level: usize::try_from(r.u64()?).ok()?,
+                tests: r.u64()?,
+                removed: usize::try_from(r.u64()?).ok()?,
+                edges_after: usize::try_from(r.u64()?).ok()?,
+            });
+        }
+        let mut lists: [Vec<(u32, u32)>; 3] = [Vec::new(), Vec::new(), Vec::new()];
+        for list in &mut lists {
+            let nedges = r.len(8)?;
+            list.reserve_exact(nedges);
+            for _ in 0..nedges {
+                list.push((r.u32()?, r.u32()?));
+            }
+        }
+        if r.pos != b.len() {
+            return None; // trailing garbage is corruption, not slack
+        }
+        let [skeleton_edges, directed, undirected] = lists;
+        Some(JobResultCore {
+            n,
+            m,
+            levels,
+            skeleton_edges,
+            directed,
+            undirected,
+        })
+    }
 }
 
 /// Everything known about a finished job. Deterministic data lives in
@@ -92,10 +220,14 @@ pub struct JobReport {
     pub seconds_corr: f64,
     /// seconds in skeleton + orientation (≈ 0 on a cache hit)
     pub seconds_run: f64,
-    pub corr_cache_hit: bool,
-    pub result_cache_hit: bool,
-    /// workers leased from the shared budget for this job
+    /// where the correlation matrix came from
+    pub corr_cache: CacheOutcome,
+    /// where the result core came from
+    pub result_cache: CacheOutcome,
+    /// workers leased from the shared budget when the job started
     pub threads_used: usize,
+    /// widest the job's elastic lease ever grew (≥ `threads_used`)
+    pub threads_peak: usize,
 }
 
 fn edges_json(edges: &[(u32, u32)]) -> String {
@@ -148,23 +280,20 @@ pub fn result_line(spec: &JobSpec, core: &JobResultCore) -> String {
     s
 }
 
-fn hit_str(hit: bool) -> &'static str {
-    if hit {
-        "hit"
-    } else {
-        "miss"
-    }
-}
-
-/// One observational JSON-lines stats record.
+/// One observational JSON-lines stats record. `corr_cache` /
+/// `result_cache` say where each layer was served from
+/// (`miss` | `mem` | `disk` — the CI warm-cache gate greps these);
+/// `threads_peak` records how wide the elastic lease grew.
 pub fn stats_line(spec: &JobSpec, rep: &JobReport) -> String {
     format!(
-        "{{\"job\":\"{}\",\"threads\":{},\"corr_cache\":\"{}\",\"result_cache\":\"{}\",\
+        "{{\"job\":\"{}\",\"threads\":{},\"threads_peak\":{},\"corr_cache\":\"{}\",\
+         \"result_cache\":\"{}\",\
          \"seconds_load\":{:.6},\"seconds_corr\":{:.6},\"seconds_run\":{:.6}}}",
         escape(&spec.name),
         rep.threads_used,
-        hit_str(rep.corr_cache_hit),
-        hit_str(rep.result_cache_hit),
+        rep.threads_peak,
+        rep.corr_cache.name(),
+        rep.result_cache.name(),
         rep.seconds_load,
         rep.seconds_corr,
         rep.seconds_run
@@ -183,9 +312,15 @@ pub fn render_results(jobs: &[JobSpec], reports: &[JobReport]) -> String {
     s
 }
 
-/// The observational stats stream: per-job lines plus a trailing cache
-/// summary record.
-pub fn render_stats(jobs: &[JobSpec], reports: &[JobReport], cache: &CacheStats) -> String {
+/// The observational stats stream: per-job lines plus a trailing
+/// in-process cache summary record — and, when a persistent store was
+/// in play, a trailing disk-store record.
+pub fn render_stats(
+    jobs: &[JobSpec],
+    reports: &[JobReport],
+    cache: &CacheStats,
+    disk: Option<&DiskStats>,
+) -> String {
     debug_assert_eq!(jobs.len(), reports.len());
     let mut s = String::new();
     for (spec, rep) in jobs.iter().zip(reports) {
@@ -197,6 +332,13 @@ pub fn render_stats(jobs: &[JobSpec], reports: &[JobReport], cache: &CacheStats)
          \"bytes\":{},\"budget\":{}}}}}\n",
         cache.hits, cache.misses, cache.evictions, cache.entries, cache.bytes, cache.budget
     ));
+    if let Some(d) = disk {
+        s.push_str(&format!(
+            "{{\"disk\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"dropped\":{},\
+             \"entries\":{},\"bytes\":{},\"budget\":{}}}}}\n",
+            d.hits, d.misses, d.evictions, d.dropped, d.entries, d.bytes, d.budget
+        ));
+    }
     s
 }
 
@@ -278,15 +420,29 @@ mod tests {
             seconds_load: 0.25,
             seconds_corr: 0.5,
             seconds_run: 1.0,
-            corr_cache_hit: true,
-            result_cache_hit: false,
+            corr_cache: CacheOutcome::Disk,
+            result_cache: CacheOutcome::Miss,
             threads_used: 3,
+            threads_peak: 5,
         };
         let v = Json::parse(&stats_line(&toy_spec(), &rep)).unwrap();
-        assert_eq!(v.get("corr_cache").unwrap().as_str(), Some("hit"));
+        assert_eq!(v.get("corr_cache").unwrap().as_str(), Some("disk"));
         assert_eq!(v.get("result_cache").unwrap().as_str(), Some("miss"));
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(3));
+        assert_eq!(v.get("threads_peak").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("seconds_run").unwrap().as_f64(), Some(1.0));
+    }
+
+    #[test]
+    fn cache_outcome_names_are_the_ci_grep_contract() {
+        // .github/workflows/ci.yml greps these exact spellings in the
+        // warm-cache gate — renaming them silently breaks that job
+        assert_eq!(CacheOutcome::Miss.name(), "miss");
+        assert_eq!(CacheOutcome::Mem.name(), "mem");
+        assert_eq!(CacheOutcome::Disk.name(), "disk");
+        assert!(!CacheOutcome::Miss.is_hit());
+        assert!(CacheOutcome::Mem.is_hit());
+        assert!(CacheOutcome::Disk.is_hit());
     }
 
     #[test]
@@ -297,9 +453,10 @@ mod tests {
             seconds_load: 0.0,
             seconds_corr: 0.0,
             seconds_run: 0.0,
-            corr_cache_hit: false,
-            result_cache_hit: false,
+            corr_cache: CacheOutcome::Miss,
+            result_cache: CacheOutcome::Miss,
             threads_used: 1,
+            threads_peak: 1,
         }];
         let results = render_results(&jobs, &reports);
         assert_eq!(results.lines().count(), 1);
@@ -312,7 +469,7 @@ mod tests {
             bytes: 1024,
             budget: 4096,
         };
-        let stats = render_stats(&jobs, &reports, &cache);
+        let stats = render_stats(&jobs, &reports, &cache, None);
         assert_eq!(stats.lines().count(), 2, "jobs + cache summary");
         let last = stats.lines().last().unwrap();
         let v = Json::parse(last).unwrap();
@@ -320,6 +477,59 @@ mod tests {
             v.get("cache").unwrap().get("hits").unwrap().as_usize(),
             Some(1)
         );
+        // with a disk store, a trailing disk record is appended
+        let disk = DiskStats {
+            hits: 4,
+            misses: 1,
+            evictions: 2,
+            dropped: 1,
+            entries: 6,
+            bytes: 2048,
+            budget: 1 << 20,
+        };
+        let stats = render_stats(&jobs, &reports, &cache, Some(&disk));
+        assert_eq!(stats.lines().count(), 3, "jobs + cache + disk");
+        let v = Json::parse(stats.lines().last().unwrap()).unwrap();
+        let d = v.get("disk").unwrap();
+        assert_eq!(d.get("hits").unwrap().as_usize(), Some(4));
+        assert_eq!(d.get("dropped").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn core_binary_roundtrip_is_exact() {
+        for core in [
+            toy_core(),
+            JobResultCore {
+                n: 0,
+                m: 0,
+                levels: vec![],
+                skeleton_edges: vec![],
+                directed: vec![],
+                undirected: vec![],
+            },
+        ] {
+            let bytes = core.to_bytes();
+            let back = JobResultCore::from_bytes(&bytes).expect("roundtrip");
+            assert_eq!(back, core);
+        }
+    }
+
+    #[test]
+    fn corrupt_core_bytes_decode_to_none_not_panic() {
+        let bytes = toy_core().to_bytes();
+        // truncations at every boundary
+        for cut in [0, 1, 7, 8, 23, bytes.len() - 1] {
+            assert!(JobResultCore::from_bytes(&bytes[..cut]).is_none(), "cut={cut}");
+        }
+        // trailing garbage
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(JobResultCore::from_bytes(&long).is_none());
+        // absurd claimed list length must not allocate or panic
+        let mut lie = bytes.clone();
+        let lvl_count_at = 16; // after n, m
+        lie[lvl_count_at..lvl_count_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(JobResultCore::from_bytes(&lie).is_none());
     }
 
     #[test]

@@ -8,31 +8,46 @@
 //!   [`ThreadBudget`] and runs its skeleton pipeline at the leased
 //!   width ([`crate::skeleton::Config::with_threads`]).
 //!
-//! The lease policy is work-conserving: a job asks for its fair share of
-//! the *remaining* jobs (so seven small jobs split the budget) but a
-//! job that arrives when the queue has drained is handed every idle
-//! worker — big jobs borrow the workers small jobs no longer need.
-//! Leases are released on job completion, never resized mid-job.
+//! The lease policy is work-conserving *and elastic*: a job asks for its
+//! fair share of the remaining jobs (so seven small jobs split the
+//! budget) and then **re-leases between skeleton levels** through an
+//! [`ElasticLease`] wired into the job's
+//! [`crate::skeleton::WidthPolicy`] hook. A boundary re-lease targets
+//! the job's *current fair share*: it absorbs every idle worker while
+//! nothing is queued (a long tail level borrows what finished jobs
+//! returned) and shrinks back when leasers are waiting (waking them) —
+//! so a wide job yields at the next level boundary rather than starving
+//! the queue. Growth is non-blocking and takes only idle workers, so a
+//! re-lease can never stall a running job.
 //!
-//! Determinism: the lease size, the number of job workers, and the
-//! cache state can only change wall-clock time. Per-job results are
-//! thread-count invariant (the pipeline contract), the correlation gram
-//! is blocked identically for any width, cache values are exactly what
-//! a cold computation produces, and reports are collected by manifest
-//! index — so the rendered results stream is bit-identical for any
-//! `job_threads`, any budget, and warm vs. cold cache
-//! (`tests/batch_runner.rs` gates all three).
+//! Caching is two-tier: every job consults the in-process
+//! [`Cache`] first and, when a [`DiskStore`] is configured
+//! (`--cache-dir`), falls back to the persistent store before
+//! recomputing — so repeated `cupc batch` invocations share warm
+//! correlation matrices and results across processes.
+//!
+//! Determinism: the lease size (including any mid-job resize), the
+//! number of job workers, and the cache state — memory or disk — can
+//! only change wall-clock time. Per-job results are width-invariant
+//! (the pipeline contract), the correlation gram is blocked identically
+//! for any width, cache values are exactly the bytes a cold computation
+//! produces (the disk store checksums them), and reports are collected
+//! by manifest index — so the rendered results stream is bit-identical
+//! for any `job_threads`, any budget, any re-lease schedule, and
+//! cold/warm/disk cache (`tests/batch_runner.rs` gates all of it).
 
 use super::cache::{self, Cache, CacheStats};
 use super::job::{DataSource, JobSpec, Manifest};
-use super::report::{JobReport, JobResultCore};
+use super::report::{CacheOutcome, JobReport, JobResultCore};
+use super::store::{DiskStats, DiskStore};
 use crate::api::pc_stable_corr;
 use crate::data::csv::load_csv;
 use crate::sim::{datasets, scenarios};
-use crate::skeleton::available_threads;
+use crate::skeleton::{available_threads, WidthHook, WidthPolicy};
 use crate::stats::corr::DataMatrix;
 use crate::util::timer::Timer;
 use anyhow::{Context, Result};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
@@ -45,7 +60,7 @@ pub struct ThreadBudget {
 
 struct BudgetState {
     available: usize,
-    /// callers currently inside `lease` (for fair division)
+    /// callers currently inside `acquire` (for fair division)
     waiters: usize,
 }
 
@@ -66,11 +81,10 @@ impl ThreadBudget {
         self.total
     }
 
-    /// Lease between 1 and `want` workers, blocking while none are
-    /// available. The grant is capped at the fair share of what is idle
-    /// among concurrent leasers, so simultaneous arrivals split the
-    /// budget instead of the first one draining it.
-    pub fn lease(&self, want: usize) -> Lease<'_> {
+    /// The blocking grant at the heart of [`ThreadBudget::lease`]:
+    /// between 1 and `want` workers, capped at the fair share of what is
+    /// idle among concurrent leasers.
+    fn acquire(&self, want: usize) -> usize {
         let want = want.max(1);
         let mut st = self.state.lock().unwrap();
         st.waiters += 1;
@@ -81,8 +95,66 @@ impl ThreadBudget {
         let n = fair.min(want).min(st.available);
         st.available -= n;
         st.waiters -= 1;
+        n
+    }
+
+    /// Lease between 1 and `want` workers, blocking while none are
+    /// available. The grant is capped at the fair share of what is idle
+    /// among concurrent leasers, so simultaneous arrivals split the
+    /// budget instead of the first one draining it.
+    pub fn lease(&self, want: usize) -> Lease<'_> {
+        Lease {
+            budget: self,
+            n: self.acquire(want),
+        }
+    }
+
+    /// Re-lease `held` workers toward `target`, returning the new held
+    /// count. Shrinking returns workers to the budget immediately (and
+    /// wakes blocked leasers); growing is **non-blocking** — it takes
+    /// only idle workers, and only a fair share of them when other
+    /// leasers are waiting, so a resize can never stall a running job or
+    /// starve a queued one.
+    fn resize(&self, held: usize, target: usize) -> usize {
+        let target = target.max(1);
+        if target == held {
+            return held;
+        }
+        let mut st = self.state.lock().unwrap();
+        let n = if target < held {
+            st.available += held - target;
+            target
+        } else {
+            let room = target - held;
+            let grantable = if st.waiters == 0 {
+                st.available
+            } else {
+                st.available / (st.waiters + 1)
+            };
+            let extra = grantable.min(room);
+            st.available -= extra;
+            held + extra
+        };
         drop(st);
-        Lease { budget: self, n }
+        if n < held {
+            self.cv.notify_all();
+        }
+        n
+    }
+
+    /// The work-conserving re-lease target for a holder of `held`
+    /// workers: every idle worker when nobody is waiting, else an equal
+    /// split of `held + idle` between the holder and the waiters — so a
+    /// boundary re-lease *shrinks* a wide lease when jobs queue up
+    /// behind it (the release wakes them) instead of starving them
+    /// until the wide job finishes.
+    fn fair_share_target(&self, held: usize) -> usize {
+        let st = self.state.lock().unwrap();
+        if st.waiters == 0 {
+            held + st.available
+        } else {
+            ((held + st.available) / (st.waiters + 1)).max(1)
+        }
     }
 
     fn release(&self, n: usize) {
@@ -106,6 +178,75 @@ impl Drop for Lease<'_> {
     }
 }
 
+/// An owned, shareable elastic lease: the initial grant blocks like
+/// [`ThreadBudget::lease`]; afterwards the lease doubles as the job's
+/// [`WidthPolicy`] — before each skeleton level it re-leases toward its
+/// current fair share: absorbing every idle worker while the queue is
+/// quiet, and shrinking back (waking the blocked leasers) when jobs are
+/// waiting, so a wide job yields at the next level boundary instead of
+/// starving the queue. Dropping the lease releases the held workers.
+pub struct ElasticLease {
+    budget: Arc<ThreadBudget>,
+    /// (held, peak) — peak feeds the stats sidecar
+    state: Mutex<(usize, usize)>,
+}
+
+impl ElasticLease {
+    /// Blockingly lease up to `want` workers from `budget`.
+    pub fn acquire(budget: Arc<ThreadBudget>, want: usize) -> Arc<ElasticLease> {
+        let n = budget.acquire(want);
+        Arc::new(ElasticLease {
+            budget,
+            state: Mutex::new((n, n)),
+        })
+    }
+
+    /// Workers currently held.
+    pub fn width(&self) -> usize {
+        self.state.lock().unwrap().0
+    }
+
+    /// Widest this lease has ever been (observational, for the stats
+    /// sidecar).
+    pub fn peak(&self) -> usize {
+        self.state.lock().unwrap().1
+    }
+
+    /// Re-lease toward `target`; returns the new width. Shrink returns
+    /// workers to the budget immediately (waking blocked leasers);
+    /// growth is non-blocking and takes only idle workers.
+    pub fn resize(&self, target: usize) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.0 = self.budget.resize(st.0, target);
+        st.1 = st.1.max(st.0);
+        st.0
+    }
+
+    /// This lease as a between-level width hook for
+    /// [`crate::skeleton::Config`].
+    pub fn hook(lease: &Arc<ElasticLease>) -> WidthHook {
+        WidthHook(lease.clone())
+    }
+}
+
+impl WidthPolicy for ElasticLease {
+    fn width_for_level(&self, _level: usize) -> usize {
+        // between levels: absorb every idle worker when the machine is
+        // quiet, and *give workers back* when jobs are queued — the
+        // fair-share target shrinks a wide lease so a long job can
+        // never starve later arrivals for its whole runtime
+        let target = self.budget.fair_share_target(self.width());
+        self.resize(target)
+    }
+}
+
+impl Drop for ElasticLease {
+    fn drop(&mut self) {
+        let held = self.state.get_mut().unwrap().0;
+        self.budget.release(held);
+    }
+}
+
 /// Batch-run knobs.
 #[derive(Clone, Debug)]
 pub struct BatchOptions {
@@ -113,8 +254,13 @@ pub struct BatchOptions {
     pub job_threads: usize,
     /// global pipeline-worker budget shared by all in-flight jobs
     pub threads: usize,
-    /// cache byte budget
+    /// in-process cache byte budget
     pub cache_bytes: usize,
+    /// persistent cache directory shared across invocations/processes
+    /// (`--cache-dir`); `None` keeps caching in-process only
+    pub cache_dir: Option<PathBuf>,
+    /// byte budget for the persistent store (`--cache-disk-mb`)
+    pub disk_bytes: u64,
     /// per-job progress on stderr
     pub verbose: bool,
 }
@@ -125,6 +271,8 @@ impl Default for BatchOptions {
             job_threads: 1,
             threads: available_threads(),
             cache_bytes: 256 << 20,
+            cache_dir: None,
+            disk_bytes: 1 << 30,
             verbose: false,
         }
     }
@@ -134,6 +282,8 @@ impl Default for BatchOptions {
 pub struct BatchOutput {
     pub reports: Vec<JobReport>,
     pub cache: CacheStats,
+    /// persistent-store counters (`None` without `--cache-dir`)
+    pub disk: Option<DiskStats>,
 }
 
 fn load_data(spec: &JobSpec) -> Result<DataMatrix> {
@@ -150,25 +300,47 @@ fn load_data(spec: &JobSpec) -> Result<DataMatrix> {
     }
 }
 
-/// Run one job at a leased worker width against the shared cache.
-pub fn run_job(spec: &JobSpec, threads: usize, cache: &Cache) -> Result<JobReport> {
+/// Run one job on an elastic worker lease against the shared in-process
+/// cache, with an optional persistent second tier. Lookup order per
+/// layer: memory, then disk (both content-addressed on the same key),
+/// then recompute — a recompute populates both tiers.
+pub fn run_job(
+    spec: &JobSpec,
+    lease: &Arc<ElasticLease>,
+    cache: &Cache,
+    store: Option<&DiskStore>,
+) -> Result<JobReport> {
     let t = Timer::start();
     let data = load_data(spec).with_context(|| format!("job {:?}", spec.name))?;
     let seconds_load = t.elapsed_s();
+    let threads_start = lease.width();
 
     let t = Timer::start();
     let dk = cache::data_key(&data, spec.corr);
-    let (corr, corr_cache_hit) = loop {
+    let (corr, corr_cache) = loop {
         if let Some(c) = cache.get_corr(dk) {
-            break (c, true);
+            break (c, CacheOutcome::Mem);
         }
-        // coalesce concurrent jobs over the same data: one computes the
-        // gram, the others wait on the claim and then re-check the cache
+        // coalesce concurrent jobs over the same data: one computes (or
+        // loads) the gram, the others wait on the claim and re-check the
+        // cache. The disk probe sits inside the claim so concurrent
+        // same-data jobs do one read, not N.
         if let Some(claim) = cache.claim_compute(dk) {
-            let c = Arc::new(spec.corr.matrix(&data, threads));
+            if let Some(v) = store.and_then(|s| s.get_corr(dk, data.n * data.n)) {
+                let c = Arc::new(v);
+                cache.put_corr(dk, c.clone());
+                drop(claim);
+                break (c, CacheOutcome::Disk);
+            }
+            let c = Arc::new(spec.corr.matrix(&data, lease.width()));
             cache.put_corr(dk, c.clone());
+            // waiters only need the memory value — release them before
+            // the (fsync-priced, best-effort) disk write
             drop(claim);
-            break (c, false);
+            if let Some(s) = store {
+                s.put_corr(dk, &c);
+            }
+            break (c, CacheOutcome::Miss);
         }
     };
     let seconds_corr = t.elapsed_s();
@@ -183,21 +355,36 @@ pub fn run_job(spec: &JobSpec, threads: usize, cache: &Cache) -> Result<JobRepor
         spec.variant,
         spec.orient,
     );
-    let (core, result_cache_hit) = loop {
+    let (core, result_cache) = loop {
         if let Some(c) = cache.get_result(rk) {
-            break (c, true);
+            break (c, CacheOutcome::Mem);
         }
         if let Some(claim) = cache.claim_compute(rk) {
-            let cfg = spec.config(threads);
-            let res = pc_stable_corr(&corr, data.n, data.m, &cfg).map(|r| {
-                let core = Arc::new(JobResultCore::from_pc(&r, data.n, data.m));
+            if let Some(loaded) = store.and_then(|s| s.get_result(rk)) {
+                let core = Arc::new(loaded);
                 cache.put_result(rk, core.clone());
-                core
-            });
-            drop(claim); // release before `?` so a failure never strands waiters
+                drop(claim);
+                break (core, CacheOutcome::Disk);
+            }
+            let mut cfg = spec.config(lease.width());
+            // the job re-leases between levels through this hook (only
+            // the batched schedules consult it — a serial/parcpu job
+            // keeps its starting width for its whole run)
+            cfg.width_hook = Some(ElasticLease::hook(lease));
+            let res = pc_stable_corr(&corr, data.n, data.m, &cfg)
+                .map(|r| Arc::new(JobResultCore::from_pc(&r, data.n, data.m)));
+            if let Ok(core) = &res {
+                cache.put_result(rk, core.clone());
+            }
+            // release before `?` so a failure never strands waiters, and
+            // before the disk write so they aren't stalled by the fsync
+            drop(claim);
             let core = res
                 .with_context(|| format!("job {:?} ({})", spec.name, spec.source.label()))?;
-            break (core, false);
+            if let Some(s) = store {
+                s.put_result(rk, &core);
+            }
+            break (core, CacheOutcome::Miss);
         }
     };
     let seconds_run = t.elapsed_s();
@@ -207,31 +394,47 @@ pub fn run_job(spec: &JobSpec, threads: usize, cache: &Cache) -> Result<JobRepor
         seconds_load,
         seconds_corr,
         seconds_run,
-        corr_cache_hit,
-        result_cache_hit,
-        threads_used: threads,
+        corr_cache,
+        result_cache,
+        threads_used: threads_start,
+        threads_peak: lease.peak(),
     })
 }
 
 /// Run every manifest job, up to `job_threads` concurrently, under one
-/// shared [`ThreadBudget`] and [`Cache`]. Reports come back in manifest
-/// order. On a job failure the batch stops claiming new jobs (jobs
-/// already in flight run to completion) and the lowest-index error is
-/// reported.
+/// shared [`ThreadBudget`] and [`Cache`] (plus the persistent store when
+/// `opts.cache_dir` is set). Reports come back in manifest order. On a
+/// job failure the batch stops claiming new jobs (jobs already in
+/// flight run to completion) and the lowest-index error is reported.
+///
+/// An unusable `cache_dir` (uncreatable/read-only) fails the batch up
+/// front — deliberately stricter than the store's per-entry
+/// corruption-is-a-miss policy: the user asked for persistence by name,
+/// and silently downgrading to in-process caching would hide that every
+/// future invocation will run cold.
 pub fn run_batch(manifest: &Manifest, opts: &BatchOptions, cache: &Cache) -> Result<BatchOutput> {
+    let store = match &opts.cache_dir {
+        Some(dir) => Some(DiskStore::open(dir, opts.disk_bytes)?),
+        None => None,
+    };
+    let store = store.as_ref();
     let njobs = manifest.jobs.len();
     let workers = opts.job_threads.clamp(1, njobs.max(1));
-    let budget = ThreadBudget::new(opts.threads);
+    let budget = Arc::new(ThreadBudget::new(opts.threads));
     let mut slots: Vec<Option<Result<JobReport>>> = Vec::with_capacity(njobs);
     slots.resize_with(njobs, || None);
 
     if workers <= 1 {
         for (idx, spec) in manifest.jobs.iter().enumerate() {
-            let lease = budget.lease(budget.total());
+            let lease = ElasticLease::acquire(budget.clone(), budget.total());
             if opts.verbose {
-                eprintln!("[batch] job {idx} {:?}: {} worker(s)", spec.name, lease.n);
+                eprintln!(
+                    "[batch] job {idx} {:?}: {} worker(s)",
+                    spec.name,
+                    lease.width()
+                );
             }
-            let rep = run_job(spec, lease.n, cache);
+            let rep = run_job(spec, &lease, cache, store);
             let failed = rep.is_err();
             slots[idx] = Some(rep);
             if failed {
@@ -255,13 +458,18 @@ pub fn run_batch(manifest: &Manifest, opts: &BatchOptions, cache: &Cache) -> Res
                     let spec = &manifest.jobs[idx];
                     // fair share of the queue that is left; the last
                     // jobs standing borrow the drained queue's workers
+                    // (and re-lease the rest between levels)
                     let remaining = njobs - idx;
                     let want = (budget.total() / workers.min(remaining)).max(1);
-                    let lease = budget.lease(want);
+                    let lease = ElasticLease::acquire(budget.clone(), want);
                     if opts.verbose {
-                        eprintln!("[batch] job {idx} {:?}: {} worker(s)", spec.name, lease.n);
+                        eprintln!(
+                            "[batch] job {idx} {:?}: {} worker(s)",
+                            spec.name,
+                            lease.width()
+                        );
                     }
-                    let rep = run_job(spec, lease.n, cache);
+                    let rep = run_job(spec, &lease, cache, store);
                     drop(lease);
                     if rep.is_err() {
                         aborted.store(true, Ordering::Relaxed);
@@ -286,6 +494,7 @@ pub fn run_batch(manifest: &Manifest, opts: &BatchOptions, cache: &Cache) -> Res
     Ok(BatchOutput {
         reports,
         cache: cache.stats(),
+        disk: store.map(|s| s.stats()),
     })
 }
 
@@ -306,6 +515,13 @@ mod tests {
             corr,
             orient: OrientRule::Standard,
         }
+    }
+
+    /// A lone elastic lease over a private budget — the test analog of
+    /// the old fixed-width `run_job(spec, threads, cache)` call.
+    fn lone_lease(threads: usize) -> Arc<ElasticLease> {
+        let budget = Arc::new(ThreadBudget::new(threads));
+        ElasticLease::acquire(budget, threads)
     }
 
     #[test]
@@ -330,6 +546,87 @@ mod tests {
         let b = ThreadBudget::new(0);
         assert_eq!(b.total(), 1, "a budget can never be empty");
         assert_eq!(b.lease(1).n, 1);
+    }
+
+    /// The raw grow/shrink accounting behind [`ElasticLease::resize`]
+    /// (driven directly so every arithmetic branch is pinned without a
+    /// second public lease type).
+    #[test]
+    fn budget_resize_grows_from_idle_and_shrinks_immediately() {
+        let b = ThreadBudget::new(8);
+        let mut a = b.acquire(4);
+        let c = b.acquire(2);
+        assert_eq!((a, c), (4, 2));
+        a = b.resize(a, 8);
+        assert_eq!(a, 6, "growth takes only the 2 idle workers");
+        b.release(c);
+        a = b.resize(a, 8);
+        assert_eq!(a, 8, "freed workers are absorbed");
+        assert_eq!(b.resize(a, 8), 8, "resize to the current width is a no-op");
+        a = b.resize(a, 2);
+        assert_eq!(a, 2, "shrink releases immediately");
+        assert_eq!(b.lease(100).n, 6, "shrunk workers are leasable again");
+        b.release(a);
+        assert_eq!(b.lease(100).n, 8, "a resized holding releases its final width");
+    }
+
+    #[test]
+    fn elastic_lease_absorbs_freed_workers_between_levels() {
+        let b = Arc::new(ThreadBudget::new(4));
+        let lease = ElasticLease::acquire(b.clone(), 2);
+        assert_eq!(lease.width(), 2);
+        let other = b.lease(2);
+        assert_eq!(
+            lease.width_for_level(1),
+            2,
+            "nothing idle: the level runs at the held width"
+        );
+        drop(other);
+        assert_eq!(
+            lease.width_for_level(2),
+            4,
+            "a freed budget is absorbed at the next level boundary"
+        );
+        assert_eq!(lease.peak(), 4);
+        assert_eq!(lease.width(), 4);
+        drop(lease);
+        assert_eq!(b.lease(100).n, 4, "drop returns the grown width");
+    }
+
+    /// A wide job must yield at a level boundary while another job is
+    /// blocked on the budget — the anti-starvation half of the elastic
+    /// contract (growth-only re-leasing would serialize the batch
+    /// behind the first wide job).
+    #[test]
+    fn elastic_lease_yields_to_waiters_at_level_boundaries() {
+        use std::sync::mpsc;
+        use std::time::{Duration, Instant};
+        let b = Arc::new(ThreadBudget::new(4));
+        let big = ElasticLease::acquire(b.clone(), 4);
+        assert_eq!(big.width(), 4, "a lone job grabs the whole budget");
+        let (tx, rx) = mpsc::channel();
+        let b2 = b.clone();
+        let waiter = std::thread::spawn(move || {
+            let lease = ElasticLease::acquire(b2, 4); // blocks: budget empty
+            tx.send(lease.width()).unwrap();
+        });
+        // poll the boundary re-lease until the waiter has registered;
+        // once it has, the fair-share target must shrink the wide lease
+        let deadline = Instant::now() + Duration::from_secs(10);
+        let mut w = big.width_for_level(1);
+        while w == 4 && Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(5));
+            w = big.width_for_level(1);
+        }
+        assert_eq!(w, 2, "the boundary re-lease must split with the waiter");
+        let granted = rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("the shrink must wake the blocked leaser");
+        assert!(
+            (1..=2).contains(&granted),
+            "the woken job gets the yielded share, got {granted}"
+        );
+        waiter.join().unwrap();
     }
 
     #[test]
@@ -364,15 +661,16 @@ mod tests {
     fn warm_job_is_cached_and_bitwise_identical() {
         let spec = scenario_job("a", "sparse-a01", 0.01, CorrKind::Pearson);
         let cache = Cache::new(64 << 20);
-        let cold = run_job(&spec, 2, &cache).unwrap();
-        assert!(!cold.corr_cache_hit);
-        assert!(!cold.result_cache_hit);
-        let warm = run_job(&spec, 1, &cache).unwrap();
-        assert!(warm.corr_cache_hit);
-        assert!(warm.result_cache_hit);
+        let cold = run_job(&spec, &lone_lease(2), &cache, None).unwrap();
+        assert_eq!(cold.corr_cache, CacheOutcome::Miss);
+        assert_eq!(cold.result_cache, CacheOutcome::Miss);
+        let warm = run_job(&spec, &lone_lease(1), &cache, None).unwrap();
+        assert_eq!(warm.corr_cache, CacheOutcome::Mem);
+        assert_eq!(warm.result_cache, CacheOutcome::Mem);
+        assert!(warm.result_cache.is_hit());
         assert_eq!(cold.core, warm.core, "cached result must be bitwise equal");
         // an independent cold run recomputes the same bytes
-        let fresh = run_job(&spec, 4, &Cache::new(64 << 20)).unwrap();
+        let fresh = run_job(&spec, &lone_lease(4), &Cache::new(64 << 20), None).unwrap();
         assert_eq!(cold.core, fresh.core);
     }
 
@@ -382,27 +680,38 @@ mod tests {
         let cache = Cache::new(64 << 20);
         let a = run_job(
             &scenario_job("a", "sparse-a01", 0.01, CorrKind::Pearson),
-            1,
+            &lone_lease(1),
             &cache,
+            None,
         )
         .unwrap();
         let b = run_job(
             &scenario_job("b", "sparse-a01", 0.05, CorrKind::Pearson),
-            1,
+            &lone_lease(1),
             &cache,
+            None,
         )
         .unwrap();
-        assert!(!a.corr_cache_hit);
-        assert!(b.corr_cache_hit, "same data + kind must reuse the gram");
-        assert!(!b.result_cache_hit, "different alpha is a different result");
+        assert_eq!(a.corr_cache, CacheOutcome::Miss);
+        assert_eq!(
+            b.corr_cache,
+            CacheOutcome::Mem,
+            "same data + kind must reuse the gram"
+        );
+        assert_eq!(
+            b.result_cache,
+            CacheOutcome::Miss,
+            "different alpha is a different result"
+        );
         // Spearman over the same data is a different correlation identity
         let c = run_job(
             &scenario_job("c", "sparse-a01", 0.01, CorrKind::Spearman),
-            1,
+            &lone_lease(1),
             &cache,
+            None,
         )
         .unwrap();
-        assert!(!c.corr_cache_hit);
+        assert_eq!(c.corr_cache, CacheOutcome::Miss);
     }
 
     #[test]
@@ -427,6 +736,7 @@ mod tests {
                 &cache,
             )
             .unwrap();
+            assert!(out.disk.is_none(), "no --cache-dir, no disk stats");
             render_results(&manifest.jobs, &out.reports)
         };
         let serial = run(1);
@@ -488,5 +798,32 @@ mod tests {
         let msg = format!("{err:#}");
         assert!(msg.contains("missing"), "{msg}");
         assert!(msg.contains("not/here.csv"), "{msg}");
+    }
+
+    /// Disk tier through `run_job`: a fresh in-process cache with a warm
+    /// store serves both layers from disk, bitwise identical.
+    #[test]
+    fn disk_tier_serves_a_fresh_process_bitwise() {
+        let dir = std::env::temp_dir().join(format!(
+            "cupc_sched_disk_{}_fresh",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = DiskStore::open(&dir, 64 << 20).unwrap();
+        let spec = scenario_job("a", "sparse-a01", 0.01, CorrKind::Pearson);
+
+        let cold = run_job(&spec, &lone_lease(2), &Cache::new(64 << 20), Some(&store)).unwrap();
+        assert_eq!(cold.corr_cache, CacheOutcome::Miss);
+        assert_eq!(cold.result_cache, CacheOutcome::Miss);
+
+        // "new process": fresh memory cache, same store
+        let warm = run_job(&spec, &lone_lease(1), &Cache::new(64 << 20), Some(&store)).unwrap();
+        assert_eq!(warm.corr_cache, CacheOutcome::Disk);
+        assert_eq!(warm.result_cache, CacheOutcome::Disk);
+        assert_eq!(cold.core, warm.core, "disk round-trip must be bitwise");
+        let st = store.stats();
+        assert!(st.hits >= 2, "{st:?}");
+        assert_eq!(st.dropped, 0, "{st:?}");
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }

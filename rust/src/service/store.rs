@@ -1,0 +1,800 @@
+//! Persistent on-disk tier of the content-addressed cache
+//! (`cupc batch --cache-dir`).
+//!
+//! cuPC's amortization story does not stop at process exit: practitioners
+//! re-run PC over the same data with different alphas and variants
+//! (ParallelPC, Le et al. 2015), so the expensive layers — the
+//! correlation gram and whole job results — are spilled here and shared
+//! by every later `cupc batch` invocation, including concurrent ones.
+//!
+//! Design:
+//!
+//! * **one file per entry**, named by the 128-bit content key, holding a
+//!   fixed header (magic, [`SCHEMA_VERSION`], entry kind, the key bytes,
+//!   payload length, payload checksum) followed by the raw payload;
+//! * **atomic, durable writes** — payloads land in a temp file that is
+//!   fsync'd and then renamed into place (plus a best-effort directory
+//!   fsync), so a reader can never observe a half-written entry under
+//!   its final name;
+//! * **corruption is a miss, never an error** — truncation, a magic or
+//!   version mismatch, a foreign key, a bad checksum, or an undecodable
+//!   payload all delete the entry and fall through to recompute; results
+//!   stay bit-identical because the store only ever returns
+//!   checksum-validated bytes that a cold computation produced;
+//! * **byte-budgeted LRU** — every read hit bumps the entry's access
+//!   stamp (mtime); when the directory outgrows the budget, puts evict
+//!   stalest-first, never the entry just written. An entry larger than
+//!   the whole budget is not stored at all. The eviction scan is gated
+//!   on a per-store byte estimate (seeded at open, snapped to ground
+//!   truth by every scan), so the common put is one write + one rename;
+//!   temp files orphaned by crashed writers are reaped at open;
+//! * **multi-process safe** — writers in other processes use the same
+//!   temp + rename protocol, and readers revalidate every byte, so a
+//!   shared `--cache-dir` needs no locking beyond the filesystem's
+//!   rename atomicity (gated by
+//!   `tests/batch_runner.rs::concurrent_batches_share_one_cache_dir`).
+//!   One benign race remains: a reader that found an entry corrupt
+//!   deletes it by path, and a concurrent writer may have renamed a
+//!   fresh valid entry into that path in between — costing that entry
+//!   (a future recompute) and a spurious `dropped` count, never a wrong
+//!   result.
+
+use super::cache::{ContentHasher, Key};
+use super::report::JobResultCore;
+use anyhow::{Context, Result};
+use std::fs::{self, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, SystemTime};
+
+/// Bump on ANY layout change — header or payload encodings. Old entries
+/// then degrade to misses (delete + recompute) instead of misparsing.
+pub const SCHEMA_VERSION: u32 = 1;
+
+const MAGIC: [u8; 4] = *b"CUPC";
+/// magic 4 + version 4 + kind 1 + key 16 + payload_len 8 + checksum 16
+const HEADER_LEN: usize = 49;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+enum Kind {
+    Corr,
+    Result,
+}
+
+impl Kind {
+    fn tag(self) -> u8 {
+        match self {
+            Kind::Corr => 0,
+            Kind::Result => 1,
+        }
+    }
+
+    fn prefix(self) -> &'static str {
+        match self {
+            Kind::Corr => "corr",
+            Kind::Result => "res",
+        }
+    }
+}
+
+/// Aggregate counters plus a directory census (the stats stream's
+/// trailing `disk` record).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DiskStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// entries deleted as truncated / version-mismatched / corrupt
+    pub dropped: u64,
+    pub entries: usize,
+    pub bytes: u64,
+    pub budget: u64,
+}
+
+#[derive(Default)]
+struct Counters {
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+    dropped: u64,
+}
+
+/// Handle on one persistent cache directory. Cheap to share by
+/// reference across job workers; all methods take `&self`.
+pub struct DiskStore {
+    dir: PathBuf,
+    budget: u64,
+    counters: Mutex<Counters>,
+    /// serializes rename + evict so one process doesn't race its own
+    /// scans (the expensive tmp-file write + fsync happens outside it)
+    put_lock: Mutex<()>,
+    /// This store's estimate of the directory's entry bytes — seeded by
+    /// a scan at open, bumped per put, snapped back to ground truth by
+    /// every eviction scan. The O(entries) directory sweep only runs
+    /// when this estimate exceeds the budget, so a put is normally one
+    /// write + one rename. The estimate can lag writers in *other*
+    /// processes, which only delays eviction — each writer re-checks
+    /// exactly (from `read_dir`) whenever its own estimate trips.
+    approx_bytes: AtomicU64,
+}
+
+/// Temp files are invisible to lookups and eviction; a crashed writer
+/// can orphan one, so anything this stale is reaped at the next open.
+/// (Live tmp files exist for milliseconds — hours of margin.)
+const TMP_PREFIX: &str = ".tmp-";
+const TMP_REAP_AGE: Duration = Duration::from_secs(3600);
+
+/// Process-global temp-name counter: two `DiskStore` handles on one
+/// directory inside one process (e.g. two concurrent `run_batch` calls)
+/// must never hand out the same `.tmp-<pid>-<seq>` name — a per-store
+/// counter would make the second writer truncate the first's in-flight
+/// file.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn reap_stale_tmp(dir: &Path) {
+    let rd = match fs::read_dir(dir) {
+        Ok(r) => r,
+        Err(_) => return,
+    };
+    let now = SystemTime::now();
+    for e in rd.flatten() {
+        let path = e.path();
+        let is_tmp = path
+            .file_name()
+            .and_then(|n| n.to_str())
+            .map(|n| n.starts_with(TMP_PREFIX))
+            .unwrap_or(false);
+        if !is_tmp {
+            continue;
+        }
+        // only a *provably* old tmp is an orphan — unreadable metadata
+        // or an mtime at/after our `now` snapshot means a live writer
+        // may own it (another store can create one mid-scan), and
+        // deleting that would tear an in-flight put
+        let stale = e
+            .metadata()
+            .and_then(|md| md.modified())
+            .ok()
+            .and_then(|mtime| now.duration_since(mtime).ok())
+            .map(|age| age >= TMP_REAP_AGE)
+            .unwrap_or(false);
+        if stale {
+            let _ = fs::remove_file(&path);
+        }
+    }
+}
+
+fn checksum(payload: &[u8]) -> Key {
+    let mut h = ContentHasher::new();
+    h.write(payload);
+    h.finish()
+}
+
+/// Is this file name one of ours? Matches the exact shape
+/// [`DiskStore::entry_path`] writes — `<prefix>-<32 hex digits>.bin`,
+/// with the prefixes derived from [`Kind::prefix`] so the writer and
+/// the scanners can never disagree. Anything else (temp files, a
+/// user's `res-backup.bin`) is foreign: never counted against the
+/// budget, never evicted.
+fn is_entry_name(name: &str) -> bool {
+    let stem = match name.strip_suffix(".bin") {
+        Some(s) => s,
+        None => return false,
+    };
+    [Kind::Corr, Kind::Result].into_iter().any(|k| {
+        stem.strip_prefix(k.prefix())
+            .and_then(|rest| rest.strip_prefix('-'))
+            .is_some_and(|key| key.len() == 32 && key.bytes().all(|b| b.is_ascii_hexdigit()))
+    })
+}
+
+impl DiskStore {
+    /// Open (creating if needed) a persistent store rooted at `dir` with
+    /// a byte `budget` for entry payloads + headers. Reaps temp files
+    /// orphaned by crashed writers and seeds the byte estimate from the
+    /// directory's current contents. A zero budget is rejected loudly —
+    /// it would make every put a silent no-op, the exact downgrade the
+    /// writability probe below exists to prevent.
+    pub fn open(dir: &Path, budget: u64) -> Result<DiskStore> {
+        anyhow::ensure!(
+            budget > 0,
+            "disk cache budget is zero — raise --cache-disk-mb or drop --cache-dir"
+        );
+        fs::create_dir_all(dir)
+            .with_context(|| format!("creating cache dir {}", dir.display()))?;
+        // probe writability up front: an unwritable --cache-dir must
+        // fail the batch loudly here (run_batch's contract) — if it only
+        // surfaced in put(), which swallows I/O errors by design, the
+        // user would silently get zero persistence
+        let probe = dir.join(format!("{TMP_PREFIX}probe-{}", std::process::id()));
+        fs::write(&probe, b"cupc")
+            .with_context(|| format!("cache dir {} is not writable", dir.display()))?;
+        let _ = fs::remove_file(&probe);
+        reap_stale_tmp(dir);
+        let store = DiskStore {
+            dir: dir.to_path_buf(),
+            budget,
+            counters: Mutex::new(Counters::default()),
+            put_lock: Mutex::new(()),
+            approx_bytes: AtomicU64::new(0),
+        };
+        let (_, bytes) = store.census();
+        store.approx_bytes.store(bytes, Ordering::Relaxed);
+        Ok(store)
+    }
+
+    fn entry_path(&self, kind: Kind, key: Key) -> PathBuf {
+        self.dir
+            .join(format!("{}-{:016x}{:016x}.bin", kind.prefix(), key.0, key.1))
+    }
+
+    fn count<F: FnOnce(&mut Counters)>(&self, f: F) {
+        f(&mut self.counters.lock().unwrap());
+    }
+
+    /// Read + fully validate one entry. `Some(payload)` only when every
+    /// header field and the checksum agree; any mismatch deletes the
+    /// file and counts `dropped`. A missing file is simply `None`.
+    /// Counters for hit/miss are the caller's job (a checksum-valid
+    /// payload can still fail to decode).
+    fn load(&self, kind: Kind, key: Key) -> Option<Vec<u8>> {
+        let path = self.entry_path(kind, key);
+        let mut raw = match fs::read(&path) {
+            Ok(r) => r,
+            Err(_) => return None,
+        };
+        let valid = raw.len() >= HEADER_LEN
+            && raw[0..4] == MAGIC
+            && u32::from_le_bytes(raw[4..8].try_into().unwrap()) == SCHEMA_VERSION
+            && raw[8] == kind.tag()
+            && u64::from_le_bytes(raw[9..17].try_into().unwrap()) == key.0
+            && u64::from_le_bytes(raw[17..25].try_into().unwrap()) == key.1
+            && u64::from_le_bytes(raw[25..33].try_into().unwrap())
+                == (raw.len() - HEADER_LEN) as u64
+            && {
+                let want = (
+                    u64::from_le_bytes(raw[33..41].try_into().unwrap()),
+                    u64::from_le_bytes(raw[41..49].try_into().unwrap()),
+                );
+                checksum(&raw[HEADER_LEN..]) == want
+            };
+        if !valid {
+            self.drop_entry(&path);
+            return None;
+        }
+        Some(raw.split_off(HEADER_LEN))
+    }
+
+    fn drop_entry(&self, path: &Path) {
+        let _ = fs::remove_file(path);
+        self.count(|c| c.dropped += 1);
+    }
+
+    /// Bump the LRU access stamp (best-effort — a failed touch only
+    /// worsens this entry's eviction odds, never correctness).
+    fn touch(&self, kind: Kind, key: Key) {
+        if let Ok(f) = OpenOptions::new()
+            .append(true)
+            .open(self.entry_path(kind, key))
+        {
+            let _ = f.set_modified(SystemTime::now());
+        }
+    }
+
+    /// Correlation matrix for `key`, validated against the expected
+    /// element count (n²). A checksum-valid entry of the wrong shape can
+    /// only be a key collision — dropped like corruption.
+    pub fn get_corr(&self, key: Key, expected_len: usize) -> Option<Vec<f64>> {
+        let payload = self.load(Kind::Corr, key);
+        let decoded = payload.and_then(|p| {
+            if p.len() != expected_len.checked_mul(8)? {
+                self.drop_entry(&self.entry_path(Kind::Corr, key));
+                return None;
+            }
+            let mut v = Vec::with_capacity(expected_len);
+            for chunk in p.chunks_exact(8) {
+                v.push(f64::from_le_bytes(chunk.try_into().unwrap()));
+            }
+            Some(v)
+        });
+        match decoded {
+            Some(v) => {
+                self.touch(Kind::Corr, key);
+                self.count(|c| c.hits += 1);
+                Some(v)
+            }
+            None => {
+                self.count(|c| c.misses += 1);
+                None
+            }
+        }
+    }
+
+    /// Persist a correlation matrix (exact bit patterns — the cached
+    /// and recomputed grams are bitwise interchangeable). Builds the
+    /// byte payload up front, transiently doubling the gram's
+    /// footprint; at this repo's workload sizes that is MB-scale. If
+    /// grams ever reach GB-scale, stream the chunks instead — the
+    /// checksum hasher is chunking-invariant, so no format change.
+    pub fn put_corr(&self, key: Key, corr: &[f64]) {
+        let mut payload = Vec::with_capacity(corr.len() * 8);
+        for x in corr {
+            payload.extend_from_slice(&x.to_le_bytes());
+        }
+        self.put(Kind::Corr, key, &payload);
+    }
+
+    /// Job result core for `key`; an undecodable payload is dropped.
+    pub fn get_result(&self, key: Key) -> Option<JobResultCore> {
+        let decoded = self.load(Kind::Result, key).and_then(|p| {
+            let core = JobResultCore::from_bytes(&p);
+            if core.is_none() {
+                self.drop_entry(&self.entry_path(Kind::Result, key));
+            }
+            core
+        });
+        match decoded {
+            Some(core) => {
+                self.touch(Kind::Result, key);
+                self.count(|c| c.hits += 1);
+                Some(core)
+            }
+            None => {
+                self.count(|c| c.misses += 1);
+                None
+            }
+        }
+    }
+
+    /// Persist a job result core.
+    pub fn put_result(&self, key: Key, core: &JobResultCore) {
+        self.put(Kind::Result, key, &core.to_bytes());
+    }
+
+    /// Write one entry atomically (temp + fsync + rename), then enforce
+    /// the byte budget. Caching is best-effort: every I/O failure is
+    /// swallowed — the worst outcome is a future recompute. The
+    /// expensive part — writing and fsync'ing the temp file — happens
+    /// outside `put_lock`, so concurrent workers only serialize on the
+    /// rename + (budget-triggered) eviction scan.
+    fn put(&self, kind: Kind, key: Key, payload: &[u8]) {
+        let total = (HEADER_LEN + payload.len()) as u64;
+        if total > self.budget {
+            return; // would evict everything and still not fit
+        }
+        let final_path = self.entry_path(kind, key);
+        let tmp = self.dir.join(format!(
+            "{TMP_PREFIX}{}-{}",
+            std::process::id(),
+            TMP_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        let written = (|| -> std::io::Result<()> {
+            let mut f = fs::File::create(&tmp)?;
+            let mut header = [0u8; HEADER_LEN];
+            header[0..4].copy_from_slice(&MAGIC);
+            header[4..8].copy_from_slice(&SCHEMA_VERSION.to_le_bytes());
+            header[8] = kind.tag();
+            header[9..17].copy_from_slice(&key.0.to_le_bytes());
+            header[17..25].copy_from_slice(&key.1.to_le_bytes());
+            header[25..33].copy_from_slice(&(payload.len() as u64).to_le_bytes());
+            let ck = checksum(payload);
+            header[33..41].copy_from_slice(&ck.0.to_le_bytes());
+            header[41..49].copy_from_slice(&ck.1.to_le_bytes());
+            f.write_all(&header)?;
+            f.write_all(payload)?;
+            f.sync_all() // durable before it becomes visible
+        })();
+        if written.is_err() {
+            let _ = fs::remove_file(&tmp);
+            return;
+        }
+        {
+            let _guard = self.put_lock.lock().unwrap();
+            if fs::rename(&tmp, &final_path).is_err() {
+                let _ = fs::remove_file(&tmp);
+                return;
+            }
+            // re-putting an existing key double-counts; that only means
+            // the next eviction check fires early and snaps the
+            // estimate back
+            let approx = self.approx_bytes.fetch_add(total, Ordering::Relaxed) + total;
+            if approx > self.budget {
+                self.evict_locked(&final_path);
+            }
+        }
+        // make the rename itself durable where the platform allows —
+        // pure durability, so it runs after the lock is released
+        if let Ok(d) = fs::File::open(&self.dir) {
+            let _ = d.sync_all();
+        }
+    }
+
+    /// One directory walk shared by eviction, the census, and the
+    /// open-time seed: every entry file as (mtime, byte length, path).
+    /// Keeping a single definition of "what is an entry" means stats,
+    /// the byte estimate, and eviction can never disagree.
+    fn scan_entries(&self) -> Vec<(SystemTime, u64, PathBuf)> {
+        let mut entries = Vec::new();
+        let rd = match fs::read_dir(&self.dir) {
+            Ok(r) => r,
+            Err(_) => return entries,
+        };
+        for e in rd.flatten() {
+            let path = e.path();
+            let is_entry = path
+                .file_name()
+                .and_then(|n| n.to_str())
+                .map(is_entry_name)
+                .unwrap_or(false);
+            if !is_entry {
+                continue;
+            }
+            let md = match e.metadata() {
+                Ok(m) if m.is_file() => m,
+                _ => continue,
+            };
+            let mtime = md.modified().unwrap_or(SystemTime::UNIX_EPOCH);
+            entries.push((mtime, md.len(), path));
+        }
+        entries
+    }
+
+    /// Enforce the byte budget: remove stalest-by-mtime entries until the
+    /// directory fits, never touching `keep` (the entry just written) or
+    /// non-entry files. Caller holds `put_lock`. Also snaps the byte
+    /// estimate back to the scan's ground truth.
+    fn evict_locked(&self, keep: &Path) {
+        let mut entries = self.scan_entries();
+        let mut total: u64 = entries.iter().map(|(_, len, _)| len).sum();
+        if total > self.budget {
+            // hysteresis: shrink to a low-water mark (7/8 of the
+            // budget), not to the brim — otherwise at steady state the
+            // very next put would re-trigger this whole scan
+            let low_water = self.budget - self.budget / 8;
+            // stalest first; path tie-break keeps same-stamp order stable
+            entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.2.cmp(&b.2)));
+            for (_, len, path) in entries {
+                if total <= low_water {
+                    break;
+                }
+                if path == *keep {
+                    continue;
+                }
+                if fs::remove_file(&path).is_ok() {
+                    total -= len;
+                    self.count(|c| c.evictions += 1);
+                }
+            }
+        }
+        self.approx_bytes.store(total, Ordering::Relaxed);
+    }
+
+    /// Count of entry files and their total bytes, from the directory.
+    fn census(&self) -> (usize, u64) {
+        let entries = self.scan_entries();
+        let bytes = entries.iter().map(|(_, len, _)| len).sum();
+        (entries.len(), bytes)
+    }
+
+    /// Counters plus a live directory census.
+    pub fn stats(&self) -> DiskStats {
+        let (entries, bytes) = self.census();
+        let c = self.counters.lock().unwrap();
+        DiskStats {
+            hits: c.hits,
+            misses: c.misses,
+            evictions: c.evictions,
+            dropped: c.dropped,
+            entries,
+            bytes,
+            budget: self.budget,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::report::LevelRow;
+    use std::time::Duration;
+
+    /// Fresh store under a unique temp dir (tests run concurrently).
+    fn tmp_store(tag: &str, budget: u64) -> (DiskStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "cupc_store_{}_{tag}",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let store = DiskStore::open(&dir, budget).unwrap();
+        (store, dir)
+    }
+
+    fn toy_core() -> JobResultCore {
+        JobResultCore {
+            n: 4,
+            m: 100,
+            levels: vec![LevelRow {
+                level: 0,
+                tests: 6,
+                removed: 2,
+                edges_after: 4,
+            }],
+            skeleton_edges: vec![(0, 1), (1, 2)],
+            directed: vec![(0, 1)],
+            undirected: vec![(1, 2)],
+        }
+    }
+
+    /// An unusable cache path must fail `open` loudly (the batch-level
+    /// contract) rather than silently degrade every later put. A plain
+    /// file in the dir's place trips `create_dir_all` on any platform
+    /// and under any privilege level.
+    #[test]
+    fn open_fails_loudly_on_an_unusable_path() {
+        let file = std::env::temp_dir().join(format!(
+            "cupc_store_{}_notadir",
+            std::process::id()
+        ));
+        fs::write(&file, b"x").unwrap();
+        let err = DiskStore::open(&file, 1024).expect_err("a file is not a cache dir");
+        assert!(format!("{err:#}").contains("cache dir"), "{err:#}");
+        let _ = fs::remove_file(&file);
+    }
+
+    #[test]
+    fn corr_roundtrip_is_bitwise() {
+        let (store, dir) = tmp_store("corr_rt", 1 << 20);
+        // exercise exact bit patterns incl. negative zero and subnormals
+        let v = vec![1.0, -0.0, f64::MIN_POSITIVE / 2.0, -0.731, 3.5e300];
+        store.put_corr((1, 2), &v);
+        let got = store.get_corr((1, 2), v.len()).expect("hit");
+        assert_eq!(
+            got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            v.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+            "disk roundtrip must preserve every bit"
+        );
+        let st = store.stats();
+        assert_eq!((st.hits, st.misses, st.dropped), (1, 0, 0));
+        assert_eq!(st.entries, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn result_roundtrip_and_missing_keys() {
+        let (store, dir) = tmp_store("res_rt", 1 << 20);
+        let core = toy_core();
+        store.put_result((7, 7), &core);
+        assert_eq!(store.get_result((7, 7)).as_ref(), Some(&core));
+        assert!(store.get_result((8, 8)).is_none(), "absent key is a miss");
+        // a corr lookup on a result key must miss (kinds do not alias)
+        assert!(store.get_corr((7, 7), 4).is_none());
+        let st = store.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 2);
+        assert_eq!(st.dropped, 0, "absent ≠ corrupt");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_entry_is_dropped_and_rewritable() {
+        let (store, dir) = tmp_store("trunc", 1 << 20);
+        let v = vec![0.25; 16];
+        store.put_corr((3, 4), &v);
+        let path = store.entry_path(Kind::Corr, (3, 4));
+        let full = fs::metadata(&path).unwrap().len();
+        let f = OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 5).unwrap();
+        drop(f);
+        assert!(store.get_corr((3, 4), 16).is_none(), "truncation is a miss");
+        assert!(!path.exists(), "the corrupt entry must be deleted");
+        assert_eq!(store.stats().dropped, 1);
+        // the slot is clean again: recompute-and-store works
+        store.put_corr((3, 4), &v);
+        assert_eq!(store.get_corr((3, 4), 16), Some(v));
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version_mismatch_is_dropped() {
+        let (store, dir) = tmp_store("vers", 1 << 20);
+        store.put_corr((5, 6), &[1.0; 8]);
+        let path = store.entry_path(Kind::Corr, (5, 6));
+        let mut raw = fs::read(&path).unwrap();
+        raw[4..8].copy_from_slice(&(SCHEMA_VERSION + 1).to_le_bytes());
+        fs::write(&path, &raw).unwrap();
+        assert!(
+            store.get_corr((5, 6), 8).is_none(),
+            "a future schema version must read as a miss, not an error"
+        );
+        assert!(!path.exists());
+        assert_eq!(store.stats().dropped, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn checksum_mismatch_is_dropped() {
+        let (store, dir) = tmp_store("cksum", 1 << 20);
+        store.put_result((9, 9), &toy_core());
+        let path = store.entry_path(Kind::Result, (9, 9));
+        let mut raw = fs::read(&path).unwrap();
+        let last = raw.len() - 1;
+        raw[last] ^= 0xff; // flip payload bits; header stays intact
+        fs::write(&path, &raw).unwrap();
+        assert!(store.get_result((9, 9)).is_none(), "bit rot is a miss");
+        assert!(!path.exists());
+        assert_eq!(store.stats().dropped, 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_key_and_wrong_shape_are_dropped() {
+        let (store, dir) = tmp_store("foreign", 1 << 20);
+        store.put_corr((1, 1), &[0.5; 9]);
+        // copy the entry under a different key's name (e.g. a botched
+        // manual restore): the header key check must reject it
+        let src = store.entry_path(Kind::Corr, (1, 1));
+        let dst = store.entry_path(Kind::Corr, (2, 2));
+        fs::copy(&src, &dst).unwrap();
+        assert!(store.get_corr((2, 2), 9).is_none());
+        assert!(!dst.exists());
+        // shape mismatch: stored n² = 9, caller expects 16
+        assert!(store.get_corr((1, 1), 16).is_none());
+        assert!(!src.exists(), "shape mismatch also drops the entry");
+        assert_eq!(store.stats().dropped, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn oversized_entries_are_not_stored() {
+        let (store, dir) = tmp_store("oversize", 128);
+        store.put_corr((1, 0), &[0.0; 1000]); // ≫ 128-byte budget
+        assert!(store.get_corr((1, 0), 1000).is_none());
+        let st = store.stats();
+        assert_eq!(st.entries, 0);
+        assert_eq!(st.bytes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_removes_stalest_entries_first() {
+        // each entry: 16 f64 = 128 payload + 49 header = 177 bytes;
+        // budget fits two entries but not three, with the low-water
+        // mark (budget − budget/8 = 363) still above two entries (354)
+        // so exactly one eviction occurs
+        let (store, dir) = tmp_store("evict", 2 * 177 + 60);
+        let stamp = |k: Key, secs: u64| {
+            let f = OpenOptions::new()
+                .append(true)
+                .open(store.entry_path(Kind::Corr, k))
+                .unwrap();
+            f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(secs))
+                .unwrap();
+        };
+        store.put_corr((1, 0), &[1.0; 16]);
+        stamp((1, 0), 100);
+        store.put_corr((2, 0), &[2.0; 16]);
+        stamp((2, 0), 200); // (1,0) is stalest
+        store.put_corr((3, 0), &[3.0; 16]); // mtime = now ≫ both
+        assert!(
+            store.get_corr((1, 0), 16).is_none(),
+            "the stalest entry is evicted"
+        );
+        assert!(store.get_corr((2, 0), 16).is_some(), "fresher entry survives");
+        assert!(store.get_corr((3, 0), 16).is_some(), "just-written survives");
+        let st = store.stats();
+        assert_eq!(st.evictions, 1);
+        assert_eq!(st.entries, 2);
+        assert!(st.bytes <= st.budget, "{} > {}", st.bytes, st.budget);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_hits_bump_the_access_stamp() {
+        // budget sized as in eviction_removes_stalest_entries_first
+        let (store, dir) = tmp_store("touch", 2 * 177 + 60);
+        let stamp = |k: Key, secs: u64| {
+            let f = OpenOptions::new()
+                .append(true)
+                .open(store.entry_path(Kind::Corr, k))
+                .unwrap();
+            f.set_modified(SystemTime::UNIX_EPOCH + Duration::from_secs(secs))
+                .unwrap();
+        };
+        store.put_corr((1, 0), &[1.0; 16]);
+        stamp((1, 0), 100);
+        store.put_corr((2, 0), &[2.0; 16]);
+        stamp((2, 0), 200);
+        // touching (1,0) via a read makes (2,0) the eviction victim
+        assert!(store.get_corr((1, 0), 16).is_some());
+        store.put_corr((3, 0), &[3.0; 16]);
+        assert!(store.get_corr((1, 0), 16).is_some(), "recently read survives");
+        assert!(store.get_corr((2, 0), 16).is_none(), "LRU entry evicted");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn eviction_ignores_foreign_files() {
+        let (store, dir) = tmp_store("foreignfile", 177 + 10);
+        fs::write(dir.join("README.txt"), vec![0u8; 4096]).unwrap();
+        // near-miss names: right prefix/suffix but not <32 hex>.bin —
+        // a user's manual backup must never be counted or evicted
+        fs::write(dir.join("res-backup.bin"), vec![0u8; 4096]).unwrap();
+        fs::write(dir.join("corr-old.bin"), vec![0u8; 4096]).unwrap();
+        store.put_corr((1, 0), &[1.0; 16]);
+        assert!(
+            store.get_corr((1, 0), 16).is_some(),
+            "a user's files must not count against the budget"
+        );
+        assert!(dir.join("README.txt").exists(), "never delete foreign files");
+        assert!(dir.join("res-backup.bin").exists(), "near-miss names are foreign");
+        assert!(dir.join("corr-old.bin").exists(), "near-miss names are foreign");
+        assert_eq!(store.stats().entries, 1, "census counts only entries");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn zero_budget_is_rejected_at_open() {
+        let dir = std::env::temp_dir().join(format!(
+            "cupc_store_{}_zerobudget",
+            std::process::id()
+        ));
+        let err = DiskStore::open(&dir, 0).expect_err("a zero budget can cache nothing");
+        assert!(format!("{err:#}").contains("budget is zero"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A temp file orphaned by a crashed writer is reaped at the next
+    /// open once it is stale; a fresh temp (another process mid-write)
+    /// is left alone. Orphans must also never count against the budget
+    /// or show up in the census.
+    #[test]
+    fn stale_orphaned_tmp_files_are_reaped_on_open() {
+        let (store, dir) = tmp_store("reap", 1 << 20);
+        store.put_corr((1, 0), &[1.0; 8]);
+        let orphan = dir.join(format!("{TMP_PREFIX}999-0"));
+        fs::write(&orphan, vec![0u8; 256]).unwrap();
+        let f = OpenOptions::new().append(true).open(&orphan).unwrap();
+        f.set_modified(SystemTime::now() - TMP_REAP_AGE - Duration::from_secs(60))
+            .unwrap();
+        drop(f);
+        let fresh = dir.join(format!("{TMP_PREFIX}999-1"));
+        fs::write(&fresh, vec![0u8; 256]).unwrap(); // mtime = now
+        assert_eq!(store.stats().entries, 1, "tmp files are not entries");
+        drop(store);
+        let store = DiskStore::open(&dir, 1 << 20).unwrap();
+        assert!(!orphan.exists(), "the stale orphan must be reaped");
+        assert!(fresh.exists(), "an in-flight tmp must be left alone");
+        assert_eq!(
+            store.get_corr((1, 0), 8),
+            Some(vec![1.0; 8]),
+            "entries survive a reopen"
+        );
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Many threads hammering one store (distinct and shared keys) must
+    /// never panic, and every read must return either a miss or exactly
+    /// the stored bytes.
+    #[test]
+    fn concurrent_access_is_safe() {
+        let (store, dir) = tmp_store("concurrent", 1 << 20);
+        std::thread::scope(|scope| {
+            for t in 0..4u64 {
+                let store = &store;
+                scope.spawn(move || {
+                    for i in 0..20u64 {
+                        let key = (i % 5, 0);
+                        let fill = (i % 5) as f64;
+                        store.put_corr(key, &[fill; 8]);
+                        if let Some(v) = store.get_corr(key, 8) {
+                            assert_eq!(v, vec![fill; 8], "thread {t}");
+                        }
+                    }
+                });
+            }
+        });
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

@@ -79,6 +79,13 @@ fn run_impl(
     let gamma = cfg.gamma.max(1) as u64;
     let mut l = 1usize;
     while should_continue(&graph, l, cfg) {
+        // between-level re-lease point: a hooked job asks its width
+        // policy (e.g. the batch scheduler's elastic lease) how wide to
+        // run this level — absorbing workers other jobs released. Width
+        // never changes results (ordered apply), only wall-clock time.
+        if let Some(hook) = &cfg.width_hook {
+            exec.set_width(hook.0.width_for_level(l));
+        }
         let t = Timer::start();
         let taul = tau(m, l, cfg.alpha);
         let snap = graph.snapshot();

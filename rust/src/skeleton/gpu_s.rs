@@ -68,6 +68,11 @@ fn run_impl(
     let flight = (cfg.theta.max(1) * cfg.delta.max(1)) as u64; // sets in flight per row per round
     let mut l = 1usize;
     while should_continue(&graph, l, cfg) {
+        // between-level re-lease point (see gpu_e): width policy decides
+        // how wide the level runs; results are width-invariant.
+        if let Some(hook) = &cfg.width_hook {
+            exec.set_width(hook.0.width_for_level(l));
+        }
         let t = Timer::start();
         let taul = tau(m, l, cfg.alpha);
         let snap = graph.snapshot();

@@ -23,8 +23,10 @@
 //! The batched schedules run their per-round pack + evaluate work —
 //! including the level-0 pair sweep — through the multi-threaded
 //! [`pipeline`] when the native engine is selected and
-//! `Config::threads > 1`; the pipeline's ordered-apply stage keeps
-//! results bit-identical to a single-threaded run.
+//! `Config::threads > 1` (or a [`WidthPolicy`] hook is installed); the
+//! pipeline's ordered-apply stage keeps results bit-identical to a
+//! single-threaded run, for any fixed width or between-level re-lease
+//! schedule.
 
 pub mod batch;
 pub mod baseline1;
@@ -43,6 +45,7 @@ use crate::graph::adj::AdjMatrix;
 use crate::graph::sepset::SepSets;
 use anyhow::Result;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 /// Which schedule runs the level loop.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
@@ -95,6 +98,36 @@ pub enum OrientRule {
     Majority,
 }
 
+/// Consulted by the batched schedules **between levels** to re-lease the
+/// worker width (the ROADMAP "dynamic lease resizing" item): before each
+/// level ℓ ≥ 1 the schedule asks the policy for the width to run that
+/// level at, so a long tail level can absorb workers that other jobs in
+/// a batch have released instead of holding its initial grant for the
+/// whole run. The batch service wires this to
+/// [`crate::service::ElasticLease`]; level 0 runs at the initial width
+/// (the lease taken before the job started).
+///
+/// Width changes can only move work between threads, never change what
+/// is computed: the pipeline's ordered-apply stage keeps every schedule
+/// bit-identical for *any* width sequence (gated by
+/// `tests/batch_runner.rs::pathological_re_lease_schedules_are_bit_identical`).
+pub trait WidthPolicy: Send + Sync {
+    /// Width to run level `level` at (callers clamp to ≥ 1).
+    fn width_for_level(&self, level: usize) -> usize;
+}
+
+/// Cloneable, Debug-opaque carrier for a [`WidthPolicy`] inside
+/// [`Config`] (the policy itself usually holds live scheduler state, so
+/// it cannot derive `Debug`).
+#[derive(Clone)]
+pub struct WidthHook(pub Arc<dyn WidthPolicy>);
+
+impl std::fmt::Debug for WidthHook {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("WidthHook(..)")
+    }
+}
+
 /// Run configuration. The β/γ (cuPC-E) and θ/δ (cuPC-S) knobs carry the
 /// paper's meaning translated to the batch engine: γ = conditioning sets
 /// in flight per edge per round, θ×δ = conditioning sets in flight per
@@ -126,6 +159,11 @@ pub struct Config {
     pub verbose: bool,
     /// v-structure decision rule for the orientation step
     pub orient: OrientRule,
+    /// Optional between-level re-lease policy: when set, the batched
+    /// schedules consult it before each level ℓ ≥ 1 and run the level at
+    /// the returned width (see [`WidthPolicy`]). `None` (the default)
+    /// keeps `threads` fixed for the whole run.
+    pub width_hook: Option<WidthHook>,
 }
 
 impl Default for Config {
@@ -144,6 +182,7 @@ impl Default for Config {
             artifacts_dir: PathBuf::from("artifacts"),
             verbose: false,
             orient: OrientRule::Standard,
+            width_hook: None,
         }
     }
 }
@@ -316,6 +355,26 @@ mod tests {
         assert_eq!(leased.max_level, base.max_level);
         assert_eq!(leased.variant, base.variant);
         assert_eq!(base.with_threads(0).threads, 1, "a lease is never empty");
+    }
+
+    /// The width hook survives `with_threads` (the service sets both),
+    /// and the opaque Debug impl keeps `Config: Debug` usable.
+    #[test]
+    fn width_hook_is_cloned_and_debug_opaque() {
+        struct Fixed(usize);
+        impl WidthPolicy for Fixed {
+            fn width_for_level(&self, _level: usize) -> usize {
+                self.0
+            }
+        }
+        let cfg = Config {
+            width_hook: Some(WidthHook(Arc::new(Fixed(3)))),
+            ..Config::default()
+        };
+        let leased = cfg.with_threads(2);
+        let hook = leased.width_hook.as_ref().expect("hook survives");
+        assert_eq!(hook.0.width_for_level(1), 3);
+        assert!(format!("{leased:?}").contains("WidthHook"));
     }
 
     #[test]

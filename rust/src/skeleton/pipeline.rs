@@ -61,9 +61,12 @@ pub const MIN_SHARD_SLOTS: u64 = 512;
 
 /// Does this config take the worker-pool path? Per-worker engines are
 /// only constructible for the native backend; injected engines (XLA)
-/// run the identical pipeline single-engine.
+/// run the identical pipeline single-engine. A width hook forces the
+/// pool even at `threads = 1`: a job that starts narrow under a
+/// contended budget must be able to widen between levels, and only the
+/// pool path can change width ([`Executor::set_width`]).
 pub fn use_pool(cfg: &Config) -> bool {
-    cfg.engine == EngineKind::Native && cfg.threads > 1
+    cfg.engine == EngineKind::Native && (cfg.threads > 1 || cfg.width_hook.is_some())
 }
 
 /// Partition `runs` into at most `parts` contiguous shards balanced by
@@ -127,6 +130,25 @@ pub enum Executor<'e> {
 }
 
 impl Executor<'_> {
+    /// Current worker width (1 for the single-engine path).
+    pub fn width(&self) -> usize {
+        match self {
+            Executor::Single(_) => 1,
+            Executor::Pool { threads } => *threads,
+        }
+    }
+
+    /// Re-target the pool width for subsequent rounds — the between-level
+    /// re-lease point ([`super::WidthPolicy`]). A no-op on the
+    /// single-engine path (an injected engine cannot be replicated).
+    /// Width only moves work between shards; results are bit-identical
+    /// for any width sequence.
+    pub fn set_width(&mut self, w: usize) {
+        if let Executor::Pool { threads } = self {
+            *threads = w.max(1);
+        }
+    }
+
     /// Shard `runs` and evaluate every shard with `work`, returning the
     /// shard results in canonical shard order. `work` must be pure with
     /// respect to shared state (it may read the frozen graph).
@@ -307,6 +329,33 @@ mod tests {
         cfg.threads = 4;
         cfg.engine = EngineKind::Xla;
         assert!(!use_pool(&cfg), "injected engines keep the single path");
+        // a width hook forces the pool even at threads = 1 (the job may
+        // widen between levels), but never for an injected engine
+        struct Grow;
+        impl crate::skeleton::WidthPolicy for Grow {
+            fn width_for_level(&self, _l: usize) -> usize {
+                4
+            }
+        }
+        cfg.threads = 1;
+        cfg.width_hook = Some(crate::skeleton::WidthHook(std::sync::Arc::new(Grow)));
+        assert!(!use_pool(&cfg), "still single for XLA");
+        cfg.engine = EngineKind::Native;
+        assert!(use_pool(&cfg), "hooked native jobs must be resizable");
+    }
+
+    #[test]
+    fn set_width_retargets_only_the_pool() {
+        let mut pool = Executor::Pool { threads: 2 };
+        assert_eq!(pool.width(), 2);
+        pool.set_width(5);
+        assert_eq!(pool.width(), 5);
+        pool.set_width(0);
+        assert_eq!(pool.width(), 1, "width is clamped to ≥ 1");
+        let mut engine = NativeEngine::new();
+        let mut single = Executor::Single(&mut engine);
+        single.set_width(7);
+        assert_eq!(single.width(), 1, "single path cannot widen");
     }
 
     #[test]
