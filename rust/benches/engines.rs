@@ -1,9 +1,11 @@
 //! `cargo bench --bench engines` — the tracked ns/test baseline for the
 //! CI-test kernels (the promoted `micro` probe that used to hide in
 //! `skeleton/engine.rs`), the threads=1 vs threads=N speedup of the
-//! parallel pack→evaluate→apply pipeline on the Table-2 minis, and the
-//! batch-runner throughput (jobs/sec over the scenario grid at
-//! job-threads 1 vs N, cold cache each rep).
+//! parallel pack→evaluate→apply pipeline on the Table-2 minis, the
+//! orientation pipeline (ns/triple for v-structures + Meek and ns/test
+//! for the majority census, threads 1 vs N), and the batch-runner
+//! throughput (jobs/sec over the scenario grid at job-threads 1 vs N,
+//! cold cache each rep).
 //!
 //! Writes `BENCH_engines.json` (override with `-- --out path`) so
 //! packing/engine/scheduler changes have a tracked baseline to diff
@@ -46,6 +48,16 @@ struct BatchRow {
     job_threads: usize,
     secs_jt1: f64,
     secs_jtn: f64,
+}
+
+struct OrientRowBench {
+    phase: &'static str,
+    threads: usize,
+    /// work units: unshielded triples (vstruct+meek) or census CI tests
+    units: u64,
+    unit: &'static str,
+    secs_t1: f64,
+    secs_tn: f64,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -159,6 +171,98 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ── orientation pipeline: ns/triple and census ns/test ──────────
+    use cupc::orient::{orient_majority_with, orient_with};
+    use cupc::skeleton::pipeline::Executor;
+    let orientation = {
+        // a dense-ish ER workload so the triple/census windows really
+        // shard (deterministic; independent of the kernel RNG above)
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "orient-bench",
+            n: 72,
+            m: 400,
+            topology: datasets::Topology::Er(0.18),
+            seed: 7001,
+        });
+        let corr = correlation_matrix(&ds.data, threads);
+        let cfg = Config {
+            variant: Variant::CupcS,
+            engine: EngineKind::Native,
+            threads,
+            ..Config::default()
+        };
+        let skel = run_skeleton(&corr, ds.data.n, ds.data.m, &cfg)?;
+        let deepest = skel.levels.last().map(|l| l.level).unwrap_or(0);
+        let time_orient = |t: usize| -> anyhow::Result<(f64, u64)> {
+            let mut times = Vec::new();
+            let mut triples = 0u64;
+            for _ in 0..reps.max(1) {
+                let mut exec = Executor::Pool { threads: t };
+                let timer = Timer::start();
+                let (_, stats) = orient_with(&mut exec, &skel.graph, &skel.sepsets)?;
+                times.push(timer.elapsed_s());
+                triples = stats.triples as u64;
+            }
+            Ok((median(&times), triples))
+        };
+        let time_census = |t: usize| -> anyhow::Result<(f64, u64)> {
+            let mut times = Vec::new();
+            let mut tests = 0u64;
+            for _ in 0..reps.max(1) {
+                let mut exec = Executor::Pool { threads: t };
+                let timer = Timer::start();
+                let (_, stats) = orient_majority_with(
+                    &mut exec,
+                    &skel.graph,
+                    &corr,
+                    ds.data.m,
+                    cfg.alpha,
+                    deepest,
+                )?;
+                times.push(timer.elapsed_s());
+                tests = stats.census_tests;
+            }
+            Ok((median(&times), tests))
+        };
+        let (v1, triples) = time_orient(1)?;
+        let (vn, _) = time_orient(threads)?;
+        let (c1, census_tests) = time_census(1)?;
+        let (cn, _) = time_census(threads)?;
+        println!("\n== orientation: threads=1 vs threads={threads} (n=72 ER 0.18) ==");
+        println!(
+            "vstruct+meek    : {triples} triples, t1 {:.4}s tN {:.4}s ({:.2}x), {:.1} ns/triple",
+            v1,
+            vn,
+            v1 / vn.max(1e-12),
+            v1 * 1e9 / triples.max(1) as f64
+        );
+        println!(
+            "majority census : {census_tests} tests, t1 {:.4}s tN {:.4}s ({:.2}x), {:.1} ns/test",
+            c1,
+            cn,
+            c1 / cn.max(1e-12),
+            c1 * 1e9 / census_tests.max(1) as f64
+        );
+        vec![
+            OrientRowBench {
+                phase: "vstruct_meek",
+                threads,
+                units: triples,
+                unit: "triple",
+                secs_t1: v1,
+                secs_tn: vn,
+            },
+            OrientRowBench {
+                phase: "majority_census",
+                threads,
+                units: census_tests,
+                unit: "test",
+                secs_t1: c1,
+                secs_tn: cn,
+            },
+        ]
+    };
+
     // ── batch-runner throughput on the scenario grid ────────────────
     let manifest = Manifest {
         jobs: scenarios::default_grid()
@@ -213,7 +317,7 @@ fn main() -> anyhow::Result<()> {
         secs_jt1 / secs_jtn.max(1e-12)
     );
 
-    write_json(&out, reps, threads, &kernels, &pipeline, &batch)?;
+    write_json(&out, reps, threads, &kernels, &pipeline, &orientation, &batch)?;
     println!("\nwrote {out}");
     Ok(())
 }
@@ -226,11 +330,12 @@ fn write_json(
     threads: usize,
     kernels: &[KernelRow],
     pipeline: &[PipelineRow],
+    orientation: &[OrientRowBench],
     batch: &BatchRow,
 ) -> anyhow::Result<()> {
     let mut j = String::new();
     j.push_str("{\n");
-    j.push_str("  \"schema\": \"cupc-bench-engines/v2\",\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v3\",\n");
     j.push_str(&format!("  \"reps\": {reps},\n"));
     j.push_str(&format!("  \"threads\": {threads},\n"));
     j.push_str("  \"kernels\": [\n");
@@ -253,6 +358,24 @@ fn write_json(
             r.threads,
             r.secs_t1,
             r.secs_tn,
+            r.secs_t1 / r.secs_tn.max(1e-12)
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"orientation\": [\n");
+    for (i, r) in orientation.iter().enumerate() {
+        let sep = if i + 1 < orientation.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"phase\": \"{}\", \"threads\": {}, \"units\": {}, \"unit\": \"{}\", \
+             \"seconds_threads1\": {:.6}, \"seconds_threadsN\": {:.6}, \
+             \"ns_per_unit_t1\": {:.2}, \"speedup\": {:.3}}}{sep}\n",
+            r.phase,
+            r.threads,
+            r.units,
+            r.unit,
+            r.secs_t1,
+            r.secs_tn,
+            r.secs_t1 * 1e9 / r.units.max(1) as f64,
             r.secs_t1 / r.secs_tn.max(1e-12)
         ));
     }

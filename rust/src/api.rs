@@ -2,7 +2,8 @@
 //! skeleton → orientation, mirroring pcalg's `pc()` interface shape.
 
 use crate::graph::cpdag::Cpdag;
-use crate::orient;
+use crate::orient::{self, OrientStats};
+use crate::skeleton::pipeline::Executor;
 use crate::skeleton::{self, Config, SkeletonResult};
 use crate::stats::corr::{correlation_matrix, DataMatrix};
 use anyhow::Result;
@@ -13,6 +14,9 @@ pub struct PcResult {
     pub cpdag: Cpdag,
     /// skeleton phase output (graph, sepsets, per-level stats)
     pub skeleton: SkeletonResult,
+    /// orientation phase bookkeeping (triples, census tests, sweeps) —
+    /// deterministic for any thread count, unlike the timings
+    pub orient: OrientStats,
     /// seconds spent in the correlation computation (0 when a
     /// correlation matrix was supplied directly)
     pub corr_seconds: f64,
@@ -44,19 +48,39 @@ pub fn pc_stable_data(data: &DataMatrix, cfg: &Config) -> Result<PcResult> {
 
 /// Run PC-stable from a precomputed correlation matrix (row-major n×n)
 /// and the sample count `m` it was estimated from.
+///
+/// Orientation runs through the same parallel pipeline executor as the
+/// skeleton phase, at `cfg.threads` native workers — re-leased through
+/// `cfg.width_hook` at the phase boundary, so a batch job's elastic
+/// lease covers orientation too. The CPDAG, the orientation stats, and
+/// every other deterministic field are bit-identical for any width.
 pub fn pc_stable_corr(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<PcResult> {
     let skel = skeleton::run(corr, n, m, cfg)?;
     let t = crate::util::timer::Timer::start();
-    let cpdag = match cfg.orient {
-        crate::skeleton::OrientRule::Standard => orient::orient(&skel.graph, &skel.sepsets),
+    // orientation evaluates on pooled native workers regardless of the
+    // skeleton engine (the paper keeps orientation CPU-side; engines
+    // share CI semantics, so this is placement, not numerics)
+    let mut exec = Executor::Pool {
+        threads: cfg.threads.max(1),
+    };
+    if let Some(hook) = &cfg.width_hook {
+        // the orientation phase is "the level after the last": absorb
+        // idle workers / yield to waiters exactly like a level boundary
+        exec.set_width(hook.0.width_for_level(skel.levels.len()));
+    }
+    let (cpdag, orient) = match cfg.orient {
+        crate::skeleton::OrientRule::Standard => {
+            orient::orient_with(&mut exec, &skel.graph, &skel.sepsets)?
+        }
         crate::skeleton::OrientRule::Majority => {
             let deepest = skel.levels.last().map(|l| l.level).unwrap_or(0);
-            orient::orient_majority(&skel.graph, corr, m, cfg.alpha, deepest)
+            orient::orient_majority_with(&mut exec, &skel.graph, corr, m, cfg.alpha, deepest)?
         }
     };
     Ok(PcResult {
         cpdag,
         skeleton: skel,
+        orient,
         corr_seconds: 0.0,
         orient_seconds: t.elapsed_s(),
     })
@@ -150,6 +174,37 @@ mod tests {
             let a = pc_stable_data(&data, &cfg).unwrap();
             let b = pc_stable_data(&data, &cfg).unwrap();
             assert!(a.cpdag.same_as(&b.cpdag), "{v:?} not deterministic");
+        }
+    }
+
+    /// Orientation stats are populated, deterministic, and census tests
+    /// only appear under the majority rule.
+    #[test]
+    fn orient_stats_populate_and_are_thread_invariant() {
+        use crate::skeleton::OrientRule;
+        let dag = WeightedDag::random_er(20, 0.2, &mut Pcg::seeded(21));
+        let data = sem::sample(&dag, 300, &mut Pcg::seeded(22));
+        let run = |orient: OrientRule, threads: usize| {
+            let cfg = Config {
+                orient,
+                threads,
+                ..Config::default()
+            };
+            pc_stable_data(&data, &cfg).unwrap()
+        };
+        let std1 = run(OrientRule::Standard, 1);
+        assert!(std1.orient.triples > 0);
+        assert_eq!(std1.orient.census_tests, 0, "no census under first-sepset");
+        let maj1 = run(OrientRule::Majority, 1);
+        assert!(maj1.orient.census_tests > 0, "the census must be counted");
+        assert_eq!(maj1.orient.triples, std1.orient.triples);
+        for threads in [2usize, 4] {
+            let stdn = run(OrientRule::Standard, threads);
+            assert!(stdn.cpdag.same_as(&std1.cpdag), "threads={threads}");
+            assert_eq!(stdn.orient, std1.orient, "threads={threads}");
+            let majn = run(OrientRule::Majority, threads);
+            assert!(majn.cpdag.same_as(&maj1.cpdag), "threads={threads}");
+            assert_eq!(majn.orient, maj1.orient, "threads={threads}");
         }
     }
 

@@ -74,6 +74,10 @@ pub fn main(args: &Args) -> Result<()> {
     println!("orient time      : {:.3}s", res.orient_seconds);
     println!("total time       : {:.3}s", res.total_seconds());
     println!("CI tests         : {}", res.skeleton.total_tests());
+    println!(
+        "orientation      : {} triples, {} census tests, {} meek sweeps",
+        res.orient.triples, res.orient.census_tests, res.orient.meek_sweeps
+    );
     println!("-- per level --");
     for (ls, (lvl, share)) in res
         .skeleton

@@ -121,6 +121,12 @@ impl Cpdag {
         (0..self.n).filter(|&j| self.adjacent(i, j)).collect()
     }
 
+    /// Number of neighbors regardless of mark (the orientation
+    /// pipeline's shard-weight input — no allocation).
+    pub fn degree(&self, i: usize) -> usize {
+        (0..self.n).filter(|&j| self.adjacent(i, j)).count()
+    }
+
     /// Skeleton as dense 0/1 (symmetric).
     pub fn skeleton(&self) -> Vec<u8> {
         let mut s = vec![0u8; self.n * self.n];
@@ -193,6 +199,18 @@ mod tests {
         g.orient(0, 1);
         assert_eq!(g.skeleton(), snap);
         assert_eq!(g.n_edges(), 2);
+    }
+
+    #[test]
+    fn degree_counts_any_mark() {
+        let snap = vec![0, 1, 1, 1, 0, 0, 1, 0, 0];
+        let mut g = Cpdag::from_skeleton(&snap, 3);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.degree(1), 1);
+        g.orient(0, 1);
+        assert_eq!(g.degree(0), 2, "an arrowhead is still an adjacency");
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.neighbors(0).len(), g.degree(0));
     }
 
     #[test]

@@ -10,11 +10,31 @@
 //! and does not address it). Re-testing every unshielded triple with a
 //! deterministic census makes the full CPDAG schedule-invariant, which
 //! the test suite asserts across all five schedules.
+//!
+//! ## The census as a batched CI workload
+//!
+//! The census is the orientation phase's CI-test hot spot — O(triples ×
+//! Σ C(deg, l)) tests — so it runs through the same machinery as the
+//! skeleton phase: stage 1 lists each triple's census sets as one
+//! canonical window (`Run { task: triple, t0: 0, count: #sets }`),
+//! stage 2 shards the windows across [`Executor`] workers that pack
+//! per-level [`EBatch`]es and evaluate them on their own [`CiEngine`]
+//! (the same `ci_e`/`level0` kernels, so census tests are counted and
+//! benchmarked like skeleton tests), and stage 3 reduces the per-shard
+//! `(with_k, independent)` tallies — addition commutes, so the census,
+//! and hence the CPDAG, is bit-identical for any thread count and any
+//! window split. The whole census reads a *frozen* skeleton (orientation
+//! marks never change adjacency), so there is no apply-order subtlety at
+//! all: colliders are applied after the full census, in canonical triple
+//! order.
 
 use crate::graph::cpdag::Cpdag;
+use crate::skeleton::batch::{Corr32, EBatch};
 use crate::skeleton::comb::{n_sets_row, CombRange};
+use crate::skeleton::engine::{CiEngine, NATIVE_MAX_LEVEL};
+use crate::skeleton::pipeline::{Executor, Run};
 use crate::stats::fisher::{independent, tau};
-use crate::stats::pcorr::{ci_statistic, CiWorkspace, Corr};
+use anyhow::Result;
 
 /// Decision for one unshielded triple.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -28,89 +48,253 @@ pub enum TripleKind {
     Ambiguous,
 }
 
-/// Census over all separating sets of (i, j) drawn from adj(i) and
-/// adj(j) in the *final* skeleton, sizes 0..=max_level: returns
-/// (#sepsets containing k, #sepsets total).
-#[allow(clippy::too_many_arguments)]
-fn sepset_census(
-    corr: &Corr,
-    m: usize,
-    alpha: f64,
-    g: &Cpdag,
-    i: usize,
-    j: usize,
-    k: usize,
-    max_level: usize,
-    ws: &mut CiWorkspace,
-) -> (usize, usize) {
-    let mut with_k = 0usize;
-    let mut total = 0usize;
-    let mut ids: Vec<usize> = Vec::new();
-    for anchor in [i, j] {
-        let nbrs: Vec<usize> = g
-            .neighbors(anchor)
-            .into_iter()
-            .filter(|&x| x != i && x != j)
-            .collect();
-        for l in 0..=max_level.min(nbrs.len()) {
-            let taul = tau(m, l, alpha);
-            let total_sets = n_sets_row(nbrs.len(), l);
-            let mut combs = CombRange::new(nbrs.len(), l, 0, total_sets);
-            while let Some(pos) = combs.next_comb() {
-                ids.clear();
-                ids.extend(pos.iter().map(|&p| nbrs[p as usize]));
-                let z = ci_statistic(corr, i, j, &ids, ws);
-                if independent(z, taul) {
-                    total += 1;
-                    if ids.contains(&k) {
-                        with_k += 1;
-                    }
-                }
-            }
-        }
-    }
-    (with_k, total)
-}
-
-/// Classify an unshielded triple by the majority rule.
-#[allow(clippy::too_many_arguments)]
-pub fn classify_triple(
-    corr: &Corr,
-    m: usize,
-    alpha: f64,
-    g: &Cpdag,
-    i: usize,
-    k: usize,
-    j: usize,
-    max_level: usize,
-    ws: &mut CiWorkspace,
-) -> TripleKind {
-    let (with_k, total) = sepset_census(corr, m, alpha, g, i, j, k, max_level, ws);
+/// The majority decision from a census tally — exact integer arithmetic
+/// (`2·with_k` vs `total`), so no float threshold can wobble.
+pub fn classify(with_k: u64, total: u64) -> TripleKind {
     if total == 0 {
-        return TripleKind::Ambiguous;
-    }
-    let frac = with_k as f64 / total as f64;
-    if frac < 0.5 {
+        TripleKind::Ambiguous
+    } else if 2 * with_k < total {
         TripleKind::Collider
-    } else if frac > 0.5 {
+    } else if 2 * with_k > total {
         TripleKind::NonCollider
     } else {
         TripleKind::Ambiguous
     }
 }
 
-/// Orient all v-structures by the majority rule. `max_level` bounds the
-/// census conditioning-set size (use the skeleton run's deepest level).
-pub fn orient_v_structures_majority(
+/// Deterministic orientation-phase bookkeeping for the majority census.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CensusStats {
+    /// unshielded triples put to the vote
+    pub triples: usize,
+    /// CI tests the census evaluated (every enumerated candidate set)
+    pub tests: u64,
+}
+
+/// One unshielded triple i — k — j with its census window size.
+struct Triple {
+    i: u32,
+    k: u32,
+    j: u32,
+    /// total candidate sets across both anchors and all levels — the
+    /// window the executor shards
+    sets: u64,
+}
+
+/// Candidate separating sets for one anchor of a triple: subsets of
+/// adj(anchor) \ {i, j} of sizes 0..=lmax (the skeleton run's deepest
+/// level, clamped to the engine ceiling).
+fn anchor_neighbors(g: &Cpdag, anchor: u32, i: u32, j: u32) -> Vec<u32> {
+    g.neighbors(anchor as usize)
+        .into_iter()
+        .map(|x| x as u32)
+        .filter(|&x| x != i && x != j)
+        .collect()
+}
+
+/// Census window size from the two anchors' neighbor counts. In an
+/// unshielded triple the anchors are non-adjacent (and never their own
+/// neighbors), so `adj(anchor) \ {i, j}` is exactly `adj(anchor)` — the
+/// filtered list the worker enumerates has the anchor's full degree,
+/// and stage 1 can size windows from a precomputed degree table instead
+/// of re-scanning adjacency per triple. Saturating, like the worker's
+/// segment walk, so the two can never disagree on a window size.
+fn census_sets(len_i: usize, len_j: usize, lmax: usize) -> u64 {
+    let mut total = 0u64;
+    for len in [len_i, len_j] {
+        for l in 0..=lmax.min(len) {
+            total = total.saturating_add(n_sets_row(len, l));
+        }
+    }
+    total
+}
+
+/// Per-shard census tally: `(with_k, independent_total)` for the
+/// *contiguous* triple range this shard covers (`split_runs` hands out
+/// contiguous task windows, so a range-local vector keeps shard memory
+/// at O(shard triples), not O(all triples)) plus the number of CI tests
+/// evaluated.
+struct CensusAcc {
+    /// first triple index this shard touches
+    base: usize,
+    counts: Vec<(u64, u64)>,
+    tests: u64,
+}
+
+impl CensusAcc {
+    fn flush_e(
+        &mut self,
+        batch: &mut EBatch,
+        meta: &mut Vec<(u32, bool)>,
+        engine: &mut dyn CiEngine,
+        taul: f64,
+    ) -> Result<()> {
+        if batch.is_empty() {
+            return Ok(());
+        }
+        let z = engine.ci_e(batch.l, batch.len(), &batch.c_ij, &batch.m1, &batch.m2)?;
+        for (idx, &(t, has_k)) in meta.iter().enumerate() {
+            self.tests += 1;
+            if independent(z[idx] as f64, taul) {
+                let c = &mut self.counts[t as usize - self.base];
+                c.1 += 1;
+                if has_k {
+                    c.0 += 1;
+                }
+            }
+        }
+        batch.clear();
+        meta.clear();
+        Ok(())
+    }
+
+    fn flush_l0(
+        &mut self,
+        c_buf: &mut Vec<f32>,
+        meta: &mut Vec<u32>,
+        engine: &mut dyn CiEngine,
+        tau0: f64,
+    ) -> Result<()> {
+        if c_buf.is_empty() {
+            return Ok(());
+        }
+        let z = engine.level0(c_buf)?;
+        for (idx, &t) in meta.iter().enumerate() {
+            self.tests += 1;
+            // the empty set never contains k
+            if independent(z[idx] as f64, tau0) {
+                self.counts[t as usize - self.base].1 += 1;
+            }
+        }
+        c_buf.clear();
+        meta.clear();
+        Ok(())
+    }
+}
+
+/// Run the sharded census and return `(with_k, independent)` per triple
+/// plus the evaluated-test count. Pure with respect to `g`.
+#[allow(clippy::too_many_arguments)]
+fn run_census(
+    exec: &mut Executor<'_>,
+    g: &Cpdag,
+    corr32: &Corr32,
+    m: usize,
+    alpha: f64,
+    lmax: usize,
+    triples: &[Triple],
+    runs: &[Run],
+) -> Result<(Vec<(u64, u64)>, u64)> {
+    let shards = exec.run_sharded(runs, |shard, engine| {
+        let cap = engine.batch_e().max(1);
+        // runs carry ascending task indices and shards are contiguous
+        // slices of them, so this shard's triples are one index range
+        let base = shard.first().map(|r| r.task).unwrap_or(0);
+        let hi = shard.last().map(|r| r.task + 1).unwrap_or(0);
+        let mut acc = CensusAcc {
+            base,
+            counts: vec![(0, 0); hi - base],
+            tests: 0,
+        };
+        // one lazily-built batch per level (censuses mix levels freely)
+        let mut batches: Vec<Option<(EBatch, Vec<(u32, bool)>)>> =
+            (0..=lmax).map(|_| None).collect();
+        let mut l0_c: Vec<f32> = Vec::new();
+        let mut l0_meta: Vec<u32> = Vec::new();
+        let mut ids: Vec<u32> = Vec::new();
+        for run in shard {
+            let tr = &triples[run.task];
+            let (i, j) = (tr.i as usize, tr.j as usize);
+            let (win_lo, win_hi) = (run.t0, run.t0 + run.count);
+            // walk the triple's census segments — (anchor, level) blocks
+            // in canonical order — and evaluate the overlap with this
+            // run's window; windows split anywhere, results can't move
+            let mut seg_start = 0u64;
+            'segs: for anchor in [tr.i, tr.j] {
+                let nbrs = anchor_neighbors(g, anchor, tr.i, tr.j);
+                for l in 0..=lmax.min(nbrs.len()) {
+                    // saturate like census_sets so the walk and the
+                    // stage-1 window sizes agree even at binom overflow
+                    let seg_end = seg_start.saturating_add(n_sets_row(nbrs.len(), l));
+                    let lo = win_lo.max(seg_start);
+                    let hi = win_hi.min(seg_end);
+                    if lo < hi {
+                        if l == 0 {
+                            l0_c.push(corr32.at(i, j));
+                            l0_meta.push(run.task as u32);
+                            if l0_c.len() >= cap {
+                                acc.flush_l0(
+                                    &mut l0_c,
+                                    &mut l0_meta,
+                                    engine,
+                                    tau(m, 0, alpha),
+                                )?;
+                            }
+                        } else {
+                            let (batch, meta) = batches[l]
+                                .get_or_insert_with(|| (EBatch::new(l, cap), Vec::new()));
+                            let mut combs =
+                                CombRange::new(nbrs.len(), l, lo - seg_start, hi - lo);
+                            while let Some(pos) = combs.next_comb() {
+                                ids.clear();
+                                ids.extend(pos.iter().map(|&p| nbrs[p as usize]));
+                                batch.push(corr32, i, j, &ids);
+                                meta.push((run.task as u32, ids.contains(&tr.k)));
+                                if batch.len() >= cap {
+                                    acc.flush_e(batch, meta, engine, tau(m, l, alpha))?;
+                                }
+                            }
+                        }
+                    }
+                    seg_start = seg_end;
+                    if seg_start >= win_hi {
+                        break 'segs;
+                    }
+                }
+            }
+        }
+        acc.flush_l0(&mut l0_c, &mut l0_meta, engine, tau(m, 0, alpha))?;
+        for (l, slot) in batches.iter_mut().enumerate().skip(1) {
+            if let Some((batch, meta)) = slot.as_mut() {
+                acc.flush_e(batch, meta, engine, tau(m, l, alpha))?;
+            }
+        }
+        Ok(acc)
+    })?;
+    // reduce: per-triple tallies commute, so shard layout never matters;
+    // each shard contributes only its own contiguous range
+    let mut counts = vec![(0u64, 0u64); triples.len()];
+    let mut tests = 0u64;
+    for acc in shards {
+        for (off, src) in acc.counts.iter().enumerate() {
+            let dst = &mut counts[acc.base + off];
+            dst.0 += src.0;
+            dst.1 += src.1;
+        }
+        tests += acc.tests;
+    }
+    Ok((counts, tests))
+}
+
+/// Orient all v-structures by the majority rule, censusing through the
+/// executor. `max_level` bounds the census conditioning-set size (use
+/// the skeleton run's deepest level; clamped to the engine ceiling
+/// [`NATIVE_MAX_LEVEL`]).
+pub fn orient_v_structures_majority_with(
+    exec: &mut Executor<'_>,
     g: &mut Cpdag,
-    corr: &Corr,
+    corr32: &Corr32,
     m: usize,
     alpha: f64,
     max_level: usize,
-) {
+) -> Result<CensusStats> {
+    let lmax = max_level.min(NATIVE_MAX_LEVEL);
     let n = g.n();
-    let mut ws = CiWorkspace::new(crate::skeleton::engine::NATIVE_MAX_LEVEL);
-    let mut colliders: Vec<(usize, usize, usize)> = Vec::new();
+    // stage 1 (serial): unshielded triples in canonical (k, i, j) order,
+    // each with its census window size — sized from one O(n²) degree
+    // pass, not an adjacency rescan per triple
+    let degs: Vec<usize> = (0..n).map(|v| g.degree(v)).collect();
+    let mut triples: Vec<Triple> = Vec::new();
     for k in 0..n {
         let nbrs = g.neighbors(k);
         for ai in 0..nbrs.len() {
@@ -119,18 +303,54 @@ pub fn orient_v_structures_majority(
                 if g.adjacent(i, j) {
                     continue;
                 }
-                if classify_triple(corr, m, alpha, g, i, k, j, max_level, &mut ws)
-                    == TripleKind::Collider
-                {
-                    colliders.push((i, k, j));
-                }
+                let sets = census_sets(degs[i], degs[j], lmax);
+                triples.push(Triple {
+                    i: i as u32,
+                    k: k as u32,
+                    j: j as u32,
+                    sets,
+                });
             }
         }
     }
-    for (i, k, j) in colliders {
-        g.orient_if_undirected(i, k);
-        g.orient_if_undirected(j, k);
+    let runs: Vec<Run> = triples
+        .iter()
+        .enumerate()
+        .map(|(idx, tr)| Run {
+            task: idx,
+            t0: 0,
+            count: tr.sets,
+        })
+        .collect();
+    // stage 2 (parallel): the census
+    let (counts, tests) = run_census(exec, g, corr32, m, alpha, lmax, &triples, &runs)?;
+    // stage 3 (serial): classify and apply in canonical triple order
+    for (idx, tr) in triples.iter().enumerate() {
+        let (with_k, total) = counts[idx];
+        if classify(with_k, total) == TripleKind::Collider {
+            g.orient_if_undirected(tr.i as usize, tr.k as usize);
+            g.orient_if_undirected(tr.j as usize, tr.k as usize);
+        }
     }
+    Ok(CensusStats {
+        triples: triples.len(),
+        tests,
+    })
+}
+
+/// Single-worker convenience entry (kept for direct callers and tests;
+/// bit-identical to any pooled width).
+pub fn orient_v_structures_majority(
+    g: &mut Cpdag,
+    corr: &crate::stats::pcorr::Corr,
+    m: usize,
+    alpha: f64,
+    max_level: usize,
+) {
+    let corr32 = Corr32::from_f64(corr.c, corr.n);
+    let mut exec = Executor::Pool { threads: 1 };
+    orient_v_structures_majority_with(&mut exec, g, &corr32, m, alpha, max_level)
+        .expect("native census evaluation cannot fail");
 }
 
 #[cfg(test)]
@@ -138,7 +358,18 @@ mod tests {
     use super::*;
     use crate::sim::{dag::WeightedDag, sem};
     use crate::stats::corr::correlation_matrix;
+    use crate::stats::pcorr::Corr;
     use crate::util::rng::Pcg;
+
+    #[test]
+    fn classify_is_exact_integer_majority() {
+        assert_eq!(classify(0, 0), TripleKind::Ambiguous, "no separating set");
+        assert_eq!(classify(0, 5), TripleKind::Collider);
+        assert_eq!(classify(2, 5), TripleKind::Collider);
+        assert_eq!(classify(3, 5), TripleKind::NonCollider);
+        assert_eq!(classify(2, 4), TripleKind::Ambiguous, "exact 50/50");
+        assert_eq!(classify(4, 4), TripleKind::NonCollider);
+    }
 
     #[test]
     fn collider_detected_by_majority() {
@@ -173,6 +404,61 @@ mod tests {
         assert!(g.is_undirected(1, 2));
     }
 
+    /// A triple with *no* separating set in the census (every candidate
+    /// set leaves the pair dependent) is ambiguous and must stay
+    /// undirected — the conservative branch of the majority rule.
+    #[test]
+    fn ambiguous_triple_stays_undirected() {
+        // equicorrelated: c01 = c02 = c12 = 0.9; rho(0,1|2) ≈ 0.47, so
+        // neither ∅ nor {2} separates (0,1) at m = 1000 — census total 0
+        let c = vec![1.0, 0.9, 0.9, 0.9, 1.0, 0.9, 0.9, 0.9, 1.0];
+        let corr = Corr::new(&c, 3);
+        // skeleton: unshielded triple 0 — 2 — 1
+        let skel = vec![0, 0, 1, 0, 0, 1, 1, 1, 0];
+        let mut g = Cpdag::from_skeleton(&skel, 3);
+        let corr32 = Corr32::from_f64(corr.c, corr.n);
+        let mut exec = Executor::Pool { threads: 1 };
+        let stats =
+            orient_v_structures_majority_with(&mut exec, &mut g, &corr32, 1000, 0.01, 2)
+                .unwrap();
+        assert_eq!(stats.triples, 1);
+        assert!(stats.tests >= 2, "census still ran: ∅ twice plus {{2}}");
+        assert!(g.is_undirected(0, 2), "ambiguous triple must stay undirected");
+        assert!(g.is_undirected(1, 2));
+    }
+
+    /// Census tallies and the resulting CPDAG are identical for any
+    /// thread count — the tentpole contract at module level.
+    #[test]
+    fn census_is_thread_count_invariant() {
+        let dag = WeightedDag::random_er(30, 0.2, &mut Pcg::seeded(41));
+        let data = sem::sample(&dag, 300, &mut Pcg::seeded(42));
+        let c = correlation_matrix(&data, 1);
+        let corr32 = Corr32::from_f64(&c, data.n);
+        // run the real skeleton so the census sees a realistic graph
+        let cfg = crate::skeleton::Config {
+            variant: crate::skeleton::Variant::Serial,
+            ..crate::skeleton::Config::default()
+        };
+        let skel = crate::skeleton::run(&c, data.n, data.m, &cfg).unwrap();
+        let run_at = |threads: usize| {
+            let mut g = Cpdag::from_skeleton(&skel.graph.snapshot(), data.n);
+            let mut exec = Executor::Pool { threads };
+            let stats = orient_v_structures_majority_with(
+                &mut exec, &mut g, &corr32, data.m, cfg.alpha, 3,
+            )
+            .unwrap();
+            (g, stats)
+        };
+        let (g1, s1) = run_at(1);
+        assert!(s1.tests > 0, "workload must evaluate census tests");
+        for threads in [2usize, 4] {
+            let (gn, sn) = run_at(threads);
+            assert!(g1.same_as(&gn), "threads={threads}");
+            assert_eq!(s1, sn, "threads={threads}");
+        }
+    }
+
     /// The motivating property: with the majority rule the final CPDAG
     /// is identical across all schedules (sepset contents no longer
     /// matter — only the skeleton, which is schedule-invariant).
@@ -189,7 +475,7 @@ mod tests {
                 ..Config::default()
             };
             let res = run_skeleton(&c, data.n, data.m, &cfg).unwrap();
-            let deepest = res.levels.len().saturating_sub(1);
+            let deepest = res.levels.last().map(|l| l.level).unwrap_or(0);
             let corr = Corr::new(&c, data.n);
             let mut g = Cpdag::from_skeleton(&res.graph.snapshot(), data.n);
             orient_v_structures_majority(&mut g, &corr, data.m, cfg.alpha, deepest);

@@ -3,109 +3,149 @@
 //! R1: i → k and k — j with i, j non-adjacent        ⇒ k → j
 //! R2: i → k → j and i — j                           ⇒ i → j
 //! R3: i — k, i — j1 → k, i — j2 → k, j1 ≁ j2        ⇒ i → k
-//! R4: i — k, i — j, j → l → k (l ≁ ... pcalg form:
-//!     i — k, i — l (or i ≁ l), i — j, j → l, l → k  ⇒ i → k
+//! R4: i — k, i — j, j → l → k with i adj l, j ≁ k   ⇒ i → k
 //!
 //! We implement R1–R3 plus the standard R4 (needed only with background
 //! knowledge, but included for completeness as pcalg does).
+//!
+//! ## Snapshot-per-sweep semantics (the determinism fix)
+//!
+//! The rules are evaluated in *sweeps*: every sweep collects the full
+//! set of firings against the **frozen** CPDAG (no edge is oriented
+//! while rules are still being checked), then applies them in canonical
+//! `(rule, i, j)` order — a later firing whose edge an earlier one
+//! already oriented is simply moot. The previous implementation oriented
+//! edges mid-scan, so which of two conflicting firings won depended on
+//! the loop order (and would have depended on the thread count once
+//! sharded); with frozen sweeps the firing set is a pure function of the
+//! current graph and the winner is the canonically smallest firing —
+//! scan-order- and thread-count-independent by construction
+//! (`in_place_and_frozen_sweeps_provably_diverge` pins the old bug).
+//!
+//! Each sweep's rule checks are sharded across the pipeline executor
+//! ([`Executor::run_weighted`]): one atomic task per undirected edge,
+//! weighted by `n` (the rules scan candidate third/fourth vertices).
+//! Firings are sorted canonically before applying, so shard layout can
+//! never matter.
 
 use crate::graph::cpdag::Cpdag;
+use crate::skeleton::pipeline::Executor;
+use anyhow::Result;
 
-/// Apply Meek rules until no rule fires. Returns the number of edges
-/// oriented.
-pub fn apply_meek_rules(g: &mut Cpdag) -> usize {
+/// One rule firing: orient `i → j` because rule `rule` matched against
+/// the frozen sweep snapshot. Ordering is the canonical apply order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Firing {
+    pub rule: u8,
+    pub i: u32,
+    pub j: u32,
+}
+
+/// Collect every rule firing for the undirected edge (a, b) against the
+/// frozen graph, both directions. Pure — the sweep applies nothing until
+/// all edges are checked.
+fn edge_firings(g: &Cpdag, a: usize, b: usize, out: &mut Vec<Firing>) {
     let n = g.n();
-    let mut oriented = 0usize;
-    loop {
-        let mut changed = false;
-
-        // R1: unshielded i → k — j  ⇒  k → j
-        for k in 0..n {
-            for j in 0..n {
-                if !g.is_undirected(k, j) {
-                    continue;
-                }
-                let fire = (0..n)
-                    .any(|i| g.is_directed(i, k) && !g.adjacent(i, j) && i != j);
-                if fire {
-                    g.orient(k, j);
-                    oriented += 1;
-                    changed = true;
+    for (x, y) in [(a, b), (b, a)] {
+        let f = |rule: u8| Firing {
+            rule,
+            i: x as u32,
+            j: y as u32,
+        };
+        // R1: w → x — y with w ≁ y  ⇒  x → y  (w = y is impossible:
+        // x — y is undirected, so no arrow y → x exists)
+        if (0..n).any(|w| g.is_directed(w, x) && !g.adjacent(w, y)) {
+            out.push(f(1));
+        }
+        // R2: x → w → y with x — y  ⇒  x → y
+        if (0..n).any(|w| g.is_directed(x, w) && g.is_directed(w, y)) {
+            out.push(f(2));
+        }
+        // R3: x — w1 → y, x — w2 → y, w1 ≁ w2  ⇒  x → y
+        let ws: Vec<usize> = (0..n)
+            .filter(|&w| g.is_undirected(x, w) && g.is_directed(w, y))
+            .collect();
+        'r3: for ai in 0..ws.len() {
+            for bi in (ai + 1)..ws.len() {
+                if !g.adjacent(ws[ai], ws[bi]) {
+                    out.push(f(3));
+                    break 'r3;
                 }
             }
         }
-
-        // R2: i → k → j with i — j  ⇒  i → j
-        for i in 0..n {
-            for j in 0..n {
-                if !g.is_undirected(i, j) {
-                    continue;
-                }
-                let fire = (0..n).any(|k| g.is_directed(i, k) && g.is_directed(k, j));
-                if fire {
-                    g.orient(i, j);
-                    oriented += 1;
-                    changed = true;
+        // R4: x — y, x adj w, w → y, v → w, x — v, v ≁ y  ⇒  x → y
+        'r4: for w in 0..n {
+            if !g.is_directed(w, y) || !g.adjacent(x, w) {
+                continue;
+            }
+            for v in 0..n {
+                if g.is_directed(v, w) && g.is_undirected(x, v) && !g.adjacent(v, y) {
+                    out.push(f(4));
+                    break 'r4;
                 }
             }
-        }
-
-        // R3: i — k, and two non-adjacent j1, j2 with i — j1 → k, i — j2 → k ⇒ i → k
-        for i in 0..n {
-            for k in 0..n {
-                if !g.is_undirected(i, k) {
-                    continue;
-                }
-                let js: Vec<usize> = (0..n)
-                    .filter(|&j| g.is_undirected(i, j) && g.is_directed(j, k))
-                    .collect();
-                let mut fire = false;
-                'outer: for a in 0..js.len() {
-                    for b in (a + 1)..js.len() {
-                        if !g.adjacent(js[a], js[b]) {
-                            fire = true;
-                            break 'outer;
-                        }
-                    }
-                }
-                if fire {
-                    g.orient(i, k);
-                    oriented += 1;
-                    changed = true;
-                }
-            }
-        }
-
-        // R4: i — k, i — j (or i — l), j → l, l → k, j ≁ k ⇒ i → k
-        for i in 0..n {
-            for k in 0..n {
-                if !g.is_undirected(i, k) {
-                    continue;
-                }
-                let mut fire = false;
-                'outer4: for l in 0..n {
-                    if !g.is_directed(l, k) || !g.adjacent(i, l) {
-                        continue;
-                    }
-                    for j in 0..n {
-                        if g.is_directed(j, l) && g.is_undirected(i, j) && !g.adjacent(j, k) {
-                            fire = true;
-                            break 'outer4;
-                        }
-                    }
-                }
-                if fire {
-                    g.orient(i, k);
-                    oriented += 1;
-                    changed = true;
-                }
-            }
-        }
-
-        if !changed {
-            return oriented;
         }
     }
+}
+
+/// One frozen sweep: collect all firings, sharded across the executor,
+/// and sort them into canonical `(rule, i, j)` apply order. Each edge
+/// task runs exactly once ([`Executor::run_weighted`]'s contract) and
+/// an edge scan pushes at most one firing per (rule, direction), so the
+/// list is duplicate-free by construction.
+fn sweep_firings(exec: &mut Executor<'_>, g: &Cpdag) -> Result<Vec<Firing>> {
+    let edges = g.undirected_edges();
+    if edges.is_empty() {
+        return Ok(Vec::new());
+    }
+    // each edge's rule checks scan O(n) candidate vertices — weight by n
+    let weights = vec![g.n().max(1) as u64; edges.len()];
+    let shards = exec.run_weighted(&weights, |ids, _engine| {
+        let mut fs: Vec<Firing> = Vec::new();
+        for &e in ids {
+            let (a, b) = edges[e];
+            edge_firings(g, a, b, &mut fs);
+        }
+        Ok(fs)
+    })?;
+    let mut firings: Vec<Firing> = shards.into_iter().flatten().collect();
+    firings.sort_unstable();
+    Ok(firings)
+}
+
+/// Apply Meek rules to a fixpoint through the executor. Returns
+/// `(edges_oriented, sweeps)` where `sweeps` counts the sweeps that
+/// oriented at least one edge (the final empty sweep is not counted).
+pub fn apply_meek_rules_with(exec: &mut Executor<'_>, g: &mut Cpdag) -> Result<(usize, usize)> {
+    let mut oriented = 0usize;
+    let mut sweeps = 0usize;
+    loop {
+        let firings = sweep_firings(exec, g)?;
+        let mut applied = 0usize;
+        for fd in &firings {
+            if g.orient_if_undirected(fd.i as usize, fd.j as usize) {
+                applied += 1;
+            }
+        }
+        if applied == 0 {
+            // a non-empty firing set always applies its canonically first
+            // firing (its edge was undirected in the very snapshot that
+            // produced it), so this is the genuine fixpoint
+            return Ok((oriented, sweeps));
+        }
+        oriented += applied;
+        sweeps += 1;
+    }
+}
+
+/// Apply Meek rules until no rule fires (single-worker convenience
+/// entry; bit-identical to any pooled width). Returns the number of
+/// edges oriented.
+pub fn apply_meek_rules(g: &mut Cpdag) -> usize {
+    let mut exec = Executor::Pool { threads: 1 };
+    apply_meek_rules_with(&mut exec, g)
+        .expect("meek rule evaluation is pure and cannot fail")
+        .0
 }
 
 #[cfg(test)]
@@ -136,11 +176,9 @@ mod tests {
         let mut g = skel(3, &[(0, 1), (1, 2), (0, 2)]);
         g.orient(0, 1);
         apply_meek_rules(&mut g);
-        // R2 may not fire either; 1-2 stays undirected? R1 blocked
-        // (0 adjacent to 2). R2 needs 0→k→2 chain: none.
-        // Actually 0→1 and 0—2, 1—2: no rule orients 1—2;
-        // R2: i=0, j=2: need 0→k→2 — no. So undirected remains.
-        assert!(g.is_undirected(1, 2) || g.is_directed(1, 2) == false);
+        // R1 blocked (0 adjacent to 2); R2 needs a 0→k→2 chain: none.
+        assert!(g.is_undirected(1, 2));
+        assert!(g.is_undirected(0, 2));
     }
 
     #[test]
@@ -163,6 +201,22 @@ mod tests {
         assert!(g.is_directed(0, 3));
     }
 
+    /// pcalg-style R4 oracle: i=0 — k=3, i — l=2, l → k, j=1 → l,
+    /// i — j, j ≁ k  ⇒  i → k — and no other rule can claim the firing
+    /// (R1/R2/R3 preconditions all fail on every undirected edge here).
+    #[test]
+    fn r4_fires_on_the_pcalg_configuration() {
+        let mut g = skel(4, &[(0, 3), (0, 2), (2, 3), (1, 2), (0, 1)]);
+        g.orient(2, 3); // l → k
+        g.orient(1, 2); // j → l
+        let o = apply_meek_rules(&mut g);
+        assert!(g.is_directed(0, 3), "R4 must orient i → k");
+        assert_eq!(o, 1, "exactly the R4 firing applies");
+        // the R4 preconditions' undirected edges stay undirected
+        assert!(g.is_undirected(0, 1));
+        assert!(g.is_undirected(0, 2));
+    }
+
     #[test]
     fn fixpoint_terminates_and_cascades() {
         // long chain with head orientation cascades to the tail
@@ -182,5 +236,97 @@ mod tests {
         let o = apply_meek_rules(&mut g);
         assert_eq!(o, 0);
         assert_eq!(g.undirected_edges().len(), 3);
+    }
+
+    /// A faithful replica of the pre-fix in-place R1 scan: orient edges
+    /// the moment the rule matches, so later checks in the same pass see
+    /// half-applied orientations. Kept only to prove divergence below.
+    fn in_place_r1_to_fixpoint(g: &mut Cpdag) {
+        let n = g.n();
+        loop {
+            let mut changed = false;
+            for k in 0..n {
+                for j in 0..n {
+                    if !g.is_undirected(k, j) {
+                        continue;
+                    }
+                    let fire = (0..n)
+                        .any(|i| g.is_directed(i, k) && !g.adjacent(i, j) && i != j);
+                    if fire {
+                        g.orient(k, j);
+                        changed = true;
+                    }
+                }
+            }
+            if !changed {
+                return;
+            }
+        }
+    }
+
+    /// The regression the headline bugfix exists for: on the path
+    /// 0 → 1 — 2 — 3 ← 4, the frozen snapshot fires R1 twice — (1→2)
+    /// and (3→2) — and canonical application orients *both* toward 2.
+    /// The old in-place scan instead applied 1→2 mid-pass, which made a
+    /// brand-new firing 2→3 visible *within the same pass* and let it
+    /// steal the 2–3 edge before the legitimate snapshot firing 3→2 was
+    /// ever checked. The two semantics provably diverge on this graph;
+    /// the frozen-sweep result is the canonical one.
+    #[test]
+    fn in_place_and_frozen_sweeps_provably_diverge() {
+        let build = || {
+            let mut g = skel(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+            g.orient(0, 1); // v-structure stand-ins at both ends
+            g.orient(4, 3);
+            g
+        };
+        // old semantics: scan order decides the 2–3 edge
+        let mut old = build();
+        in_place_r1_to_fixpoint(&mut old);
+        assert!(old.is_directed(2, 3), "in-place lets the mid-pass firing win");
+        // new semantics: the frozen snapshot's own firings decide
+        let mut new = build();
+        apply_meek_rules(&mut new);
+        assert!(new.is_directed(3, 2), "frozen sweep applies the snapshot firing");
+        assert!(new.is_directed(1, 2));
+        assert!(
+            !old.same_as(&new),
+            "the two semantics must diverge on this graph — if they stop \
+             diverging, this regression test has lost its witness"
+        );
+    }
+
+    /// Frozen sweeps are thread-count invariant: a CPDAG big enough to
+    /// shard must orient identically at every pool width.
+    #[test]
+    fn sweeps_are_thread_count_invariant() {
+        use crate::util::rng::Pcg;
+        let n = 48;
+        let mut rng = Pcg::seeded(99);
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.uniform_in(0.0, 1.0) < 0.15 {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let run_at = |threads: usize| {
+            let mut g = skel(n, &edges);
+            // seed some arrows so the rules have material to propagate
+            for &(a, b) in edges.iter().step_by(5) {
+                g.orient(a, b);
+            }
+            let mut exec = Executor::Pool { threads };
+            let (o, s) = apply_meek_rules_with(&mut exec, &mut g).unwrap();
+            (g, o, s)
+        };
+        let (g1, o1, s1) = run_at(1);
+        assert!(o1 > 0, "workload must actually orient edges");
+        for threads in [2usize, 4] {
+            let (gn, on, sn) = run_at(threads);
+            assert!(g1.same_as(&gn), "threads={threads}");
+            assert_eq!((o1, s1), (on, sn), "threads={threads}");
+        }
     }
 }

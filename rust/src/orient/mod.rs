@@ -1,7 +1,31 @@
 //! Edge orientation — the second step of PC-stable: extract v-structures
-//! from the sepsets, then apply Meek's rules to orient as many remaining
-//! edges as possible. Fast relative to skeleton discovery (the paper
-//! leaves it on the CPU; so do we).
+//! from the sepsets (or a majority census), then apply Meek's rules to
+//! orient as many remaining edges as possible.
+//!
+//! The paper leaves orientation on the CPU because skeleton discovery
+//! dominates a single run; at service scale — many jobs over cached
+//! skeletons — the serial O(n³)–O(n⁴) triple/census/Meek loops become
+//! the long pole, so orientation now runs through the same
+//! [`Executor`] pipeline as the skeleton phase:
+//!
+//! * [`vstruct`] shards unshielded-triple enumeration in canonical
+//!   windows and applies colliders in canonical order;
+//! * [`majority`] shards its census and routes every census CI test
+//!   through the [`CiEngine`](crate::skeleton::engine::CiEngine) batch
+//!   path, so orientation tests are counted (see [`OrientStats`]) and
+//!   benchmarked exactly like skeleton tests;
+//! * [`meek`] collects each sweep's rule firings against a *frozen*
+//!   CPDAG and applies them in canonical `(rule, i, j)` order — the
+//!   fixpoint is provably scan-order- and thread-count-independent.
+//!
+//! Determinism contract: CPDAGs (both first-sepset and majority
+//! variants) are bit-identical for any thread count, any shard layout,
+//! and any Meek scan order (gated by
+//! `tests/conformance_engines.rs::orientation_is_thread_count_invariant`).
+//! Orientation always evaluates on the native engine mirror — the
+//! executor's pool workers — regardless of the skeleton engine; CI
+//! semantics are identical across engines, so this is a placement
+//! choice, not a numerical one.
 
 pub mod majority;
 pub mod meek;
@@ -10,20 +34,86 @@ pub mod vstruct;
 use crate::graph::adj::AdjMatrix;
 use crate::graph::cpdag::Cpdag;
 use crate::graph::sepset::SepSets;
+use crate::skeleton::batch::Corr32;
+use crate::skeleton::pipeline::Executor;
+use anyhow::Result;
 
-/// Full orientation: skeleton + sepsets → CPDAG (standard PC-stable:
-/// v-structures from the first-found sepsets, then Meek rules).
-pub fn orient(graph: &AdjMatrix, sepsets: &SepSets) -> Cpdag {
-    let mut g = Cpdag::from_skeleton(&graph.snapshot(), graph.n());
-    vstruct::orient_v_structures(&mut g, sepsets);
-    meek::apply_meek_rules(&mut g);
-    g
+/// Deterministic bookkeeping of one orientation run — the orientation
+/// analogue of the skeleton's per-level stats. Everything here is
+/// bit-identical for any thread count, so it may appear in the batch
+/// service's deterministic results stream.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OrientStats {
+    /// unshielded triples examined (v-structure or census candidates)
+    pub triples: usize,
+    /// CI tests evaluated by the majority census (0 under the
+    /// first-sepset rule)
+    pub census_tests: u64,
+    /// Meek sweeps that oriented at least one edge
+    pub meek_sweeps: usize,
 }
 
-/// Majority-rule orientation (Colombo–Maathuis MPC): re-tests every
-/// unshielded triple against a census of separating sets, making the
-/// CPDAG independent of which schedule found which sepset first. Needs
-/// the correlation matrix and the deepest level the skeleton reached.
+/// Full orientation through an executor: skeleton + sepsets → CPDAG
+/// (standard PC-stable: v-structures from the first-found sepsets, then
+/// Meek rules). Bit-identical for any executor width.
+pub fn orient_with(
+    exec: &mut Executor<'_>,
+    graph: &AdjMatrix,
+    sepsets: &SepSets,
+) -> Result<(Cpdag, OrientStats)> {
+    let mut g = Cpdag::from_skeleton(&graph.snapshot(), graph.n());
+    let (colliders, triples) = vstruct::collect_colliders(exec, &g, sepsets)?;
+    vstruct::apply_colliders(&mut g, &colliders);
+    let (_, meek_sweeps) = meek::apply_meek_rules_with(exec, &mut g)?;
+    Ok((
+        g,
+        OrientStats {
+            triples,
+            census_tests: 0,
+            meek_sweeps,
+        },
+    ))
+}
+
+/// Majority-rule orientation (Colombo–Maathuis MPC) through an
+/// executor: re-tests every unshielded triple against a census of
+/// separating sets, making the CPDAG independent of which schedule
+/// found which sepset first. Needs the correlation matrix and the
+/// deepest level the skeleton reached.
+pub fn orient_majority_with(
+    exec: &mut Executor<'_>,
+    graph: &AdjMatrix,
+    corr: &[f64],
+    m: usize,
+    alpha: f64,
+    max_level: usize,
+) -> Result<(Cpdag, OrientStats)> {
+    let n = graph.n();
+    let mut g = Cpdag::from_skeleton(&graph.snapshot(), n);
+    let corr32 = Corr32::from_f64(corr, n);
+    let census =
+        majority::orient_v_structures_majority_with(exec, &mut g, &corr32, m, alpha, max_level)?;
+    let (_, meek_sweeps) = meek::apply_meek_rules_with(exec, &mut g)?;
+    Ok((
+        g,
+        OrientStats {
+            triples: census.triples,
+            census_tests: census.tests,
+            meek_sweeps,
+        },
+    ))
+}
+
+/// Full orientation, single-worker convenience entry (kept for direct
+/// callers; bit-identical to any pooled width).
+pub fn orient(graph: &AdjMatrix, sepsets: &SepSets) -> Cpdag {
+    let mut exec = Executor::Pool { threads: 1 };
+    orient_with(&mut exec, graph, sepsets)
+        .expect("orientation on the native engine cannot fail")
+        .0
+}
+
+/// Majority-rule orientation, single-worker convenience entry.
 pub fn orient_majority(
     graph: &AdjMatrix,
     corr: &[f64],
@@ -31,10 +121,8 @@ pub fn orient_majority(
     alpha: f64,
     max_level: usize,
 ) -> Cpdag {
-    let n = graph.n();
-    let mut g = Cpdag::from_skeleton(&graph.snapshot(), n);
-    let view = crate::stats::pcorr::Corr::new(corr, n);
-    majority::orient_v_structures_majority(&mut g, &view, m, alpha, max_level);
-    meek::apply_meek_rules(&mut g);
-    g
+    let mut exec = Executor::Pool { threads: 1 };
+    orient_majority_with(&mut exec, graph, corr, m, alpha, max_level)
+        .expect("orientation on the native engine cannot fail")
+        .0
 }

@@ -1,37 +1,92 @@
 //! V-structure extraction: for every unshielded triple i — k — j (i, j
 //! non-adjacent), orient i → k ← j iff k ∉ SepSet(i, j). This is the
 //! only place observational data determines arrowheads directly.
+//!
+//! Enumeration is sharded through the skeleton's pipeline executor
+//! ([`Executor::run_sharded`]): stage 1 lists one canonical window per
+//! center k covering its C(deg(k), 2) neighbor pairs, stage 2 scans the
+//! windows in parallel against the *frozen* CPDAG (nothing is oriented
+//! until every shard returns), and stage 3 applies the collected
+//! colliders in canonical (k, pair-index) order — the exact order the
+//! old serial loop visited, so results are bit-identical for any thread
+//! count and any shard layout.
 
 use crate::graph::cpdag::Cpdag;
 use crate::graph::sepset::SepSets;
+use crate::skeleton::level0::{n_pairs, pair_at};
+use crate::skeleton::pipeline::{Executor, Run};
+use anyhow::Result;
 
-/// Orient all v-structures in place. Conflicting colliders (a later
-/// triple wanting to re-orient an existing arrowhead the other way) keep
-/// the first orientation — the pcalg default behaviour.
-pub fn orient_v_structures(g: &mut Cpdag, sepsets: &SepSets) {
+/// Enumerate unshielded triples and collect colliders in canonical
+/// order, sharded across the executor's workers. Returns
+/// `(colliders, triples)` where `triples` counts every unshielded
+/// triple scanned (collider or not — the orientation workload metric).
+pub fn collect_colliders(
+    exec: &mut Executor<'_>,
+    g: &Cpdag,
+    sepsets: &SepSets,
+) -> Result<(Vec<(usize, usize, usize)>, usize)> {
     let n = g.n();
-    // collect candidates first so iteration order can't see half-applied
-    // orientations (PC-stable's order-independence at the triple level)
-    let mut colliders: Vec<(usize, usize, usize)> = Vec::new();
+    // stage 1 (serial): one window per center, weighted by its pair count
+    let mut runs: Vec<Run> = Vec::new();
     for k in 0..n {
-        let nbrs = g.neighbors(k);
-        for ai in 0..nbrs.len() {
-            for bi in (ai + 1)..nbrs.len() {
+        let deg = g.degree(k);
+        let count = n_pairs(deg);
+        if count > 0 {
+            runs.push(Run { task: k, t0: 0, count });
+        }
+    }
+    // stage 2 (parallel): scan pair windows against the frozen graph
+    let shards = exec.run_sharded(&runs, |shard, _engine| {
+        let mut colliders: Vec<(usize, usize, usize)> = Vec::new();
+        let mut triples = 0usize;
+        for r in shard {
+            let k = r.task;
+            let nbrs = g.neighbors(k);
+            for t in r.t0..r.t0 + r.count {
+                let (ai, bi) = pair_at(nbrs.len(), t);
                 let (i, j) = (nbrs[ai], nbrs[bi]);
                 if g.adjacent(i, j) {
                     continue; // shielded
                 }
-                // unshielded triple i - k - j: collider iff k not in sepset(i,j)
+                triples += 1;
+                // unshielded triple i - k - j: collider iff k ∉ sepset(i,j)
                 if !sepsets.contains(i, j, k) {
                     colliders.push((i, k, j));
                 }
             }
         }
+        Ok((colliders, triples))
+    })?;
+    // stage 3 is the caller's: shards concatenate in canonical order
+    let mut colliders = Vec::new();
+    let mut triples = 0usize;
+    for (c, t) in shards {
+        colliders.extend(c);
+        triples += t;
     }
-    for (i, k, j) in colliders {
+    Ok((colliders, triples))
+}
+
+/// Apply collider orientations in the canonical order `collect_colliders`
+/// produced. Conflicting colliders (a later triple wanting to re-orient
+/// an existing arrowhead the other way) keep the first orientation — the
+/// pcalg default behaviour, now deterministic by construction.
+pub fn apply_colliders(g: &mut Cpdag, colliders: &[(usize, usize, usize)]) {
+    for &(i, k, j) in colliders {
         g.orient_if_undirected(i, k);
         g.orient_if_undirected(j, k);
     }
+}
+
+/// Orient all v-structures in place (single-worker convenience entry —
+/// the parallel path goes through [`collect_colliders`]). Kept for
+/// direct callers and tests; bit-identical to the sharded path.
+pub fn orient_v_structures(g: &mut Cpdag, sepsets: &SepSets) {
+    let mut exec = Executor::Pool { threads: 1 };
+    let (colliders, _) = collect_colliders(&mut exec, g, sepsets)
+        .expect("v-structure collection is pure and cannot fail");
+    apply_colliders(g, &colliders);
 }
 
 #[cfg(test)]
@@ -89,5 +144,59 @@ mod tests {
         orient_v_structures(&mut g, &sep);
         assert!(g.is_directed(0, 2) && g.is_directed(1, 2));
         assert!(g.is_undirected(2, 3));
+    }
+
+    #[test]
+    fn triple_count_covers_unshielded_only() {
+        // star center 2 with leaves 0, 1, 3 plus a shield between 0 and
+        // 1: at center 2 only the pairs (0,3) and (1,3) are unshielded
+        // ((0,1) is shielded); the triples at centers 0 and 1 are
+        // shielded by the edges (1,2) / (0,2), and center 3 has degree 1
+        let g = skel(4, &[(0, 2), (1, 2), (3, 2), (0, 1)]);
+        let sep = SepSets::new();
+        let mut exec = Executor::Pool { threads: 1 };
+        let (_, triples) = collect_colliders(&mut exec, &g, &sep).unwrap();
+        assert_eq!(triples, 2);
+    }
+
+    /// The tentpole contract at module level: collider lists (contents
+    /// AND order) are identical for any thread count on a graph large
+    /// enough to split into real shards.
+    #[test]
+    fn sharded_collection_matches_single_worker_bitwise() {
+        use crate::util::rng::Pcg;
+        // a dense-ish random skeleton with enough pairs to exceed the
+        // executor's MIN_SHARD_SLOTS at several centers
+        let n = 64;
+        let mut rng = Pcg::seeded(77);
+        let mut edges = Vec::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if rng.uniform_in(0.0, 1.0) < 0.4 {
+                    edges.push((i, j));
+                }
+            }
+        }
+        let g = skel(n, &edges);
+        let sep = SepSets::new();
+        // sprinkle some sepsets so both collider and non-collider
+        // branches are exercised
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !g.adjacent(i, j) && (i + j) % 3 == 0 {
+                    sep.store(i, j, &[((i + j) % n) as u32]);
+                }
+            }
+        }
+        let mut single = Executor::Pool { threads: 1 };
+        let (ref_colliders, ref_triples) =
+            collect_colliders(&mut single, &g, &sep).unwrap();
+        assert!(ref_triples > 0, "workload must contain unshielded triples");
+        for threads in [2usize, 4] {
+            let mut pool = Executor::Pool { threads };
+            let (colliders, triples) = collect_colliders(&mut pool, &g, &sep).unwrap();
+            assert_eq!(colliders, ref_colliders, "threads={threads}");
+            assert_eq!(triples, ref_triples, "threads={threads}");
+        }
     }
 }

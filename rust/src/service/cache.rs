@@ -497,6 +497,7 @@ mod tests {
         let core = Arc::new(JobResultCore {
             n: 2,
             m: 10,
+            orient: crate::service::report::OrientRow::default(),
             levels: vec![],
             skeleton_edges: vec![(0, 1)],
             directed: vec![],

@@ -57,6 +57,19 @@ pub struct LevelRow {
     pub edges_after: usize,
 }
 
+/// Orientation-phase bookkeeping — the deterministic counterpart of the
+/// per-level rows (census CI tests are counted like skeleton tests;
+/// see `crate::orient::OrientStats`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OrientRow {
+    /// unshielded triples examined
+    pub triples: u64,
+    /// majority-census CI tests evaluated (0 under the first-sepset rule)
+    pub census_tests: u64,
+    /// Meek sweeps that oriented at least one edge
+    pub meek_sweeps: u64,
+}
+
 /// The deterministic core of a finished job — exactly what the result
 /// cache stores, so a cache hit and a recomputation are interchangeable
 /// by construction (asserted bitwise by the batch suite).
@@ -64,6 +77,9 @@ pub struct LevelRow {
 pub struct JobResultCore {
     pub n: usize,
     pub m: usize,
+    /// orientation-phase counters (deterministic, so they live in the
+    /// results stream, not the stats sidecar)
+    pub orient: OrientRow,
     pub levels: Vec<LevelRow>,
     /// undirected skeleton edges, (i, j) with i < j, row-major order
     pub skeleton_edges: Vec<(u32, u32)>,
@@ -92,6 +108,11 @@ impl JobResultCore {
         JobResultCore {
             n,
             m,
+            orient: OrientRow {
+                triples: res.orient.triples as u64,
+                census_tests: res.orient.census_tests,
+                meek_sweeps: res.orient.meek_sweeps as u64,
+            },
             levels,
             skeleton_edges: as_u32(res.skeleton.graph.edges()),
             directed: as_u32(res.cpdag.directed_edges()),
@@ -114,7 +135,7 @@ impl JobResultCore {
     /// misses instead of misparsing.
     pub fn to_bytes(&self) -> Vec<u8> {
         let mut b = Vec::with_capacity(
-            8 * (3 + 4 * self.levels.len())
+            8 * (6 + 4 * self.levels.len())
                 + 8 * (self.skeleton_edges.len()
                     + self.directed.len()
                     + self.undirected.len())
@@ -123,6 +144,9 @@ impl JobResultCore {
         let push_u64 = |b: &mut Vec<u8>, x: u64| b.extend_from_slice(&x.to_le_bytes());
         push_u64(&mut b, self.n as u64);
         push_u64(&mut b, self.m as u64);
+        push_u64(&mut b, self.orient.triples);
+        push_u64(&mut b, self.orient.census_tests);
+        push_u64(&mut b, self.orient.meek_sweeps);
         push_u64(&mut b, self.levels.len() as u64);
         for l in &self.levels {
             push_u64(&mut b, l.level as u64);
@@ -175,6 +199,11 @@ impl JobResultCore {
         let mut r = Rd { b, pos: 0 };
         let n = usize::try_from(r.u64()?).ok()?;
         let m = usize::try_from(r.u64()?).ok()?;
+        let orient = OrientRow {
+            triples: r.u64()?,
+            census_tests: r.u64()?,
+            meek_sweeps: r.u64()?,
+        };
         let nlevels = r.len(32)?;
         let mut levels = Vec::with_capacity(nlevels);
         for _ in 0..nlevels {
@@ -200,6 +229,7 @@ impl JobResultCore {
         Some(JobResultCore {
             n,
             m,
+            orient,
             levels,
             skeleton_edges,
             directed,
@@ -273,6 +303,10 @@ pub fn result_line(spec: &JobSpec, core: &JobResultCore) -> String {
         ));
     }
     s.push(']');
+    s.push_str(&format!(
+        ",\"orientation\":{{\"triples\":{},\"census_tests\":{},\"meek_sweeps\":{}}}",
+        core.orient.triples, core.orient.census_tests, core.orient.meek_sweeps
+    ));
     s.push_str(&format!(",\"skeleton\":{}", edges_json(&core.skeleton_edges)));
     s.push_str(&format!(",\"directed\":{}", edges_json(&core.directed)));
     s.push_str(&format!(",\"undirected\":{}", edges_json(&core.undirected)));
@@ -366,6 +400,11 @@ mod tests {
         JobResultCore {
             n: 4,
             m: 100,
+            orient: OrientRow {
+                triples: 3,
+                census_tests: 12,
+                meek_sweeps: 1,
+            },
             levels: vec![
                 LevelRow {
                     level: 0,
@@ -397,6 +436,10 @@ mod tests {
         assert_eq!(v.get("max_level").unwrap().as_usize(), Some(2));
         assert_eq!(v.get("edges").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("levels").unwrap().as_array().unwrap().len(), 2);
+        let o = v.get("orientation").unwrap();
+        assert_eq!(o.get("triples").unwrap().as_usize(), Some(3));
+        assert_eq!(o.get("census_tests").unwrap().as_usize(), Some(12));
+        assert_eq!(o.get("meek_sweeps").unwrap().as_usize(), Some(1));
         assert_eq!(v.get("skeleton").unwrap().as_array().unwrap().len(), 3);
         assert_eq!(v.get("directed").unwrap().as_array().unwrap().len(), 1);
         // no observational fields may leak into the deterministic stream
@@ -502,6 +545,7 @@ mod tests {
             JobResultCore {
                 n: 0,
                 m: 0,
+                orient: OrientRow::default(),
                 levels: vec![],
                 skeleton_edges: vec![],
                 directed: vec![],
@@ -527,7 +571,7 @@ mod tests {
         assert!(JobResultCore::from_bytes(&long).is_none());
         // absurd claimed list length must not allocate or panic
         let mut lie = bytes.clone();
-        let lvl_count_at = 16; // after n, m
+        let lvl_count_at = 40; // after n, m and the three orientation counters
         lie[lvl_count_at..lvl_count_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
         assert!(JobResultCore::from_bytes(&lie).is_none());
     }

@@ -10,9 +10,12 @@
 //!
 //! The lease policy is work-conserving *and elastic*: a job asks for its
 //! fair share of the remaining jobs (so seven small jobs split the
-//! budget) and then **re-leases between skeleton levels** through an
-//! [`ElasticLease`] wired into the job's
-//! [`crate::skeleton::WidthPolicy`] hook. A boundary re-lease targets
+//! budget) and then **re-leases between skeleton levels and at the
+//! orientation boundary** through an [`ElasticLease`] wired into the
+//! job's [`crate::skeleton::WidthPolicy`] hook — the lease is held
+//! until the job's CPDAG is finished, so the parallel orientation
+//! pipeline (v-structures, majority census, Meek sweeps) runs at the
+//! re-leased width too. A boundary re-lease targets
 //! the job's *current fair share*: it absorbs every idle worker while
 //! nothing is queued (a long tail level borrows what finished jobs
 //! returned) and shrinks back when leasers are waiting (waking them) —
@@ -367,9 +370,12 @@ pub fn run_job(
                 break (core, CacheOutcome::Disk);
             }
             let mut cfg = spec.config(lease.width());
-            // the job re-leases between levels through this hook (only
-            // the batched schedules consult it — a serial/parcpu job
-            // keeps its starting width for its whole run)
+            // the job re-leases through this hook between skeleton
+            // levels (batched schedules only — a serial/parcpu skeleton
+            // keeps its starting width) and, for EVERY variant, once
+            // more at the orientation boundary: the lease stays alive
+            // through orientation, so a census-heavy job absorbs idle
+            // workers for its v-structure/Meek phase too
             cfg.width_hook = Some(ElasticLease::hook(lease));
             let res = pc_stable_corr(&corr, data.n, data.m, &cfg)
                 .map(|r| Arc::new(JobResultCore::from_pc(&r, data.n, data.m)));

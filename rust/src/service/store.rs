@@ -51,7 +51,8 @@ use std::time::{Duration, SystemTime};
 
 /// Bump on ANY layout change — header or payload encodings. Old entries
 /// then degrade to misses (delete + recompute) instead of misparsing.
-pub const SCHEMA_VERSION: u32 = 1;
+/// (v2: `JobResultCore` gained the orientation counters.)
+pub const SCHEMA_VERSION: u32 = 2;
 
 const MAGIC: [u8; 4] = *b"CUPC";
 /// magic 4 + version 4 + kind 1 + key 16 + payload_len 8 + checksum 16
@@ -515,6 +516,11 @@ mod tests {
         JobResultCore {
             n: 4,
             m: 100,
+            orient: crate::service::report::OrientRow {
+                triples: 2,
+                census_tests: 7,
+                meek_sweeps: 1,
+            },
             levels: vec![LevelRow {
                 level: 0,
                 tests: 6,

@@ -105,7 +105,10 @@ pub enum OrientRule {
 /// a batch have released instead of holding its initial grant for the
 /// whole run. The batch service wires this to
 /// [`crate::service::ElasticLease`]; level 0 runs at the initial width
-/// (the lease taken before the job started).
+/// (the lease taken before the job started). The orientation phase
+/// consults the hook once more — with `level = levels.len()`, the
+/// "level after the last" — before building the CPDAG, for every
+/// variant (see `crate::api::pc_stable_corr`).
 ///
 /// Width changes can only move work between threads, never change what
 /// is computed: the pipeline's ordered-apply stage keeps every schedule
@@ -148,7 +151,10 @@ pub struct Config {
     /// many scoped workers when the native engine is selected (see
     /// [`pipeline`]) — results are bit-identical for any value. With an
     /// injected/XLA engine the batched schedules run single-engine and
-    /// this knob is ignored.
+    /// this knob is ignored. The orientation phase
+    /// (`crate::orient`) always runs through the pooled pipeline at
+    /// this width, for **every** variant and engine — CPDAGs are
+    /// bit-identical for any value there too.
     pub threads: usize,
     pub beta: usize,
     pub gamma: usize,

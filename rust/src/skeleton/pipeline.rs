@@ -33,6 +33,13 @@
 //! Engines that cannot be constructed per worker (the XLA PJRT engine
 //! owns client state) keep the single-engine path: [`Executor::Single`]
 //! runs the identical pipeline inline with the injected engine.
+//!
+//! The executor is not skeleton-specific: the orientation pipeline
+//! (`crate::orient`) dispatches its unshielded-triple enumeration,
+//! majority-census CI batches ([`Executor::run_sharded`] windows) and
+//! per-sweep Meek rule checks ([`Executor::run_weighted`] atomic tasks)
+//! through the same pool, width hooks included — so a batch job's
+//! elastic lease covers orientation too.
 
 use super::engine::{CiEngine, NativeEngine};
 use super::level0::{apply_candidates, eval_range, n_pairs, run_level0};
@@ -186,6 +193,39 @@ impl Executor<'_> {
                 results.into_iter().collect()
             }
         }
+    }
+
+    /// Shard `weights.len()` *atomic* tasks across the pool, balanced by
+    /// weight — the generalization the orientation pipeline uses for work
+    /// units that cannot be split mid-task (a Meek rule check on one
+    /// edge, say), where the weight is only a load-balance hint. Each
+    /// worker receives the task *indices* assigned to its shard, in
+    /// canonical order; concatenating the shard results in order restores
+    /// canonical task order. A task whose weight straddles a shard
+    /// boundary is executed exactly once, by the shard holding its
+    /// weight-0 prefix (splits keep `t0 = 0` on the first piece).
+    pub fn run_weighted<T, F>(&mut self, weights: &[u64], work: F) -> Result<Vec<T>>
+    where
+        T: Send,
+        F: Fn(&[usize], &mut dyn CiEngine) -> Result<T> + Sync,
+    {
+        let runs: Vec<Run> = weights
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| Run {
+                task: i,
+                t0: 0,
+                count: w.max(1),
+            })
+            .collect();
+        self.run_sharded(&runs, move |shard, engine| {
+            let ids: Vec<usize> = shard
+                .iter()
+                .filter(|r| r.t0 == 0)
+                .map(|r| r.task)
+                .collect();
+            work(&ids, engine)
+        })
     }
 
     /// Level 0 through whichever engine the executor owns. The pool path
@@ -416,6 +456,41 @@ mod tests {
             assert_eq!(stats_p.edges_after, stats_s.edges_after);
         }
         assert!(stats_s.removed > 0, "workload must actually remove edges");
+    }
+
+    /// Weighted atomic tasks run exactly once each, in canonical order,
+    /// for any pool width — even when a task's weight straddles a shard
+    /// boundary (the split pieces with t0 > 0 must not re-execute it).
+    #[test]
+    fn run_weighted_executes_every_task_exactly_once_in_order() {
+        // wildly unbalanced weights force mid-task splits at most widths
+        let weights: Vec<u64> = vec![3000, 1, 1, 2000, 700, 1, 5000, 1];
+        let want: Vec<usize> = (0..weights.len()).collect();
+        for threads in [1usize, 2, 3, 4, 7] {
+            let mut exec = Executor::Pool { threads };
+            let got = exec
+                .run_weighted(&weights, |ids, _| Ok(ids.to_vec()))
+                .unwrap();
+            let flat: Vec<usize> = got.into_iter().flatten().collect();
+            assert_eq!(flat, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn run_weighted_zero_weight_tasks_still_run() {
+        let weights = vec![0u64; 5];
+        let mut exec = Executor::Pool { threads: 4 };
+        let got = exec
+            .run_weighted(&weights, |ids, _| Ok(ids.to_vec()))
+            .unwrap();
+        let flat: Vec<usize> = got.into_iter().flatten().collect();
+        assert_eq!(flat, vec![0, 1, 2, 3, 4]);
+        // and an empty task list is a clean no-op
+        let empty = Executor::Pool { threads: 4 }
+            .run_weighted(&[], |ids: &[usize], _| Ok(ids.to_vec()))
+            .unwrap();
+        let flat: Vec<usize> = empty.into_iter().flatten().collect();
+        assert!(flat.is_empty());
     }
 
     #[test]

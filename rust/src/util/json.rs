@@ -161,18 +161,29 @@ impl Parser<'_> {
             .with_context(|| format!("bad number {s:?} at byte {start}"))
     }
 
+    /// Four hex digits of a `\uXXXX` escape. Folds the digits directly —
+    /// no intermediate `from_str_radix(..).unwrap()` — so every
+    /// malformed shape (EOF inside the escape, a non-hex byte, a
+    /// multi-byte UTF-8 char in the digit window) is a byte-offset
+    /// parse error by construction, never a panic.
     fn hex4(&mut self) -> Result<u32> {
         ensure!(
             self.pos + 4 <= self.b.len(),
             "truncated \\u escape at byte {}",
             self.pos
         );
-        let s = std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-            .ok()
-            .filter(|s| s.chars().all(|c| c.is_ascii_hexdigit()))
-            .with_context(|| format!("bad \\u escape at byte {}", self.pos))?;
+        let mut v = 0u32;
+        for k in 0..4 {
+            let d = match self.b[self.pos + k] {
+                c @ b'0'..=b'9' => c - b'0',
+                c @ b'a'..=b'f' => c - b'a' + 10,
+                c @ b'A'..=b'F' => c - b'A' + 10,
+                _ => bail!("bad \\u escape at byte {}", self.pos),
+            };
+            v = (v << 4) | d as u32;
+        }
         self.pos += 4;
-        Ok(u32::from_str_radix(s, 16).unwrap())
+        Ok(v)
     }
 
     fn string(&mut self) -> Result<String> {
@@ -200,25 +211,29 @@ impl Parser<'_> {
                         b'r' => out.push('\r'),
                         b't' => out.push('\t'),
                         b'u' => {
+                            let at = self.pos - 2; // the backslash
                             let hi = self.hex4()?;
                             let cp = if (0xD800..0xDC00).contains(&hi) {
                                 ensure!(
                                     self.b[self.pos..].starts_with(b"\\u"),
-                                    "lone high surrogate at byte {}",
-                                    self.pos
+                                    "lone high surrogate at byte {at}"
                                 );
                                 self.pos += 2;
                                 let lo = self.hex4()?;
                                 ensure!(
                                     (0xDC00..0xE000).contains(&lo),
                                     "bad low surrogate at byte {}",
-                                    self.pos
+                                    self.pos - 4
                                 );
                                 0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
                             } else {
                                 hi
                             };
-                            out.push(char::from_u32(cp).context("invalid unicode escape")?);
+                            // an unpaired low surrogate lands here: it is
+                            // no char, so it reports rather than panics
+                            out.push(char::from_u32(cp).with_context(|| {
+                                format!("invalid unicode escape at byte {at}")
+                            })?);
                         }
                         other => bail!("bad escape \\{} at byte {}", other as char, self.pos - 1),
                     }
@@ -338,6 +353,46 @@ mod tests {
         let v = Json::parse(r#""\ud83d\ude00""#).unwrap();
         assert_eq!(v.as_str(), Some("\u{1F600}"));
         assert!(Json::parse(r#""\ud83d""#).is_err(), "lone high surrogate");
+    }
+
+    /// Adversarial `\uXXXX` shapes in a manifest must surface as
+    /// byte-offset parse errors — never a panic. (The escape decoder
+    /// used to `from_str_radix(..).unwrap()` after a separate validity
+    /// check; this pins the panic-free contract for every malformed
+    /// shape, including the ones the old check never saw: unpaired low
+    /// surrogates and EOF mid-escape.)
+    #[test]
+    fn malformed_unicode_escapes_error_with_byte_offsets() {
+        for (doc, needle) in [
+            // short escape: fewer than 4 digits left before EOF
+            (r#""\u12""#, "truncated \\u escape"),
+            // EOF mid-escape (document ends inside the digit window)
+            (r#""\u12"#, "truncated \\u escape"),
+            (r#""\u"#, "truncated \\u escape"),
+            // non-hex digits, including a multi-byte UTF-8 char in the window
+            (r#""\uGGGG""#, "bad \\u escape"),
+            ("\"\\u12é9\"", "bad \\u escape"),
+            // lone high surrogate: end of string / not followed by \u
+            (r#""\uD83D""#, "lone high surrogate"),
+            (r#""\uD83Dx""#, "lone high surrogate"),
+            // high surrogate followed by an escape that is no surrogate
+            (r#""\uD83D\u0041""#, "bad low surrogate"),
+            // second half of the pair truncated
+            (r#""\uD83D\u00"#, "truncated \\u escape"),
+            // unpaired low surrogate is not a char
+            (r#""\uDC00""#, "invalid unicode escape"),
+        ] {
+            let err = Json::parse(doc).expect_err(doc);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{doc}: {msg}");
+            assert!(msg.contains("byte "), "{doc}: offset missing in {msg}");
+        }
+        // valid escapes at the boundaries still decode
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap().as_str(), Some("A"));
+        assert_eq!(
+            Json::parse(r#""\uFFFD""#).unwrap().as_str(),
+            Some("\u{FFFD}")
+        );
     }
 
     #[test]

@@ -152,6 +152,10 @@ fn batch_results_are_scheduling_and_cache_invariant() {
         assert!(v.get("job").is_some());
         assert!(v.get("levels").is_some());
         assert!(v.get("skeleton").is_some());
+        let o = v.get("orientation").expect("orientation block is deterministic");
+        assert!(o.get("triples").is_some());
+        assert!(o.get("census_tests").is_some());
+        assert!(o.get("meek_sweeps").is_some());
         assert!(
             v.get("seconds_run").is_none() && v.get("corr_cache").is_none(),
             "observational fields leaked into the deterministic stream: {line}"

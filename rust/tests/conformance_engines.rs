@@ -19,7 +19,7 @@
 
 use cupc::api::pc_stable_corr;
 use cupc::sim::scenarios::{default_grid, Scenario, ScenarioInput, ALL_VARIANTS};
-use cupc::skeleton::Variant;
+use cupc::skeleton::{OrientRule, Variant};
 use cupc::stats::fisher::tau;
 use cupc::stats::pcorr::{ci_statistic, CiWorkspace, Corr};
 
@@ -84,6 +84,16 @@ fn all_six_variants_conform_on_the_full_grid() {
                 sc.name,
                 res.cpdag,
                 reference.cpdag
+            );
+
+            // 3b. the orientation phase's deterministic bookkeeping is
+            // schedule-invariant too: the census runs over the (shared)
+            // final skeleton to the (shared) deepest level, so triple,
+            // census-test and Meek-sweep counts must all agree
+            assert_eq!(
+                res.orient, reference.orient,
+                "{}: {v:?} orientation stats differ",
+                sc.name
             );
 
             // 4. per-level removal bookkeeping matches
@@ -151,6 +161,48 @@ fn batched_schedules_are_thread_count_invariant() {
                 "{}: {v:?} CPDAG differs between threads=1 and threads=4",
                 sc.name
             );
+        }
+    }
+}
+
+/// The orientation pipeline's determinism gate: CPDAGs — under BOTH the
+/// first-sepset rule and the majority census — and the orientation
+/// stats (triples, census tests, Meek sweeps) are bit-identical for
+/// `threads = 1` and `threads = 4` across the full grid. This covers
+/// the sharded v-structure enumeration, the batched census, and the
+/// snapshot-per-sweep Meek fixpoint; it must never weaken.
+#[test]
+fn orientation_is_thread_count_invariant() {
+    for sc in default_grid() {
+        let input = sc.generate();
+        for orient in [OrientRule::Standard, OrientRule::Majority] {
+            let run_at = |threads: usize| {
+                let mut cfg = sc.config(Variant::CupcS);
+                cfg.orient = orient;
+                cfg.threads = threads;
+                pc_stable_corr(&input.corr, input.n, input.m, &cfg).unwrap_or_else(|e| {
+                    panic!("{} / {orient:?} t={threads} failed: {e:#}", sc.name)
+                })
+            };
+            let r1 = run_at(1);
+            let r4 = run_at(4);
+            assert!(
+                r1.cpdag.same_as(&r4.cpdag),
+                "{}: {orient:?} CPDAG differs between threads=1 and threads=4",
+                sc.name
+            );
+            assert_eq!(
+                r1.orient, r4.orient,
+                "{}: {orient:?} orientation stats differ between threads",
+                sc.name
+            );
+            if orient == OrientRule::Standard {
+                assert_eq!(
+                    r1.orient.census_tests, 0,
+                    "{}: first-sepset orientation runs no census",
+                    sc.name
+                );
+            }
         }
     }
 }
