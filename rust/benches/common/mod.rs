@@ -25,12 +25,19 @@ pub fn opts_from_env() -> ExpOpts {
     ExpOpts {
         scale,
         engine,
-        reps: args.get_usize("reps", 1),
+        // bench argv comes from the developer's own command line, so a
+        // malformed value may terminate the bench — but through the
+        // getter's named error, not a parser panic
+        reps: args
+            .get_usize("reps", 1)
+            .unwrap_or_else(|e| panic!("{e:#}")),
         artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
     }
 }
 
 #[allow(dead_code)]
 pub fn graphs_from_env(default: usize) -> usize {
-    Args::parse(bench_argv()).get_usize("graphs", default)
+    Args::parse(bench_argv())
+        .get_usize("graphs", default)
+        .unwrap_or_else(|e| panic!("{e:#}"))
 }

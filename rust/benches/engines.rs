@@ -62,13 +62,13 @@ struct OrientRowBench {
 
 fn main() -> anyhow::Result<()> {
     let args = Args::parse(bench_argv());
-    let reps = args.get_usize("reps", 3);
+    let reps = args.get_usize("reps", 3)?;
     // cargo runs bench binaries with cwd = the package root (rust/);
     // anchor the default to the repo root where the baseline is tracked
     let default_out = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_engines.json");
     let out = args.get_or("out", default_out);
-    let threads = args.get_usize("threads", available_threads());
-    let mut rng = Pcg::seeded(args.get_u64("seed", 0));
+    let threads = args.get_usize("threads", available_threads())?;
+    let mut rng = Pcg::seeded(args.get_u64("seed", 0)?);
 
     // ── kernel ns/test across levels and batch sizes ────────────────
     let mut kernels: Vec<KernelRow> = Vec::new();

@@ -13,8 +13,19 @@
 use anyhow::{Context, Result};
 use cupc::service::{render_results, render_stats, run_batch, BatchOptions, Cache, Manifest};
 use cupc::skeleton::available_threads;
-use cupc::util::cli::Args;
+use cupc::util::cli::{mb_to_bytes_u64, mb_to_bytes_usize, Args};
 use std::path::PathBuf;
+
+/// The cache budgets shared by `batch` and `serve`: `--cache-mb` /
+/// `--cache-disk-mb` in MiB, converted with *checked* multiplication —
+/// the old `get_usize(..) << 20` wrapped a huge value to a tiny/zero
+/// budget in release builds (silently disabling the cache) and panicked
+/// in debug.
+pub fn cache_budgets_from_args(args: &Args) -> Result<(usize, u64)> {
+    let cache_bytes = mb_to_bytes_usize(args.get_usize("cache-mb", 256)?, "cache-mb")?;
+    let disk_bytes = mb_to_bytes_u64(args.get_u64("cache-disk-mb", 1024)?, "cache-disk-mb")?;
+    Ok((cache_bytes, disk_bytes))
+}
 
 pub fn main(args: &Args) -> Result<()> {
     let manifest_path = args
@@ -25,12 +36,13 @@ pub fn main(args: &Args) -> Result<()> {
         .get("stats")
         .map(str::to_string)
         .unwrap_or_else(|| format!("{out}.stats.jsonl"));
+    let (cache_bytes, disk_bytes) = cache_budgets_from_args(args)?;
     let opts = BatchOptions {
-        job_threads: args.get_usize("job-threads", available_threads()),
-        threads: args.get_usize("threads", available_threads()),
-        cache_bytes: args.get_usize("cache-mb", 256) << 20,
+        job_threads: args.get_usize("job-threads", available_threads())?,
+        threads: args.get_usize("threads", available_threads())?,
+        cache_bytes,
         cache_dir: args.get("cache-dir").map(PathBuf::from),
-        disk_bytes: args.get_u64("cache-disk-mb", 1024) << 20,
+        disk_bytes,
         verbose: args.has_flag("verbose"),
     };
 

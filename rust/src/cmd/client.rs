@@ -1,0 +1,41 @@
+//! `cupc client` — a one-shot client for a running `cupc serve` daemon.
+//!
+//! Ships a manifest file over the serve protocol, reassembles the
+//! streamed records into a results file byte-identical to what `cupc
+//! batch` would write for the same manifest, and can probe liveness
+//! (`--ping`) or fetch the daemon's stats record (`--stats`). The CI
+//! serve-smoke job drives the daemon entirely through this subcommand.
+
+use anyhow::{Context, Result};
+use cupc::service::proto::Priority;
+use cupc::service::server::Client;
+use cupc::util::cli::Args;
+
+pub fn main(args: &Args) -> Result<()> {
+    let addr = args.get_or("addr", "127.0.0.1:7717");
+    let mut client = Client::connect(&addr)?;
+    if args.has_flag("ping") {
+        client.ping()?;
+        println!("pong");
+        return Ok(());
+    }
+    if args.has_flag("stats") {
+        println!("{}", client.stats()?);
+        return Ok(());
+    }
+    let manifest_path = args
+        .get("manifest")
+        .context("--manifest <jobs.json> required (or --ping / --stats)")?;
+    let priority = Priority::parse(&args.get_or("priority", "normal"))?;
+    let text = std::fs::read_to_string(manifest_path)
+        .with_context(|| format!("reading manifest {manifest_path}"))?;
+    let results = client.submit(&text, priority)?;
+    match args.get("out") {
+        Some(out) => {
+            std::fs::write(out, &results).with_context(|| format!("writing {out}"))?;
+            eprintln!("client: wrote {} record(s) to {out}", results.lines().count());
+        }
+        None => print!("{results}"),
+    }
+    Ok(())
+}

@@ -37,7 +37,7 @@ mod with_xla {
         let dir = args.get_or("artifacts", "artifacts");
         let mut xla = XlaEngine::new(Path::new(&dir))?;
         let mut nat = NativeEngine::new();
-        let mut rng = Pcg::seeded(args.get_u64("seed", 0));
+        let mut rng = Pcg::seeded(args.get_u64("seed", 0)?);
 
         // level 0
         let c: Vec<f32> = (0..5000).map(|_| rng.uniform_in(-0.95, 0.95) as f32).collect();

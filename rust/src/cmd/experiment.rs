@@ -20,7 +20,7 @@ pub fn opts_from_args(args: &Args) -> Result<ExpOpts> {
     Ok(ExpOpts {
         scale,
         engine,
-        reps: args.get_usize("reps", 1),
+        reps: args.get_usize("reps", 1)?,
         artifacts: PathBuf::from(args.get_or("artifacts", "artifacts")),
     })
 }
@@ -78,7 +78,7 @@ pub fn main(args: &Args) -> Result<()> {
             let graphs = args.get_usize("graphs", match opts.scale {
                 Scale::Small => 10,
                 Scale::Paper => 10,
-            });
+            })?;
             let sweeps: Vec<fig10::Sweep> = if sweep_arg == "all" {
                 vec![fig10::Sweep::N, fig10::Sweep::M, fig10::Sweep::D]
             } else {

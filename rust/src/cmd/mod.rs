@@ -1,9 +1,11 @@
 //! CLI subcommand dispatch (binary-only module).
 
 pub mod batch;
+pub mod client;
 pub mod engines;
 pub mod experiment;
 pub mod run;
+pub mod serve;
 pub mod simulate;
 
 use anyhow::{bail, Result};
@@ -13,6 +15,8 @@ pub fn dispatch(args: &Args) -> Result<()> {
     match args.subcommand.as_deref() {
         Some("run") => run::main(args),
         Some("batch") => batch::main(args),
+        Some("serve") => serve::main(args),
+        Some("client") => client::main(args),
         Some("simulate") => simulate::main(args),
         Some("experiment") => experiment::main(args),
         Some("engines") => engines::main(args),
@@ -35,6 +39,13 @@ USAGE:
   cupc batch --manifest jobs.json [--out results.jsonl] [--stats FILE]
            [--job-threads J] [--threads N] [--cache-mb 256]
            [--cache-dir DIR] [--cache-disk-mb 1024] [--verbose]
+  cupc serve [--addr 127.0.0.1:7717] [--threads N] [--cache-mb 256]
+           [--cache-dir DIR] [--cache-disk-mb 1024] [--max-conns 16]
+           [--max-queued-jobs 64] [--idle-timeout-s 300]
+           [--frame-timeout-s 10] [--verbose]
+  cupc client [--addr 127.0.0.1:7717] --manifest jobs.json
+           [--out results.jsonl] [--priority low|normal|high]
+           | --ping | --stats
   cupc simulate --n 1000 --m 10000 --d 0.1 --seed 1 --out data.csv
   cupc experiment <table2|fig5|fig6|fig7|fig8|fig9|fig10|ablation>
            [--scale small|paper] [--engine native|xla] [--reps 1]

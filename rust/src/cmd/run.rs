@@ -11,12 +11,12 @@ use std::path::PathBuf;
 pub fn config_from_args(args: &Args) -> Result<Config> {
     let base = Config::default();
     let mut cfg = Config {
-        alpha: args.get_f64("alpha", base.alpha),
-        threads: args.get_usize("threads", base.threads),
-        beta: args.get_usize("beta", base.beta),
-        gamma: args.get_usize("gamma", base.gamma),
-        theta: args.get_usize("theta", base.theta),
-        delta: args.get_usize("delta", base.delta),
+        alpha: args.get_f64("alpha", base.alpha)?,
+        threads: args.get_usize("threads", base.threads)?,
+        beta: args.get_usize("beta", base.beta)?,
+        gamma: args.get_usize("gamma", base.gamma)?,
+        theta: args.get_usize("theta", base.theta)?,
+        delta: args.get_usize("delta", base.delta)?,
         artifacts_dir: PathBuf::from(args.get_or("artifacts", "artifacts")),
         verbose: args.has_flag("verbose"),
         ..base

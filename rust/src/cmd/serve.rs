@@ -1,0 +1,95 @@
+//! `cupc serve` — run the long-lived batch daemon.
+//!
+//! Binds the loopback-only serve protocol (`service::proto`), keeps the
+//! two-layer content-addressed cache warm across requests, and shares
+//! one elastic thread budget between every connected client's jobs.
+//! SIGTERM / SIGINT request a clean shutdown: the accept loop stops,
+//! in-flight requests finish streaming, and the process exits 0.
+
+use super::batch::cache_budgets_from_args;
+use anyhow::Result;
+use cupc::service::server::{ServeOptions, Server};
+use cupc::skeleton::available_threads;
+use cupc::util::cli::Args;
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Set by the signal handler; a watcher thread bridges it to the
+/// server's shutdown flag (an async-signal handler may only touch
+/// static atomics — never an `Arc` or a lock).
+static SIGNALLED: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_signal(_signum: i32) {
+    SIGNALLED.store(true, Ordering::SeqCst);
+}
+
+#[cfg(unix)]
+fn install_signal_handlers() {
+    // libc's `signal(2)` without the libc crate (the build is hermetic).
+    // SIGINT=2 and SIGTERM=15 on every unix this crate targets; the
+    // previous disposition is irrelevant, so the return value is unused.
+    extern "C" {
+        fn signal(signum: i32, handler: extern "C" fn(i32)) -> isize;
+    }
+    unsafe {
+        signal(2, on_signal);
+        signal(15, on_signal);
+    }
+}
+
+#[cfg(not(unix))]
+fn install_signal_handlers() {}
+
+pub fn main(args: &Args) -> Result<()> {
+    let (cache_bytes, disk_bytes) = cache_budgets_from_args(args)?;
+    let opts = ServeOptions {
+        addr: args.get_or("addr", "127.0.0.1:7717"),
+        threads: args.get_usize("threads", available_threads())?,
+        cache_bytes,
+        cache_dir: args.get("cache-dir").map(PathBuf::from),
+        disk_bytes,
+        max_conns: args.get_usize("max-conns", 16)?,
+        max_queued_jobs: args.get_usize("max-queued-jobs", 64)?,
+        idle_timeout: Duration::from_secs(args.get_u64("idle-timeout-s", 300)?),
+        frame_timeout: Duration::from_secs(args.get_u64("frame-timeout-s", 10)?),
+        verbose: args.has_flag("verbose"),
+    };
+    if opts.cache_dir.is_none() && args.get("cache-disk-mb").is_some() {
+        eprintln!("warning: --cache-disk-mb has no effect without --cache-dir");
+    }
+
+    install_signal_handlers();
+    let shutdown = Arc::new(AtomicBool::new(false));
+    {
+        let shutdown = shutdown.clone();
+        std::thread::spawn(move || loop {
+            if SIGNALLED.load(Ordering::SeqCst) {
+                eprintln!("serve: signal received, draining in-flight requests");
+                shutdown.store(true, Ordering::SeqCst);
+                return;
+            }
+            std::thread::sleep(Duration::from_millis(100));
+        });
+    }
+
+    let server = Server::bind(opts.clone(), shutdown)?;
+    let addr = server.local_addr()?;
+    eprintln!(
+        "serve: listening on {addr}, {} worker(s), cache {} MiB{}, \
+         max {} connection(s) / {} queued job(s)",
+        opts.threads,
+        opts.cache_bytes >> 20,
+        match &opts.cache_dir {
+            Some(d) => format!(", disk cache {} ({} MiB)", d.display(), opts.disk_bytes >> 20),
+            None => String::new(),
+        },
+        opts.max_conns,
+        opts.max_queued_jobs
+    );
+    server.run()?;
+    eprintln!("serve: shut down cleanly");
+    Ok(())
+}

@@ -6,10 +6,10 @@ use cupc::sim::datasets;
 use cupc::util::cli::Args;
 
 pub fn main(args: &Args) -> Result<()> {
-    let n = args.get_usize("n", 1000);
-    let m = args.get_usize("m", 10000);
-    let d = args.get_f64("d", 0.1);
-    let seed = args.get_u64("seed", 1);
+    let n = args.get_usize("n", 1000)?;
+    let m = args.get_usize("m", 10000)?;
+    let d = args.get_f64("d", 0.1)?;
+    let seed = args.get_u64("seed", 1)?;
     let out = args.get("out").context("--out <file.csv> required")?;
 
     let ds = datasets::generate_er(n, m, d, seed);

@@ -145,6 +145,14 @@ impl Manifest {
             .get("jobs")
             .and_then(Json::as_array)
             .context("manifest must be an object with a \"jobs\" array")?;
+        Self::from_jobs_json(jobs_json)
+    }
+
+    /// Build a manifest from an already-parsed `jobs` array. Shared by
+    /// the file loader and the serve protocol's submit requests, so
+    /// both surfaces enforce the identical validation (name/source
+    /// checks, eager dataset/scenario lookup, duplicate-name rejection).
+    pub fn from_jobs_json(jobs_json: &[Json]) -> Result<Manifest> {
         ensure!(!jobs_json.is_empty(), "manifest has no jobs");
         let mut jobs = Vec::with_capacity(jobs_json.len());
         for (idx, j) in jobs_json.iter().enumerate() {

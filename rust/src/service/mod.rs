@@ -25,22 +25,35 @@
 //!   concurrent processes — share warm grams and results; corruption is
 //!   always a miss, never an error;
 //! * [`report`] — deterministic JSON-lines results plus an
-//!   observational stats sidecar.
+//!   observational stats sidecar;
+//! * [`proto`] / [`server`] — `cupc serve`: a long-lived multi-tenant
+//!   daemon over the same layer. Clients ship manifests over a
+//!   loopback-only length-prefixed JSON protocol
+//!   ([`proto`]), results stream back record by record, and one
+//!   process keeps both cache tiers warm across requests while
+//!   admission control (job cap, connection cap, idle / slow-loris
+//!   timeouts) keeps any one tenant from queueing the daemon to death.
 //!
 //! **Determinism contract** (extends the pipeline's): the rendered
 //! results stream is bit-identical for any `--job-threads`, any thread
-//! budget, any between-level re-lease schedule, and cold / warm-memory /
-//! warm-disk cache. Scheduling and caching may only move wall-clock
-//! time. Gated end to end by `tests/batch_runner.rs`.
+//! budget, any between-level re-lease schedule, cold / warm-memory /
+//! warm-disk cache, and batch vs. serve delivery with any number of
+//! concurrent clients. Scheduling, caching and transport may only move
+//! wall-clock time. Gated end to end by `tests/batch_runner.rs` and
+//! `tests/serve_conformance.rs`.
 
 pub mod cache;
 pub mod job;
+pub mod proto;
 pub mod report;
 pub mod scheduler;
+pub mod server;
 pub mod store;
 
 pub use cache::{Cache, CacheStats};
 pub use job::{DataSource, JobSpec, Manifest};
+pub use proto::{Priority, Request};
 pub use report::{render_results, render_stats, CacheOutcome, JobReport, JobResultCore};
 pub use scheduler::{run_batch, run_job, BatchOptions, BatchOutput, ElasticLease, ThreadBudget};
+pub use server::{Client, ServeOptions, Server, ServerHandle};
 pub use store::{DiskStats, DiskStore};

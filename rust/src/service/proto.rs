@@ -1,0 +1,323 @@
+//! The `cupc serve` wire protocol: length-prefixed JSON frames over a
+//! loopback TCP stream.
+//!
+//! Framing: every message — request or response — is a 4-byte
+//! little-endian `u32` payload length followed by exactly that many
+//! bytes of UTF-8 JSON. Requests are capped at [`MAX_REQUEST_BYTES`];
+//! anything larger (including the "length" read out of non-protocol
+//! garbage like an HTTP request line) is a `bad-frame` error.
+//!
+//! Requests (client → server):
+//!
+//! ```json
+//! {"op": "ping"}
+//! {"op": "stats"}
+//! {"op": "submit", "priority": "normal", "manifest": {"jobs": [...]}}
+//! ```
+//!
+//! The `manifest` value is the same document `cupc batch --manifest`
+//! reads from disk, embedded verbatim; `priority` is optional
+//! (`low` | `normal` | `high`, default `normal`) and shapes only the
+//! *initial* worker ask — never the result bytes.
+//!
+//! Responses (server → client):
+//!
+//! ```json
+//! {"pong": true}
+//! {"stats": {...}}
+//! {"result": <record>}      // one per job, manifest order
+//! {"done": {"jobs": N}}     // terminates a submit's stream
+//! {"error": {"code": "...", "message": "..."}}
+//! ```
+//!
+//! Each `result` frame embeds one deterministic results-stream record
+//! (`service::report::result_line`) **verbatim** — the client
+//! reassembles them by textual extraction ([`record_from_result_frame`])
+//! so a served stream is byte-identical to the `cupc batch` results
+//! file, with no JSON re-rendering in the path to prove anything about.
+//!
+//! Error codes: `bad-frame` (framing lost — the connection closes),
+//! `bad-request` (malformed payload — the connection survives),
+//! `overloaded` (admission control rejected the submit), `busy`
+//! (connection cap reached), `job-failed` (a job errored — the
+//! request's remaining jobs are skipped, the connection survives).
+
+use super::job::Manifest;
+use crate::util::json::{escape, Json};
+use anyhow::{bail, Context, Result};
+
+/// Request frames larger than this are rejected (`bad-frame`). Requests
+/// are manifests plus small envelopes, so 8 MiB is orders of magnitude
+/// beyond any real job list while bounding what one connection can make
+/// the daemon buffer.
+pub const MAX_REQUEST_BYTES: usize = 8 << 20;
+
+/// Sanity cap a client applies to response frames. Responses carry
+/// whole result records (edge lists included), so the cap is much
+/// larger than the request cap — it exists to catch stream
+/// desynchronization, not to bound honest payloads.
+pub const MAX_RESPONSE_BYTES: usize = 256 << 20;
+
+/// Prefix `payload` with its 4-byte little-endian length.
+pub fn encode_frame(payload: &str) -> Vec<u8> {
+    assert!(payload.len() <= u32::MAX as usize, "frame too large");
+    let mut out = Vec::with_capacity(4 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(payload.as_bytes());
+    out
+}
+
+/// Decode a frame header.
+pub fn frame_len(header: [u8; 4]) -> usize {
+    u32::from_le_bytes(header) as usize
+}
+
+/// Fair-share priority of a submit request. Shapes the *initial* lease
+/// ask for each of the request's jobs against the shared
+/// [`super::scheduler::ThreadBudget`]; between skeleton levels every job
+/// drifts toward its fair share regardless ([`super::scheduler::ElasticLease`]),
+/// and results are width-invariant by the pipeline contract — so
+/// priority can only move wall-clock time, never bytes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Priority {
+    Low,
+    Normal,
+    High,
+}
+
+impl Priority {
+    pub fn parse(s: &str) -> Result<Priority> {
+        match s {
+            "low" => Ok(Priority::Low),
+            "normal" => Ok(Priority::Normal),
+            "high" => Ok(Priority::High),
+            other => bail!("unknown priority {other:?} (low|normal|high)"),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Priority::Low => "low",
+            Priority::Normal => "normal",
+            Priority::High => "high",
+        }
+    }
+
+    /// Workers each of the request's jobs initially asks the shared
+    /// budget for. The grant is still capped at the fair share of idle
+    /// workers among concurrent leasers, so `High` expresses appetite,
+    /// not preemption.
+    pub fn initial_want(self, total: usize) -> usize {
+        match self {
+            Priority::Low => 1,
+            Priority::Normal => (total / 2).max(1),
+            Priority::High => total.max(1),
+        }
+    }
+}
+
+/// A parsed client request.
+pub enum Request {
+    /// run a manifest; results stream back in manifest order
+    Submit {
+        manifest: Manifest,
+        priority: Priority,
+    },
+    /// daemon counters (budget, cache, disk, admission)
+    Stats,
+    /// liveness probe
+    Ping,
+}
+
+/// Parse one request payload. Every validation failure is an error the
+/// server wraps in a `bad-request` frame — the manifest rules are
+/// exactly `cupc batch`'s ([`Manifest::from_jobs_json`]), so a manifest
+/// rejected at the CLI is rejected identically over the wire.
+pub fn parse_request(payload: &str) -> Result<Request> {
+    let root = Json::parse(payload).context("request is not valid JSON")?;
+    let op = root
+        .get("op")
+        .and_then(Json::as_str)
+        .context("request must be an object with an \"op\" string")?;
+    match op {
+        "ping" => Ok(Request::Ping),
+        "stats" => Ok(Request::Stats),
+        "submit" => {
+            let priority = match root.get("priority") {
+                Some(v) => Priority::parse(v.as_str().context("\"priority\" must be a string")?)?,
+                None => Priority::Normal,
+            };
+            let m = root
+                .get("manifest")
+                .context("submit requires a \"manifest\" object")?;
+            let jobs = m
+                .get("jobs")
+                .and_then(Json::as_array)
+                .context("manifest must be an object with a \"jobs\" array")?;
+            let manifest = Manifest::from_jobs_json(jobs)?;
+            Ok(Request::Submit { manifest, priority })
+        }
+        other => bail!("unknown op {other:?} (ping|stats|submit)"),
+    }
+}
+
+/// A structured error frame.
+pub fn error_frame(code: &str, message: &str) -> String {
+    format!(
+        "{{\"error\":{{\"code\":\"{}\",\"message\":\"{}\"}}}}",
+        escape(code),
+        escape(message)
+    )
+}
+
+/// Wrap one deterministic result record (already valid JSON) verbatim.
+pub fn result_frame(record: &str) -> String {
+    format!("{{\"result\":{record}}}")
+}
+
+/// Terminate a submit's stream.
+pub fn done_frame(jobs: usize) -> String {
+    format!("{{\"done\":{{\"jobs\":{jobs}}}}}")
+}
+
+pub fn pong_frame() -> String {
+    "{\"pong\":true}".to_string()
+}
+
+/// Extract the verbatim record from a `{"result":<record>}` frame.
+/// Textual by design: the server embedded the batch layer's record
+/// bytes unchanged, so textual extraction preserves bit-identity with
+/// the `cupc batch` results file (a parse → re-render path would have
+/// to prove float round-tripping instead). `None` for any other frame.
+pub fn record_from_result_frame(payload: &str) -> Option<&str> {
+    payload
+        .strip_prefix("{\"result\":")
+        .and_then(|rest| rest.strip_suffix('}'))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::DataSource;
+
+    #[test]
+    fn frames_roundtrip() {
+        let f = encode_frame("abc");
+        assert_eq!(f, vec![3, 0, 0, 0, b'a', b'b', b'c']);
+        let header: [u8; 4] = f[..4].try_into().unwrap();
+        assert_eq!(frame_len(header), 3);
+        assert_eq!(frame_len([0; 4]), 0);
+        // the length a server reads out of an HTTP request line is junk
+        // far beyond the request cap — garbage input self-identifies
+        let header: [u8; 4] = b"GET "[..4].try_into().unwrap();
+        assert!(frame_len(header) > MAX_REQUEST_BYTES);
+    }
+
+    #[test]
+    fn parses_ping_stats_and_submit() {
+        assert!(matches!(parse_request(r#"{"op":"ping"}"#), Ok(Request::Ping)));
+        assert!(matches!(
+            parse_request(r#"{"op":"stats"}"#),
+            Ok(Request::Stats)
+        ));
+        let req = parse_request(
+            r#"{"op":"submit","priority":"high",
+                "manifest":{"jobs":[{"name":"a","scenario":"sparse-a01"}]}}"#,
+        )
+        .unwrap();
+        match req {
+            Request::Submit { manifest, priority } => {
+                assert_eq!(priority, Priority::High);
+                assert_eq!(manifest.jobs.len(), 1);
+                assert_eq!(manifest.jobs[0].name, "a");
+                assert_eq!(
+                    manifest.jobs[0].source,
+                    DataSource::Scenario("sparse-a01".into())
+                );
+            }
+            _ => panic!("expected submit"),
+        }
+        // priority defaults to normal
+        let req =
+            parse_request(r#"{"op":"submit","manifest":{"jobs":[{"scenario":"grn-mid"}]}}"#)
+                .unwrap();
+        assert!(matches!(
+            req,
+            Request::Submit {
+                priority: Priority::Normal,
+                ..
+            }
+        ));
+    }
+
+    /// Wire-side manifests go through the same validator as file-side
+    /// ones — a manifest the CLI rejects is rejected identically here.
+    #[test]
+    fn bad_requests_are_named_errors() {
+        for (payload, needle) in [
+            ("[]", "\"op\" string"),
+            (r#"{"op":"fly"}"#, "unknown op"),
+            (r#"{"op":"submit"}"#, "\"manifest\" object"),
+            (r#"{"op":"submit","manifest":7}"#, "\"jobs\" array"),
+            (r#"{"op":"submit","manifest":{"jobs":[]}}"#, "no jobs"),
+            (
+                r#"{"op":"submit","manifest":{"jobs":[{"scenario":"nope"}]}}"#,
+                "unknown scenario",
+            ),
+            (
+                r#"{"op":"submit","priority":"asap",
+                    "manifest":{"jobs":[{"scenario":"grn-mid"}]}}"#,
+                "unknown priority",
+            ),
+        ] {
+            let err = parse_request(payload).expect_err(payload);
+            let msg = format!("{err:#}");
+            assert!(msg.contains(needle), "{payload}: {msg}");
+        }
+    }
+
+    #[test]
+    fn priority_spellings_and_wants() {
+        for p in [Priority::Low, Priority::Normal, Priority::High] {
+            assert_eq!(Priority::parse(p.name()).unwrap(), p);
+        }
+        assert_eq!(Priority::Low.initial_want(8), 1);
+        assert_eq!(Priority::Normal.initial_want(8), 4);
+        assert_eq!(Priority::High.initial_want(8), 8);
+        // a one-worker budget still grants something to everyone
+        assert_eq!(Priority::Low.initial_want(1), 1);
+        assert_eq!(Priority::Normal.initial_want(1), 1);
+        assert_eq!(Priority::High.initial_want(1), 1);
+    }
+
+    #[test]
+    fn response_frames_are_valid_json() {
+        let e = Json::parse(&error_frame("bad-request", "line1\nline\"2\"")).unwrap();
+        let inner = e.get("error").unwrap();
+        assert_eq!(inner.get("code").unwrap().as_str(), Some("bad-request"));
+        assert_eq!(
+            inner.get("message").unwrap().as_str(),
+            Some("line1\nline\"2\"")
+        );
+        let d = Json::parse(&done_frame(7)).unwrap();
+        assert_eq!(
+            d.get("done").unwrap().get("jobs").unwrap().as_usize(),
+            Some(7)
+        );
+        assert_eq!(
+            Json::parse(&pong_frame()).unwrap().get("pong").unwrap().as_bool(),
+            Some(true)
+        );
+    }
+
+    #[test]
+    fn result_records_embed_and_extract_verbatim() {
+        let record = r#"{"job":"a","levels":[{"level":0,"tests":6}]}"#;
+        let frame = result_frame(record);
+        assert!(Json::parse(&frame).is_ok(), "envelope must stay valid JSON");
+        assert_eq!(record_from_result_frame(&frame), Some(record));
+        // non-result frames extract nothing
+        assert_eq!(record_from_result_frame(&done_frame(1)), None);
+        assert_eq!(record_from_result_frame(&pong_frame()), None);
+    }
+}

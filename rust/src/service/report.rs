@@ -346,6 +346,26 @@ pub fn render_results(jobs: &[JobSpec], reports: &[JobReport]) -> String {
     s
 }
 
+/// The in-process cache counters as a JSON object (no enclosing key).
+/// Shared by the batch stats sidecar and the serve daemon's `/stats`
+/// endpoint so both spell the fields identically (CI greps them).
+pub fn cache_stats_json(c: &CacheStats) -> String {
+    format!(
+        "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\
+         \"bytes\":{},\"budget\":{}}}",
+        c.hits, c.misses, c.evictions, c.entries, c.bytes, c.budget
+    )
+}
+
+/// The persistent-store counters as a JSON object (no enclosing key).
+pub fn disk_stats_json(d: &DiskStats) -> String {
+    format!(
+        "{{\"hits\":{},\"misses\":{},\"evictions\":{},\"dropped\":{},\
+         \"entries\":{},\"bytes\":{},\"budget\":{}}}",
+        d.hits, d.misses, d.evictions, d.dropped, d.entries, d.bytes, d.budget
+    )
+}
+
 /// The observational stats stream: per-job lines plus a trailing
 /// in-process cache summary record — and, when a persistent store was
 /// in play, a trailing disk-store record.
@@ -361,17 +381,9 @@ pub fn render_stats(
         s.push_str(&stats_line(spec, rep));
         s.push('\n');
     }
-    s.push_str(&format!(
-        "{{\"cache\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"entries\":{},\
-         \"bytes\":{},\"budget\":{}}}}}\n",
-        cache.hits, cache.misses, cache.evictions, cache.entries, cache.bytes, cache.budget
-    ));
+    s.push_str(&format!("{{\"cache\":{}}}\n", cache_stats_json(cache)));
     if let Some(d) = disk {
-        s.push_str(&format!(
-            "{{\"disk\":{{\"hits\":{},\"misses\":{},\"evictions\":{},\"dropped\":{},\
-             \"entries\":{},\"bytes\":{},\"budget\":{}}}}}\n",
-            d.hits, d.misses, d.evictions, d.dropped, d.entries, d.bytes, d.budget
-        ));
+        s.push_str(&format!("{{\"disk\":{}}}\n", disk_stats_json(d)));
     }
     s
 }

@@ -84,6 +84,12 @@ impl ThreadBudget {
         self.total
     }
 
+    /// Workers currently idle (observational — feeds the serve daemon's
+    /// `/stats` endpoint; racy by nature, never used for scheduling).
+    pub fn idle(&self) -> usize {
+        self.state.lock().unwrap().available
+    }
+
     /// The blocking grant at the heart of [`ThreadBudget::lease`]:
     /// between 1 and `want` workers, capped at the fair share of what is
     /// idle among concurrent leasers.

@@ -1,0 +1,811 @@
+//! `cupc serve` — a long-lived, multi-tenant daemon over the batch
+//! service layer.
+//!
+//! One process keeps the two-layer content-addressed cache
+//! ([`super::cache::Cache`] in memory, [`super::store::DiskStore`] on
+//! disk) warm across requests and shares one global
+//! [`super::scheduler::ThreadBudget`] between every client's jobs.
+//! Clients speak the length-prefixed JSON protocol of [`super::proto`]
+//! over loopback TCP; each submitted job streams its deterministic
+//! result record back as it finishes.
+//!
+//! **Determinism contract** (extends the batch layer's): a job's result
+//! record is bit-identical whether it ran via `cupc batch` or `cupc
+//! serve`, against a cold or warm cache (memory or disk tier), with one
+//! client connected or several concurrently, at any priority. The
+//! server guarantees this by construction — it runs the *same*
+//! [`run_job`] and embeds the *same* [`result_line`] bytes verbatim in
+//! each frame, and each request's jobs run sequentially in manifest
+//! order (cross-request concurrency comes from concurrent connections
+//! sharing the elastic budget, which is already proven to only move
+//! wall-clock time). `tests/serve_conformance.rs` gates it end to end.
+//!
+//! Untrusted-input posture: the listener refuses non-loopback
+//! addresses (the protocol is unauthenticated); request frames are
+//! length-capped; the JSON parser is depth- and finiteness-hardened
+//! (`util::json`); reads poll with a short socket timeout so an idle
+//! connection is dropped after `idle_timeout` and a deliberately
+//! stalled frame (slow-loris) after `frame_timeout`; admission control
+//! bounds in-flight jobs and concurrent connections with structured
+//! `overloaded` / `busy` rejections, so one tenant cannot queue the
+//! daemon to death.
+
+use super::cache::Cache;
+use super::job::Manifest;
+use super::proto::{
+    done_frame, encode_frame, error_frame, frame_len, parse_request, pong_frame,
+    record_from_result_frame, result_frame, Priority, Request, MAX_REQUEST_BYTES,
+    MAX_RESPONSE_BYTES,
+};
+use super::report::{cache_stats_json, disk_stats_json, result_line};
+use super::scheduler::{run_job, ElasticLease, ThreadBudget};
+use super::store::DiskStore;
+use crate::skeleton::available_threads;
+use crate::util::json::Json;
+use anyhow::{bail, ensure, Context, Result};
+use std::io::{ErrorKind, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// How often blocked reads and the accept loop wake to check timeouts
+/// and the shutdown flag.
+const POLL: Duration = Duration::from_millis(100);
+
+/// Daemon knobs (`cupc serve` flags map onto these 1:1).
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// listen address — must be a loopback literal; the protocol is
+    /// unauthenticated, so [`Server::bind`] refuses anything else
+    pub addr: String,
+    /// global pipeline-worker budget shared by every in-flight job
+    pub threads: usize,
+    /// in-process cache byte budget (shared across all requests)
+    pub cache_bytes: usize,
+    /// persistent cache directory (`--cache-dir`); `None` keeps caching
+    /// in-process only
+    pub cache_dir: Option<PathBuf>,
+    /// byte budget for the persistent store
+    pub disk_bytes: u64,
+    /// concurrent client connections; further connects get `busy`
+    pub max_conns: usize,
+    /// admission cap: a submit that would push the in-flight job count
+    /// past this is rejected with a structured `overloaded` error
+    pub max_queued_jobs: usize,
+    /// how long a connection may sit idle between requests
+    pub idle_timeout: Duration,
+    /// how long a started frame may stall without a byte of progress
+    /// (slow-loris guard)
+    pub frame_timeout: Duration,
+    /// per-connection progress on stderr
+    pub verbose: bool,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        ServeOptions {
+            addr: "127.0.0.1:7717".into(),
+            threads: available_threads(),
+            cache_bytes: 256 << 20,
+            cache_dir: None,
+            disk_bytes: 1 << 30,
+            max_conns: 16,
+            max_queued_jobs: 64,
+            idle_timeout: Duration::from_secs(300),
+            frame_timeout: Duration::from_secs(10),
+            verbose: false,
+        }
+    }
+}
+
+/// State shared by the accept loop and every connection handler.
+struct Shared {
+    opts: ServeOptions,
+    budget: Arc<ThreadBudget>,
+    cache: Cache,
+    store: Option<DiskStore>,
+    shutdown: Arc<AtomicBool>,
+    /// open client connections
+    conns: AtomicUsize,
+    /// jobs admitted but not yet finished (the admission-control gauge)
+    jobs_inflight: AtomicUsize,
+    /// jobs completed successfully over the daemon's lifetime
+    jobs_done: AtomicU64,
+    /// submit requests admitted over the daemon's lifetime
+    requests: AtomicU64,
+}
+
+/// A bound, not-yet-running daemon.
+pub struct Server {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Server {
+    /// Bind the listener and open the persistent store. Refuses
+    /// non-loopback addresses *before* binding: the protocol has no
+    /// authentication, so exposure beyond the host is always a
+    /// misconfiguration. An unusable `cache_dir` fails here, loudly,
+    /// for the same reason `run_batch` makes it fatal.
+    pub fn bind(opts: ServeOptions, shutdown: Arc<AtomicBool>) -> Result<Server> {
+        let sa: SocketAddr = opts.addr.parse().with_context(|| {
+            format!(
+                "--addr {:?} is not a socket address literal (host:port)",
+                opts.addr
+            )
+        })?;
+        ensure!(
+            sa.ip().is_loopback(),
+            "refusing to bind {sa}: the serve protocol is unauthenticated, \
+             so only loopback addresses are allowed"
+        );
+        let listener = TcpListener::bind(sa).with_context(|| format!("binding {sa}"))?;
+        listener
+            .set_nonblocking(true)
+            .context("setting the listener nonblocking")?;
+        let store = match &opts.cache_dir {
+            Some(dir) => Some(DiskStore::open(dir, opts.disk_bytes)?),
+            None => None,
+        };
+        let budget = Arc::new(ThreadBudget::new(opts.threads));
+        let cache = Cache::new(opts.cache_bytes);
+        Ok(Server {
+            listener,
+            shared: Arc::new(Shared {
+                opts,
+                budget,
+                cache,
+                store,
+                shutdown,
+                conns: AtomicUsize::new(0),
+                jobs_inflight: AtomicUsize::new(0),
+                jobs_done: AtomicU64::new(0),
+                requests: AtomicU64::new(0),
+            }),
+        })
+    }
+
+    /// The bound address (resolves `:0` to the kernel-chosen port).
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        self.listener.local_addr().context("reading the bound address")
+    }
+
+    /// The accept loop. Returns after the shutdown flag is set *and*
+    /// every connection handler has drained — in-flight requests finish
+    /// and stream their results; only then does the process exit, so a
+    /// SIGTERM never truncates a client's stream mid-record.
+    pub fn run(self) -> Result<()> {
+        let mut handlers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        while !self.shared.shutdown.load(Ordering::SeqCst) {
+            match self.listener.accept() {
+                Ok((mut stream, peer)) => {
+                    // finished handlers are detached on reap; the live
+                    // ones are joined at shutdown below
+                    handlers.retain(|h| !h.is_finished());
+                    if self.shared.conns.load(Ordering::SeqCst) >= self.shared.opts.max_conns {
+                        let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+                        let _ = write_frame(
+                            &mut stream,
+                            &error_frame(
+                                "busy",
+                                &format!(
+                                    "connection limit ({}) reached; retry later",
+                                    self.shared.opts.max_conns
+                                ),
+                            ),
+                        );
+                        continue;
+                    }
+                    self.shared.conns.fetch_add(1, Ordering::SeqCst);
+                    if self.shared.opts.verbose {
+                        eprintln!("[serve] {peer} connected");
+                    }
+                    let shared = self.shared.clone();
+                    handlers.push(std::thread::spawn(move || {
+                        let _ = handle_conn(stream, &shared);
+                        shared.conns.fetch_sub(1, Ordering::SeqCst);
+                        if shared.opts.verbose {
+                            eprintln!("[serve] {peer} disconnected");
+                        }
+                    }));
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => std::thread::sleep(POLL),
+                Err(e) => {
+                    // transient accept failures (e.g. EMFILE under fd
+                    // pressure) must not kill a long-lived daemon
+                    if self.shared.opts.verbose {
+                        eprintln!("[serve] accept error: {e}");
+                    }
+                    std::thread::sleep(POLL);
+                }
+            }
+        }
+        for h in handlers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Bind on `opts.addr` and run the accept loop on a background thread.
+/// Tests (and embedders) use this; the CLI runs [`Server::run`] on the
+/// main thread so signals map to a clean exit code.
+pub fn spawn(opts: ServeOptions) -> Result<ServerHandle> {
+    let shutdown = Arc::new(AtomicBool::new(false));
+    let server = Server::bind(opts, shutdown.clone())?;
+    let addr = server.local_addr()?;
+    let thread = std::thread::spawn(move || server.run());
+    Ok(ServerHandle {
+        addr,
+        shutdown,
+        thread: Some(thread),
+    })
+}
+
+/// A running daemon spawned by [`spawn`]; dropping it requests shutdown
+/// and joins, so a panicking test never leaks the listener thread.
+pub struct ServerHandle {
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<Result<()>>>,
+}
+
+impl ServerHandle {
+    /// Request shutdown and wait for the accept loop and every
+    /// connection handler to drain.
+    pub fn shutdown(mut self) -> Result<()> {
+        self.shutdown.store(true, Ordering::SeqCst);
+        match self.thread.take() {
+            Some(t) => t
+                .join()
+                .map_err(|_| anyhow::anyhow!("server thread panicked"))?,
+            None => Ok(()),
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// One frame read off the wire.
+enum Frame {
+    Payload(Vec<u8>),
+    /// close without a response: clean EOF at a frame boundary, idle
+    /// timeout, or daemon shutdown
+    Close,
+    /// framing violated — send one `bad-frame` error, then close (the
+    /// stream position is no longer trustworthy)
+    Bad(String),
+}
+
+enum Fill {
+    Full,
+    /// EOF / idle timeout / shutdown before the first byte of a frame
+    CleanEof,
+    Error(String),
+}
+
+/// Fill `buf` from the socket, polling at [`POLL`] so timeouts and the
+/// shutdown flag are honored. `at_boundary` marks the read that starts
+/// a frame: only there are idle timeouts, clean EOFs and shutdowns
+/// tolerated — once a frame has begun, lack of progress past
+/// `frame_timeout` is a protocol error (the slow-loris guard).
+fn read_full(stream: &mut TcpStream, buf: &mut [u8], shared: &Shared, at_boundary: bool) -> Fill {
+    let mut filled = 0usize;
+    let mut last_progress = Instant::now();
+    loop {
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 && at_boundary {
+                    Fill::CleanEof
+                } else {
+                    Fill::Error("connection closed mid-frame".into())
+                };
+            }
+            Ok(n) => {
+                filled += n;
+                last_progress = Instant::now();
+                if filled == buf.len() {
+                    return Fill::Full;
+                }
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::WouldBlock | ErrorKind::TimedOut | ErrorKind::Interrupted
+                ) =>
+            {
+                let mid_frame = !at_boundary || filled > 0;
+                if mid_frame {
+                    if last_progress.elapsed() > shared.opts.frame_timeout {
+                        return Fill::Error(format!(
+                            "frame stalled without progress for over {:.0?} (slow-loris guard)",
+                            shared.opts.frame_timeout
+                        ));
+                    }
+                } else {
+                    if shared.shutdown.load(Ordering::SeqCst) {
+                        return Fill::CleanEof;
+                    }
+                    if last_progress.elapsed() > shared.opts.idle_timeout {
+                        return Fill::CleanEof;
+                    }
+                }
+            }
+            Err(e) => return Fill::Error(format!("read failed: {e}")),
+        }
+    }
+}
+
+/// Read one length-prefixed request frame.
+fn read_frame(stream: &mut TcpStream, shared: &Shared) -> Frame {
+    let mut header = [0u8; 4];
+    match read_full(stream, &mut header, shared, true) {
+        Fill::CleanEof => return Frame::Close,
+        Fill::Error(e) => return Frame::Bad(e),
+        Fill::Full => {}
+    }
+    let len = frame_len(header);
+    if len == 0 {
+        return Frame::Bad("empty frame".into());
+    }
+    if len > MAX_REQUEST_BYTES {
+        return Frame::Bad(format!(
+            "{len}-byte frame exceeds the {MAX_REQUEST_BYTES}-byte request cap \
+             (is the client speaking this protocol?)"
+        ));
+    }
+    let mut buf = vec![0u8; len];
+    match read_full(stream, &mut buf, shared, false) {
+        Fill::CleanEof => Frame::Bad("connection closed mid-frame".into()),
+        Fill::Error(e) => Frame::Bad(e),
+        Fill::Full => Frame::Payload(buf),
+    }
+}
+
+fn write_frame(stream: &mut TcpStream, payload: &str) -> std::io::Result<()> {
+    stream.write_all(&encode_frame(payload))
+}
+
+/// Serve one connection until it closes, violates framing, idles out,
+/// or the daemon shuts down. An `Err` means the client side died
+/// mid-write — there is nobody left to tell, so the caller just drops
+/// the connection.
+fn handle_conn(mut stream: TcpStream, shared: &Shared) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(POLL))?;
+    stream.set_write_timeout(Some(Duration::from_secs(30)))?;
+    loop {
+        match read_frame(&mut stream, shared) {
+            Frame::Close => return Ok(()),
+            Frame::Bad(msg) => {
+                // best effort: the peer may already be gone
+                let _ = write_frame(&mut stream, &error_frame("bad-frame", &msg));
+                return Ok(());
+            }
+            Frame::Payload(bytes) => {
+                let payload = match std::str::from_utf8(&bytes) {
+                    Ok(s) => s,
+                    Err(_) => {
+                        // framing is still synchronized, so the
+                        // connection survives a bad payload
+                        write_frame(
+                            &mut stream,
+                            &error_frame("bad-request", "request payload is not UTF-8"),
+                        )?;
+                        continue;
+                    }
+                };
+                match parse_request(payload) {
+                    Err(e) => {
+                        write_frame(&mut stream, &error_frame("bad-request", &format!("{e:#}")))?
+                    }
+                    Ok(Request::Ping) => write_frame(&mut stream, &pong_frame())?,
+                    Ok(Request::Stats) => write_frame(&mut stream, &stats_json(shared))?,
+                    Ok(Request::Submit { manifest, priority }) => {
+                        handle_submit(&mut stream, shared, &manifest, priority)?
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Admission-check a submit, then run its jobs sequentially in manifest
+/// order, streaming each deterministic record as it finishes. Admission
+/// reserves all the request's jobs up front (compare-exchange, so
+/// concurrent submits cannot overshoot the cap) and releases each slot
+/// as its job completes.
+fn handle_submit(
+    stream: &mut TcpStream,
+    shared: &Shared,
+    manifest: &Manifest,
+    priority: Priority,
+) -> std::io::Result<()> {
+    let njobs = manifest.jobs.len();
+    let cap = shared.opts.max_queued_jobs;
+    let admitted = loop {
+        let cur = shared.jobs_inflight.load(Ordering::SeqCst);
+        if cur + njobs > cap {
+            break false;
+        }
+        if shared
+            .jobs_inflight
+            .compare_exchange(cur, cur + njobs, Ordering::SeqCst, Ordering::SeqCst)
+            .is_ok()
+        {
+            break true;
+        }
+    };
+    if !admitted {
+        return write_frame(
+            stream,
+            &error_frame(
+                "overloaded",
+                &format!(
+                    "{njobs} job(s) would exceed the daemon's in-flight cap of {cap}; retry later"
+                ),
+            ),
+        );
+    }
+    shared.requests.fetch_add(1, Ordering::SeqCst);
+
+    let mut completed = 0usize;
+    let mut failed: Option<(String, anyhow::Error)> = None;
+    let mut conn_dead: Option<std::io::Error> = None;
+    for spec in &manifest.jobs {
+        let want = priority.initial_want(shared.budget.total());
+        let lease = ElasticLease::acquire(shared.budget.clone(), want);
+        if shared.opts.verbose {
+            eprintln!(
+                "[serve] job {:?} ({}): {} worker(s)",
+                spec.name,
+                priority.name(),
+                lease.width()
+            );
+        }
+        let rep = run_job(spec, &lease, &shared.cache, shared.store.as_ref());
+        drop(lease);
+        shared.jobs_inflight.fetch_sub(1, Ordering::SeqCst);
+        completed += 1;
+        match rep {
+            Ok(rep) => {
+                shared.jobs_done.fetch_add(1, Ordering::SeqCst);
+                if let Err(e) =
+                    write_frame(stream, &result_frame(&result_line(spec, &rep.core)))
+                {
+                    conn_dead = Some(e);
+                    break;
+                }
+            }
+            Err(e) => {
+                failed = Some((spec.name.clone(), e));
+                break;
+            }
+        }
+    }
+    // release the reservation of any jobs skipped by a failure or a
+    // dead connection
+    shared
+        .jobs_inflight
+        .fetch_sub(njobs - completed, Ordering::SeqCst);
+    if let Some(e) = conn_dead {
+        return Err(e);
+    }
+    match failed {
+        Some((name, e)) => write_frame(
+            stream,
+            &error_frame(
+                "job-failed",
+                &format!("job {name:?}: {e:#} (remaining jobs in this request were skipped)"),
+            ),
+        ),
+        None => write_frame(stream, &done_frame(njobs)),
+    }
+}
+
+/// The `/stats` record: thread-budget occupancy, admission gauges, and
+/// the cache/disk counters in exactly the spelling of the batch stats
+/// sidecar (shared formatters — CI greps the disk-tier fields).
+fn stats_json(shared: &Shared) -> String {
+    let disk = match &shared.store {
+        Some(s) => disk_stats_json(&s.stats()),
+        None => "null".to_string(),
+    };
+    format!(
+        "{{\"stats\":{{\"threads_total\":{},\"threads_idle\":{},\"connections\":{},\
+         \"jobs_inflight\":{},\"jobs_done\":{},\"requests\":{},\"cache\":{},\"disk\":{}}}}}",
+        shared.budget.total(),
+        shared.budget.idle(),
+        shared.conns.load(Ordering::SeqCst),
+        shared.jobs_inflight.load(Ordering::SeqCst),
+        shared.jobs_done.load(Ordering::SeqCst),
+        shared.requests.load(Ordering::SeqCst),
+        cache_stats_json(&shared.cache.stats()),
+        disk
+    )
+}
+
+/// A blocking client for the serve protocol — the `cupc client`
+/// subcommand and the conformance tests both drive the daemon through
+/// it.
+pub struct Client {
+    stream: TcpStream,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream =
+            TcpStream::connect(addr).with_context(|| format!("connecting to {addr}"))?;
+        // generous: covers a long job between result frames; a hung
+        // daemon still fails the call instead of wedging the client
+        stream
+            .set_read_timeout(Some(Duration::from_secs(600)))
+            .context("setting the read timeout")?;
+        Ok(Client { stream })
+    }
+
+    /// Send one framed payload (tests also use this to speak
+    /// well-framed-but-malformed requests).
+    pub fn send(&mut self, payload: &str) -> Result<()> {
+        self.stream
+            .write_all(&encode_frame(payload))
+            .context("sending frame")
+    }
+
+    /// Put raw bytes on the wire, bypassing framing entirely
+    /// (truncated-frame and garbage-bytes tests).
+    pub fn send_raw(&mut self, bytes: &[u8]) -> Result<()> {
+        self.stream.write_all(bytes).context("sending raw bytes")
+    }
+
+    /// Receive one response payload.
+    pub fn recv(&mut self) -> Result<String> {
+        let mut header = [0u8; 4];
+        self.stream
+            .read_exact(&mut header)
+            .context("reading response header")?;
+        let len = frame_len(header);
+        ensure!(
+            len > 0 && len <= MAX_RESPONSE_BYTES,
+            "absurd response frame length {len} (stream desynchronized?)"
+        );
+        let mut buf = vec![0u8; len];
+        self.stream
+            .read_exact(&mut buf)
+            .context("reading response payload")?;
+        String::from_utf8(buf).context("response is not UTF-8")
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.send("{\"op\":\"ping\"}")?;
+        let resp = self.recv()?;
+        ensure!(resp == pong_frame(), "unexpected ping response: {resp}");
+        Ok(())
+    }
+
+    /// The daemon's stats record (`{"stats":{...}}`) as raw JSON text.
+    pub fn stats(&mut self) -> Result<String> {
+        self.send("{\"op\":\"stats\"}")?;
+        let resp = self.recv()?;
+        ensure!(
+            resp.starts_with("{\"stats\":"),
+            "unexpected stats response: {resp}"
+        );
+        Ok(resp)
+    }
+
+    /// Submit a manifest (the verbatim text of the same `{"jobs":[...]}`
+    /// document `cupc batch --manifest` reads) and reassemble the
+    /// streamed records into a results stream byte-identical to the
+    /// batch results file. An error frame — admission rejection, bad
+    /// manifest, failed job — surfaces as an `Err` naming the code.
+    pub fn submit(&mut self, manifest_text: &str, priority: Priority) -> Result<String> {
+        let req = format!(
+            "{{\"op\":\"submit\",\"priority\":\"{}\",\"manifest\":{}}}",
+            priority.name(),
+            manifest_text.trim()
+        );
+        self.send(&req)?;
+        let mut out = String::new();
+        loop {
+            let resp = self.recv()?;
+            if let Some(record) = record_from_result_frame(&resp) {
+                out.push_str(record);
+                out.push('\n');
+            } else if resp.starts_with("{\"done\":") {
+                return Ok(out);
+            } else {
+                bail!(server_error(&resp));
+            }
+        }
+    }
+}
+
+/// Render an error frame (or any unexpected payload) as a message.
+fn server_error(payload: &str) -> String {
+    if let Ok(v) = Json::parse(payload) {
+        if let Some(e) = v.get("error") {
+            let code = e.get("code").and_then(Json::as_str).unwrap_or("?");
+            let msg = e.get("message").and_then(Json::as_str).unwrap_or("?");
+            return format!("server error [{code}]: {msg}");
+        }
+    }
+    format!("unexpected server response: {payload}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_opts() -> ServeOptions {
+        ServeOptions {
+            addr: "127.0.0.1:0".into(),
+            threads: 2,
+            cache_bytes: 32 << 20,
+            idle_timeout: Duration::from_secs(30),
+            frame_timeout: Duration::from_secs(5),
+            ..ServeOptions::default()
+        }
+    }
+
+    #[test]
+    fn bind_refuses_non_loopback_and_garbage_addresses() {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        for addr in ["0.0.0.0:0", "192.168.1.10:7717", "[::]:0"] {
+            let opts = ServeOptions {
+                addr: addr.into(),
+                ..test_opts()
+            };
+            let err = Server::bind(opts, shutdown.clone()).expect_err(addr);
+            assert!(
+                format!("{err:#}").contains("loopback"),
+                "{addr}: {err:#}"
+            );
+        }
+        let opts = ServeOptions {
+            addr: "localhost:abc".into(),
+            ..test_opts()
+        };
+        let err = Server::bind(opts, shutdown).expect_err("garbage addr");
+        assert!(format!("{err:#}").contains("socket address"), "{err:#}");
+    }
+
+    #[test]
+    fn ping_stats_and_clean_shutdown() {
+        let handle = spawn(test_opts()).unwrap();
+        let addr = handle.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        c.ping().unwrap();
+        let stats = c.stats().unwrap();
+        let v = Json::parse(&stats).unwrap();
+        let s = v.get("stats").unwrap();
+        assert_eq!(s.get("threads_total").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("connections").unwrap().as_usize(), Some(1));
+        assert_eq!(s.get("jobs_done").unwrap().as_usize(), Some(0));
+        assert!(s.get("cache").unwrap().get("budget").is_some());
+        assert!(s.get("disk").unwrap().is_null(), "no --cache-dir: null");
+        drop(c);
+        handle.shutdown().unwrap();
+        // the port is released: a fresh connect must fail
+        assert!(Client::connect(&addr).is_err());
+    }
+
+    #[test]
+    fn submit_streams_records_and_keeps_the_cache_warm() {
+        let handle = spawn(test_opts()).unwrap();
+        let addr = handle.addr.to_string();
+        let manifest = r#"{"jobs":[{"name":"a","scenario":"sparse-a01"}]}"#;
+        let mut c = Client::connect(&addr).unwrap();
+        let cold = c.submit(manifest, Priority::Normal).unwrap();
+        assert_eq!(cold.lines().count(), 1);
+        let v = Json::parse(cold.lines().next().unwrap()).unwrap();
+        assert_eq!(v.get("job").unwrap().as_str(), Some("a"));
+        // second submit over the same connection: served from the warm
+        // in-process cache, byte-identical
+        let warm = c.submit(manifest, Priority::High).unwrap();
+        assert_eq!(cold, warm, "warm result must be byte-identical");
+        let stats = c.stats().unwrap();
+        let v = Json::parse(&stats).unwrap();
+        let s = v.get("stats").unwrap();
+        assert_eq!(s.get("jobs_done").unwrap().as_usize(), Some(2));
+        assert_eq!(s.get("requests").unwrap().as_usize(), Some(2));
+        let cache = s.get("cache").unwrap();
+        assert!(
+            cache.get("hits").unwrap().as_usize().unwrap() >= 2,
+            "warm submit must hit the shared cache: {stats}"
+        );
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn malformed_payloads_get_structured_errors_and_the_daemon_survives() {
+        let handle = spawn(test_opts()).unwrap();
+        let addr = handle.addr.to_string();
+        let mut c = Client::connect(&addr).unwrap();
+        // well-framed, malformed payload: connection survives
+        c.send("not json at all").unwrap();
+        let resp = c.recv().unwrap();
+        assert!(resp.contains("\"bad-request\""), "{resp}");
+        c.ping().unwrap();
+        // a deep-nesting bomb is a parse error, not a daemon abort
+        c.send(&"[".repeat(100_000)).unwrap();
+        let resp = c.recv().unwrap();
+        assert!(resp.contains("\"bad-request\""), "{resp}");
+        assert!(resp.contains("nesting"), "{resp}");
+        c.ping().unwrap();
+        // non-finite numbers are rejected at the parser
+        c.send(r#"{"op":"submit","manifest":{"jobs":[{"scenario":"grn-mid","alpha":1e999}]}}"#)
+            .unwrap();
+        let resp = c.recv().unwrap();
+        assert!(resp.contains("overflows a finite double"), "{resp}");
+        c.ping().unwrap();
+        drop(c);
+        // garbage bytes (an HTTP request line): bad-frame, then close
+        let mut g = Client::connect(&addr).unwrap();
+        g.send_raw(b"GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let resp = g.recv().unwrap();
+        assert!(resp.contains("\"bad-frame\""), "{resp}");
+        // ...and the daemon still serves fresh connections
+        let mut c2 = Client::connect(&addr).unwrap();
+        c2.ping().unwrap();
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn oversized_jobs_are_rejected_with_overloaded() {
+        let opts = ServeOptions {
+            max_queued_jobs: 1,
+            ..test_opts()
+        };
+        let handle = spawn(opts).unwrap();
+        let mut c = Client::connect(&handle.addr.to_string()).unwrap();
+        let two = r#"{"jobs":[{"name":"a","scenario":"sparse-a01"},
+                               {"name":"b","scenario":"grn-mid"}]}"#;
+        let err = c.submit(two, Priority::Normal).unwrap_err();
+        assert!(format!("{err:#}").contains("overloaded"), "{err:#}");
+        // a fitting request on the same connection still runs
+        let one = r#"{"jobs":[{"name":"a","scenario":"sparse-a01"}]}"#;
+        assert_eq!(c.submit(one, Priority::Normal).unwrap().lines().count(), 1);
+        handle.shutdown().unwrap();
+    }
+
+    #[test]
+    fn failed_jobs_abort_the_request_but_not_the_connection() {
+        let handle = spawn(test_opts()).unwrap();
+        let mut c = Client::connect(&handle.addr.to_string()).unwrap();
+        // first job succeeds and streams; second fails; third is skipped
+        let m = r#"{"jobs":[{"name":"ok","scenario":"sparse-a01"},
+                            {"name":"bad","csv":"no/such/file.csv"},
+                            {"name":"never","scenario":"grn-mid"}]}"#;
+        c.send(&format!(
+            "{{\"op\":\"submit\",\"manifest\":{m}}}"
+        ))
+        .unwrap();
+        let first = c.recv().unwrap();
+        assert!(record_from_result_frame(&first).is_some(), "{first}");
+        let second = c.recv().unwrap();
+        assert!(second.contains("\"job-failed\""), "{second}");
+        assert!(second.contains("bad"), "{second}");
+        // the connection survives and the inflight gauge drained
+        let stats = c.stats().unwrap();
+        let v = Json::parse(&stats).unwrap();
+        assert_eq!(
+            v.get("stats")
+                .unwrap()
+                .get("jobs_inflight")
+                .unwrap()
+                .as_usize(),
+            Some(0),
+            "{stats}"
+        );
+        handle.shutdown().unwrap();
+    }
+}

@@ -1,7 +1,12 @@
 //! Minimal argv parser (clap is not available offline).
 //!
 //! Supports `--key value`, `--key=value`, bare flags and positional args.
+//! The typed getters return `Result` — a malformed `--threads x` is a
+//! loud CLI error wherever the caller surfaces it, never a `panic!`
+//! inside the parser (panics skip the binary's error rendering and, in
+//! a daemon, read as crashes).
 
+use anyhow::{Context, Result};
 use std::collections::HashMap;
 
 /// Parsed command line: subcommand, positionals, and `--key value` options.
@@ -53,27 +58,52 @@ impl Args {
         self.get(key).unwrap_or(default).to_string()
     }
 
-    pub fn get_usize(&self, key: &str, default: usize) -> usize {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} must be a non-negative integer, got {v:?}")),
+            None => Ok(default),
+        }
     }
 
-    pub fn get_u64(&self, key: &str, default: u64) -> u64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be an integer, got {v:?}")))
-            .unwrap_or(default)
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} must be a non-negative integer, got {v:?}")),
+            None => Ok(default),
+        }
     }
 
-    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
-        self.get(key)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{key} must be a number, got {v:?}")))
-            .unwrap_or(default)
+    pub fn get_f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{key} must be a number, got {v:?}")),
+            None => Ok(default),
+        }
     }
 
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+}
+
+/// `--foo-mb` → bytes with checked multiplication. The old
+/// `get_usize(..) << 20` wrapped silently in release builds — a huge
+/// `--cache-mb` produced a *tiny* (or zero) budget, quietly disabling
+/// the cache — and panicked in debug. Overflow is now a loud CLI error
+/// naming the flag.
+pub fn mb_to_bytes_usize(mb: usize, flag: &str) -> Result<usize> {
+    mb.checked_mul(1 << 20)
+        .with_context(|| format!("--{flag} {mb} overflows the byte budget ({mb} MiB in bytes)"))
+}
+
+/// [`mb_to_bytes_usize`] for `u64`-denominated budgets (the disk tier).
+pub fn mb_to_bytes_u64(mb: u64, flag: &str) -> Result<u64> {
+    mb.checked_mul(1 << 20)
+        .with_context(|| format!("--{flag} {mb} overflows the byte budget ({mb} MiB in bytes)"))
 }
 
 /// Process argv for `cargo bench` harness=false targets: skips the
@@ -118,7 +148,7 @@ mod tests {
     fn stripped_argv_keeps_positionals_after_bench_flag() {
         let broken = Args::parse(strip("--bench nci60-mini --graphs 8"));
         assert_eq!(broken.subcommand.as_deref(), Some("nci60-mini"));
-        assert_eq!(broken.get_usize("graphs", 0), 8);
+        assert_eq!(broken.get_usize("graphs", 0).unwrap(), 8);
         assert!(broken.get("bench").is_none());
     }
 
@@ -127,7 +157,7 @@ mod tests {
         let a = parse("run --dataset nci60 --alpha 0.01 --verbose");
         assert_eq!(a.subcommand.as_deref(), Some("run"));
         assert_eq!(a.get("dataset"), Some("nci60"));
-        assert_eq!(a.get_f64("alpha", 0.05), 0.01);
+        assert_eq!(a.get_f64("alpha", 0.05).unwrap(), 0.01);
         assert!(a.has_flag("verbose"));
     }
 
@@ -142,8 +172,49 @@ mod tests {
     #[test]
     fn defaults_apply() {
         let a = parse("run");
-        assert_eq!(a.get_usize("n", 100), 100);
+        assert_eq!(a.get_usize("n", 100).unwrap(), 100);
+        assert_eq!(a.get_u64("seed", 7).unwrap(), 7);
+        assert_eq!(a.get_f64("d", 0.5).unwrap(), 0.5);
         assert_eq!(a.get_or("variant", "cups"), "cups");
+    }
+
+    /// Malformed typed options are `Err`s naming the flag — never a
+    /// `panic!` (which would bypass the binary's error rendering and
+    /// read as a crash in a long-lived daemon).
+    #[test]
+    fn malformed_typed_options_are_errors_not_panics() {
+        let a = parse("run --threads x --seed 1.5 --alpha much");
+        for (msg, needle) in [
+            (format!("{:#}", a.get_usize("threads", 1).unwrap_err()), "--threads"),
+            (format!("{:#}", a.get_u64("seed", 1).unwrap_err()), "--seed"),
+            (format!("{:#}", a.get_f64("alpha", 0.01).unwrap_err()), "--alpha"),
+        ] {
+            assert!(msg.contains(needle), "{msg}");
+        }
+        // negatives are malformed for the unsigned getters too
+        let a = parse("run --threads -4");
+        assert!(a.get_usize("threads", 1).is_err());
+    }
+
+    /// The `--cache-mb << 20` regression: a huge MiB count used to wrap
+    /// to a tiny/zero byte budget in release (silently disabling the
+    /// cache) and panic in debug. Checked conversion errors loudly.
+    #[test]
+    fn mb_to_bytes_is_checked() {
+        assert_eq!(mb_to_bytes_usize(256, "cache-mb").unwrap(), 256 << 20);
+        assert_eq!(mb_to_bytes_u64(1024, "cache-disk-mb").unwrap(), 1 << 30);
+        // the exact boundary: the largest representable MiB count works
+        assert_eq!(
+            mb_to_bytes_u64(u64::MAX >> 20, "cache-disk-mb").unwrap(),
+            (u64::MAX >> 20) << 20
+        );
+        for msg in [
+            format!("{:#}", mb_to_bytes_usize(usize::MAX, "cache-mb").unwrap_err()),
+            format!("{:#}", mb_to_bytes_u64(u64::MAX, "cache-disk-mb").unwrap_err()),
+            format!("{:#}", mb_to_bytes_u64((u64::MAX >> 20) + 1, "cache-disk-mb").unwrap_err()),
+        ] {
+            assert!(msg.contains("overflows the byte budget"), "{msg}");
+        }
     }
 
     #[test]

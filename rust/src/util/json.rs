@@ -2,11 +2,32 @@
 //! offline). Covers the full JSON grammar — objects, arrays, strings
 //! with escapes (including `\uXXXX` surrogate pairs), numbers, booleans
 //! and null — with byte-offset error messages. Used by the batch
-//! service's manifest loader and by tests validating the JSON-lines
-//! reports; numbers are held as `f64`, which is exact for every integer
-//! the manifest schema uses.
+//! service's manifest loader, by the `cupc serve` daemon on raw network
+//! bytes, and by tests validating the JSON-lines reports; numbers are
+//! held as `f64`, which is exact for every integer the manifest schema
+//! uses.
+//!
+//! Because `serve` exposes this parser to untrusted input, it is
+//! hardened against the two classic hand-rolled-parser holes: container
+//! nesting is capped at [`MAX_DEPTH`] (a `[[[[…`-bomb would otherwise
+//! overflow the recursive descent's stack and *abort* the daemon), and
+//! numbers that overflow to ±infinity (`1e999`) are rejected (they
+//! would otherwise round-trip as `inf` into rendered JSON, which has no
+//! spelling for it). Both surface as ordinary byte-offset parse errors.
 
 use anyhow::{bail, ensure, Context, Result};
+
+/// Maximum container nesting depth ([`Json::parse`] errors beyond it).
+///
+/// Every `[` / `{` costs one recursive `value()` stack frame, so an
+/// unbounded document — `[[[[…` a few thousand deep — overflows the
+/// stack, which is an *abort*, not a catchable panic. A network daemon
+/// parsing untrusted requests (`cupc serve`) cannot afford that, so the
+/// parser refuses at a fixed depth with a byte-offset error instead.
+/// 128 is far beyond any manifest or request shape this crate produces
+/// (jobs nest four levels) and bounds worst-case recursion to ~100 KiB
+/// of stack.
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value. Object keys keep their document order (the
 /// manifest loader does linear lookups; order never matters for
@@ -27,6 +48,7 @@ impl Json {
         let mut p = Parser {
             b: text.as_bytes(),
             pos: 0,
+            depth: 0,
         };
         p.skip_ws();
         let v = p.value()?;
@@ -111,6 +133,8 @@ pub fn escape(s: &str) -> String {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// current container nesting, capped at [`MAX_DEPTH`]
+    depth: usize,
 }
 
 impl Parser<'_> {
@@ -124,10 +148,33 @@ impl Parser<'_> {
         self.b.get(self.pos).copied()
     }
 
+    /// Bump the nesting depth on container entry; refusing past
+    /// [`MAX_DEPTH`] keeps the recursive descent's stack bounded (an
+    /// overflow would abort the whole process — not a catchable panic).
+    fn enter(&mut self) -> Result<()> {
+        self.depth += 1;
+        ensure!(
+            self.depth <= MAX_DEPTH,
+            "nesting deeper than {MAX_DEPTH} levels at byte {}",
+            self.pos
+        );
+        Ok(())
+    }
+
     fn value(&mut self) -> Result<Json> {
         match self.peek() {
-            Some(b'{') => self.object(),
-            Some(b'[') => self.array(),
+            Some(b'{') => {
+                self.enter()?;
+                let v = self.object();
+                self.depth -= 1;
+                v
+            }
+            Some(b'[') => {
+                self.enter()?;
+                let v = self.array();
+                self.depth -= 1;
+                v
+            }
             Some(b'"') => Ok(Json::Str(self.string()?)),
             Some(b't') => self.literal("true", Json::Bool(true)),
             Some(b'f') => self.literal("false", Json::Bool(false)),
@@ -156,9 +203,17 @@ impl Parser<'_> {
         }
         // the scanned range is ASCII, so the slice is valid UTF-8
         let s = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
-        s.parse::<f64>()
-            .map(Json::Num)
-            .with_context(|| format!("bad number {s:?} at byte {start}"))
+        let v: f64 = s
+            .parse()
+            .with_context(|| format!("bad number {s:?} at byte {start}"))?;
+        // `1e999` parses to infinity: accepting it would let a request
+        // smuggle `inf` into Num and from there into rendered JSON
+        // (which has no spelling for it — the output would be invalid)
+        ensure!(
+            v.is_finite(),
+            "number {s:?} overflows a finite double at byte {start}"
+        );
+        Ok(Json::Num(v))
     }
 
     /// Four hex digits of a `\uXXXX` escape. Folds the digits directly —
@@ -393,6 +448,78 @@ mod tests {
             Json::parse(r#""\uFFFD""#).unwrap().as_str(),
             Some("\u{FFFD}")
         );
+    }
+
+    /// Nesting past [`MAX_DEPTH`] must be a byte-offset parse error —
+    /// never a stack overflow (which aborts the process, uncatchable).
+    /// `cupc serve` feeds this parser raw network bytes, so a
+    /// `[[[[…`-bomb a few thousand deep used to be a remote kill switch
+    /// for the whole daemon.
+    #[test]
+    fn nesting_depth_is_capped_not_stack_fatal() {
+        let arrays = |d: usize| format!("{}0{}", "[".repeat(d), "]".repeat(d));
+        // at the cap: parses, and round-trips the innermost value
+        let mut v = Json::parse(&arrays(MAX_DEPTH)).unwrap();
+        for _ in 0..MAX_DEPTH {
+            v = match v {
+                Json::Arr(mut items) => items.pop().unwrap(),
+                other => other,
+            };
+        }
+        assert_eq!(v, Json::Num(0.0));
+        // one past the cap: byte-offset error naming the limit; the
+        // offending bracket is the (MAX_DEPTH+1)-th, at offset MAX_DEPTH
+        let err = Json::parse(&arrays(MAX_DEPTH + 1)).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("nesting deeper than 128"), "{msg}");
+        assert!(msg.contains(&format!("byte {MAX_DEPTH}")), "{msg}");
+        // one below the cap still parses
+        assert!(Json::parse(&arrays(MAX_DEPTH - 1)).is_ok());
+        // ~100k deep: must error promptly, not overflow the stack (this
+        // is the adversarial shape — no closing brackets needed to kill
+        // a recursive parser)
+        assert!(Json::parse(&"[".repeat(100_000)).is_err());
+        assert!(Json::parse(&"[[[".repeat(40_000)).is_err());
+        // objects and mixed nesting count against the same cap
+        let objs = format!("{}1{}", "{\"k\":[".repeat(70), "]}".repeat(70));
+        let err = Json::parse(&objs).unwrap_err();
+        assert!(format!("{err:#}").contains("nesting deeper"), "{err:#}");
+        let ok = format!("{}1{}", "{\"k\":[".repeat(64), "]}".repeat(64));
+        assert!(Json::parse(&ok).is_ok(), "depth 128 of mixed containers");
+        // sibling containers do not accumulate depth
+        let wide = format!("[{}0]", "[1],".repeat(10_000));
+        assert!(Json::parse(&wide).is_ok(), "width is not depth");
+    }
+
+    /// `1e999` parses to infinity under `str::parse::<f64>`; accepting
+    /// it would render `inf` into results.jsonl — invalid JSON for
+    /// every downstream consumer. Non-finite parses must be byte-offset
+    /// errors; the largest finite double must still round-trip exactly.
+    #[test]
+    fn non_finite_numbers_are_rejected_with_offsets() {
+        for (doc, at) in [
+            ("1e999", 0),
+            ("-1e999", 0),
+            ("1e309", 0),
+            ("[1, 2e999]", 4),
+            (r#"{"alpha": 1e999}"#, 10),
+        ] {
+            let err = Json::parse(doc).expect_err(doc);
+            let msg = format!("{err:#}");
+            assert!(msg.contains("overflows a finite double"), "{doc}: {msg}");
+            assert!(msg.contains(&format!("byte {at}")), "{doc}: {msg}");
+        }
+        // the largest finite double (and its negation) parse exactly
+        assert_eq!(
+            Json::parse("1.7976931348623157e308").unwrap().as_f64(),
+            Some(f64::MAX)
+        );
+        assert_eq!(
+            Json::parse("-1.7976931348623157e308").unwrap().as_f64(),
+            Some(f64::MIN)
+        );
+        // underflow-to-zero is fine (finite), matching common parsers
+        assert_eq!(Json::parse("1e-999").unwrap().as_f64(), Some(0.0));
     }
 
     #[test]
