@@ -136,7 +136,11 @@ fn main() -> anyhow::Result<()> {
         let name = format!("{base}-mini");
         let ds = datasets::generate(datasets::spec(&name).unwrap());
         let corr = correlation_matrix(&ds.data, threads);
-        for (vname, v) in [("cupc-e", Variant::CupcE), ("cupc-s", Variant::CupcS)] {
+        for (vname, v) in [
+            ("cupc-e", Variant::CupcE),
+            ("cupc-s", Variant::CupcS),
+            ("reversed", Variant::Reversed),
+        ] {
             let time_with = |t: usize| -> anyhow::Result<f64> {
                 let cfg = Config {
                     variant: v,

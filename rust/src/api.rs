@@ -129,19 +129,12 @@ mod tests {
     /// the skeleton is the invariant.)
     #[test]
     fn all_variants_agree_on_skeleton() {
-        use crate::skeleton::Variant;
+        use crate::sim::scenarios::ALL_VARIANTS;
         let dag = WeightedDag::random_er(30, 0.12, &mut Pcg::seeded(5));
         let data = sem::sample(&dag, 400, &mut Pcg::seeded(6));
         let base = Config::default();
         let mut results = Vec::new();
-        for v in [
-            Variant::Serial,
-            Variant::ParallelCpu,
-            Variant::CupcE,
-            Variant::CupcS,
-            Variant::Baseline1,
-            Variant::Baseline2,
-        ] {
+        for v in ALL_VARIANTS {
             let cfg = Config {
                 variant: v,
                 ..base.clone()
@@ -166,7 +159,12 @@ mod tests {
         use crate::skeleton::Variant;
         let dag = WeightedDag::random_er(25, 0.15, &mut Pcg::seeded(15));
         let data = sem::sample(&dag, 300, &mut Pcg::seeded(16));
-        for v in [Variant::Serial, Variant::CupcE, Variant::CupcS] {
+        for v in [
+            Variant::Serial,
+            Variant::CupcE,
+            Variant::CupcS,
+            Variant::Reversed,
+        ] {
             let cfg = Config {
                 variant: v,
                 ..Config::default()

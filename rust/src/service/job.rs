@@ -97,29 +97,19 @@ impl JobSpec {
     }
 }
 
-/// Canonical CLI spelling of a variant.
+/// Canonical CLI spelling of a variant (delegates to the
+/// [`family`](crate::skeleton::family) registry — the single source of
+/// truth for family metadata).
 pub fn variant_name(v: Variant) -> &'static str {
-    match v {
-        Variant::Serial => "serial",
-        Variant::ParallelCpu => "parcpu",
-        Variant::CupcE => "cupc-e",
-        Variant::CupcS => "cupc-s",
-        Variant::Baseline1 => "baseline1",
-        Variant::Baseline2 => "baseline2",
-    }
+    crate::skeleton::family::of(v).name
 }
 
 /// Stable tag for content hashing (cache keys depend on it — never
-/// renumber).
+/// renumber). The values live in the family registry; `tags_are_stable`
+/// below pins every historical assignment so a registry edit can never
+/// silently re-key the disk cache.
 pub fn variant_tag(v: Variant) -> u8 {
-    match v {
-        Variant::Serial => 0,
-        Variant::ParallelCpu => 1,
-        Variant::CupcE => 2,
-        Variant::CupcS => 3,
-        Variant::Baseline1 => 4,
-        Variant::Baseline2 => 5,
-    }
+    crate::skeleton::family::of(v).tag
 }
 
 /// Stable tag for content hashing.
@@ -404,10 +394,52 @@ mod tests {
         tags.sort_unstable();
         tags.dedup();
         assert_eq!(tags.len(), ALL_VARIANTS.len());
+        let mut names: Vec<&str> = ALL_VARIANTS.iter().map(|&v| variant_name(v)).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), ALL_VARIANTS.len(), "variant names must be unique");
         assert_ne!(
             orient_tag(OrientRule::Standard),
             orient_tag(OrientRule::Majority)
         );
+    }
+
+    /// Disk-cache compatibility: these exact assignments have shipped —
+    /// a registry reshuffle that changes any of them silently invalidates
+    /// (or worse, cross-contaminates) every persistent cache, so they are
+    /// pinned one by one. New families append fresh tags.
+    #[test]
+    fn tags_are_stable() {
+        for (v, tag, name) in [
+            (Variant::Serial, 0u8, "serial"),
+            (Variant::ParallelCpu, 1, "parcpu"),
+            (Variant::CupcE, 2, "cupc-e"),
+            (Variant::CupcS, 3, "cupc-s"),
+            (Variant::Baseline1, 4, "baseline1"),
+            (Variant::Baseline2, 5, "baseline2"),
+            (Variant::Reversed, 6, "reversed"),
+        ] {
+            assert_eq!(variant_tag(v), tag, "{v:?}");
+            assert_eq!(variant_name(v), name, "{v:?}");
+            assert_eq!(
+                Variant::parse(name),
+                Some(v),
+                "canonical name must parse back to the variant"
+            );
+        }
+        assert_eq!(orient_tag(OrientRule::Standard), 0);
+        assert_eq!(orient_tag(OrientRule::Majority), 1);
+    }
+
+    #[test]
+    fn manifest_accepts_the_reversed_family() {
+        let m = Manifest::parse(
+            r#"{"jobs": [{"scenario": "grn-mid", "variant": "reversed"}]}"#,
+        )
+        .unwrap();
+        assert_eq!(m.jobs[0].variant, Variant::Reversed);
+        assert_eq!(m.jobs[0].variant_name(), "reversed");
+        assert_eq!(m.jobs[0].config(2).variant, Variant::Reversed);
     }
 
     #[test]

@@ -550,6 +550,36 @@ mod tests {
         assert_eq!(d.get("dropped").unwrap().as_usize(), Some(1));
     }
 
+    /// Level rows are self-describing (each carries its own `level`
+    /// field), so a family whose bookkeeping arrives in descending or
+    /// gapped level order — the reversed-order schedule's natural shape —
+    /// must flow through the JSON render and the binary codec verbatim,
+    /// with no sorting, renumbering, or contiguity assumption anywhere.
+    #[test]
+    fn level_rows_tolerate_descending_and_gapped_order() {
+        let mut core = toy_core();
+        core.levels = vec![
+            LevelRow { level: 3, tests: 5, removed: 1, edges_after: 2 },
+            LevelRow { level: 1, tests: 9, removed: 0, edges_after: 3 },
+            LevelRow { level: 0, tests: 6, removed: 2, edges_after: 4 },
+        ];
+        let bytes = core.to_bytes();
+        let back = JobResultCore::from_bytes(&bytes).expect("roundtrip");
+        assert_eq!(back.levels, core.levels, "codec must preserve row order");
+
+        let mut spec = toy_spec();
+        spec.variant = Variant::Reversed;
+        let v = Json::parse(&result_line(&spec, &core)).unwrap();
+        assert_eq!(v.get("variant").unwrap().as_str(), Some("reversed"));
+        let rows = v.get("levels").unwrap().as_array().unwrap();
+        let levels: Vec<usize> = rows
+            .iter()
+            .map(|r| r.get("level").unwrap().as_usize().unwrap())
+            .collect();
+        assert_eq!(levels, vec![3, 1, 0], "render must preserve row order");
+        assert_eq!(rows[0].get("tests").unwrap().as_usize(), Some(5));
+    }
+
     #[test]
     fn core_binary_roundtrip_is_exact() {
         for core in [

@@ -10,8 +10,8 @@
 //! attachment) × sample counts × significance levels × `max_level` caps
 //! × correlation kinds (Pearson and Spearman "Rank PC"), all seeded
 //! through [`Pcg`] so every point is fully deterministic. Sizes are
-//! chosen so the whole grid runs across all six variants in CI-image
-//! time.
+//! chosen so the whole grid runs across every registered variant in
+//! CI-image time.
 
 use super::dag::WeightedDag;
 use super::datasets::Topology;
@@ -96,14 +96,17 @@ pub struct ScenarioInput {
     pub m: usize,
 }
 
-/// The six schedules under conformance test, in a fixed order.
-pub const ALL_VARIANTS: [Variant; 6] = [
+/// Every registered schedule, under conformance test in a fixed order
+/// (registry tag order — `all_variants_match_the_family_registry` keeps
+/// this list and [`crate::skeleton::family::FAMILIES`] in lockstep).
+pub const ALL_VARIANTS: [Variant; 7] = [
     Variant::Serial,
     Variant::ParallelCpu,
     Variant::CupcE,
     Variant::CupcS,
     Variant::Baseline1,
     Variant::Baseline2,
+    Variant::Reversed,
 ];
 
 /// Look up a grid point by name (the `service` job-source address).
@@ -263,6 +266,18 @@ mod tests {
         assert!(find("sparse-a01").is_some());
         assert!(find("grn-mid").is_some());
         assert!(find("no-such-scenario").is_none());
+    }
+
+    /// Conformance coverage cannot silently lag the registry: a family
+    /// added to `family::FAMILIES` must also appear here (and vice
+    /// versa) so the grid gates every shipped schedule.
+    #[test]
+    fn all_variants_match_the_family_registry() {
+        use crate::skeleton::family::FAMILIES;
+        assert_eq!(ALL_VARIANTS.len(), FAMILIES.len());
+        for (v, f) in ALL_VARIANTS.iter().zip(FAMILIES) {
+            assert_eq!(*v, f.variant, "ALL_VARIANTS must follow registry order");
+        }
     }
 
     #[test]

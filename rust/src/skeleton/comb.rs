@@ -382,6 +382,90 @@ mod tests {
         }
     }
 
+    /// The reversed-order schedule's access pattern: single-slot windows
+    /// walked from t = total − 1 down to 0. Concatenating those windows
+    /// and reversing must reproduce the full ascending enumeration —
+    /// i.e. descending access is a pure reindexing, hitting every
+    /// combination exactly once with no seam at any window boundary.
+    #[test]
+    fn descending_single_slot_windows_cover_the_ascending_enumeration() {
+        for (n, l) in [(6usize, 2usize), (7, 3), (5, 4)] {
+            let total = binom(n, l);
+            let mut descending: Vec<Vec<u32>> = Vec::new();
+            for round in 0..total {
+                let mut it = CombRange::new(n, l, total - 1 - round, 1);
+                descending.push(it.next_comb().unwrap().to_vec());
+                assert!(it.next_comb().is_none(), "window width is exactly 1");
+            }
+            descending.reverse();
+            let mut it = CombRange::new(n, l, 0, total);
+            let mut ascending: Vec<Vec<u32>> = Vec::new();
+            while let Some(c) = it.next_comb() {
+                ascending.push(c.to_vec());
+            }
+            assert_eq!(descending, ascending, "n={n} l={l}");
+        }
+    }
+
+    /// Same property for the skip-p space the per-edge schedules use,
+    /// with windows wider than one slot and boundaries landing mid-range
+    /// (the shape `pipeline::split_runs` produces at high l, where a
+    /// single edge's window is split across shards).
+    #[test]
+    fn descending_skip_windows_split_anywhere_still_cover_everything() {
+        let (row_len, l, p) = (8usize, 4usize, 3usize);
+        let total = binom(row_len - 1, l); // 35 sets at l = row_len/2
+        for width in [1u64, 2, 3, 16, total] {
+            let mut covered: Vec<Vec<u32>> = Vec::new();
+            // windows [total-w, total), [total-2w, total-w), ... like the
+            // descending flight, each window enumerated ascending inside
+            let mut hi = total;
+            while hi > 0 {
+                let lo = hi.saturating_sub(width);
+                let mut it = CombRangeSkip::new(row_len, l, lo, hi - lo, p);
+                let mut window: Vec<Vec<u32>> = Vec::new();
+                while let Some(c) = it.next_comb() {
+                    window.push(c.to_vec());
+                }
+                assert_eq!(window.len() as u64, hi - lo);
+                covered.splice(0..0, window);
+                hi = lo;
+            }
+            assert_eq!(covered.len() as u64, total, "width={width}");
+            let mut want: Vec<Vec<u32>> = Vec::new();
+            let mut it = CombRangeSkip::new(row_len, l, 0, total, p);
+            while let Some(c) = it.next_comb() {
+                want.push(c.to_vec());
+            }
+            assert_eq!(covered, want, "width={width}");
+        }
+    }
+
+    /// High-order edge cases the reversed schedule leans on: l = deg − 1
+    /// (one combination per edge) and the top index t = total − 1, which
+    /// must be the lexicographic maximum {n−l, …, n−1}.
+    #[test]
+    fn high_order_top_index_is_the_lexicographic_maximum() {
+        for (n, l) in [(6usize, 5usize), (8, 7), (9, 4), (5, 2)] {
+            let total = binom(n, l);
+            let mut out = vec![0u32; l];
+            comb_at(n, l, total - 1, &mut out);
+            let want: Vec<u32> = ((n - l) as u32..n as u32).collect();
+            assert_eq!(out, want, "n={n} l={l}");
+        }
+        // l = row_len − 1 in the skip space: exactly one set per edge —
+        // every row position except p — so the descending walk and the
+        // ascending walk are the same single window
+        for p in 0..6usize {
+            let (row_len, l) = (6usize, 5usize);
+            assert_eq!(n_sets_edge(row_len, l), 1);
+            let mut out = vec![0u32; l];
+            comb_at_skip(row_len, l, 0, p, &mut out);
+            let want: Vec<u32> = (0..row_len as u32).filter(|&v| v != p as u32).collect();
+            assert_eq!(out, want, "p={p}");
+        }
+    }
+
     #[test]
     fn fig3_example() {
         // paper Fig. 3(d): row 2 = {0,1,3,4,5,6}, j=5 at position p=4,

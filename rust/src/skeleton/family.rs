@@ -1,0 +1,182 @@
+//! The algorithm-family registry: one table describing every skeleton
+//! schedule the crate ships, so the layers above `skeleton/` dispatch on
+//! data instead of matching exhaustively on [`Variant`].
+//!
+//! Adding a family is now: write the leaf module (a [`RoundSchedule`]
+//! implementation for batched schedules, or a whole-run function for
+//! coarse-grained ones), append one [`FamilyInfo`] row here with a fresh
+//! `tag`, and everything else — CLI parsing, manifest parsing, cache
+//! keys, report labels, `skeleton::run` dispatch — picks it up. The
+//! registry tests below enforce the invariants a new row must keep
+//! (unique names, aliases and tags; parse/name roundtrip).
+//!
+//! [`RoundSchedule`]: super::schedule::RoundSchedule
+
+use super::{Config, SkeletonResult, Variant};
+use anyhow::Result;
+
+/// Whole-run entry point of a family (every leaf module exports one).
+pub type RunFn = fn(&[f64], usize, usize, &Config) -> Result<SkeletonResult>;
+
+/// One registered algorithm family.
+pub struct FamilyInfo {
+    pub variant: Variant,
+    /// Canonical CLI/report spelling.
+    pub name: &'static str,
+    /// Accepted `Variant::parse` spellings (lowercase; include `name`).
+    pub aliases: &'static [&'static str],
+    /// Stable tag for content hashing — cache keys depend on it, so a
+    /// tag is **never renumbered or reused**; new families append.
+    pub tag: u8,
+    /// Whether per-level `tests` counts are bit-reproducible for any
+    /// thread count (true for every pipeline-batched schedule and the
+    /// serial reference; false for the racy `parcpu`, whose skeleton is
+    /// still exact but whose counts are scheduling-dependent).
+    pub deterministic_tests: bool,
+    pub run: RunFn,
+}
+
+/// Every family, in tag order. Appending here is the single
+/// registration step for a new schedule.
+pub const FAMILIES: &[FamilyInfo] = &[
+    FamilyInfo {
+        variant: Variant::Serial,
+        name: "serial",
+        aliases: &["serial", "stable", "stable.fast"],
+        tag: 0,
+        deterministic_tests: true,
+        run: super::serial::run,
+    },
+    FamilyInfo {
+        variant: Variant::ParallelCpu,
+        name: "parcpu",
+        aliases: &["parcpu", "parallel-cpu", "parallel-pc"],
+        tag: 1,
+        deterministic_tests: false,
+        run: super::parallel_cpu::run,
+    },
+    FamilyInfo {
+        variant: Variant::CupcE,
+        name: "cupc-e",
+        aliases: &["cupe", "cupc-e", "e"],
+        tag: 2,
+        deterministic_tests: true,
+        run: super::gpu_e::run,
+    },
+    FamilyInfo {
+        variant: Variant::CupcS,
+        name: "cupc-s",
+        aliases: &["cups", "cupc-s", "s"],
+        tag: 3,
+        deterministic_tests: true,
+        run: super::gpu_s::run,
+    },
+    FamilyInfo {
+        variant: Variant::Baseline1,
+        name: "baseline1",
+        aliases: &["baseline1", "b1"],
+        tag: 4,
+        deterministic_tests: true,
+        run: super::baseline1::run,
+    },
+    FamilyInfo {
+        variant: Variant::Baseline2,
+        name: "baseline2",
+        aliases: &["baseline2", "b2"],
+        tag: 5,
+        deterministic_tests: true,
+        run: super::baseline2::run,
+    },
+    FamilyInfo {
+        variant: Variant::Reversed,
+        name: "reversed",
+        aliases: &["reversed", "reversed-order", "rop"],
+        tag: 6,
+        deterministic_tests: true,
+        run: super::reversed::run,
+    },
+];
+
+/// The registry row for a variant. Every `Variant` has exactly one row
+/// (enforced by `registry_covers_every_variant`), so this never panics
+/// on a constructed `Variant`.
+pub fn of(v: Variant) -> &'static FamilyInfo {
+    FAMILIES
+        .iter()
+        .find(|f| f.variant == v)
+        .unwrap_or_else(|| panic!("variant {v:?} is not registered in family::FAMILIES"))
+}
+
+/// Parse a CLI/manifest spelling (case-insensitive) against every
+/// family's alias list.
+pub fn parse(s: &str) -> Option<Variant> {
+    let lower = s.to_ascii_lowercase();
+    FAMILIES
+        .iter()
+        .find(|f| f.aliases.contains(&lower.as_str()))
+        .map(|f| f.variant)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_covers_every_variant() {
+        // `of` panics if a variant is missing; enumerate them all so
+        // adding an enum arm without a registry row fails here.
+        for v in [
+            Variant::Serial,
+            Variant::ParallelCpu,
+            Variant::CupcE,
+            Variant::CupcS,
+            Variant::Baseline1,
+            Variant::Baseline2,
+            Variant::Reversed,
+        ] {
+            assert_eq!(of(v).variant, v);
+        }
+    }
+
+    #[test]
+    fn names_aliases_and_tags_are_unique() {
+        let mut names: Vec<&str> = FAMILIES.iter().map(|f| f.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), FAMILIES.len(), "duplicate canonical name");
+
+        let mut aliases: Vec<&str> = FAMILIES.iter().flat_map(|f| f.aliases.iter().copied()).collect();
+        let n_aliases = aliases.len();
+        aliases.sort_unstable();
+        aliases.dedup();
+        assert_eq!(aliases.len(), n_aliases, "an alias maps to two families");
+
+        let mut tags: Vec<u8> = FAMILIES.iter().map(|f| f.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), FAMILIES.len(), "duplicate cache-key tag");
+    }
+
+    #[test]
+    fn canonical_name_is_an_alias_and_roundtrips() {
+        for f in FAMILIES {
+            assert!(
+                f.aliases.contains(&f.name),
+                "{}: canonical name must parse",
+                f.name
+            );
+            assert_eq!(parse(f.name), Some(f.variant));
+            assert_eq!(parse(&f.name.to_ascii_uppercase()), Some(f.variant));
+        }
+        assert_eq!(parse("nope"), None);
+    }
+
+    #[test]
+    fn aliases_are_lowercase() {
+        for f in FAMILIES {
+            for a in f.aliases {
+                assert_eq!(*a, a.to_ascii_lowercase(), "{}: alias {a:?}", f.name);
+            }
+        }
+    }
+}

@@ -1,53 +1,97 @@
-//! cuPC-E (paper Algorithm 4, §3.3) as a batched schedule.
+//! cuPC-E (paper Algorithm 4, §3.3) as a batched [`RoundSchedule`].
 //!
 //! The CUDA grid of `n × n'/β` blocks with `γ × β` threads becomes a
 //! *round* structure: in round r, every live edge (i, j) contributes its
 //! conditioning sets with indices `t ∈ [r·γ, (r+1)·γ)` — γ tests in
 //! flight per edge, the paper's first degree of parallelism — while all
 //! edges contribute simultaneously — the second degree. Each round runs
-//! the three-stage [`pipeline`](super::pipeline): the live windows are
-//! listed serially in canonical edge order, packed and evaluated in
-//! parallel shards (the graph is frozen for the whole flight, exactly
-//! the in-kernel semantics), and the verdicts land in canonical slot
-//! order before round r + 1 — which reproduces cuPC-E's
-//! early-termination semantics (§4.1 cases: edges removed in earlier
-//! rounds are skipped at pack time; within a flight the first verdict
-//! wins): γ = 1 avoids all unnecessary tests but serializes; γ = ∞ is
-//! fully parallel but wasteful — the baselines of Fig. 5. (β grouping is
-//! order-neutral in the batched schedule: groups are packed
-//! consecutively, so the slot order equals flat edge order.)
+//! the three-stage [`pipeline`](super::pipeline) via the
+//! [`schedule`](super::schedule) driver: the live windows are listed
+//! serially in canonical edge order, packed and evaluated in parallel
+//! shards (the graph is frozen for the whole flight, exactly the
+//! in-kernel semantics), and the verdicts land in canonical slot order
+//! before round r + 1 — which reproduces cuPC-E's early-termination
+//! semantics (§4.1 cases: edges removed in earlier rounds are skipped at
+//! pack time; within a flight the first verdict wins): γ = 1 avoids all
+//! unnecessary tests but serializes; γ = ∞ is fully parallel but
+//! wasteful — the baselines of Fig. 5. (β grouping is order-neutral in
+//! the batched schedule: groups are packed consecutively, so the slot
+//! order equals flat edge order.)
 
-use super::batch::{Corr32, EBatch, Removals};
-use super::comb::{n_sets_edge, CombRangeSkip};
 use super::engine::CiEngine;
-use super::pipeline::{use_pool, Executor, Run};
-use super::{should_continue, Config, LevelStats, SkeletonResult};
-use crate::graph::adj::AdjMatrix;
-use crate::graph::compact::CompactAdj;
-use crate::graph::sepset::SepSets;
-use crate::stats::fisher::tau;
-use crate::util::timer::Timer;
+use super::pipeline::Run;
+use super::schedule::{
+    build_edge_tasks, eval_edge_shard, run_rounds, run_rounds_with_engine, EdgeTask, LevelCtx,
+    RoundSchedule,
+};
+use super::{Config, SkeletonResult};
+use crate::skeleton::batch::Removals;
 use anyhow::Result;
 
-/// One live edge's combination cursor within a level.
-struct EdgeTask {
-    i: u32,
-    j: u32,
-    /// position of j inside row i of G'
-    p: u32,
-    /// n'_i
-    row_len: u32,
-    /// C(n'_i − 1, ℓ)
-    total: u64,
+/// The cuPC-E schedule: ascending combination windows of γ sets in
+/// flight per live edge per round.
+pub struct ESchedule {
+    gamma: u64,
+    tasks: Vec<EdgeTask>,
+    max_total: u64,
+}
+
+impl ESchedule {
+    pub fn new(cfg: &Config) -> ESchedule {
+        ESchedule {
+            // saturating arithmetic throughout: Baseline2 runs this
+            // schedule at γ = usize::MAX / 2 (the "fully parallel" γ=∞)
+            gamma: cfg.gamma.max(1) as u64,
+            tasks: Vec::new(),
+            max_total: 0,
+        }
+    }
+}
+
+impl RoundSchedule for ESchedule {
+    fn label(&self) -> &'static str {
+        "cupc-e"
+    }
+
+    fn begin_level(&mut self, ctx: &LevelCtx<'_>) {
+        let (tasks, max_total) = build_edge_tasks(ctx);
+        self.tasks = tasks;
+        self.max_total = max_total;
+    }
+
+    fn rounds_done(&self, round: u64) -> bool {
+        round.saturating_mul(self.gamma) >= self.max_total
+    }
+
+    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+        let lo = round.saturating_mul(self.gamma);
+        for (ti, task) in self.tasks.iter().enumerate() {
+            if lo >= task.total {
+                continue; // this edge's sets are exhausted
+            }
+            if !ctx.graph.has_edge(task.i as usize, task.j as usize) {
+                continue; // removed in an earlier round
+            }
+            let hi = round
+                .saturating_add(1)
+                .saturating_mul(self.gamma)
+                .min(task.total);
+            runs.push(Run { task: ti, t0: lo, count: hi - lo });
+        }
+    }
+
+    fn eval_shard(
+        &self,
+        ctx: &LevelCtx<'_>,
+        shard: &[Run],
+        engine: &mut dyn CiEngine,
+    ) -> Result<(Removals, u64)> {
+        eval_edge_shard(&self.tasks, ctx, shard, engine)
+    }
 }
 
 pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
-    if use_pool(cfg) {
-        run_impl(corr, n, m, cfg, &mut Executor::Pool { threads: cfg.threads })
-    } else {
-        let mut engine = crate::runtime::engine_from_config(cfg)?;
-        run_impl(corr, n, m, cfg, &mut Executor::Single(engine.as_mut()))
-    }
+    run_rounds(corr, n, m, cfg, &mut ESchedule::new(cfg))
 }
 
 /// Single-engine entry point (tests, XLA, bench harnesses): the same
@@ -59,178 +103,14 @@ pub fn run_with_engine(
     cfg: &Config,
     engine: &mut dyn CiEngine,
 ) -> Result<SkeletonResult> {
-    run_impl(corr, n, m, cfg, &mut Executor::Single(engine))
-}
-
-fn run_impl(
-    corr: &[f64],
-    n: usize,
-    m: usize,
-    cfg: &Config,
-    exec: &mut Executor<'_>,
-) -> Result<SkeletonResult> {
-    let graph = AdjMatrix::complete(n);
-    let sepsets = SepSets::new();
-    let corr32 = Corr32::from_f64(corr, n);
-    let mut levels = Vec::new();
-
-    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
-
-    let gamma = cfg.gamma.max(1) as u64;
-    let mut l = 1usize;
-    while should_continue(&graph, l, cfg) {
-        // between-level re-lease point: a hooked job asks its width
-        // policy (e.g. the batch scheduler's elastic lease) how wide to
-        // run this level — absorbing workers other jobs released. Width
-        // never changes results (ordered apply), only wall-clock time.
-        if let Some(hook) = &cfg.width_hook {
-            exec.set_width(hook.0.width_for_level(l));
-        }
-        let t = Timer::start();
-        let taul = tau(m, l, cfg.alpha);
-        let snap = graph.snapshot();
-        let comp = CompactAdj::from_snapshot(&snap, n);
-
-        // Build the edge-task list from G' (ordered pairs, row-major —
-        // the same visit order as the CUDA grid).
-        let mut tasks: Vec<EdgeTask> = Vec::new();
-        for i in 0..n {
-            let row = comp.row(i);
-            let nr = row.len();
-            if nr < l + 1 {
-                continue; // §4.1 case I
-            }
-            let total = n_sets_edge(nr, l);
-            if total == 0 {
-                continue;
-            }
-            for (p, &j) in row.iter().enumerate() {
-                tasks.push(EdgeTask {
-                    i: i as u32,
-                    j,
-                    p: p as u32,
-                    row_len: nr as u32,
-                    total,
-                });
-            }
-        }
-
-        let mut tests = 0u64;
-        let mut removed = 0usize;
-        let max_total = tasks.iter().map(|e| e.total).max().unwrap_or(0);
-        let mut runs: Vec<Run> = Vec::new();
-        let mut round = 0u64;
-        while round * gamma < max_total {
-            let lo = round * gamma;
-            // stage 1 (serial): the round's live windows in canonical
-            // pack order; the graph is frozen until the apply stage
-            runs.clear();
-            for (ti, task) in tasks.iter().enumerate() {
-                if lo >= task.total {
-                    continue; // this edge's sets are exhausted
-                }
-                if !graph.has_edge(task.i as usize, task.j as usize) {
-                    continue; // removed in an earlier round
-                }
-                let hi = ((round + 1) * gamma).min(task.total);
-                runs.push(Run { task: ti, t0: lo, count: hi - lo });
-            }
-            if runs.is_empty() {
-                break; // every unexhausted window belongs to a dead edge
-            }
-            tests += runs.iter().map(|r| r.count).sum::<u64>();
-
-            // stage 2 (parallel): pack + evaluate, engines per shard;
-            // only independence candidates come back (dependent
-            // verdicts are no-ops and are dropped with the gather)
-            let shard_results = exec.run_sharded(&runs, |shard, engine| {
-                pack_eval(shard, &tasks, &comp, &corr32, l, taul, engine)
-            })?;
-
-            // stage 3 (serial): everything in flight lands in canonical
-            // slot order before round r + 1
-            for candidates in &shard_results {
-                removed += candidates.apply(&graph, &sepsets);
-            }
-            round += 1;
-        }
-
-        levels.push(LevelStats {
-            level: l,
-            tests,
-            removed,
-            edges_after: graph.n_edges(),
-            seconds: t.elapsed_s(),
-        });
-        if cfg.verbose {
-            eprintln!(
-                "[cupc-e] level {l}: {tests} tests, removed {removed}, {} edges left",
-                graph.n_edges()
-            );
-        }
-        l += 1;
-    }
-
-    Ok(SkeletonResult {
-        graph,
-        sepsets,
-        levels,
-    })
-}
-
-/// Worker body: pack a shard of the round's combination windows into
-/// engine-capacity batches, evaluate them, and keep only the
-/// independence candidates (canonical slot order).
-fn pack_eval(
-    shard: &[Run],
-    tasks: &[EdgeTask],
-    comp: &CompactAdj,
-    corr32: &Corr32,
-    l: usize,
-    taul: f64,
-    engine: &mut dyn CiEngine,
-) -> Result<Removals> {
-    let cap = engine.batch_e().max(1);
-    let mut out = Removals::new(l);
-    let mut batch = EBatch::new(l, cap);
-    let mut ids = vec![0u32; l];
-    for run in shard {
-        let task = &tasks[run.task];
-        let (i, j) = (task.i as usize, task.j as usize);
-        let row = comp.row(i);
-        let mut combs =
-            CombRangeSkip::new(task.row_len as usize, l, run.t0, run.count, task.p as usize);
-        while let Some(sbuf) = combs.next_comb() {
-            for (dst, &pos) in ids.iter_mut().zip(sbuf) {
-                *dst = row[pos as usize];
-            }
-            batch.push(corr32, i, j, &ids);
-            if batch.len() >= cap {
-                flush(&mut batch, engine, taul, &mut out)?;
-            }
-        }
-    }
-    if !batch.is_empty() {
-        flush(&mut batch, engine, taul, &mut out)?;
-    }
-    Ok(out)
-}
-
-fn flush(
-    batch: &mut EBatch,
-    engine: &mut dyn CiEngine,
-    taul: f64,
-    out: &mut Removals,
-) -> Result<()> {
-    let z = engine.ci_e(batch.l, batch.len(), &batch.c_ij, &batch.m1, &batch.m2)?;
-    batch.drain_independent(&z, taul, out);
-    Ok(())
+    run_rounds_with_engine(corr, n, m, cfg, &mut ESchedule::new(cfg), engine)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::skeleton::engine::NativeEngine;
+    use crate::skeleton::pipeline::use_pool;
     use crate::skeleton::EngineKind;
     use crate::sim::datasets;
     use crate::stats::corr::correlation_matrix;

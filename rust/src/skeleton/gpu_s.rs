@@ -1,4 +1,4 @@
-//! cuPC-S (paper Algorithm 5, §3.4) as a batched schedule.
+//! cuPC-S (paper Algorithm 5, §3.4) as a batched [`RoundSchedule`].
 //!
 //! Threads are assigned to *conditioning sets*, not edges: for each row i
 //! of G', the `C(n'_i, ℓ)` sets S are walked in rounds of θ×δ in flight;
@@ -10,33 +10,138 @@
 //! (within a row), matching §5.5's analysis that global sharing does not
 //! pay for its search.
 //!
-//! Each round runs the three-stage [`pipeline`](super::pipeline): live
-//! set windows are listed serially in canonical row order, packed and
-//! evaluated in parallel shards against the frozen graph (candidate
-//! lists included — the whole flight sees the state at round start,
-//! exactly the in-kernel semantics), and verdicts land in canonical slot
-//! order before the next round. Results are bit-identical for any
-//! `cfg.threads`.
+//! Each round runs the three-stage [`pipeline`](super::pipeline) via the
+//! [`schedule`](super::schedule) driver: live set windows are listed
+//! serially in canonical row order, packed and evaluated in parallel
+//! shards against the frozen graph (candidate lists included — the whole
+//! flight sees the state at round start, exactly the in-kernel
+//! semantics), and verdicts land in canonical slot order before the next
+//! round. Results are bit-identical for any `cfg.threads`.
 
-use super::batch::{Corr32, Removals, SBatch};
+use super::batch::{Removals, SBatch};
 use super::comb::{n_sets_row, CombRange};
 use super::engine::CiEngine;
-use super::pipeline::{use_pool, Executor, Run};
-use super::{should_continue, Config, LevelStats, SkeletonResult};
-use crate::graph::adj::AdjMatrix;
-use crate::graph::compact::CompactAdj;
-use crate::graph::sepset::SepSets;
-use crate::stats::fisher::tau;
-use crate::util::timer::Timer;
+use super::pipeline::Run;
+use super::schedule::{run_rounds, run_rounds_with_engine, LevelCtx, RoundSchedule};
+use super::{Config, SkeletonResult};
 use anyhow::Result;
 
-pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
-    if use_pool(cfg) {
-        run_impl(corr, n, m, cfg, &mut Executor::Pool { threads: cfg.threads })
-    } else {
-        let mut engine = crate::runtime::engine_from_config(cfg)?;
-        run_impl(corr, n, m, cfg, &mut Executor::Single(engine.as_mut()))
+/// The cuPC-S schedule: per-row shared conditioning sets, θ×δ in flight
+/// per row per round.
+pub struct SSchedule {
+    flight: u64,
+    /// rows with enough neighbors, and their set counts
+    rows: Vec<(usize, u64)>,
+    max_total: u64,
+}
+
+impl SSchedule {
+    pub fn new(cfg: &Config) -> SSchedule {
+        SSchedule {
+            flight: (cfg.theta.max(1) as u64).saturating_mul(cfg.delta.max(1) as u64),
+            rows: Vec::new(),
+            max_total: 0,
+        }
     }
+}
+
+impl RoundSchedule for SSchedule {
+    fn label(&self) -> &'static str {
+        "cupc-s"
+    }
+
+    fn begin_level(&mut self, ctx: &LevelCtx<'_>) {
+        let l = ctx.l;
+        self.rows = (0..ctx.comp.n())
+            .filter(|&i| ctx.comp.row_len(i) >= l + 1)
+            .map(|i| (i, n_sets_row(ctx.comp.row_len(i), l)))
+            .collect();
+        self.max_total = self.rows.iter().map(|&(_, t)| t).max().unwrap_or(0);
+    }
+
+    fn rounds_done(&self, round: u64) -> bool {
+        round.saturating_mul(self.flight) >= self.max_total
+    }
+
+    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+        let lo = round.saturating_mul(self.flight);
+        for (ri, &(i, total)) in self.rows.iter().enumerate() {
+            if lo >= total {
+                continue;
+            }
+            // §4.1: skip the whole row if no live edge remains
+            if !ctx
+                .comp
+                .row(i)
+                .iter()
+                .any(|&j| ctx.graph.has_edge(i, j as usize))
+            {
+                continue;
+            }
+            let hi = round
+                .saturating_add(1)
+                .saturating_mul(self.flight)
+                .min(total);
+            runs.push(Run { task: ri, t0: lo, count: hi - lo });
+        }
+    }
+
+    /// Pack a shard of the round's set windows into engine-capacity
+    /// batches, evaluate them, and keep only the independence
+    /// candidates. The shard's test count is one test per live candidate
+    /// of each set (it depends on the candidate lists, which are
+    /// deterministic per round).
+    fn eval_shard(
+        &self,
+        ctx: &LevelCtx<'_>,
+        shard: &[Run],
+        engine: &mut dyn CiEngine,
+    ) -> Result<(Removals, u64)> {
+        let l = ctx.l;
+        let k = engine.k().max(1);
+        let cap = engine.batch_s().max(1);
+        let mut out = Removals::new(l);
+        let mut tests = 0u64;
+        let mut batch = SBatch::new(l, k, cap);
+        let mut ids = vec![0u32; l];
+        let mut cand: Vec<u32> = Vec::new();
+        for run in shard {
+            let (i, _) = self.rows[run.task];
+            let row = ctx.comp.row(i);
+            let mut combs = CombRange::new(row.len(), l, run.t0, run.count);
+            while let Some(sbuf) = combs.next_comb() {
+                for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                    *dst = row[pos as usize];
+                }
+                // candidates: row members not in S with live edges
+                cand.clear();
+                for &ju in row {
+                    if ids.contains(&ju) {
+                        continue;
+                    }
+                    if ctx.graph.has_edge(i, ju as usize) {
+                        cand.push(ju);
+                    }
+                }
+                // spill into K-wide rows
+                for chunk in cand.chunks(k) {
+                    batch.push_row(ctx.corr32, i, &ids, chunk);
+                    tests += chunk.len() as u64;
+                    if batch.rows() >= cap {
+                        flush(&mut batch, engine, ctx.taul, &mut out)?;
+                    }
+                }
+            }
+        }
+        if !batch.is_empty() {
+            flush(&mut batch, engine, ctx.taul, &mut out)?;
+        }
+        Ok((out, tests))
+    }
+}
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    run_rounds(corr, n, m, cfg, &mut SSchedule::new(cfg))
 }
 
 /// Single-engine entry point (tests, XLA, bench harnesses): the same
@@ -48,161 +153,7 @@ pub fn run_with_engine(
     cfg: &Config,
     engine: &mut dyn CiEngine,
 ) -> Result<SkeletonResult> {
-    run_impl(corr, n, m, cfg, &mut Executor::Single(engine))
-}
-
-fn run_impl(
-    corr: &[f64],
-    n: usize,
-    m: usize,
-    cfg: &Config,
-    exec: &mut Executor<'_>,
-) -> Result<SkeletonResult> {
-    let graph = AdjMatrix::complete(n);
-    let sepsets = SepSets::new();
-    let corr32 = Corr32::from_f64(corr, n);
-    let mut levels = Vec::new();
-
-    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
-
-    let flight = (cfg.theta.max(1) * cfg.delta.max(1)) as u64; // sets in flight per row per round
-    let mut l = 1usize;
-    while should_continue(&graph, l, cfg) {
-        // between-level re-lease point (see gpu_e): width policy decides
-        // how wide the level runs; results are width-invariant.
-        if let Some(hook) = &cfg.width_hook {
-            exec.set_width(hook.0.width_for_level(l));
-        }
-        let t = Timer::start();
-        let taul = tau(m, l, cfg.alpha);
-        let snap = graph.snapshot();
-        let comp = CompactAdj::from_snapshot(&snap, n);
-
-        let mut tests = 0u64;
-        let mut removed = 0usize;
-
-        // rows with enough neighbors, and their set counts
-        let rows: Vec<(usize, u64)> = (0..n)
-            .filter(|&i| comp.row_len(i) >= l + 1)
-            .map(|i| (i, n_sets_row(comp.row_len(i), l)))
-            .collect();
-        let max_total = rows.iter().map(|&(_, t)| t).max().unwrap_or(0);
-
-        let mut runs: Vec<Run> = Vec::new();
-        let mut round = 0u64;
-        while round * flight < max_total {
-            let lo = round * flight;
-            // stage 1 (serial): the round's live set windows in
-            // canonical row order; the graph is frozen until apply
-            runs.clear();
-            for (ri, &(i, total)) in rows.iter().enumerate() {
-                if lo >= total {
-                    continue;
-                }
-                // §4.1: skip the whole row if no live edge remains
-                if !comp.row(i).iter().any(|&j| graph.has_edge(i, j as usize)) {
-                    continue;
-                }
-                let hi = ((round + 1) * flight).min(total);
-                runs.push(Run { task: ri, t0: lo, count: hi - lo });
-            }
-            if runs.is_empty() {
-                break; // every unexhausted row is dead
-            }
-
-            // stage 2 (parallel): pack + evaluate against the frozen
-            // graph; test counts come back per shard (they depend on
-            // the candidate lists, which are deterministic per round),
-            // and only independence candidates are retained
-            let shard_results = exec.run_sharded(&runs, |shard, engine| {
-                pack_eval(shard, &rows, &comp, &corr32, &graph, l, taul, engine)
-            })?;
-
-            // stage 3 (serial): canonical-order apply
-            for (candidates, shard_tests) in &shard_results {
-                tests += shard_tests;
-                removed += candidates.apply(&graph, &sepsets);
-            }
-            round += 1;
-        }
-
-        levels.push(LevelStats {
-            level: l,
-            tests,
-            removed,
-            edges_after: graph.n_edges(),
-            seconds: t.elapsed_s(),
-        });
-        if cfg.verbose {
-            eprintln!(
-                "[cupc-s] level {l}: {tests} tests, removed {removed}, {} edges left",
-                graph.n_edges()
-            );
-        }
-        l += 1;
-    }
-
-    Ok(SkeletonResult {
-        graph,
-        sepsets,
-        levels,
-    })
-}
-
-/// Worker body: pack a shard of the round's set windows into
-/// engine-capacity batches, evaluate them, and keep only the
-/// independence candidates. Returns those plus the shard's test count
-/// (one test per live candidate of each set).
-#[allow(clippy::too_many_arguments)] // worker signature mirrors the round state
-fn pack_eval(
-    shard: &[Run],
-    rows: &[(usize, u64)],
-    comp: &CompactAdj,
-    corr32: &Corr32,
-    graph: &AdjMatrix,
-    l: usize,
-    taul: f64,
-    engine: &mut dyn CiEngine,
-) -> Result<(Removals, u64)> {
-    let k = engine.k().max(1);
-    let cap = engine.batch_s().max(1);
-    let mut out = Removals::new(l);
-    let mut tests = 0u64;
-    let mut batch = SBatch::new(l, k, cap);
-    let mut ids = vec![0u32; l];
-    let mut cand: Vec<u32> = Vec::new();
-    for run in shard {
-        let (i, _) = rows[run.task];
-        let row = comp.row(i);
-        let mut combs = CombRange::new(row.len(), l, run.t0, run.count);
-        while let Some(sbuf) = combs.next_comb() {
-            for (dst, &pos) in ids.iter_mut().zip(sbuf) {
-                *dst = row[pos as usize];
-            }
-            // candidates: row members not in S with live edges
-            cand.clear();
-            for &ju in row {
-                if ids.contains(&ju) {
-                    continue;
-                }
-                if graph.has_edge(i, ju as usize) {
-                    cand.push(ju);
-                }
-            }
-            // spill into K-wide rows
-            for chunk in cand.chunks(k) {
-                batch.push_row(corr32, i, &ids, chunk);
-                tests += chunk.len() as u64;
-                if batch.rows() >= cap {
-                    flush(&mut batch, engine, taul, &mut out)?;
-                }
-            }
-        }
-    }
-    if !batch.is_empty() {
-        flush(&mut batch, engine, taul, &mut out)?;
-    }
-    Ok((out, tests))
+    run_rounds_with_engine(corr, n, m, cfg, &mut SSchedule::new(cfg), engine)
 }
 
 fn flush(
@@ -228,6 +179,7 @@ fn flush(
 mod tests {
     use super::*;
     use crate::skeleton::engine::NativeEngine;
+    use crate::skeleton::pipeline::use_pool;
     use crate::skeleton::EngineKind;
     use crate::sim::datasets;
     use crate::stats::corr::correlation_matrix;

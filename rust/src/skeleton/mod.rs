@@ -1,7 +1,11 @@
 //! Skeleton discovery — the computationally intensive first step of
 //! PC-stable (paper Algorithm 1) and the subject of cuPC.
 //!
-//! Five schedules are implemented over a common engine abstraction:
+//! Seven schedules are implemented over a common engine abstraction.
+//! Each is an *algorithm family* registered in [`family::FAMILIES`];
+//! the batched ones are [`schedule::RoundSchedule`] strategies driven by
+//! one shared level loop, the coarse-grained ones are whole-run
+//! functions:
 //!
 //! * [`serial`] — single-threaded reference (the paper's "Stable.fast").
 //! * [`parallel_cpu`] — multi-threaded CPU (the paper's "Parallel-PC").
@@ -11,6 +15,9 @@
 //!   shared across the tests of a row, one pseudo-inverse per set.
 //! * [`baseline1`] / [`baseline2`] — the two GPU baselines of Fig. 5,
 //!   expressed as degenerate cuPC-E configurations (γ=1 / γ=∞).
+//! * [`reversed`] — reversed-order pruning (arxiv 2109.04626): densest
+//!   nodes first, descending combination order, one test in flight per
+//!   edge — fewer total tests on dense graphs, same skeleton.
 //!
 //! All schedules produce the *identical* skeleton — and the identical set
 //! of removed pairs (sepset keys) — on the same input: PC-stable's
@@ -34,11 +41,14 @@ pub mod baseline2;
 pub mod census;
 pub mod comb;
 pub mod engine;
+pub mod family;
 pub mod gpu_e;
 pub mod gpu_s;
 pub mod level0;
 pub mod parallel_cpu;
 pub mod pipeline;
+pub mod reversed;
+pub mod schedule;
 pub mod serial;
 
 use crate::graph::adj::AdjMatrix;
@@ -62,19 +72,16 @@ pub enum Variant {
     Baseline1,
     /// Fig. 5 baseline 2: per-edge tests fully parallel (γ = ∞)
     Baseline2,
+    /// reversed-order pruning (arxiv 2109.04626): densest-first,
+    /// descending combination order, one test in flight per edge
+    Reversed,
 }
 
 impl Variant {
+    /// Parse a CLI/manifest spelling against the [`family`] registry's
+    /// alias lists (case-insensitive).
     pub fn parse(s: &str) -> Option<Variant> {
-        Some(match s.to_ascii_lowercase().as_str() {
-            "serial" | "stable" | "stable.fast" => Variant::Serial,
-            "parcpu" | "parallel-cpu" | "parallel-pc" => Variant::ParallelCpu,
-            "cupe" | "cupc-e" | "e" => Variant::CupcE,
-            "cups" | "cupc-s" | "s" => Variant::CupcS,
-            "baseline1" | "b1" => Variant::Baseline1,
-            "baseline2" | "b2" => Variant::Baseline2,
-            _ => return None,
-        })
+        family::parse(s)
     }
 }
 
@@ -146,8 +153,8 @@ pub struct Config {
     pub variant: Variant,
     pub engine: EngineKind,
     /// Worker threads. `ParallelCpu` shards rows across this many
-    /// threads; the batched schedules (`CupcE`, `CupcS` and the Fig. 5
-    /// baselines) shard each round's pack + evaluate stage across this
+    /// threads; the batched schedules (`CupcE`, `CupcS`, `Reversed` and
+    /// the Fig. 5 baselines) shard each round's pack + evaluate stage across this
     /// many scoped workers when the native engine is selected (see
     /// [`pipeline`]) — results are bit-identical for any value. With an
     /// injected/XLA engine the batched schedules run single-engine and
@@ -285,14 +292,7 @@ pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonRes
     if n < 2 {
         return Ok(degenerate_result(n));
     }
-    match cfg.variant {
-        Variant::Serial => serial::run(corr, n, m, cfg),
-        Variant::ParallelCpu => parallel_cpu::run(corr, n, m, cfg),
-        Variant::CupcE => gpu_e::run(corr, n, m, cfg),
-        Variant::CupcS => gpu_s::run(corr, n, m, cfg),
-        Variant::Baseline1 => baseline1::run(corr, n, m, cfg),
-        Variant::Baseline2 => baseline2::run(corr, n, m, cfg),
-    }
+    (family::of(cfg.variant).run)(corr, n, m, cfg)
 }
 
 #[cfg(test)]
@@ -305,6 +305,8 @@ mod tests {
         assert_eq!(Variant::parse("CUPC-E"), Some(Variant::CupcE));
         assert_eq!(Variant::parse("serial"), Some(Variant::Serial));
         assert_eq!(Variant::parse("b2"), Some(Variant::Baseline2));
+        assert_eq!(Variant::parse("reversed"), Some(Variant::Reversed));
+        assert_eq!(Variant::parse("rop"), Some(Variant::Reversed));
         assert_eq!(Variant::parse("nope"), None);
     }
 
@@ -321,14 +323,8 @@ mod tests {
     /// short-circuits in every schedule.
     #[test]
     fn degenerate_inputs_are_guarded_in_every_variant() {
-        for &v in &[
-            Variant::Serial,
-            Variant::ParallelCpu,
-            Variant::CupcE,
-            Variant::CupcS,
-            Variant::Baseline1,
-            Variant::Baseline2,
-        ] {
+        for f in family::FAMILIES {
+            let v = f.variant;
             for n in [0usize, 1] {
                 let corr = vec![1.0; n * n];
                 let cfg = Config {

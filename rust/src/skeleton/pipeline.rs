@@ -1,5 +1,9 @@
 //! The multi-threaded pack → evaluate → apply pipeline shared by the
-//! batched schedules (cuPC-E, cuPC-S and the Fig. 5 baselines).
+//! batched schedules (cuPC-E, cuPC-S, the Fig. 5 baselines, and
+//! reversed-order pruning). The [`Executor`] is schedule-agnostic: which
+//! windows exist in a round and how a shard is packed belong to the
+//! [`RoundSchedule`](super::schedule::RoundSchedule) strategy; this
+//! module only splits, runs, and re-orders.
 //!
 //! cuPC's speedup story is the parallel CI-test grid; with AOT batch
 //! kernels the CUDA grid becomes *rounds* (gpu_e/gpu_s), and the per-slot

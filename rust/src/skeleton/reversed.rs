@@ -1,0 +1,269 @@
+//! Reversed-order pruning PC (arxiv 2109.04626) as a batched
+//! [`RoundSchedule`] — the seventh family, and the proof that the
+//! [`schedule`](super::schedule) seam is real: this module is the entire
+//! algorithm, everything else is registration.
+//!
+//! The reversed-order idea is to spend CI tests where they pay: dense
+//! nodes and high-index conditioning sets prune edges earlier, so fewer
+//! tests run overall. Adapted to PC-stable's level-synchronous frame
+//! (the outer level loop stays **ascending** — that frame is what makes
+//! every family's skeleton bit-identical), the reversal happens *within*
+//! each level:
+//!
+//! * **densest nodes first** — the level's edge tasks are stably sorted
+//!   by descending `n'_i` (ties keep row-major order), so the rows most
+//!   likely to lose edges are probed at the front of every round;
+//! * **descending combination order** — round r evaluates combination
+//!   index `total − 1 − r` for each live edge: the highest-index sets
+//!   (the ones drawing from the *tail* of the neighbor row — see
+//!   [`comb`](super::comb)'s lexicographic layout) run first;
+//! * **one test in flight per edge** (γ = 1 semantics) — each verdict
+//!   lands before the edge's next test is packed, so a removal cancels
+//!   the edge's whole remaining budget; nothing is wasted in flight.
+//!
+//! The trade-off is the mirror image of cuPC-E's γ: minimal total tests,
+//! minimal per-round batch width (one slot per live edge) — fewer,
+//! narrower rounds for the engine to amortize. The conformance gate
+//! (`tests/conformance_engines.rs`) asserts both halves: bit-identical
+//! skeleton/sepset-keys/Majority-CPDAG on the full grid, and strictly
+//! fewer total tests than cuPC-E on every dense grid point
+//! (cross-checked against `tools/schedule_oracle.py`).
+
+use super::engine::CiEngine;
+use super::pipeline::Run;
+use super::schedule::{
+    build_edge_tasks, eval_edge_shard, run_rounds, run_rounds_with_engine, EdgeTask, LevelCtx,
+    RoundSchedule,
+};
+use super::{Config, SkeletonResult};
+use crate::skeleton::batch::Removals;
+use anyhow::Result;
+
+/// The reversed-order pruning schedule: densest-first tasks, descending
+/// combination indices, one set in flight per edge per round.
+pub struct ReversedSchedule {
+    tasks: Vec<EdgeTask>,
+    max_total: u64,
+}
+
+impl ReversedSchedule {
+    pub fn new() -> ReversedSchedule {
+        ReversedSchedule { tasks: Vec::new(), max_total: 0 }
+    }
+}
+
+impl Default for ReversedSchedule {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl RoundSchedule for ReversedSchedule {
+    fn label(&self) -> &'static str {
+        "reversed"
+    }
+
+    fn begin_level(&mut self, ctx: &LevelCtx<'_>) {
+        let (mut tasks, max_total) = build_edge_tasks(ctx);
+        // densest rows first; the stable sort keeps row-major order
+        // among equal degrees, so the canonical slot order is still
+        // deterministic
+        tasks.sort_by_key(|t| std::cmp::Reverse(t.row_len));
+        self.tasks = tasks;
+        self.max_total = max_total;
+    }
+
+    fn rounds_done(&self, round: u64) -> bool {
+        round >= self.max_total
+    }
+
+    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+        for (ti, task) in self.tasks.iter().enumerate() {
+            if round >= task.total {
+                continue; // this edge's sets are exhausted
+            }
+            if !ctx.graph.has_edge(task.i as usize, task.j as usize) {
+                continue; // pruned in an earlier round — budget cancelled
+            }
+            // walk the combination index space from the top down
+            runs.push(Run { task: ti, t0: task.total - 1 - round, count: 1 });
+        }
+    }
+
+    fn eval_shard(
+        &self,
+        ctx: &LevelCtx<'_>,
+        shard: &[Run],
+        engine: &mut dyn CiEngine,
+    ) -> Result<(Removals, u64)> {
+        eval_edge_shard(&self.tasks, ctx, shard, engine)
+    }
+}
+
+pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonResult> {
+    run_rounds(corr, n, m, cfg, &mut ReversedSchedule::new())
+}
+
+/// Single-engine entry point (tests, XLA, bench harnesses): the same
+/// pipeline inline — results are bit-identical to the pool path.
+pub fn run_with_engine(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    engine: &mut dyn CiEngine,
+) -> Result<SkeletonResult> {
+    run_rounds_with_engine(corr, n, m, cfg, &mut ReversedSchedule::new(), engine)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::adj::AdjMatrix;
+    use crate::graph::compact::CompactAdj;
+    use crate::skeleton::batch::Corr32;
+    use crate::skeleton::comb::n_sets_edge;
+    use crate::skeleton::engine::NativeEngine;
+    use crate::skeleton::pipeline::use_pool;
+    use crate::skeleton::EngineKind;
+    use crate::sim::datasets;
+    use crate::stats::corr::correlation_matrix;
+
+    fn run_native(corr: &[f64], n: usize, m: usize, cfg: &Config) -> SkeletonResult {
+        let mut e = NativeEngine::new();
+        run_with_engine(corr, n, m, cfg, &mut e).unwrap()
+    }
+
+    #[test]
+    fn matches_serial_on_er_graph() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 50,
+            m: 150,
+            topology: datasets::Topology::Er(0.08),
+            seed: 11,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let res_r = run_native(&c, ds.data.n, ds.data.m, &cfg);
+        let res_s = crate::skeleton::serial::run(&c, ds.data.n, ds.data.m, &cfg).unwrap();
+        assert_eq!(
+            res_r.graph.snapshot(),
+            res_s.graph.snapshot(),
+            "reversed-order pruning must produce the PC-stable skeleton"
+        );
+    }
+
+    /// Flight size 1 with cancel-on-removal can never test more than
+    /// cuPC-E's ascending γ = 1 schedule *plus* it starts at the
+    /// high-index sets — on the same input the totals may differ but the
+    /// skeletons and sepset keys cannot.
+    #[test]
+    fn matches_cupc_e_skeleton_and_sepset_keys() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 45,
+            m: 200,
+            topology: datasets::Topology::Grn(1.6, 6),
+            seed: 21,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let cfg = Config::default();
+        let res_r = run_native(&c, ds.data.n, ds.data.m, &cfg);
+        let mut e = NativeEngine::new();
+        let res_e =
+            crate::skeleton::gpu_e::run_with_engine(&c, ds.data.n, ds.data.m, &cfg, &mut e)
+                .unwrap();
+        assert_eq!(res_r.graph.snapshot(), res_e.graph.snapshot());
+        let keys = |r: &SkeletonResult| {
+            r.sepsets
+                .sorted_entries()
+                .into_iter()
+                .map(|(k, _)| k)
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(keys(&res_r), keys(&res_e));
+    }
+
+    /// The schedule's shape, checked directly against the trait: tasks
+    /// come out densest-first, and successive rounds walk each edge's
+    /// combination indices strictly downward from `total - 1`.
+    #[test]
+    fn lists_descending_windows_densest_first() {
+        let n = 6;
+        let graph = AdjMatrix::complete(n);
+        graph.remove_edge(0, 1); // rows 0 and 1 are now sparser
+        graph.remove_edge(0, 2);
+        let mut corr = vec![0.1; n * n];
+        for i in 0..n {
+            corr[i * n + i] = 1.0;
+        }
+        let corr32 = Corr32::from_f64(&corr, n);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+        let l = 2;
+        let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l, taul: 1.0 };
+
+        let mut sched = ReversedSchedule::new();
+        sched.begin_level(&ctx);
+        let mut prev = u32::MAX;
+        for t in &sched.tasks {
+            assert!(t.row_len <= prev, "tasks must be densest-first");
+            prev = t.row_len;
+        }
+        assert_eq!(sched.max_total, n_sets_edge(5, l));
+
+        let mut runs0 = Vec::new();
+        let mut runs1 = Vec::new();
+        sched.list_round(&ctx, 0, &mut runs0);
+        sched.list_round(&ctx, 1, &mut runs1);
+        assert_eq!(runs0.len(), sched.tasks.len(), "round 0: every edge live");
+        for r in runs0.iter().chain(&runs1) {
+            assert_eq!(r.count, 1, "one set in flight per edge");
+        }
+        for (a, b) in runs0.iter().zip(&runs1) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.t0, sched.tasks[a.task].total - 1);
+            assert_eq!(b.t0, sched.tasks[b.task].total - 2, "strictly descending");
+        }
+        assert!(!sched.rounds_done(sched.max_total - 1));
+        assert!(sched.rounds_done(sched.max_total));
+    }
+
+    /// The tentpole determinism contract at module level: the pool path
+    /// must be bit-identical to the single-engine path, including
+    /// per-level test counts.
+    #[test]
+    fn pool_path_matches_single_engine_bitwise() {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "t",
+            n: 48,
+            m: 200,
+            topology: datasets::Topology::Grn(1.8, 6),
+            seed: 19,
+        });
+        let c = correlation_matrix(&ds.data, 1);
+        let pooled_cfg = Config {
+            variant: crate::skeleton::Variant::Reversed,
+            engine: EngineKind::Native,
+            threads: 4,
+            ..Config::default()
+        };
+        assert!(use_pool(&pooled_cfg));
+        let pooled = run(&c, ds.data.n, ds.data.m, &pooled_cfg).unwrap();
+        let single = run_native(&c, ds.data.n, ds.data.m, &pooled_cfg);
+        assert_eq!(pooled.graph.snapshot(), single.graph.snapshot());
+        assert_eq!(
+            pooled.sepsets.sorted_entries(),
+            single.sepsets.sorted_entries(),
+            "sepset contents must be thread-count invariant"
+        );
+        let stats = |r: &SkeletonResult| -> Vec<(usize, u64, usize, usize)> {
+            r.levels
+                .iter()
+                .map(|s| (s.level, s.tests, s.removed, s.edges_after))
+                .collect()
+        };
+        assert_eq!(stats(&pooled), stats(&single));
+    }
+}

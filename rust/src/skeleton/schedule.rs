@@ -1,0 +1,358 @@
+//! The algorithm-family seam: a batched skeleton schedule is a
+//! [`RoundSchedule`] strategy plugged into one generic level-loop driver,
+//! not a hand-copied level loop per variant.
+//!
+//! The driver ([`run_rounds`] / [`run_rounds_with_engine`]) owns
+//! everything PC-stable requires to stay order-independent: the
+//! level-synchronous frame (one frozen `G'` snapshot per level, removals
+//! applied between rounds), the level-0 pair sweep, the between-level
+//! [`WidthPolicy`](super::WidthPolicy) re-lease point, the stop rule and
+//! the per-level bookkeeping. A schedule only decides *which CI tests
+//! run when*:
+//!
+//! * [`begin_level`](RoundSchedule::begin_level) — build the level's task
+//!   list from the frozen snapshot (per-edge cursors, per-row cursors,
+//!   any ordering the family wants);
+//! * [`list_round`](RoundSchedule::list_round) — stage 1: emit the
+//!   round's live combination windows as [`Run`]s in the schedule's
+//!   canonical order;
+//! * [`eval_shard`](RoundSchedule::eval_shard) — stage 2 worker body:
+//!   pack a shard of those windows and evaluate it on a [`CiEngine`],
+//!   returning the independence candidates plus the shard's test count.
+//!
+//! Because evaluation is pure and the driver applies candidates in
+//! canonical slot order (stage 3), every schedule implemented on this
+//! trait is bit-deterministic and thread-count invariant *by
+//! construction* — the property `tests/conformance_engines.rs` gates.
+//!
+//! Implementations: [`gpu_e`](super::gpu_e) (cuPC-E and, through its γ
+//! knob, the two Fig. 5 baselines), [`gpu_s`](super::gpu_s) (cuPC-S),
+//! and [`reversed`](super::reversed) (reversed-order pruning,
+//! arxiv 2109.04626). The coarse-grained families
+//! ([`serial`](super::serial), [`parallel_cpu`](super::parallel_cpu))
+//! predate the batch engines and stay whole-run functions; every family,
+//! fine or coarse, is registered in [`family::FAMILIES`](super::family)
+//! so no layer outside `skeleton/` matches on [`Variant`](super::Variant)
+//! internals.
+
+use super::batch::{Corr32, EBatch, Removals};
+use super::comb::{n_sets_edge, CombRangeSkip};
+use super::engine::CiEngine;
+use super::pipeline::{use_pool, Executor, Run};
+use super::{should_continue, Config, LevelStats, SkeletonResult};
+use crate::graph::adj::AdjMatrix;
+use crate::graph::compact::CompactAdj;
+use crate::graph::sepset::SepSets;
+use crate::stats::fisher::tau;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// The frozen per-level state every stage reads: the compacted snapshot
+/// `G'`, the live adjacency (mutated only between rounds, in stage 3),
+/// the f32-packed correlations, the level and its threshold.
+pub struct LevelCtx<'a> {
+    pub comp: &'a CompactAdj,
+    pub graph: &'a AdjMatrix,
+    pub corr32: &'a Corr32,
+    pub l: usize,
+    pub taul: f64,
+}
+
+/// A batched skeleton schedule: level iteration stays with the driver,
+/// window enumeration and candidate-set construction live here. `Sync`
+/// because stage 2 shares the schedule immutably across worker threads.
+pub trait RoundSchedule: Sync {
+    /// Short name for verbose per-level progress lines.
+    fn label(&self) -> &'static str;
+
+    /// Rebuild the schedule's task list from the level's frozen
+    /// snapshot. Called once per level, before any round.
+    fn begin_level(&mut self, ctx: &LevelCtx<'_>);
+
+    /// True when round `round` is past the schedule's last window (the
+    /// driver also stops early when a round lists no live runs).
+    fn rounds_done(&self, round: u64) -> bool;
+
+    /// Stage 1 (serial): append round `round`'s live windows to `runs`
+    /// in the schedule's canonical order. The concatenation of the runs
+    /// *is* the round's canonical slot order for the apply stage.
+    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>);
+
+    /// Stage 2 (parallel worker body): pack + evaluate one shard of the
+    /// round's windows; return the independence candidates (canonical
+    /// slot order) and the number of CI tests the shard evaluated. Must
+    /// be pure with respect to shared state (it may read the frozen
+    /// graph).
+    fn eval_shard(
+        &self,
+        ctx: &LevelCtx<'_>,
+        shard: &[Run],
+        engine: &mut dyn CiEngine,
+    ) -> Result<(Removals, u64)>;
+}
+
+/// Drive a full skeleton run for `sched`, pool-or-single like every
+/// batched family: pooled native workers when the config allows
+/// ([`use_pool`]), otherwise the identical pipeline inline on the
+/// configured engine.
+pub fn run_rounds(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    sched: &mut dyn RoundSchedule,
+) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(super::degenerate_result(n));
+    }
+    if use_pool(cfg) {
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads })
+    } else {
+        let mut engine = crate::runtime::engine_from_config(cfg)?;
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()))
+    }
+}
+
+/// Single-engine entry point (tests, XLA, bench harnesses): the same
+/// driver inline — results are bit-identical to the pool path.
+pub fn run_rounds_with_engine(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    sched: &mut dyn RoundSchedule,
+    engine: &mut dyn CiEngine,
+) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(super::degenerate_result(n));
+    }
+    run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine))
+}
+
+fn run_impl(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    sched: &mut dyn RoundSchedule,
+    exec: &mut Executor<'_>,
+) -> Result<SkeletonResult> {
+    let graph = AdjMatrix::complete(n);
+    let sepsets = SepSets::new();
+    let corr32 = Corr32::from_f64(corr, n);
+    let mut levels = Vec::new();
+
+    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
+
+    let mut l = 1usize;
+    while should_continue(&graph, l, cfg) {
+        // between-level re-lease point: a hooked job asks its width
+        // policy (e.g. the batch scheduler's elastic lease) how wide to
+        // run this level — absorbing workers other jobs released. Width
+        // never changes results (ordered apply), only wall-clock time.
+        if let Some(hook) = &cfg.width_hook {
+            exec.set_width(hook.0.width_for_level(l));
+        }
+        let t = Timer::start();
+        let taul = tau(m, l, cfg.alpha);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, n);
+        let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l, taul };
+
+        sched.begin_level(&ctx);
+
+        let mut tests = 0u64;
+        let mut removed = 0usize;
+        let mut runs: Vec<Run> = Vec::new();
+        let mut round = 0u64;
+        while !sched.rounds_done(round) {
+            // stage 1 (serial): the round's live windows in the
+            // schedule's canonical order; the graph is frozen until the
+            // apply stage
+            runs.clear();
+            sched.list_round(&ctx, round, &mut runs);
+            if runs.is_empty() {
+                break; // every unexhausted window belongs to a dead task
+            }
+
+            // stage 2 (parallel): pack + evaluate, engines per shard;
+            // only independence candidates come back (dependent
+            // verdicts are no-ops and are dropped with the gather)
+            let sched_ref: &dyn RoundSchedule = &*sched;
+            let shard_results = exec.run_sharded(&runs, |shard, engine| {
+                sched_ref.eval_shard(&ctx, shard, engine)
+            })?;
+
+            // stage 3 (serial): everything in flight lands in canonical
+            // slot order before the next round
+            for (candidates, shard_tests) in &shard_results {
+                tests += shard_tests;
+                removed += candidates.apply(&graph, &sepsets);
+            }
+            round += 1;
+        }
+
+        levels.push(LevelStats {
+            level: l,
+            tests,
+            removed,
+            edges_after: graph.n_edges(),
+            seconds: t.elapsed_s(),
+        });
+        if cfg.verbose {
+            eprintln!(
+                "[{}] level {l}: {tests} tests, removed {removed}, {} edges left",
+                sched.label(),
+                graph.n_edges()
+            );
+        }
+        l += 1;
+    }
+
+    Ok(SkeletonResult { graph, sepsets, levels })
+}
+
+/// One live edge's combination cursor within a level — the per-edge task
+/// shape shared by cuPC-E, the Fig. 5 baselines and the reversed-order
+/// schedule.
+pub struct EdgeTask {
+    pub i: u32,
+    pub j: u32,
+    /// position of j inside row i of G'
+    pub p: u32,
+    /// n'_i
+    pub row_len: u32,
+    /// C(n'_i − 1, ℓ)
+    pub total: u64,
+}
+
+/// Build the level's edge-task list from `G'` (ordered pairs, row-major —
+/// the same visit order as the CUDA grid) and return it with the largest
+/// per-edge set count.
+pub fn build_edge_tasks(ctx: &LevelCtx<'_>) -> (Vec<EdgeTask>, u64) {
+    let (comp, l) = (ctx.comp, ctx.l);
+    let mut tasks: Vec<EdgeTask> = Vec::new();
+    for i in 0..comp.n() {
+        let row = comp.row(i);
+        let nr = row.len();
+        if nr < l + 1 {
+            continue; // §4.1 case I
+        }
+        let total = n_sets_edge(nr, l);
+        if total == 0 {
+            continue;
+        }
+        for (p, &j) in row.iter().enumerate() {
+            tasks.push(EdgeTask {
+                i: i as u32,
+                j,
+                p: p as u32,
+                row_len: nr as u32,
+                total,
+            });
+        }
+    }
+    let max_total = tasks.iter().map(|e| e.total).max().unwrap_or(0);
+    (tasks, max_total)
+}
+
+/// Worker body shared by the per-edge schedules: pack a shard of
+/// combination windows into engine-capacity [`EBatch`]es, evaluate them,
+/// and keep only the independence candidates (canonical slot order).
+/// Every slot of every run is evaluated, so the shard's test count is
+/// its slot count.
+pub fn eval_edge_shard(
+    tasks: &[EdgeTask],
+    ctx: &LevelCtx<'_>,
+    shard: &[Run],
+    engine: &mut dyn CiEngine,
+) -> Result<(Removals, u64)> {
+    let l = ctx.l;
+    let cap = engine.batch_e().max(1);
+    let mut out = Removals::new(l);
+    let mut tests = 0u64;
+    let mut batch = EBatch::new(l, cap);
+    let mut ids = vec![0u32; l];
+    for run in shard {
+        let task = &tasks[run.task];
+        let (i, j) = (task.i as usize, task.j as usize);
+        let row = ctx.comp.row(i);
+        tests += run.count;
+        let mut combs =
+            CombRangeSkip::new(task.row_len as usize, l, run.t0, run.count, task.p as usize);
+        while let Some(sbuf) = combs.next_comb() {
+            for (dst, &pos) in ids.iter_mut().zip(sbuf) {
+                *dst = row[pos as usize];
+            }
+            batch.push(ctx.corr32, i, j, &ids);
+            if batch.len() >= cap {
+                flush_e(&mut batch, engine, ctx.taul, &mut out)?;
+            }
+        }
+    }
+    if !batch.is_empty() {
+        flush_e(&mut batch, engine, ctx.taul, &mut out)?;
+    }
+    Ok((out, tests))
+}
+
+fn flush_e(
+    batch: &mut EBatch,
+    engine: &mut dyn CiEngine,
+    taul: f64,
+    out: &mut Removals,
+) -> Result<()> {
+    let z = engine.ci_e(batch.l, batch.len(), &batch.c_ij, &batch.m1, &batch.m2)?;
+    batch.drain_independent(&z, taul, out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ctx_fixture(n: usize, kill: &[(usize, usize)]) -> (AdjMatrix, Corr32, Vec<f64>) {
+        let graph = AdjMatrix::complete(n);
+        for &(a, b) in kill {
+            graph.remove_edge(a, b);
+        }
+        let mut corr = vec![0.1; n * n];
+        for i in 0..n {
+            corr[i * n + i] = 1.0;
+        }
+        let corr32 = Corr32::from_f64(&corr, n);
+        (graph, corr32, corr)
+    }
+
+    #[test]
+    fn edge_tasks_are_row_major_with_correct_totals() {
+        let (graph, corr32, _) = ctx_fixture(5, &[(0, 3)]);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, 5);
+        let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l: 2, taul: 1.0 };
+        let (tasks, max_total) = build_edge_tasks(&ctx);
+        // rows 0 and 3 have 3 neighbors, the rest 4; every live directed
+        // edge with nr >= l+1 contributes one task, in row-major order
+        assert_eq!(tasks.len(), 2 * graph.n_edges());
+        let mut prev = (0u32, 0u32);
+        for t in &tasks {
+            assert!((t.i, t.p) >= prev, "row-major order violated");
+            prev = (t.i, t.p);
+            assert_eq!(t.total, n_sets_edge(t.row_len as usize, 2));
+            assert_eq!(comp.row(t.i as usize)[t.p as usize], t.j);
+        }
+        assert_eq!(max_total, n_sets_edge(4, 2));
+    }
+
+    #[test]
+    fn edge_tasks_skip_short_rows() {
+        // at l = 3 a row needs at least 4 neighbors to contribute
+        let (graph, corr32, _) = ctx_fixture(5, &[(0, 3), (0, 4)]);
+        let snap = graph.snapshot();
+        let comp = CompactAdj::from_snapshot(&snap, 5);
+        let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l: 3, taul: 1.0 };
+        let (tasks, _) = build_edge_tasks(&ctx);
+        assert!(tasks.iter().all(|t| t.i != 0), "row 0 has only 2 neighbors");
+        assert!(tasks.iter().all(|t| t.row_len as usize >= 4));
+    }
+}

@@ -288,7 +288,8 @@ fn concurrent_batches_share_one_cache_dir() {
 /// A deliberately hostile between-level re-lease schedule (width
 /// zig-zags every level) must be bit-identical to a fixed-width run —
 /// the pipeline invariance that makes elastic leases a pure throughput
-/// knob. Runs both batched schedules over a scenario each.
+/// knob. Runs the batched schedules (cuPC-S, cuPC-E, reversed) over a
+/// scenario each.
 #[test]
 fn pathological_re_lease_schedules_are_bit_identical() {
     use cupc::api::pc_stable_corr;
@@ -302,7 +303,11 @@ fn pathological_re_lease_schedules_are_bit_identical() {
         }
     }
 
-    for (scenario, variant) in [("sparse-a01", Variant::CupcS), ("grn-mid", Variant::CupcE)] {
+    for (scenario, variant) in [
+        ("sparse-a01", Variant::CupcS),
+        ("grn-mid", Variant::CupcE),
+        ("grn-mid", Variant::Reversed),
+    ] {
         let sc = cupc::sim::scenarios::find(scenario).unwrap();
         let (_, data) = sc.generate_data();
         let corr = sc.corr.matrix(&data, 1);

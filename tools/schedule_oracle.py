@@ -1,0 +1,146 @@
+#!/usr/bin/env python3
+"""Schedule oracle for the reversed-order pruning family (PR 7).
+
+f64 mirror of the two batched edge schedules over the dense conformance
+grid points, predicting the exact per-level CI-test counts the Rust
+engines must report (safe because margin_oracle shows min |z - tau| >>
+f32 rounding over the whole grid, so the f64 mirror reaches the same
+independence decisions as the f32 packed kernels):
+
+* cuPC-E (gamma = 32, the paper-selected config `sc.config()` uses):
+  per directed live edge, windows of gamma combination indices in
+  ascending order, removals applied at round end;
+* reversed-order pruning (arxiv 2109.04626 adapted to PC-stable's
+  level-synchronous frame): flight size 1, combination indices walked in
+  DESCENDING order, densest rows first, removals applied at round end.
+
+Both must produce the identical skeleton (PC-stable order-independence);
+the reversed schedule must spend strictly fewer total tests on at least
+one dense point — the conformance gate
+`tests/conformance_engines.rs::reversed_order_spends_fewer_tests_than_cupc_e`
+asserts exactly what this oracle prints.
+"""
+import math
+from itertools import combinations
+
+from margin_oracle import Pcg, random_er, sem_sample, correlation, phi_inv, \
+    fisher_z, partial_corr
+
+GAMMA = 32  # Config::default().gamma — sc.config() keeps it
+
+
+def gen_point(n, m, d, seed):
+    parents = random_er(n, d, Pcg(seed, 1))
+    x = sem_sample(parents, n, m, Pcg(seed, 2))
+    return correlation(x)
+
+
+def level0(c, n, m, alpha):
+    """Exhaustive pair sweep shared by every schedule."""
+    adj = [[i != j for j in range(n)] for i in range(n)]
+    tau0 = phi_inv(1.0 - alpha / 2.0) / math.sqrt(m - 3)
+    tests = n * (n - 1) // 2
+    for i in range(n):
+        for j in range(i + 1, n):
+            if fisher_z(c[i, j]) <= tau0:
+                adj[i][j] = adj[j][i] = False
+    return adj, tests
+
+
+def max_degree(adj):
+    return max(sum(r) for r in adj)
+
+
+def should_continue(adj, l, cap):
+    if cap is not None and l > cap:
+        return False
+    return max_degree(adj) > l
+
+
+def edge_tasks(adj, n, l):
+    """Directed live edges with enough neighbors: (i, j, p, row, total)."""
+    tasks = []
+    for i in range(n):
+        row = [j for j in range(n) if adj[i][j]]
+        nr = len(row)
+        if nr < l + 1:
+            continue
+        total = math.comb(nr - 1, l)
+        if total == 0:
+            continue
+        for p, j in enumerate(row):
+            tasks.append((i, j, p, row, total))
+    return tasks
+
+
+def run_schedule(c, n, m, alpha, cap, reversed_order):
+    """One batched edge schedule; returns (adj, total_tests, per_level)."""
+    adj, tests0 = level0(c, n, m, alpha)
+    total_tests = tests0
+    per_level = [tests0]
+    flight = 1 if reversed_order else GAMMA
+    l = 1
+    while should_continue(adj, l, cap):
+        dof = m - l - 3
+        taul = phi_inv(1.0 - alpha / 2.0) / math.sqrt(dof)
+        tasks = edge_tasks(adj, n, l)
+        if reversed_order:
+            # densest-first, stable (ties keep row-major construction order)
+            tasks.sort(key=lambda t: -len(t[3]))
+        ltests = 0
+        rnd = 0
+        max_total = max((t[4] for t in tasks), default=0)
+        while rnd * flight < max_total:
+            removals = []
+            any_run = False
+            for (i, j, p, row, total) in tasks:
+                if rnd * flight >= total:
+                    continue
+                if not adj[i][j]:
+                    continue
+                any_run = True
+                if reversed_order:
+                    window = [total - 1 - rnd]   # descending, one in flight
+                else:
+                    lo = rnd * flight
+                    window = range(lo, min(lo + flight, total))
+                pool = [x for x in range(len(row)) if x != p]
+                for t in window:
+                    ltests += 1
+                    s_pos = list(combinations(pool, l))[t]
+                    s = [row[x] for x in s_pos]
+                    if fisher_z(partial_corr(c, i, j, s)) <= taul:
+                        removals.append((min(i, j), max(i, j)))
+            if not any_run:
+                break
+            for (a, b) in removals:
+                adj[a][b] = adj[b][a] = False
+            rnd += 1
+        total_tests += ltests
+        per_level.append(ltests)
+        l += 1
+    return adj, total_tests, per_level
+
+
+DENSE = [
+    ("dense-cap2", 24, 300, 0.30, 0.01, 2, 905),
+    ("dense-a05-cap2", 24, 300, 0.30, 0.05, 2, 906),
+    ("dense-cap3", 20, 500, 0.35, 0.01, 3, 909),
+]
+
+if __name__ == "__main__":
+    fewer = 0
+    for (name, n, m, d, alpha, cap, seed) in DENSE:
+        c = gen_point(n, m, d, seed)
+        adj_e, te, lv_e = run_schedule(c, n, m, alpha, cap, reversed_order=False)
+        adj_r, tr, lv_r = run_schedule(c, n, m, alpha, cap, reversed_order=True)
+        assert adj_e == adj_r, f"{name}: schedules disagree on the skeleton"
+        edges = sum(sum(r) for r in adj_e) // 2
+        mark = "REVERSED FEWER" if tr < te else "no saving"
+        if tr < te:
+            fewer += 1
+        print(f"{name:16s} edges={edges:3d}  cupc-e(g=32)={te:6d} {lv_e}  "
+              f"reversed={tr:6d} {lv_r}  -> {mark}")
+    print(f"\nreversed strictly fewer on {fewer}/{len(DENSE)} dense points")
+    assert fewer >= 1, "the conformance gate's premise does not hold!"
+    print("OK: gate premise holds")
