@@ -1,11 +1,13 @@
 //! `cargo bench --bench engines` — the tracked ns/test baseline for the
 //! CI-test kernels (the promoted `micro` probe that used to hide in
-//! `skeleton/engine.rs`), the threads=1 vs threads=N speedup of the
-//! parallel pack→evaluate→apply pipeline on the Table-2 minis, the
-//! orientation pipeline (ns/triple for v-structures + Meek and ns/test
-//! for the majority census, threads 1 vs N), and the batch-runner
-//! throughput (jobs/sec over the scenario grid at job-threads 1 vs N,
-//! cold cache each rep).
+//! `skeleton/engine.rs`), the dense vs sparse adjacency store on a
+//! sparse ER skeleton (ns/test end to end, same result bit for bit),
+//! the threads=1 vs threads=N speedup of the parallel
+//! pack→evaluate→apply pipeline on the Table-2 minis, the orientation
+//! pipeline (ns/triple for v-structures + Meek and ns/test for the
+//! majority census, threads 1 vs N), and the batch-runner throughput
+//! (jobs/sec over the scenario grid at job-threads 1 vs N, cold cache
+//! each rep).
 //!
 //! Writes `BENCH_engines.json` (override with `-- --out path`) so
 //! packing/engine/scheduler changes have a tracked baseline to diff
@@ -21,7 +23,8 @@ use cupc::sim::batches::{random_batch, random_s_batch};
 use cupc::sim::{datasets, scenarios};
 use cupc::skeleton::engine::{CiEngine, NativeEngine};
 use cupc::skeleton::{
-    available_threads, run as run_skeleton, Config, EngineKind, OrientRule, Variant,
+    available_threads, run as run_skeleton, AdjMode, Config, EngineKind, OocConfig, OrientRule,
+    Variant,
 };
 use cupc::stats::corr::correlation_matrix;
 use cupc::util::cli::{bench_argv, Args};
@@ -33,6 +36,14 @@ struct KernelRow {
     l: usize,
     batch: usize,
     ns_per_test: f64,
+}
+
+struct AdjacencyRow {
+    adjacency: &'static str,
+    n: usize,
+    edges: usize,
+    tests: u64,
+    secs: f64,
 }
 
 struct PipelineRow {
@@ -119,6 +130,65 @@ fn main() -> anyhow::Result<()> {
     for r in &kernels {
         println!("{:<8} {:>3} {:>7} {:>12.1}", r.kernel, r.l, r.batch, r.ns_per_test);
     }
+
+    // ── dense vs sparse adjacency store on a sparse ER skeleton ─────
+    // Both runs produce the bit-identical skeleton (gated by
+    // tests/oocore_conformance.rs); this row tracks what the CSR store
+    // costs/saves per CI test relative to the n×n bitset.
+    let adjacency = {
+        let ds = datasets::generate(&datasets::DatasetSpec {
+            name: "adjacency-bench",
+            n: 1536,
+            m: 256,
+            topology: datasets::Topology::Er(4.0 / 1536.0),
+            seed: 7002,
+        });
+        let corr = correlation_matrix(&ds.data, threads);
+        let mut rows: Vec<AdjacencyRow> = Vec::new();
+        for (label, mode) in [("dense", AdjMode::Dense), ("sparse", AdjMode::Sparse)] {
+            let cfg = Config {
+                variant: Variant::CupcS,
+                engine: EngineKind::Native,
+                threads,
+                ooc: OocConfig { adjacency: mode, ..OocConfig::default() },
+                ..Config::default()
+            };
+            let mut times = Vec::new();
+            let mut tests = 0u64;
+            let mut edges = 0usize;
+            for _ in 0..reps.max(1) {
+                let res = run_skeleton(&corr, ds.data.n, ds.data.m, &cfg)?;
+                assert_eq!(res.ooc.adjacency, label, "forced mode must be honored");
+                tests = res.levels.iter().map(|l| l.tests).sum();
+                edges = res.graph.n_edges();
+                times.push(res.total_seconds());
+            }
+            rows.push(AdjacencyRow {
+                adjacency: label,
+                n: ds.data.n,
+                edges,
+                tests,
+                secs: median(&times),
+            });
+        }
+        println!("\n== adjacency store: dense vs sparse (n=1536 ER, cupc-s) ==");
+        println!(
+            "{:<8} {:>6} {:>8} {:>10} {:>10} {:>12}",
+            "store", "n", "edges", "tests", "secs", "ns/test"
+        );
+        for r in &rows {
+            println!(
+                "{:<8} {:>6} {:>8} {:>10} {:>10.4} {:>12.1}",
+                r.adjacency,
+                r.n,
+                r.edges,
+                r.tests,
+                r.secs,
+                r.secs * 1e9 / r.tests.max(1) as f64
+            );
+        }
+        rows
+    };
 
     // ── pipeline speedup on the Table-2 minis ───────────────────────
     let names: Vec<&str> = if args.has_flag("full") {
@@ -321,25 +391,27 @@ fn main() -> anyhow::Result<()> {
         secs_jt1 / secs_jtn.max(1e-12)
     );
 
-    write_json(&out, reps, threads, &kernels, &pipeline, &orientation, &batch)?;
+    write_json(&out, reps, threads, &kernels, &adjacency, &pipeline, &orientation, &batch)?;
     println!("\nwrote {out}");
     Ok(())
 }
 
 /// Hand-rolled JSON (serde is unavailable offline); schema is consumed
 /// by humans and diff tools only.
+#[allow(clippy::too_many_arguments)]
 fn write_json(
     path: &str,
     reps: usize,
     threads: usize,
     kernels: &[KernelRow],
+    adjacency: &[AdjacencyRow],
     pipeline: &[PipelineRow],
     orientation: &[OrientRowBench],
     batch: &BatchRow,
 ) -> anyhow::Result<()> {
     let mut j = String::new();
     j.push_str("{\n");
-    j.push_str("  \"schema\": \"cupc-bench-engines/v3\",\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v4\",\n");
     j.push_str(&format!("  \"reps\": {reps},\n"));
     j.push_str(&format!("  \"threads\": {threads},\n"));
     j.push_str("  \"kernels\": [\n");
@@ -348,6 +420,21 @@ fn write_json(
         j.push_str(&format!(
             "    {{\"kernel\": \"{}\", \"l\": {}, \"batch\": {}, \"ns_per_test\": {:.2}}}{sep}\n",
             r.kernel, r.l, r.batch, r.ns_per_test
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"adjacency\": [\n");
+    for (i, r) in adjacency.iter().enumerate() {
+        let sep = if i + 1 < adjacency.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"adjacency\": \"{}\", \"n\": {}, \"edges\": {}, \"tests\": {}, \
+             \"seconds\": {:.6}, \"ns_per_test\": {:.2}}}{sep}\n",
+            r.adjacency,
+            r.n,
+            r.edges,
+            r.tests,
+            r.secs,
+            r.secs * 1e9 / r.tests.max(1) as f64
         ));
     }
     j.push_str("  ],\n");

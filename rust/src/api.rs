@@ -56,6 +56,19 @@ pub fn pc_stable_data(data: &DataMatrix, cfg: &Config) -> Result<PcResult> {
 /// every other deterministic field are bit-identical for any width.
 pub fn pc_stable_corr(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<PcResult> {
     let skel = skeleton::run(corr, n, m, cfg)?;
+    finish_orientation(corr, m, cfg, skel)
+}
+
+/// Orient an already-computed skeleton into the full [`PcResult`] — the
+/// tail of [`pc_stable_corr`], split out so callers that produce the
+/// skeleton elsewhere (the `cupc shard` coordinator, whose skeleton
+/// came through the cross-process driver) finish identically.
+pub fn finish_orientation(
+    corr: &[f64],
+    m: usize,
+    cfg: &Config,
+    skel: SkeletonResult,
+) -> Result<PcResult> {
     let t = crate::util::timer::Timer::start();
     // orientation evaluates on pooled native workers regardless of the
     // skeleton engine (the paper keeps orientation CPU-side; engines

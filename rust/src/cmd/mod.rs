@@ -6,6 +6,7 @@ pub mod engines;
 pub mod experiment;
 pub mod run;
 pub mod serve;
+pub mod shard;
 pub mod simulate;
 
 use anyhow::{bail, Result};
@@ -16,6 +17,7 @@ pub fn dispatch(args: &Args) -> Result<()> {
         Some("run") => run::main(args),
         Some("batch") => batch::main(args),
         Some("serve") => serve::main(args),
+        Some("shard") => shard::main(args),
         Some("client") => client::main(args),
         Some("simulate") => simulate::main(args),
         Some("experiment") => experiment::main(args),
@@ -39,6 +41,10 @@ USAGE:
   cupc batch --manifest jobs.json [--out results.jsonl] [--stats FILE]
            [--job-threads J] [--threads N] [--cache-mb 256]
            [--cache-dir DIR] [--cache-disk-mb 1024] [--verbose]
+  cupc shard --manifest jobs.json --workers K --store DIR
+           [--out results.jsonl] [--stats FILE] [--threads N]
+           [--adjacency auto|dense|sparse] [--window-runs R]
+           [--window-slots S]
   cupc serve [--addr 127.0.0.1:7717] [--threads N] [--cache-mb 256]
            [--cache-dir DIR] [--cache-disk-mb 1024] [--max-conns 16]
            [--max-queued-jobs 64] [--idle-timeout-s 300]

@@ -1,0 +1,223 @@
+//! `cupc shard` — run ONE manifest job with its skeleton split across
+//! worker processes.
+//!
+//! The coordinator resolves the data source, computes the correlation
+//! matrix once, publishes it plus a [`ShardPlan`] into the shared
+//! `--store` directory, spawns `--workers − 1` copies of this binary in
+//! the (internal) worker role, and participates itself as rank 0. Ranks
+//! synchronize per skeleton round through
+//! [`cupc::oocore::exchange::DiskExchange`] blobs in the same directory;
+//! every rank applies the identical merged removal stream, so every
+//! rank — and in particular rank 0 — finishes with the bit-identical
+//! skeleton a single-process run produces. The coordinator then orients
+//! and writes the same `results.jsonl` line `cupc batch` would
+//! (`tests/oocore_conformance.rs` and the CI oocore-smoke job compare
+//! them byte for byte).
+//!
+//! The store directory is the only coupling between ranks: it must be
+//! shared (same filesystem) and writable by all of them.
+
+use anyhow::{bail, ensure, Context, Result};
+use cupc::api::finish_orientation;
+use cupc::oocore::shard::{
+    format_plan_key, parse_plan_key, publish_plan, run_skeleton_sharded, ShardPlan,
+};
+use cupc::service::report::{result_line, stats_line, JobReport};
+use cupc::service::scheduler::load_data;
+use cupc::service::{cache, CacheOutcome, DiskStore, JobResultCore, Manifest};
+use cupc::skeleton::{available_threads, family, AdjMode};
+use cupc::util::cli::Args;
+use cupc::util::timer::Timer;
+use std::path::{Path, PathBuf};
+use std::process::Command;
+use std::sync::Arc;
+
+pub fn main(args: &Args) -> Result<()> {
+    if args.get("role") == Some("worker") {
+        worker(args)
+    } else {
+        coordinator(args)
+    }
+}
+
+fn parse_adj(s: &str) -> Result<AdjMode> {
+    match s.to_ascii_lowercase().as_str() {
+        "auto" => Ok(AdjMode::Auto),
+        "dense" => Ok(AdjMode::Dense),
+        "sparse" => Ok(AdjMode::Sparse),
+        other => bail!("--adjacency must be auto|dense|sparse, got {other:?}"),
+    }
+}
+
+fn coordinator(args: &Args) -> Result<()> {
+    let manifest_path = args
+        .get("manifest")
+        .context("--manifest <jobs.json> required")?;
+    let store_dir = PathBuf::from(
+        args.get("store")
+            .context("--store <DIR> required (the directory ranks exchange through)")?,
+    );
+    let world = args.get_usize("workers", 2)?;
+    ensure!(world >= 1, "--workers must be >= 1");
+    let out = args.get_or("out", "results.jsonl");
+    let threads = args.get_usize("threads", available_threads())?;
+
+    let manifest = Manifest::load(Path::new(manifest_path))?;
+    ensure!(
+        manifest.jobs.len() == 1,
+        "cupc shard runs exactly one job per invocation; the manifest has {} \
+         (split it, or use cupc batch)",
+        manifest.jobs.len()
+    );
+    let spec = &manifest.jobs[0];
+    let fam = family::of(spec.variant);
+    ensure!(
+        fam.schedule.is_some(),
+        "variant {} has no batched schedule and cannot be sharded \
+         (pick one of the cupc-e/cupc-s/baseline/reversed families)",
+        fam.name
+    );
+
+    let mut cfg = spec.config(threads);
+    if let Some(s) = args.get("adjacency") {
+        cfg.ooc.adjacency = parse_adj(s)?;
+    }
+    cfg.ooc.window_runs = args.get_usize("window-runs", cfg.ooc.window_runs)?.max(1);
+    cfg.ooc.window_slots = args.get_u64("window-slots", cfg.ooc.window_slots)?.max(1);
+
+    let t = Timer::start();
+    let data = load_data(spec).with_context(|| format!("job {:?}", spec.name))?;
+    let seconds_load = t.elapsed_s();
+    let t = Timer::start();
+    let corr = spec.corr.matrix(&data, threads);
+    let seconds_corr = t.elapsed_s();
+
+    // the store doubles as the exchange medium: open it un-evictable so
+    // a byte budget can never tear a round barrier mid-run
+    let store = DiskStore::open(&store_dir, u64::MAX)?;
+    let dk = cache::data_key(&data, spec.corr);
+    store.put_corr(dk, &corr);
+    ensure!(
+        store.get_corr(dk, data.n * data.n).is_some(),
+        "could not persist the correlation matrix in {} (puts are \
+         best-effort; workers would starve)",
+        store_dir.display()
+    );
+    let plan = ShardPlan::new(data.n, data.m, dk, &cfg, world);
+    let key = publish_plan(&store, &plan)?;
+    eprintln!(
+        "shard: job {:?} n={} m={} world={} plan={}",
+        spec.name,
+        data.n,
+        data.m,
+        world,
+        format_plan_key(key)
+    );
+
+    let exe = std::env::current_exe().context("resolving the cupc binary for workers")?;
+    let mut children = Vec::new();
+    for rank in 1..world {
+        let child = Command::new(&exe)
+            .arg("shard")
+            .arg("--role")
+            .arg("worker")
+            .arg("--store")
+            .arg(&store_dir)
+            .arg("--plan")
+            .arg(format_plan_key(key))
+            .arg("--rank")
+            .arg(rank.to_string())
+            .spawn()
+            .with_context(|| format!("spawning shard worker rank {rank}"))?;
+        children.push((rank, child));
+    }
+
+    let t = Timer::start();
+    let r0 = run_skeleton_sharded(store, key, 0, None);
+    if r0.is_err() {
+        // rank 0 died; don't leave workers polling for up to the
+        // exchange timeout
+        for (_, child) in &mut children {
+            let _ = child.kill();
+        }
+    }
+    let mut failures = Vec::new();
+    for (rank, mut child) in children {
+        match child.wait() {
+            Ok(status) if status.success() => {}
+            Ok(status) => failures.push(format!("rank {rank} exited with {status}")),
+            Err(e) => failures.push(format!("rank {rank} could not be reaped: {e}")),
+        }
+    }
+    let (_, skel) = r0?;
+    ensure!(failures.is_empty(), "worker failure(s): {}", failures.join("; "));
+    let ooc = skel.ooc;
+
+    let res = finish_orientation(&corr, data.m, &cfg, skel)
+        .with_context(|| format!("job {:?}", spec.name))?;
+    let seconds_run = t.elapsed_s();
+    let core = JobResultCore::from_pc(&res, data.n, data.m);
+
+    std::fs::write(&out, format!("{}\n", result_line(spec, &core)))
+        .with_context(|| format!("writing {out}"))?;
+    if let Some(stats_path) = args.get("stats") {
+        let rep = JobReport {
+            core: Arc::new(core.clone()),
+            seconds_load,
+            seconds_corr,
+            seconds_run,
+            // a sharded run always computes fresh (results are identical
+            // to the cached single-process bytes anyway)
+            corr_cache: CacheOutcome::Miss,
+            result_cache: CacheOutcome::Miss,
+            threads_used: threads,
+            threads_peak: threads,
+            adjacency: ooc.adjacency,
+            peak_window_bytes: ooc.peak_window_bytes,
+        };
+        std::fs::write(stats_path, format!("{}\n", stats_line(spec, &rep)))
+            .with_context(|| format!("writing {stats_path}"))?;
+    }
+    println!(
+        "{:<24} {:<9} n={:<5} edges={:<6} world={} adjacency={} peak_window_bytes={} {:.3}s",
+        spec.name,
+        spec.variant_name(),
+        core.n,
+        core.skeleton_edges.len(),
+        world,
+        ooc.adjacency,
+        ooc.peak_window_bytes,
+        seconds_load + seconds_corr + seconds_run
+    );
+    println!("wrote {out}");
+    Ok(())
+}
+
+/// The internal worker role (`--role worker`): join the exchange as the
+/// given rank, run the sharded skeleton to completion, and exit. The
+/// skeleton result itself stays in this process — correctness is
+/// enforced by the exchange protocol (every rank applies the identical
+/// removal stream), not by shipping graphs back.
+fn worker(args: &Args) -> Result<()> {
+    let store_dir = args
+        .get("store")
+        .context("--store <DIR> required for the worker role")?;
+    let plan_hex = args
+        .get("plan")
+        .context("--plan <HEX> required for the worker role")?;
+    let rank: usize = args
+        .get("rank")
+        .context("--rank <R> required for the worker role")?
+        .parse()
+        .context("--rank must be a non-negative integer")?;
+    let store = DiskStore::open(Path::new(store_dir), u64::MAX)?;
+    let key = parse_plan_key(plan_hex)?;
+    let (plan, skel) = run_skeleton_sharded(store, key, rank, None)?;
+    eprintln!(
+        "shard worker rank {rank}/{}: {} edges, adjacency {}",
+        plan.world,
+        skel.graph.n_edges(),
+        skel.ooc.adjacency
+    );
+    Ok(())
+}

@@ -8,9 +8,25 @@
 
 use std::sync::atomic::{AtomicU8, Ordering};
 
+/// The one mutation the skeleton's apply stage needs from an adjacency
+/// representation: symmetric monotone edge removal with a first-win
+/// answer. Implemented by the dense [`AdjMatrix`], the out-of-core
+/// [`crate::oocore::sparse::SparseAdj`], and the [`crate::oocore::sparse::Adj`]
+/// dispatch enum, so `Removals::apply` works on any of them.
+pub trait EdgeRemove {
+    /// Remove (i,j) symmetrically; true iff this call removed it.
+    fn remove_edge(&self, i: usize, j: usize) -> bool;
+}
+
 pub struct AdjMatrix {
     n: usize,
     a: Vec<AtomicU8>,
+}
+
+impl EdgeRemove for AdjMatrix {
+    fn remove_edge(&self, i: usize, j: usize) -> bool {
+        AdjMatrix::remove_edge(self, i, j)
+    }
 }
 
 impl AdjMatrix {

@@ -35,6 +35,18 @@ impl CompactAdj {
         CompactAdj { n, items, offsets }
     }
 
+    /// Build directly from CSR parts — the out-of-core sparse adjacency
+    /// compacts its live neighbor lists straight into this form without
+    /// ever materializing the O(n²) dense snapshot. Rows must be sorted
+    /// ascending and `offsets` must have length n+1 with `offsets[0]==0`
+    /// and `offsets[n]==items.len()` (debug-asserted).
+    pub fn from_parts(n: usize, items: Vec<u32>, offsets: Vec<u32>) -> Self {
+        debug_assert_eq!(offsets.len(), n + 1);
+        debug_assert_eq!(offsets.first().copied(), Some(0));
+        debug_assert_eq!(offsets.last().copied(), Some(items.len() as u32));
+        CompactAdj { n, items, offsets }
+    }
+
     #[inline]
     pub fn n(&self) -> usize {
         self.n

@@ -6,12 +6,53 @@
 //! Concurrent writers are fine: each (i,j) is written at most once per
 //! run because only the thread that *wins* the edge removal stores S
 //! (matching the paper's "store S in SepSet" right after removal).
+//!
+//! # Level-0 complement representation
+//!
+//! At level 0 every removed pair is separated by the *empty* set. For a
+//! sparse graph at large n that is almost all of the n(n−1)/2 pairs —
+//! storing each as a `HashMap` entry holding an empty `Vec` costs
+//! gigabytes at n = 10 000 and is the single largest memory term of a
+//! big run. The out-of-core path therefore records level 0 as its
+//! **complement**: the (small) sorted list of pairs that *survived*,
+//! via [`SepSets::store_empty_complement`]. Every read path —
+//! [`SepSets::get`], [`SepSets::contains`], [`SepSets::len`],
+//! [`SepSets::sorted_entries`] — answers exactly as if each removed
+//! pair had been stored with an explicit empty set, so the two
+//! representations are observationally interchangeable (pinned by the
+//! tests below and by `tests/oocore_conformance.rs`).
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
+struct Level0Complement {
+    n: usize,
+    /// sorted (i, j) with i < j: the pairs that SURVIVED level 0
+    survivors: Vec<(u32, u32)>,
+}
+
+impl Level0Complement {
+    /// True iff `key` is a pair this complement declares removed at
+    /// level 0 (i.e. a valid i<j pair absent from the survivor list).
+    fn covered(&self, key: (u32, u32)) -> bool {
+        key.0 < key.1
+            && (key.1 as usize) < self.n
+            && self.survivors.binary_search(&key).is_err()
+    }
+
+    /// Number of pairs the complement represents.
+    fn removed_pairs(&self) -> usize {
+        self.n * (self.n - 1) / 2 - self.survivors.len()
+    }
+}
+
+struct Inner {
+    map: HashMap<(u32, u32), Vec<u32>>,
+    level0: Option<Level0Complement>,
+}
+
 pub struct SepSets {
-    inner: Mutex<HashMap<(u32, u32), Vec<u32>>>,
+    inner: Mutex<Inner>,
 }
 
 impl Default for SepSets {
@@ -23,7 +64,10 @@ impl Default for SepSets {
 impl SepSets {
     pub fn new() -> Self {
         SepSets {
-            inner: Mutex::new(HashMap::new()),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                level0: None,
+            }),
         }
     }
 
@@ -32,37 +76,78 @@ impl SepSets {
         (a as u32, b as u32)
     }
 
-    /// Record S for the removed edge (i,j). First write wins.
-    pub fn store(&self, i: usize, j: usize, s: &[u32]) {
+    /// Record level 0 by complement: every valid pair NOT in
+    /// `survivors` (sorted, i < j) reads back as separated by the empty
+    /// set. Must be called before any explicit store for those pairs —
+    /// the out-of-core driver calls it once, right after the level-0
+    /// sweep, before any deeper level runs.
+    pub fn store_empty_complement(&self, n: usize, survivors: Vec<(u32, u32)>) {
+        debug_assert!(survivors.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
         let mut g = self.inner.lock().unwrap();
-        g.entry(Self::key(i, j)).or_insert_with(|| s.to_vec());
+        debug_assert!(g.level0.is_none(), "complement stored once per run");
+        g.level0 = Some(Level0Complement { n, survivors });
+    }
+
+    /// Record S for the removed edge (i,j). First write wins — a pair
+    /// already covered by the level-0 complement is a no-op, exactly as
+    /// if its empty set had been stored explicitly first.
+    pub fn store(&self, i: usize, j: usize, s: &[u32]) {
+        let key = Self::key(i, j);
+        let mut g = self.inner.lock().unwrap();
+        if g.level0.as_ref().is_some_and(|c| c.covered(key)) {
+            return;
+        }
+        g.map.entry(key).or_insert_with(|| s.to_vec());
     }
 
     pub fn get(&self, i: usize, j: usize) -> Option<Vec<u32>> {
-        self.inner.lock().unwrap().get(&Self::key(i, j)).cloned()
+        let key = Self::key(i, j);
+        let g = self.inner.lock().unwrap();
+        if let Some(s) = g.map.get(&key) {
+            return Some(s.clone());
+        }
+        if g.level0.as_ref().is_some_and(|c| c.covered(key)) {
+            return Some(Vec::new());
+        }
+        None
     }
 
     pub fn contains(&self, i: usize, j: usize, k: usize) -> bool {
+        // complement pairs hold the empty set, which contains nothing,
+        // so only the explicit map can answer true
         self.inner
             .lock()
             .unwrap()
+            .map
             .get(&Self::key(i, j))
             .map(|s| s.contains(&(k as u32)))
             .unwrap_or(false)
     }
 
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
+        let g = self.inner.lock().unwrap();
+        g.map.len() + g.level0.as_ref().map_or(0, |c| c.removed_pairs())
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Deterministic dump sorted by key (for tests / golden comparisons).
+    /// Deterministic dump sorted by key (for tests / golden
+    /// comparisons). Materializes any complement pairs, so this is
+    /// O(n²) under the out-of-core representation — test-sized use only.
     pub fn sorted_entries(&self) -> Vec<((u32, u32), Vec<u32>)> {
         let g = self.inner.lock().unwrap();
-        let mut v: Vec<_> = g.iter().map(|(k, s)| (*k, s.clone())).collect();
+        let mut v: Vec<_> = g.map.iter().map(|(k, s)| (*k, s.clone())).collect();
+        if let Some(c) = &g.level0 {
+            for i in 0..c.n as u32 {
+                for j in (i + 1)..c.n as u32 {
+                    if c.covered((i, j)) {
+                        v.push(((i, j), Vec::new()));
+                    }
+                }
+            }
+        }
         v.sort();
         v
     }
@@ -114,5 +199,60 @@ mod tests {
         let e = s.sorted_entries();
         assert_eq!(e[0].0, (1, 3));
         assert_eq!(e[1].0, (2, 5));
+    }
+
+    /// The complement representation must be observationally identical
+    /// to storing every removed pair with an explicit empty set.
+    #[test]
+    fn complement_matches_explicit_empty_stores() {
+        let n = 6usize;
+        // survivors of a fictional level 0
+        let survivors = vec![(0u32, 2u32), (1, 4), (3, 5)];
+        let dense = SepSets::new();
+        for i in 0..n {
+            for j in (i + 1)..n {
+                if !survivors.contains(&(i as u32, j as u32)) {
+                    dense.store(i, j, &[]);
+                }
+            }
+        }
+        let sparse = SepSets::new();
+        sparse.store_empty_complement(n, survivors.clone());
+
+        assert_eq!(dense.len(), sparse.len());
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                assert_eq!(dense.get(i, j), sparse.get(i, j), "get({i},{j})");
+                for k in 0..n {
+                    assert_eq!(
+                        dense.contains(i, j, k),
+                        sparse.contains(i, j, k),
+                        "contains({i},{j},{k})"
+                    );
+                }
+            }
+        }
+        assert_eq!(dense.sorted_entries(), sparse.sorted_entries());
+    }
+
+    /// Later-level stores layer identically over either representation:
+    /// a covered pair's store is a no-op (first-write-wins with the
+    /// level-0 empty set) and a survivor's store lands in the map.
+    #[test]
+    fn complement_respects_first_write_wins() {
+        let sparse = SepSets::new();
+        sparse.store_empty_complement(4, vec![(0, 1), (2, 3)]);
+        // (0,2) was removed at level 0: storing again must not override
+        sparse.store(0, 2, &[9]);
+        assert_eq!(sparse.get(0, 2), Some(vec![]));
+        // (2,3) survived: a later-level store is the first write
+        sparse.store(2, 3, &[0]);
+        assert_eq!(sparse.get(2, 3), Some(vec![0]));
+        assert!(sparse.contains(2, 3, 0));
+        // (0,1) survived to the end: never separated
+        assert_eq!(sparse.get(0, 1), None);
     }
 }

@@ -25,6 +25,7 @@ pub mod data;
 pub mod experiments;
 pub mod graph;
 pub mod metrics;
+pub mod oocore;
 pub mod orient;
 pub mod runtime;
 pub mod service;

@@ -1,0 +1,358 @@
+//! Cross-process round merging for `cupc shard`: ranks trade per-chunk
+//! results through rename-atomic [`DiskStore`] entries.
+//!
+//! The driver owns chunks round-robin (`seq % world == rank`) and every
+//! rank must apply the *complete* round in canonical chunk order before
+//! the next round starts — that is the whole determinism argument. The
+//! [`DiskExchange`] is that barrier: each rank writes one blob holding
+//! its owned chunks for the round (an empty blob when it owns none —
+//! presence is the signal), then polls for every other rank's blob.
+//! `DiskStore` writes are temp + fsync + rename, so a blob is either
+//! absent or complete; no locking, no sockets, and the store directory
+//! doubles as the job's mailbox (workers on a shared filesystem work).
+//!
+//! Blob keys are content-hashed from (plan key, level, round, rank), so
+//! one store can host many plans and a re-run of the same plan *reuses*
+//! stale blobs only if the plan key is identical — which by
+//! construction means the same bytes would be produced anyway. Blobs
+//! are never deleted mid-run (a slow rank may still need round r − 1);
+//! the coordinator removes the store directory when the job is done.
+//!
+//! Payload codecs live here too: level-0 survivor pair lists and the
+//! per-chunk `(tests, Removals)` payloads for deeper levels. Both are
+//! fixed little-endian layouts validated on decode — a truncated or
+//! alien blob is an error, never a silent wrong merge.
+
+use crate::service::cache::{ContentHasher, Key};
+use crate::service::store::DiskStore;
+use crate::skeleton::batch::Removals;
+use anyhow::{bail, Context, Result};
+use std::time::{Duration, Instant};
+
+/// Encode a level-0 survivor (or candidate) pair list: `u32` count,
+/// then `(u32 i, u32 j)` per pair, little-endian.
+pub fn encode_pairs(pairs: &[(u32, u32)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(4 + pairs.len() * 8);
+    out.extend_from_slice(&(pairs.len() as u32).to_le_bytes());
+    for &(i, j) in pairs {
+        out.extend_from_slice(&i.to_le_bytes());
+        out.extend_from_slice(&j.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`encode_pairs`]; rejects any size mismatch.
+pub fn decode_pairs(b: &[u8]) -> Result<Vec<(u32, u32)>> {
+    if b.len() < 4 {
+        bail!("pair blob truncated: {} bytes", b.len());
+    }
+    let len = u32::from_le_bytes(b[0..4].try_into().unwrap()) as usize;
+    if b.len() != 4 + len * 8 {
+        bail!("pair blob size mismatch: {} bytes for {len} pairs", b.len());
+    }
+    let mut out = Vec::with_capacity(len);
+    for c in b[4..].chunks_exact(8) {
+        out.push((
+            u32::from_le_bytes(c[0..4].try_into().unwrap()),
+            u32::from_le_bytes(c[4..8].try_into().unwrap()),
+        ));
+    }
+    Ok(out)
+}
+
+/// Encode one level-≥1 chunk result: `u64` test count, then the
+/// [`Removals`] wire format.
+pub fn encode_level_chunk(r: &Removals, tests: u64) -> Vec<u8> {
+    let body = r.to_bytes();
+    let mut out = Vec::with_capacity(8 + body.len());
+    out.extend_from_slice(&tests.to_le_bytes());
+    out.extend_from_slice(&body);
+    out
+}
+
+/// Inverse of [`encode_level_chunk`].
+pub fn decode_level_chunk(b: &[u8]) -> Result<(Removals, u64)> {
+    if b.len() < 8 {
+        bail!("chunk blob truncated: {} bytes", b.len());
+    }
+    let tests = u64::from_le_bytes(b[0..8].try_into().unwrap());
+    let r = Removals::from_bytes(&b[8..])?;
+    Ok((r, tests))
+}
+
+/// One rank's handle on the per-round barrier. Constructed per worker
+/// process (or per thread in the in-process conformance harness) over a
+/// store directory shared by all ranks of the plan.
+pub struct DiskExchange {
+    store: DiskStore,
+    plan_key: Key,
+    rank: usize,
+    world: usize,
+    poll: Duration,
+    timeout: Duration,
+}
+
+impl DiskExchange {
+    /// `store` should be opened with an effectively unbounded budget
+    /// (eviction mid-run would tear the barrier); `rank < world`.
+    pub fn new(store: DiskStore, plan_key: Key, rank: usize, world: usize) -> DiskExchange {
+        assert!(world >= 1 && rank < world, "rank {rank} of world {world}");
+        DiskExchange {
+            store,
+            plan_key,
+            rank,
+            world,
+            poll: Duration::from_millis(2),
+            timeout: Duration::from_secs(600),
+        }
+    }
+
+    /// Override the poll interval and peer timeout (tests use short
+    /// timeouts; huge jobs on slow shared filesystems may need more).
+    pub fn with_timing(mut self, poll: Duration, timeout: Duration) -> DiskExchange {
+        self.poll = poll;
+        self.timeout = timeout;
+        self
+    }
+
+    /// `(rank, world)` — the driver derives chunk ownership from this.
+    pub fn topology(&self) -> (usize, usize) {
+        (self.rank, self.world)
+    }
+
+    fn blob_key(&self, level: u32, round: u64, rank: usize) -> Key {
+        let mut h = ContentHasher::new();
+        h.write(b"cupc-shard-blob/v1");
+        h.write_u64(self.plan_key.0);
+        h.write_u64(self.plan_key.1);
+        h.write_u64(level as u64);
+        h.write_u64(round);
+        h.write_u64(rank as u64);
+        h.finish()
+    }
+
+    /// Publish this rank's owned chunks for `(level, round)` and collect
+    /// the full round: returns `n_chunks` payloads ordered by chunk
+    /// sequence number. Every rank must call this with the same
+    /// `(level, round, n_chunks)` — the canonical emit order guarantees
+    /// they do — and owns the seqs with `seq % world == rank`. Errors on
+    /// peer timeout, on a duplicate / out-of-range / missing seq, and on
+    /// a publish that cannot be read back (e.g. an unwritable store).
+    pub fn exchange(
+        &mut self,
+        level: u32,
+        round: u64,
+        n_chunks: usize,
+        mine: Vec<(u32, Vec<u8>)>,
+    ) -> Result<Vec<Vec<u8>>> {
+        let mut blob = Vec::new();
+        blob.extend_from_slice(&(mine.len() as u32).to_le_bytes());
+        for (seq, payload) in &mine {
+            blob.extend_from_slice(&seq.to_le_bytes());
+            blob.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+            blob.extend_from_slice(payload);
+        }
+        self.store.put_shard(self.blob_key(level, round, self.rank), &blob);
+        drop(blob);
+
+        let mut merged: Vec<Option<Vec<u8>>> = vec![None; n_chunks];
+        let deadline = Instant::now() + self.timeout;
+        for rank in 0..self.world {
+            let key = self.blob_key(level, round, rank);
+            let raw = loop {
+                // polling own rank too: if our own put failed silently
+                // (store puts are best-effort) the barrier must fail
+                // loudly here, not deadlock a peer
+                match self.store.get_shard(key) {
+                    Some(r) => break r,
+                    None if Instant::now() >= deadline => bail!(
+                        "shard barrier timeout: rank {rank} missing at level {level} round {round} \
+                         (plan {:016x}{:016x})",
+                        self.plan_key.0,
+                        self.plan_key.1,
+                    ),
+                    None => std::thread::sleep(self.poll),
+                }
+            };
+            let ctx = || format!("rank {rank} blob, level {level} round {round}");
+            if raw.len() < 4 {
+                bail!("{}: truncated ({} bytes)", ctx(), raw.len());
+            }
+            let n_owned = u32::from_le_bytes(raw[0..4].try_into().unwrap()) as usize;
+            let mut at = 4usize;
+            for _ in 0..n_owned {
+                if raw.len() < at + 8 {
+                    bail!("{}: truncated entry header", ctx());
+                }
+                let seq = u32::from_le_bytes(raw[at..at + 4].try_into().unwrap()) as usize;
+                let len = u32::from_le_bytes(raw[at + 4..at + 8].try_into().unwrap()) as usize;
+                at += 8;
+                if raw.len() < at + len {
+                    bail!("{}: truncated entry payload", ctx());
+                }
+                if seq >= n_chunks {
+                    bail!("{}: chunk seq {seq} out of range (round has {n_chunks})", ctx());
+                }
+                if seq % self.world != rank {
+                    bail!("{}: chunk seq {seq} not owned by rank {rank}", ctx());
+                }
+                if merged[seq].is_some() {
+                    bail!("{}: duplicate chunk seq {seq}", ctx());
+                }
+                merged[seq] = Some(raw[at..at + len].to_vec());
+                at += len;
+            }
+            if at != raw.len() {
+                bail!("{}: {} trailing bytes", ctx(), raw.len() - at);
+            }
+        }
+        merged
+            .into_iter()
+            .enumerate()
+            .map(|(seq, b)| b.with_context(|| format!("chunk seq {seq} missing from every rank")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("cupc_exch_{}_{tag}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn open(dir: &PathBuf) -> DiskStore {
+        DiskStore::open(dir, u64::MAX).unwrap()
+    }
+
+    #[test]
+    fn pair_codec_roundtrips_and_rejects_corruption() {
+        let pairs = vec![(0u32, 1u32), (0, 4), (2, 3), (1000, 2000)];
+        let b = encode_pairs(&pairs);
+        assert_eq!(decode_pairs(&b).unwrap(), pairs);
+        assert_eq!(decode_pairs(&encode_pairs(&[])).unwrap(), vec![]);
+        assert!(decode_pairs(&b[..b.len() - 1]).is_err(), "truncation");
+        assert!(decode_pairs(&[1, 0, 0]).is_err(), "short header");
+    }
+
+    #[test]
+    fn level_chunk_codec_roundtrips() {
+        // a 2-entry l=2 candidate list in its own wire format:
+        // (3,7 | S={1,5}) then (0,2 | S={4,6})
+        let mut raw = Vec::new();
+        for v in [2u32, 2, 3, 7, 0, 2, 1, 5, 4, 6] {
+            raw.extend_from_slice(&v.to_le_bytes());
+        }
+        let r = Removals::from_bytes(&raw).unwrap();
+        let b = encode_level_chunk(&r, 42);
+        let (got, tests) = decode_level_chunk(&b).unwrap();
+        assert_eq!(tests, 42);
+        assert_eq!(got.to_bytes(), r.to_bytes());
+        assert!(decode_level_chunk(&b[..7]).is_err());
+        assert!(decode_level_chunk(&b[..b.len() - 2]).is_err());
+    }
+
+    /// Two ranks over one directory: both collect the identical merged
+    /// round, ordered by chunk seq, across multiple (level, round)
+    /// coordinates.
+    #[test]
+    fn two_ranks_merge_rounds_in_chunk_order() {
+        let dir = tmp_dir("merge");
+        let plan: Key = (11, 22);
+        let payload = |seq: u32| vec![seq as u8; 3 + seq as usize];
+        let results = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let dir = &dir;
+                    scope.spawn(move || {
+                        let mut ex = DiskExchange::new(open(dir), plan, rank, 2).with_timing(
+                            Duration::from_millis(1),
+                            Duration::from_secs(20),
+                        );
+                        let mut out = Vec::new();
+                        for (level, round, n_chunks) in [(0u32, 0u64, 5usize), (1, 0, 3), (1, 1, 1)]
+                        {
+                            let mine: Vec<(u32, Vec<u8>)> = (0..n_chunks as u32)
+                                .filter(|s| *s as usize % 2 == rank)
+                                .map(|s| (s, payload(s)))
+                                .collect();
+                            out.push(ex.exchange(level, round, n_chunks, mine).unwrap());
+                        }
+                        out
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        assert_eq!(results[0], results[1], "every rank sees the same merge");
+        for (i, n_chunks) in [5usize, 3, 1].into_iter().enumerate() {
+            let want: Vec<Vec<u8>> = (0..n_chunks as u32).map(payload).collect();
+            assert_eq!(results[0][i], want, "round {i} in seq order");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// A rank that owns nothing this round still publishes (presence is
+    /// the barrier) and still receives the full round.
+    #[test]
+    fn empty_ownership_still_synchronizes() {
+        let dir = tmp_dir("empty");
+        let plan: Key = (5, 5);
+        let mut a = DiskExchange::new(open(&dir), plan, 0, 2)
+            .with_timing(Duration::from_millis(1), Duration::from_secs(20));
+        let mut b = DiskExchange::new(open(&dir), plan, 1, 2)
+            .with_timing(Duration::from_millis(1), Duration::from_secs(20));
+        // one chunk: rank 0 owns seq 0, rank 1 owns nothing
+        let t = std::thread::scope(|scope| {
+            let h = scope.spawn(move || b.exchange(2, 3, 1, Vec::new()).unwrap());
+            let got_a = a.exchange(2, 3, 1, vec![(0, b"x".to_vec())]).unwrap();
+            (got_a, h.join().unwrap())
+        });
+        assert_eq!(t.0, vec![b"x".to_vec()]);
+        assert_eq!(t.0, t.1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_peer_times_out_with_context() {
+        let dir = tmp_dir("timeout");
+        let mut ex = DiskExchange::new(open(&dir), (1, 2), 0, 2)
+            .with_timing(Duration::from_millis(1), Duration::from_millis(30));
+        let err = ex
+            .exchange(0, 0, 2, vec![(0, vec![7])])
+            .expect_err("rank 1 never shows up");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("rank 1"), "{msg}");
+        assert!(msg.contains("timeout"), "{msg}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    /// Malformed blobs fail the merge loudly. The reading loop visits
+    /// rank 0 first, so publishing a bad blob *as* rank 0 exercises the
+    /// validation without needing a live peer.
+    #[test]
+    fn malformed_ownership_is_rejected() {
+        let dir = tmp_dir("badseq");
+        let plan: Key = (3, 9);
+        // rank 0 claims seq 1, which rank 1 owns
+        let mut bad = DiskExchange::new(open(&dir), plan, 0, 2)
+            .with_timing(Duration::from_millis(1), Duration::from_millis(200));
+        let err = bad
+            .exchange(1, 0, 2, vec![(1, vec![1])])
+            .expect_err("foreign seq must be rejected");
+        assert!(format!("{err:#}").contains("not owned"), "{err:#}");
+        // rank 0 claims a seq past the round's chunk count
+        let mut oob = DiskExchange::new(open(&dir), plan, 0, 2)
+            .with_timing(Duration::from_millis(1), Duration::from_millis(200));
+        let err = oob
+            .exchange(2, 0, 1, vec![(4, vec![1])])
+            .expect_err("seq past n_chunks must be rejected");
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

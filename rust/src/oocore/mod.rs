@@ -1,0 +1,29 @@
+//! Out-of-core skeleton subsystem: everything that lets one skeleton
+//! job scale past RAM (ROADMAP item 3, the gene-network regime the
+//! multi-core fast-PC and ParallelPC lines target).
+//!
+//! Three coordinated axes, all behind the existing
+//! [`RoundSchedule`](crate::skeleton::schedule::RoundSchedule) driver so
+//! every schedule family runs unchanged:
+//!
+//! * [`sparse`] — `SparseAdj`, a CSR adjacency with atomic tombstones
+//!   selected automatically past a density/size threshold: memory
+//!   O(edges) instead of O(n²), with bit-identical observable behavior
+//!   to the dense matrix (gated by property tests and
+//!   `tests/oocore_conformance.rs`).
+//! * [`stream`] — `WindowPump`, the bounded-memory round streamer: a
+//!   round's combination windows are fed to the pipeline executor
+//!   chunk-by-chunk in canonical order, so the run buffer is O(live
+//!   chunk) instead of O(level). Chunk boundaries never change results
+//!   (evaluation is pure; candidates apply at round end in chunk order).
+//! * [`exchange`] / [`shard`] — cross-process sharding: `cupc shard`
+//!   splits one job's chunk stream round-robin across worker processes
+//!   that exchange per-round removal sets through rename-atomic
+//!   [`DiskStore`](crate::service::store::DiskStore) entries, and the
+//!   canonical-order merge reproduces the single-process skeleton
+//!   bit-for-bit.
+
+pub mod exchange;
+pub mod shard;
+pub mod sparse;
+pub mod stream;

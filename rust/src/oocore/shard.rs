@@ -1,0 +1,441 @@
+//! The `cupc shard` plan protocol: one skeleton job split across
+//! worker processes.
+//!
+//! The coordinator computes the correlation matrix once, stores it in
+//! the shared [`DiskStore`] directory under its content key, encodes a
+//! [`ShardPlan`] (every parameter that can influence a bit of the
+//! result), stores that under the plan's content key, and hands workers
+//! nothing but `--store DIR --plan HEX --rank i`. Each worker — and the
+//! coordinator itself, as rank 0 — rebuilds the identical [`Config`]
+//! from the plan and drives
+//! [`run_rounds_sharded`](crate::skeleton::schedule::run_rounds_sharded)
+//! with a [`DiskExchange`] over the same directory. Because every rank
+//! applies the identical merged removal stream in canonical order,
+//! every rank finishes holding the bit-identical skeleton; the
+//! coordinator then orients exactly like a single-process run.
+//!
+//! The plan payload is schema-versioned independently of the store's
+//! header version: a worker from a different build refuses a plan it
+//! cannot parse instead of silently diverging.
+
+use crate::service::cache::{ContentHasher, Key};
+use crate::service::store::DiskStore;
+use crate::skeleton::family;
+use crate::skeleton::schedule::run_rounds_sharded;
+use crate::skeleton::{AdjMode, Config, OocConfig, OrientRule, SkeletonResult, Variant};
+use anyhow::{bail, ensure, Context, Result};
+use std::time::Duration;
+
+use super::exchange::DiskExchange;
+
+/// Plan payload schema — bump on any layout change.
+pub const PLAN_VERSION: u8 = 1;
+
+/// Everything a worker needs to reproduce the job bit-for-bit: problem
+/// shape, the correlation matrix's content key, the full parameter set
+/// of the skeleton phase, and the sharding topology.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShardPlan {
+    pub n: usize,
+    pub m: usize,
+    pub corr_key: Key,
+    pub alpha: f64,
+    pub max_level: Option<usize>,
+    pub variant: Variant,
+    pub orient: OrientRule,
+    /// number of ranks (coordinator = rank 0)
+    pub world: usize,
+    /// native worker threads per rank
+    pub threads: usize,
+    pub beta: usize,
+    pub gamma: usize,
+    pub theta: usize,
+    pub delta: usize,
+    pub adjacency: AdjMode,
+    pub window_runs: usize,
+    pub window_slots: u64,
+}
+
+impl ShardPlan {
+    /// Plan for `spec`-shaped parameters with the crate-default schedule
+    /// knobs and out-of-core budgets.
+    pub fn new(
+        n: usize,
+        m: usize,
+        corr_key: Key,
+        cfg: &Config,
+        world: usize,
+    ) -> ShardPlan {
+        ShardPlan {
+            n,
+            m,
+            corr_key,
+            alpha: cfg.alpha,
+            max_level: cfg.max_level,
+            variant: cfg.variant,
+            orient: cfg.orient,
+            world,
+            threads: cfg.threads,
+            beta: cfg.beta,
+            gamma: cfg.gamma,
+            theta: cfg.theta,
+            delta: cfg.delta,
+            adjacency: cfg.ooc.adjacency,
+            window_runs: cfg.ooc.window_runs,
+            window_slots: cfg.ooc.window_slots,
+        }
+    }
+
+    /// The worker-side [`Config`] — identical on every rank by
+    /// construction.
+    pub fn config(&self) -> Config {
+        Config {
+            alpha: self.alpha,
+            max_level: self.max_level,
+            variant: self.variant,
+            orient: self.orient,
+            beta: self.beta,
+            gamma: self.gamma,
+            theta: self.theta,
+            delta: self.delta,
+            ooc: OocConfig {
+                adjacency: self.adjacency,
+                window_runs: self.window_runs,
+                window_slots: self.window_slots,
+            },
+            ..Config::default()
+        }
+        .with_threads(self.threads)
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut b = vec![PLAN_VERSION];
+        for v in [
+            self.n as u64,
+            self.m as u64,
+            self.corr_key.0,
+            self.corr_key.1,
+            self.alpha.to_bits(),
+            self.max_level.map(|l| l as u64 + 1).unwrap_or(0),
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(crate::service::job::variant_tag(self.variant));
+        b.push(crate::service::job::orient_tag(self.orient));
+        b.extend_from_slice(&(self.world as u32).to_le_bytes());
+        b.extend_from_slice(&(self.threads as u32).to_le_bytes());
+        for v in [
+            self.beta as u64,
+            self.gamma as u64,
+            self.theta as u64,
+            self.delta as u64,
+        ] {
+            b.extend_from_slice(&v.to_le_bytes());
+        }
+        b.push(match self.adjacency {
+            AdjMode::Auto => 0,
+            AdjMode::Dense => 1,
+            AdjMode::Sparse => 2,
+        });
+        b.extend_from_slice(&(self.window_runs as u64).to_le_bytes());
+        b.extend_from_slice(&self.window_slots.to_le_bytes());
+        b
+    }
+
+    pub fn decode(b: &[u8]) -> Result<ShardPlan> {
+        // 1 version + 6×8 + 2 tags + 2×4 + 4×8 + 1 mode + 2×8
+        const WANT: usize = 1 + 48 + 2 + 8 + 32 + 1 + 16;
+        ensure!(!b.is_empty(), "empty plan payload");
+        ensure!(
+            b[0] == PLAN_VERSION,
+            "plan schema v{} but this build speaks v{PLAN_VERSION}",
+            b[0]
+        );
+        ensure!(b.len() == WANT, "plan payload is {} bytes, want {WANT}", b.len());
+        let u64_at = |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
+        let u32_at = |at: usize| u32::from_le_bytes(b[at..at + 4].try_into().unwrap());
+        let variant = family::FAMILIES
+            .iter()
+            .find(|f| f.tag == b[49])
+            .map(|f| f.variant)
+            .with_context(|| format!("unknown variant tag {}", b[49]))?;
+        let orient = match b[50] {
+            0 => OrientRule::Standard,
+            1 => OrientRule::Majority,
+            t => bail!("unknown orient tag {t}"),
+        };
+        let adjacency = match b[91] {
+            0 => AdjMode::Auto,
+            1 => AdjMode::Dense,
+            2 => AdjMode::Sparse,
+            t => bail!("unknown adjacency mode tag {t}"),
+        };
+        let max_level = match u64_at(41) {
+            0 => None,
+            l => Some((l - 1) as usize),
+        };
+        let plan = ShardPlan {
+            n: u64_at(1) as usize,
+            m: u64_at(9) as usize,
+            corr_key: (u64_at(17), u64_at(25)),
+            alpha: f64::from_bits(u64_at(33)),
+            max_level,
+            variant,
+            orient,
+            world: u32_at(51) as usize,
+            threads: u32_at(55) as usize,
+            beta: u64_at(59) as usize,
+            gamma: u64_at(67) as usize,
+            theta: u64_at(75) as usize,
+            delta: u64_at(83) as usize,
+            adjacency,
+            window_runs: u64_at(92) as usize,
+            window_slots: u64_at(100),
+        };
+        ensure!(plan.world >= 1, "plan world must be >= 1");
+        Ok(plan)
+    }
+
+    /// Content key of this plan — also the job identity the exchange
+    /// namespaces its blobs under.
+    pub fn key(&self) -> Key {
+        let mut h = ContentHasher::new();
+        h.write(b"cupc-shard-plan/v1");
+        h.write(&self.encode());
+        h.finish()
+    }
+}
+
+/// The 32-hex-digit CLI spelling of a plan key.
+pub fn format_plan_key(key: Key) -> String {
+    format!("{:016x}{:016x}", key.0, key.1)
+}
+
+pub fn parse_plan_key(s: &str) -> Result<Key> {
+    ensure!(
+        s.len() == 32 && s.bytes().all(|b| b.is_ascii_hexdigit()),
+        "plan key must be 32 hex digits, got {s:?}"
+    );
+    Ok((
+        u64::from_str_radix(&s[..16], 16).unwrap(),
+        u64::from_str_radix(&s[16..], 16).unwrap(),
+    ))
+}
+
+/// Coordinator side: persist the plan and verify it reads back (puts
+/// are best-effort by store contract, but an unpublished plan would
+/// strand every worker, so fail loudly here). Returns the plan key.
+pub fn publish_plan(store: &DiskStore, plan: &ShardPlan) -> Result<Key> {
+    let key = plan.key();
+    store.put_plan(key, &plan.encode());
+    ensure!(
+        store.get_plan(key).is_some(),
+        "could not persist shard plan in the store directory"
+    );
+    Ok(key)
+}
+
+/// Worker side (and the coordinator's own rank 0): load the plan and
+/// corr matrix from `store`, run the sharded skeleton as `rank`, and
+/// return it with the decoded plan. `timing` overrides the exchange's
+/// (poll, timeout) — tests use tight values.
+pub fn run_skeleton_sharded(
+    store: DiskStore,
+    plan_key: Key,
+    rank: usize,
+    timing: Option<(Duration, Duration)>,
+) -> Result<(ShardPlan, SkeletonResult)> {
+    let raw = store
+        .get_plan(plan_key)
+        .with_context(|| format!("plan {} not in store", format_plan_key(plan_key)))?;
+    let plan = ShardPlan::decode(&raw)?;
+    ensure!(
+        rank < plan.world,
+        "rank {rank} out of range for world {}",
+        plan.world
+    );
+    let corr = store
+        .get_corr(plan.corr_key, plan.n * plan.n)
+        .context("correlation matrix not in store (did the coordinator publish it?)")?;
+    let cfg = plan.config();
+    let fam = family::of(cfg.variant);
+    let make = fam
+        .schedule
+        .with_context(|| format!("variant {} is not shardable (no batched schedule)", fam.name))?;
+    let mut sched = make(&cfg);
+    let mut exch = DiskExchange::new(store, plan_key, rank, plan.world);
+    if let Some((poll, timeout)) = timing {
+        exch = exch.with_timing(poll, timeout);
+    }
+    let skel = run_rounds_sharded(&corr, plan.n, plan.m, &cfg, sched.as_mut(), &mut exch)?;
+    Ok((plan, skel))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::fs;
+    use std::path::PathBuf;
+
+    fn toy_plan() -> ShardPlan {
+        ShardPlan {
+            n: 100,
+            m: 400,
+            corr_key: (0xdead, 0xbeef),
+            alpha: 0.013,
+            max_level: Some(3),
+            variant: Variant::CupcS,
+            orient: OrientRule::Majority,
+            world: 2,
+            threads: 4,
+            beta: 2,
+            gamma: 32,
+            theta: 64,
+            delta: 2,
+            adjacency: AdjMode::Sparse,
+            window_runs: 1 << 10,
+            window_slots: 1 << 14,
+        }
+    }
+
+    #[test]
+    fn plan_codec_roundtrips_every_field() {
+        let mut p = toy_plan();
+        assert_eq!(ShardPlan::decode(&p.encode()).unwrap(), p);
+        p.max_level = None;
+        p.adjacency = AdjMode::Auto;
+        p.variant = Variant::Baseline2;
+        p.orient = OrientRule::Standard;
+        let q = ShardPlan::decode(&p.encode()).unwrap();
+        assert_eq!(q, p);
+        assert_eq!(q.max_level, None);
+        // max_level 0 and None must not collide
+        p.max_level = Some(0);
+        assert_eq!(ShardPlan::decode(&p.encode()).unwrap().max_level, Some(0));
+    }
+
+    #[test]
+    fn plan_codec_rejects_alien_payloads() {
+        let b = toy_plan().encode();
+        assert!(ShardPlan::decode(&[]).is_err());
+        assert!(ShardPlan::decode(&b[..b.len() - 1]).is_err(), "truncated");
+        let mut wrong_ver = b.clone();
+        wrong_ver[0] = PLAN_VERSION + 1;
+        let err = ShardPlan::decode(&wrong_ver).unwrap_err();
+        assert!(format!("{err:#}").contains("schema"), "{err:#}");
+        let mut bad_variant = b.clone();
+        bad_variant[49] = 200;
+        assert!(ShardPlan::decode(&bad_variant).is_err());
+        let mut bad_mode = b;
+        bad_mode[91] = 9;
+        assert!(ShardPlan::decode(&bad_mode).is_err());
+    }
+
+    #[test]
+    fn plan_key_hex_roundtrips() {
+        let key = toy_plan().key();
+        let hex = format_plan_key(key);
+        assert_eq!(hex.len(), 32);
+        assert_eq!(parse_plan_key(&hex).unwrap(), key);
+        assert!(parse_plan_key("xyz").is_err());
+        assert!(parse_plan_key(&hex[..31]).is_err());
+        // key covers the payload: any field change re-keys
+        let mut other = toy_plan();
+        other.alpha = 0.05;
+        assert_ne!(other.key(), key);
+    }
+
+    #[test]
+    fn config_rebuild_matches_the_source_config() {
+        let cfg = Config {
+            alpha: 0.02,
+            max_level: Some(2),
+            variant: Variant::CupcE,
+            orient: OrientRule::Majority,
+            ..Config::default()
+        }
+        .with_threads(3);
+        let plan = ShardPlan::new(50, 200, (1, 2), &cfg, 4);
+        let got = plan.config();
+        assert_eq!(got.alpha, cfg.alpha);
+        assert_eq!(got.max_level, cfg.max_level);
+        assert_eq!(got.variant, cfg.variant);
+        assert_eq!(got.orient, cfg.orient);
+        assert_eq!(got.threads, cfg.threads);
+        assert_eq!(got.gamma, cfg.gamma);
+        assert_eq!(got.ooc, cfg.ooc);
+    }
+
+    /// End-to-end over one store directory: two in-process ranks run the
+    /// plan and both reproduce the single-process skeleton bit-for-bit.
+    /// (The full grid × window-budget sweep lives in
+    /// `tests/oocore_conformance.rs`; this is the module smoke.)
+    #[test]
+    fn two_ranks_reproduce_the_single_process_skeleton() {
+        use crate::sim::{dag::WeightedDag, sem};
+        use crate::stats::corr::correlation_matrix;
+        use crate::util::rng::Pcg;
+
+        let dag = WeightedDag::random_er(18, 0.2, &mut Pcg::seeded(41));
+        let data = sem::sample(&dag, 250, &mut Pcg::seeded(42));
+        let corr = correlation_matrix(&data, 1);
+        let cfg = Config {
+            variant: Variant::CupcS,
+            ooc: OocConfig {
+                adjacency: AdjMode::Auto,
+                window_runs: 4, // tiny budgets force real multi-chunk rounds
+                window_slots: 64,
+                ..Default::default()
+            },
+            ..Config::default()
+        };
+        let single = crate::skeleton::run(&corr, data.n, data.m, &cfg).unwrap();
+
+        let dir: PathBuf = std::env::temp_dir().join(format!(
+            "cupc_shard_{}_smoke",
+            std::process::id()
+        ));
+        let _ = fs::remove_dir_all(&dir);
+        let corr_key: Key = (7, 9);
+        let plan = ShardPlan::new(data.n, data.m, corr_key, &cfg, 2);
+        {
+            let store = DiskStore::open(&dir, u64::MAX).unwrap();
+            store.put_corr(corr_key, &corr);
+            publish_plan(&store, &plan).unwrap();
+        }
+        let timing = Some((Duration::from_millis(1), Duration::from_secs(30)));
+        let results = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..2usize)
+                .map(|rank| {
+                    let dir = &dir;
+                    let key = plan.key();
+                    scope.spawn(move || {
+                        let store = DiskStore::open(dir, u64::MAX).unwrap();
+                        run_skeleton_sharded(store, key, rank, timing).unwrap().1
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        });
+        for (rank, skel) in results.iter().enumerate() {
+            assert_eq!(
+                skel.graph.snapshot(),
+                single.graph.snapshot(),
+                "rank {rank} skeleton"
+            );
+            assert_eq!(
+                skel.sepsets.sorted_entries(),
+                single.sepsets.sorted_entries(),
+                "rank {rank} sepsets"
+            );
+            let stats = |r: &SkeletonResult| -> Vec<(usize, u64, usize, usize)> {
+                r.levels
+                    .iter()
+                    .map(|s| (s.level, s.tests, s.removed, s.edges_after))
+                    .collect()
+            };
+            assert_eq!(stats(skel), stats(&single), "rank {rank} per-level stats");
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

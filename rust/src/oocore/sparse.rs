@@ -1,0 +1,443 @@
+//! Sparse adjacency for the out-of-core skeleton path.
+//!
+//! [`SparseAdj`] stores per-row **sorted neighbor lists** frozen at
+//! construction (CSR layout) plus a parallel array of atomic
+//! alive-flags, so edge removal is the same lock-free monotone 1 → 0
+//! transition the dense [`AdjMatrix`] provides — but memory is
+//! O(edges), not O(n²), and per-level compaction
+//! ([`SparseAdj::compact`]) filters the live entries directly into a
+//! [`CompactAdj`] without ever materializing the O(n²) snapshot the
+//! dense route copies each level.
+//!
+//! The skeleton never *adds* edges after level 0, so freezing the
+//! neighbor universe at construction (from the level-0 survivor list)
+//! loses nothing: every representable graph state is a subset of the
+//! construction edges, exactly like the dense matrix starting complete.
+//!
+//! [`Adj`] is the dispatch seam the level-loop driver holds: all seven
+//! schedule families read adjacency through it (`has_edge` is the only
+//! read on the hot path), so they run on either representation
+//! unchanged. Parity with [`AdjMatrix`] — identical neighbor iteration
+//! order, degrees, snapshot contents, and `should_continue` decisions
+//! under arbitrary removal sequences — is gated by the property tests
+//! below.
+
+use crate::graph::adj::{AdjMatrix, EdgeRemove};
+use crate::graph::compact::CompactAdj;
+use std::sync::atomic::{AtomicU32, AtomicU8, AtomicUsize, Ordering};
+
+/// Smallest n where [`AdjMode::Auto`](crate::skeleton::AdjMode) will
+/// consider the sparse representation: below this the dense matrix is a
+/// few hundred KB and always wins. Past it, the driver goes sparse when
+/// the level-0 survivors are ≤ 25% of all pairs (the CSR slot + flag
+/// overhead is ~4× a dense bit, so 25% density is the break-even).
+pub const SPARSE_MIN_N: usize = 1024;
+
+/// CSR adjacency with atomic tombstones.
+pub struct SparseAdj {
+    n: usize,
+    /// concatenated sorted neighbor lists (frozen)
+    items: Vec<u32>,
+    /// row offsets into `items`, len n+1 (frozen)
+    offsets: Vec<u32>,
+    /// liveness flag per `items` slot (1 = edge present)
+    alive: Vec<AtomicU8>,
+    /// live degree per row
+    degs: Vec<AtomicU32>,
+    /// live undirected edge count
+    edges: AtomicUsize,
+}
+
+impl SparseAdj {
+    /// Build from an edge list of (i, j) pairs with i < j, sorted
+    /// row-major ascending (the canonical level-0 survivor order).
+    /// Every row comes out sorted: for row r the pairs (k, r) with
+    /// k < r precede the pairs (r, j) with j > r in the input, and each
+    /// group is itself ascending.
+    pub fn from_edges(n: usize, pairs: &[(u32, u32)]) -> Self {
+        debug_assert!(pairs.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        let mut counts = vec![0u32; n];
+        for &(i, j) in pairs {
+            debug_assert!((i as usize) < n && i < j && (j as usize) < n);
+            counts[i as usize] += 1;
+            counts[j as usize] += 1;
+        }
+        let mut offsets = Vec::with_capacity(n + 1);
+        offsets.push(0u32);
+        let mut acc = 0u32;
+        for &c in &counts {
+            acc += c;
+            offsets.push(acc);
+        }
+        let mut items = vec![0u32; acc as usize];
+        let mut cursor: Vec<u32> = offsets[..n].to_vec();
+        for &(i, j) in pairs {
+            items[cursor[i as usize] as usize] = j;
+            cursor[i as usize] += 1;
+            items[cursor[j as usize] as usize] = i;
+            cursor[j as usize] += 1;
+        }
+        let alive = (0..items.len()).map(|_| AtomicU8::new(1)).collect();
+        let degs = counts.into_iter().map(AtomicU32::new).collect();
+        SparseAdj {
+            n,
+            items,
+            offsets,
+            alive,
+            degs,
+            edges: AtomicUsize::new(pairs.len()),
+        }
+    }
+
+    #[inline]
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Slot of j in row i's frozen list, if present there at all.
+    #[inline]
+    fn slot(&self, i: usize, j: usize) -> Option<usize> {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        self.items[lo..hi]
+            .binary_search(&(j as u32))
+            .ok()
+            .map(|p| lo + p)
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        match self.slot(i, j) {
+            Some(s) => self.alive[s].load(Ordering::Relaxed) != 0,
+            None => false,
+        }
+    }
+
+    /// Remove (i,j) symmetrically. The slot in the lower-index row is
+    /// authoritative, so concurrent removers of one edge see exactly one
+    /// winner (mirroring the dense matrix's swap).
+    pub fn remove_edge(&self, i: usize, j: usize) -> bool {
+        if i == j {
+            return false;
+        }
+        let (a, b) = if i < j { (i, j) } else { (j, i) };
+        let Some(sa) = self.slot(a, b) else {
+            return false;
+        };
+        let won = self.alive[sa].swap(0, Ordering::Relaxed) != 0;
+        if let Some(sb) = self.slot(b, a) {
+            self.alive[sb].store(0, Ordering::Relaxed);
+        }
+        if won {
+            self.degs[a].fetch_sub(1, Ordering::Relaxed);
+            self.degs[b].fetch_sub(1, Ordering::Relaxed);
+            self.edges.fetch_sub(1, Ordering::Relaxed);
+        }
+        won
+    }
+
+    #[inline]
+    pub fn degree(&self, i: usize) -> usize {
+        self.degs[i].load(Ordering::Relaxed) as usize
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n).map(|i| self.degree(i)).max().unwrap_or(0)
+    }
+
+    pub fn n_edges(&self) -> usize {
+        self.edges.load(Ordering::Relaxed)
+    }
+
+    /// Live neighbors of i, ascending (parity with
+    /// [`AdjMatrix::neighbors`]).
+    pub fn neighbors(&self, i: usize) -> Vec<usize> {
+        let lo = self.offsets[i] as usize;
+        let hi = self.offsets[i + 1] as usize;
+        (lo..hi)
+            .filter(|&s| self.alive[s].load(Ordering::Relaxed) != 0)
+            .map(|s| self.items[s] as usize)
+            .collect()
+    }
+
+    /// Compact the live entries straight into CSR form — the per-level
+    /// `G → G'` freeze without the dense O(n²) snapshot.
+    pub fn compact(&self) -> CompactAdj {
+        let mut items = Vec::with_capacity(2 * self.n_edges());
+        let mut offsets = Vec::with_capacity(self.n + 1);
+        offsets.push(0u32);
+        for i in 0..self.n {
+            let lo = self.offsets[i] as usize;
+            let hi = self.offsets[i + 1] as usize;
+            for s in lo..hi {
+                if self.alive[s].load(Ordering::Relaxed) != 0 {
+                    items.push(self.items[s]);
+                }
+            }
+            offsets.push(items.len() as u32);
+        }
+        CompactAdj::from_parts(self.n, items, offsets)
+    }
+
+    /// Dense O(n²) snapshot, bit-compatible with
+    /// [`AdjMatrix::snapshot`] (tests / small-n interop only).
+    pub fn snapshot(&self) -> Vec<u8> {
+        let mut snap = vec![0u8; self.n * self.n];
+        for i in 0..self.n {
+            for j in self.neighbors(i) {
+                snap[i * self.n + j] = 1;
+            }
+        }
+        snap
+    }
+
+    /// Materialize into a dense [`AdjMatrix`] (the orientation phase is
+    /// dense; at sparse-path scale the result graph is small).
+    pub fn to_dense(&self) -> AdjMatrix {
+        AdjMatrix::from_dense(&self.snapshot(), self.n)
+    }
+}
+
+impl EdgeRemove for SparseAdj {
+    fn remove_edge(&self, i: usize, j: usize) -> bool {
+        SparseAdj::remove_edge(self, i, j)
+    }
+}
+
+impl std::fmt::Debug for SparseAdj {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SparseAdj(n={}, edges={})", self.n, self.n_edges())
+    }
+}
+
+/// The adjacency representation seam behind the level loop: dense for
+/// small/dense problems (today's exact path), sparse past the
+/// out-of-core threshold. Schedules only ever call [`Adj::has_edge`];
+/// the driver uses the rest.
+pub enum Adj {
+    Dense(AdjMatrix),
+    Sparse(SparseAdj),
+}
+
+impl Adj {
+    #[inline]
+    pub fn n(&self) -> usize {
+        match self {
+            Adj::Dense(g) => g.n(),
+            Adj::Sparse(g) => g.n(),
+        }
+    }
+
+    #[inline]
+    pub fn has_edge(&self, i: usize, j: usize) -> bool {
+        match self {
+            Adj::Dense(g) => g.has_edge(i, j),
+            Adj::Sparse(g) => g.has_edge(i, j),
+        }
+    }
+
+    pub fn remove_edge(&self, i: usize, j: usize) -> bool {
+        match self {
+            Adj::Dense(g) => g.remove_edge(i, j),
+            Adj::Sparse(g) => g.remove_edge(i, j),
+        }
+    }
+
+    pub fn max_degree(&self) -> usize {
+        match self {
+            Adj::Dense(g) => g.max_degree(),
+            Adj::Sparse(g) => g.max_degree(),
+        }
+    }
+
+    pub fn n_edges(&self) -> usize {
+        match self {
+            Adj::Dense(g) => g.n_edges(),
+            Adj::Sparse(g) => g.n_edges(),
+        }
+    }
+
+    /// The per-level `G → G'` freeze.
+    pub fn compact(&self) -> CompactAdj {
+        match self {
+            Adj::Dense(g) => CompactAdj::from_snapshot(&g.snapshot(), g.n()),
+            Adj::Sparse(g) => g.compact(),
+        }
+    }
+
+    /// Stable spelling for the stats sidecar (CI greps these).
+    pub fn label(&self) -> &'static str {
+        match self {
+            Adj::Dense(_) => "dense",
+            Adj::Sparse(_) => "sparse",
+        }
+    }
+
+    /// Finish the run: orientation (and the public `SkeletonResult`)
+    /// stay dense.
+    pub fn into_dense(self) -> AdjMatrix {
+        match self {
+            Adj::Dense(g) => g,
+            Adj::Sparse(g) => g.to_dense(),
+        }
+    }
+}
+
+impl EdgeRemove for Adj {
+    fn remove_edge(&self, i: usize, j: usize) -> bool {
+        Adj::remove_edge(self, i, j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// Random i<j pairs over n nodes, sorted row-major (the canonical
+    /// survivor order the driver feeds [`SparseAdj::from_edges`]).
+    fn random_pairs(n: usize, p: f64, rng: &mut Pcg) -> Vec<(u32, u32)> {
+        let mut pairs = Vec::new();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if rng.bernoulli(p) {
+                    pairs.push((i, j));
+                }
+            }
+        }
+        pairs
+    }
+
+    fn dense_from_pairs(n: usize, pairs: &[(u32, u32)]) -> AdjMatrix {
+        let g = AdjMatrix::empty(n);
+        for &(i, j) in pairs {
+            g.add_edge(i as usize, j as usize);
+        }
+        g
+    }
+
+    fn assert_parity(d: &AdjMatrix, s: &SparseAdj, ctx: &str) {
+        assert_eq!(d.n_edges(), s.n_edges(), "{ctx}: n_edges");
+        assert_eq!(d.max_degree(), s.max_degree(), "{ctx}: max_degree");
+        assert_eq!(d.snapshot(), s.snapshot(), "{ctx}: snapshot");
+        let dc = CompactAdj::from_snapshot(&d.snapshot(), d.n());
+        let sc = s.compact();
+        for i in 0..d.n() {
+            assert_eq!(d.degree(i), s.degree(i), "{ctx}: degree({i})");
+            assert_eq!(d.neighbors(i), s.neighbors(i), "{ctx}: neighbors({i})");
+            assert_eq!(dc.row(i), sc.row(i), "{ctx}: compact row {i}");
+        }
+        for j in 0..d.n() {
+            for i in 0..d.n() {
+                assert_eq!(d.has_edge(i, j), s.has_edge(i, j), "{ctx}: has({i},{j})");
+            }
+        }
+    }
+
+    /// Satellite: randomized removal sequences must keep the two
+    /// representations indistinguishable — neighbor iteration order,
+    /// degrees, snapshot contents, and the level loop's
+    /// `should_continue` decision at every step.
+    #[test]
+    fn random_removal_sequences_preserve_parity() {
+        use crate::skeleton::{should_continue_any, Config};
+        let cfg = Config::default();
+        for seed in 0..6u64 {
+            let mut rng = Pcg::seeded(4000 + seed);
+            let n = 12 + (seed as usize % 3) * 7;
+            let pairs = random_pairs(n, 0.35, &mut rng);
+            let dense = dense_from_pairs(n, &pairs);
+            let sparse = SparseAdj::from_edges(n, &pairs);
+            assert_parity(&dense, &sparse, "initial");
+            // remove a random half, in random order, including repeats
+            // and never-present edges
+            for step in 0..pairs.len() {
+                let (i, j) = if rng.bernoulli(0.8) && !pairs.is_empty() {
+                    let p = pairs[rng.below(pairs.len() as u64) as usize];
+                    (p.0 as usize, p.1 as usize)
+                } else {
+                    (
+                        rng.below(n as u64) as usize,
+                        rng.below(n as u64) as usize,
+                    )
+                };
+                if i == j {
+                    continue;
+                }
+                let dw = dense.remove_edge(i, j);
+                let sw = sparse.remove_edge(i, j);
+                assert_eq!(dw, sw, "winner flag at step {step} ({i},{j})");
+                for l in 0..4usize {
+                    assert_eq!(
+                        should_continue_any(dense.max_degree(), l, &cfg),
+                        should_continue_any(sparse.max_degree(), l, &cfg),
+                        "should_continue at step {step} level {l}"
+                    );
+                }
+            }
+            assert_parity(&dense, &sparse, "final");
+        }
+    }
+
+    #[test]
+    fn concurrent_removal_exactly_one_winner() {
+        let pairs = vec![(0u32, 1u32), (0, 2), (1, 2), (2, 3)];
+        let g = std::sync::Arc::new(SparseAdj::from_edges(4, &pairs));
+        let wins = std::sync::Arc::new(AtomicUsize::new(0));
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                let g = g.clone();
+                let wins = wins.clone();
+                s.spawn(move || {
+                    if g.remove_edge(2, 1) {
+                        wins.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(wins.load(Ordering::Relaxed), 1);
+        assert_eq!(g.n_edges(), 3);
+        assert_eq!(g.degree(1), 1);
+        assert_eq!(g.degree(2), 2);
+    }
+
+    #[test]
+    fn removing_absent_or_self_edges_is_inert() {
+        let g = SparseAdj::from_edges(4, &[(0, 1)]);
+        assert!(!g.remove_edge(2, 3), "never-present edge");
+        assert!(!g.remove_edge(1, 1), "self loop");
+        assert!(g.remove_edge(1, 0));
+        assert!(!g.remove_edge(0, 1), "second removal loses");
+        assert_eq!(g.n_edges(), 0);
+    }
+
+    #[test]
+    fn compact_is_a_frozen_copy() {
+        let g = SparseAdj::from_edges(4, &[(0, 1), (0, 2), (1, 3)]);
+        let c = g.compact();
+        g.remove_edge(0, 2);
+        assert_eq!(c.row(0), &[1, 2], "compaction must not see later removals");
+        assert_eq!(g.compact().row(0), &[1]);
+    }
+
+    #[test]
+    fn adj_enum_dispatches_and_labels() {
+        let pairs = vec![(0u32, 1u32), (1, 2)];
+        let d = Adj::Dense(dense_from_pairs(3, &pairs));
+        let s = Adj::Sparse(SparseAdj::from_edges(3, &pairs));
+        assert_eq!(d.label(), "dense");
+        assert_eq!(s.label(), "sparse");
+        for g in [&d, &s] {
+            assert_eq!(g.n(), 3);
+            assert_eq!(g.n_edges(), 2);
+            assert_eq!(g.max_degree(), 2);
+            assert!(g.has_edge(1, 0) && !g.has_edge(0, 2));
+            assert_eq!(g.compact().row(1), &[0, 2]);
+        }
+        assert!(s.remove_edge(0, 1));
+        assert_eq!(s.into_dense().snapshot(), {
+            let only = dense_from_pairs(3, &[(1, 2)]);
+            only.snapshot()
+        });
+    }
+}

@@ -1,0 +1,204 @@
+//! Bounded-memory round streaming: the [`WindowPump`] buffers a round's
+//! combination windows ([`Run`]s) up to a budget and hands them to a
+//! sink chunk-by-chunk, in canonical order.
+//!
+//! The pre-out-of-core driver materialized every live window of a round
+//! into one `Vec<Run>` before sharding it — O(level) memory on wide
+//! levels. The pump caps that buffer at `window_runs` entries /
+//! `window_slots` CI-test slots: the schedule's emit order is chopped
+//! into consecutive chunks, each evaluated (and, under `cupc shard`,
+//! distributed) independently. Because CI evaluation is pure per slot
+//! and candidates are applied at round end in chunk order, the chunk
+//! boundaries never change results — only memory (gated by
+//! `tests/oocore_conformance.rs::window_budgets_are_pure_memory_knobs`).
+//!
+//! A single run wider than `window_slots` is split mid-range (same
+//! arithmetic as [`split_runs`](crate::skeleton::pipeline::split_runs)),
+//! so no chunk ever exceeds the slot budget.
+
+use crate::skeleton::pipeline::Run;
+use anyhow::Result;
+
+/// Canonical-order chunker for one round's run stream. Chunks are
+/// numbered from 0 in emission order — the sequence number is the
+/// ownership key for cross-process distribution (`seq % world == rank`).
+pub struct WindowPump {
+    max_runs: usize,
+    max_slots: u64,
+    buf: Vec<Run>,
+    slots: u64,
+    emitted: u32,
+    peak_bytes: u64,
+}
+
+impl WindowPump {
+    pub fn new(window_runs: usize, window_slots: u64) -> Self {
+        WindowPump {
+            max_runs: window_runs.max(1),
+            max_slots: window_slots.max(1),
+            buf: Vec::new(),
+            slots: 0,
+            emitted: 0,
+            peak_bytes: 0,
+        }
+    }
+
+    /// Feed one window; completed chunks flow to `sink(seq, runs)` in
+    /// order. Splits `run` mid-range if it exceeds the slot budget.
+    pub fn offer(
+        &mut self,
+        run: Run,
+        mut sink: impl FnMut(u32, Vec<Run>) -> Result<()>,
+    ) -> Result<()> {
+        let mut rest = run;
+        while rest.count > 0 {
+            let take = rest.count.min(self.max_slots);
+            let piece = Run { task: rest.task, t0: rest.t0, count: take };
+            rest.t0 += take;
+            rest.count -= take;
+            if !self.buf.is_empty()
+                && (self.buf.len() >= self.max_runs || self.slots + take > self.max_slots)
+            {
+                self.flush(&mut sink)?;
+            }
+            self.buf.push(piece);
+            self.slots += take;
+            let bytes = (self.buf.len() * std::mem::size_of::<Run>()) as u64;
+            self.peak_bytes = self.peak_bytes.max(bytes);
+        }
+        Ok(())
+    }
+
+    /// Flush the final partial chunk of the round (if any).
+    pub fn finish(&mut self, mut sink: impl FnMut(u32, Vec<Run>) -> Result<()>) -> Result<()> {
+        if !self.buf.is_empty() {
+            self.flush(&mut sink)?;
+        }
+        Ok(())
+    }
+
+    fn flush(&mut self, sink: &mut impl FnMut(u32, Vec<Run>) -> Result<()>) -> Result<()> {
+        let chunk = std::mem::take(&mut self.buf);
+        self.slots = 0;
+        let seq = self.emitted;
+        self.emitted += 1;
+        sink(seq, chunk)
+    }
+
+    /// Chunks handed to the sink so far (== the round's chunk count
+    /// after [`WindowPump::finish`]). Identical on every rank, because
+    /// the emit order and the budgets are.
+    pub fn chunks_emitted(&self) -> u32 {
+        self.emitted
+    }
+
+    /// Peak bytes the run buffer held — the job-level
+    /// `peak_window_bytes` stat aggregates the max over all rounds.
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak_bytes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn collect(pump: &mut WindowPump, runs: &[Run]) -> Vec<(u32, Vec<Run>)> {
+        let mut chunks = Vec::new();
+        for &r in runs {
+            pump.offer(r, |seq, c| {
+                chunks.push((seq, c));
+                Ok(())
+            })
+            .unwrap();
+        }
+        pump.finish(|seq, c| {
+            chunks.push((seq, c));
+            Ok(())
+        })
+        .unwrap();
+        chunks
+    }
+
+    fn slot_list(chunks: &[(u32, Vec<Run>)]) -> Vec<(usize, u64)> {
+        let mut v = Vec::new();
+        for (_, chunk) in chunks {
+            for r in chunk {
+                for t in r.t0..r.t0 + r.count {
+                    v.push((r.task, t));
+                }
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn chunks_partition_the_stream_in_order() {
+        let runs = vec![
+            Run { task: 0, t0: 0, count: 10 },
+            Run { task: 1, t0: 5, count: 3 },
+            Run { task: 2, t0: 0, count: 9 },
+        ];
+        let want: Vec<(usize, u64)> = slot_list(&[(0, runs.clone())]);
+        for (max_runs, max_slots) in [(1usize, 4u64), (2, 7), (100, 1), (100, 1000)] {
+            let mut pump = WindowPump::new(max_runs, max_slots);
+            let chunks = collect(&mut pump, &runs);
+            assert_eq!(slot_list(&chunks), want, "runs={max_runs} slots={max_slots}");
+            let seqs: Vec<u32> = chunks.iter().map(|(s, _)| *s).collect();
+            let expect: Vec<u32> = (0..chunks.len() as u32).collect();
+            assert_eq!(seqs, expect, "chunk seqs are dense and ordered");
+            assert_eq!(pump.chunks_emitted() as usize, chunks.len());
+            for (_, c) in &chunks {
+                assert!(c.len() <= max_runs);
+                assert!(c.iter().map(|r| r.count).sum::<u64>() <= max_slots);
+            }
+        }
+    }
+
+    #[test]
+    fn oversized_runs_split_mid_range() {
+        let mut pump = WindowPump::new(8, 10);
+        let chunks = collect(&mut pump, &[Run { task: 3, t0: 2, count: 35 }]);
+        assert_eq!(chunks.len(), 4);
+        let counts: Vec<u64> = chunks
+            .iter()
+            .map(|(_, c)| c.iter().map(|r| r.count).sum())
+            .collect();
+        assert_eq!(counts, vec![10, 10, 10, 5]);
+        assert_eq!(chunks[1].1[0].t0, 12, "pieces continue the range");
+    }
+
+    #[test]
+    fn peak_bytes_tracks_the_largest_buffer() {
+        let mut pump = WindowPump::new(3, 1000);
+        let runs: Vec<Run> = (0..7).map(|i| Run { task: i, t0: 0, count: 1 }).collect();
+        let chunks = collect(&mut pump, &runs);
+        assert_eq!(chunks.len(), 3);
+        assert_eq!(
+            pump.peak_bytes(),
+            (3 * std::mem::size_of::<Run>()) as u64,
+            "peak is the fullest buffer, not the total stream"
+        );
+    }
+
+    #[test]
+    fn empty_stream_emits_nothing() {
+        let mut pump = WindowPump::new(4, 4);
+        let chunks = collect(&mut pump, &[]);
+        assert!(chunks.is_empty());
+        assert_eq!(pump.chunks_emitted(), 0);
+        assert_eq!(pump.peak_bytes(), 0);
+        // zero-count runs are dropped, not emitted as empty chunks
+        let chunks = collect(&mut pump, &[Run { task: 0, t0: 0, count: 0 }]);
+        assert!(chunks.is_empty());
+    }
+
+    #[test]
+    fn sink_errors_propagate() {
+        let mut pump = WindowPump::new(1, 1);
+        let r = pump.offer(Run { task: 0, t0: 0, count: 5 }, |_, _| {
+            anyhow::bail!("sink failed")
+        });
+        assert!(r.is_err());
+    }
+}

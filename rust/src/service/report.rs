@@ -258,6 +258,13 @@ pub struct JobReport {
     pub threads_used: usize,
     /// widest the job's elastic lease ever grew (≥ `threads_used`)
     pub threads_peak: usize,
+    /// adjacency representation the skeleton's level loop selected
+    /// (`"dense"` | `"sparse"` — [`crate::skeleton::OocStats`] spellings;
+    /// `"dense"` on a cache hit, where no skeleton ran)
+    pub adjacency: &'static str,
+    /// peak bytes held by the skeleton's streamed window buffer (0 on a
+    /// cache hit) — the observable side of the bounded-memory contract
+    pub peak_window_bytes: u64,
 }
 
 fn edges_json(edges: &[(u32, u32)]) -> String {
@@ -317,12 +324,15 @@ pub fn result_line(spec: &JobSpec, core: &JobResultCore) -> String {
 /// One observational JSON-lines stats record. `corr_cache` /
 /// `result_cache` say where each layer was served from
 /// (`miss` | `mem` | `disk` — the CI warm-cache gate greps these);
-/// `threads_peak` records how wide the elastic lease grew.
+/// `threads_peak` records how wide the elastic lease grew; `adjacency` /
+/// `peak_window_bytes` record the skeleton's out-of-core behavior (the
+/// CI oocore-smoke gate greps `adjacency`).
 pub fn stats_line(spec: &JobSpec, rep: &JobReport) -> String {
     format!(
         "{{\"job\":\"{}\",\"threads\":{},\"threads_peak\":{},\"corr_cache\":\"{}\",\
          \"result_cache\":\"{}\",\
-         \"seconds_load\":{:.6},\"seconds_corr\":{:.6},\"seconds_run\":{:.6}}}",
+         \"seconds_load\":{:.6},\"seconds_corr\":{:.6},\"seconds_run\":{:.6},\
+         \"adjacency\":\"{}\",\"peak_window_bytes\":{}}}",
         escape(&spec.name),
         rep.threads_used,
         rep.threads_peak,
@@ -330,7 +340,9 @@ pub fn stats_line(spec: &JobSpec, rep: &JobReport) -> String {
         rep.result_cache.name(),
         rep.seconds_load,
         rep.seconds_corr,
-        rep.seconds_run
+        rep.seconds_run,
+        rep.adjacency,
+        rep.peak_window_bytes
     )
 }
 
@@ -458,6 +470,8 @@ mod tests {
         assert!(v.get("seconds_run").is_none());
         assert!(v.get("corr_cache").is_none());
         assert!(v.get("threads").is_none());
+        assert!(v.get("adjacency").is_none());
+        assert!(v.get("peak_window_bytes").is_none());
     }
 
     #[test]
@@ -479,6 +493,8 @@ mod tests {
             result_cache: CacheOutcome::Miss,
             threads_used: 3,
             threads_peak: 5,
+            adjacency: "sparse",
+            peak_window_bytes: 4096,
         };
         let v = Json::parse(&stats_line(&toy_spec(), &rep)).unwrap();
         assert_eq!(v.get("corr_cache").unwrap().as_str(), Some("disk"));
@@ -486,6 +502,8 @@ mod tests {
         assert_eq!(v.get("threads").unwrap().as_usize(), Some(3));
         assert_eq!(v.get("threads_peak").unwrap().as_usize(), Some(5));
         assert_eq!(v.get("seconds_run").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("adjacency").unwrap().as_str(), Some("sparse"));
+        assert_eq!(v.get("peak_window_bytes").unwrap().as_usize(), Some(4096));
     }
 
     #[test]
@@ -512,6 +530,8 @@ mod tests {
             result_cache: CacheOutcome::Miss,
             threads_used: 1,
             threads_peak: 1,
+            adjacency: "dense",
+            peak_window_bytes: 0,
         }];
         let results = render_results(&jobs, &reports);
         assert_eq!(results.lines().count(), 1);

@@ -295,7 +295,10 @@ pub struct BatchOutput {
     pub disk: Option<DiskStats>,
 }
 
-fn load_data(spec: &JobSpec) -> Result<DataMatrix> {
+/// Resolve a job's data source (CSV read / dataset generator / scenario
+/// grid point). Shared with the `cupc shard` coordinator, which computes
+/// the correlation matrix itself instead of going through [`run_job`].
+pub fn load_data(spec: &JobSpec) -> Result<DataMatrix> {
     match &spec.source {
         DataSource::Csv(p) => Ok(load_csv(p)?.0),
         DataSource::Dataset(name) => {
@@ -364,6 +367,11 @@ pub fn run_job(
         spec.variant,
         spec.orient,
     );
+    // out-of-core observability for the stats sidecar; stays at the
+    // defaults ("dense", 0) when the result is served from a cache tier
+    // (no skeleton ran) — deliberately NOT cached alongside the result
+    // core, which carries deterministic fields only
+    let mut ooc = crate::skeleton::OocStats::default();
     let (core, result_cache) = loop {
         if let Some(c) = cache.get_result(rk) {
             break (c, CacheOutcome::Mem);
@@ -383,8 +391,10 @@ pub fn run_job(
             // through orientation, so a census-heavy job absorbs idle
             // workers for its v-structure/Meek phase too
             cfg.width_hook = Some(ElasticLease::hook(lease));
-            let res = pc_stable_corr(&corr, data.n, data.m, &cfg)
-                .map(|r| Arc::new(JobResultCore::from_pc(&r, data.n, data.m)));
+            let res = pc_stable_corr(&corr, data.n, data.m, &cfg).map(|r| {
+                ooc = r.skeleton.ooc;
+                Arc::new(JobResultCore::from_pc(&r, data.n, data.m))
+            });
             if let Ok(core) = &res {
                 cache.put_result(rk, core.clone());
             }
@@ -410,6 +420,8 @@ pub fn run_job(
         result_cache,
         threads_used: threads_start,
         threads_peak: lease.peak(),
+        adjacency: ooc.adjacency,
+        peak_window_bytes: ooc.peak_window_bytes,
     })
 }
 

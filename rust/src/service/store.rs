@@ -62,6 +62,12 @@ const HEADER_LEN: usize = 49;
 enum Kind {
     Corr,
     Result,
+    /// `cupc shard` plan descriptor (schema-versioned payload — see
+    /// `oocore::shard`). Additive in schema v2: older binaries treat
+    /// these files as foreign and never misparse them.
+    Plan,
+    /// one rank's per-round exchange blob (`oocore::exchange`)
+    Shard,
 }
 
 impl Kind {
@@ -69,6 +75,8 @@ impl Kind {
         match self {
             Kind::Corr => 0,
             Kind::Result => 1,
+            Kind::Plan => 2,
+            Kind::Shard => 3,
         }
     }
 
@@ -76,6 +84,8 @@ impl Kind {
         match self {
             Kind::Corr => "corr",
             Kind::Result => "res",
+            Kind::Plan => "plan",
+            Kind::Shard => "shd",
         }
     }
 }
@@ -184,7 +194,7 @@ fn is_entry_name(name: &str) -> bool {
         Some(s) => s,
         None => return false,
     };
-    [Kind::Corr, Kind::Result].into_iter().any(|k| {
+    [Kind::Corr, Kind::Result, Kind::Plan, Kind::Shard].into_iter().any(|k| {
         stem.strip_prefix(k.prefix())
             .and_then(|rest| rest.strip_prefix('-'))
             .is_some_and(|key| key.len() == 32 && key.bytes().all(|b| b.is_ascii_hexdigit()))
@@ -352,6 +362,42 @@ impl DiskStore {
     /// Persist a job result core.
     pub fn put_result(&self, key: Key, core: &JobResultCore) {
         self.put(Kind::Result, key, &core.to_bytes());
+    }
+
+    /// Persist a `cupc shard` plan descriptor (opaque schema-versioned
+    /// bytes — `oocore::shard` owns the payload format).
+    pub fn put_plan(&self, key: Key, payload: &[u8]) {
+        self.put(Kind::Plan, key, payload);
+    }
+
+    /// Plan descriptor bytes for `key` (checksum-validated; corruption
+    /// is a miss like every other kind).
+    pub fn get_plan(&self, key: Key) -> Option<Vec<u8>> {
+        match self.load(Kind::Plan, key) {
+            Some(p) => {
+                self.touch(Kind::Plan, key);
+                self.count(|c| c.hits += 1);
+                Some(p)
+            }
+            None => {
+                self.count(|c| c.misses += 1);
+                None
+            }
+        }
+    }
+
+    /// Persist one rank's per-round exchange blob. The shard protocol
+    /// relies on rename-atomicity only: a blob is either absent or
+    /// complete, never half-visible.
+    pub fn put_shard(&self, key: Key, payload: &[u8]) {
+        self.put(Kind::Shard, key, payload);
+    }
+
+    /// Exchange blob for `key`. Polled by waiting ranks, so a miss is
+    /// the *common* case and is not counted against the miss stat
+    /// (which reports cache effectiveness, not barrier latency).
+    pub fn get_shard(&self, key: Key) -> Option<Vec<u8>> {
+        self.load(Kind::Shard, key)
     }
 
     /// Write one entry atomically (temp + fsync + rename), then enforce
@@ -580,6 +626,23 @@ mod tests {
         assert_eq!(st.hits, 1);
         assert_eq!(st.misses, 2);
         assert_eq!(st.dropped, 0, "absent ≠ corrupt");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn plan_and_shard_blobs_roundtrip_without_aliasing() {
+        let (store, dir) = tmp_store("shardkinds", 1 << 20);
+        store.put_plan((4, 2), b"plan-bytes");
+        store.put_shard((4, 2), b"shard-bytes");
+        assert_eq!(store.get_plan((4, 2)).as_deref(), Some(&b"plan-bytes"[..]));
+        assert_eq!(store.get_shard((4, 2)).as_deref(), Some(&b"shard-bytes"[..]));
+        // same key, four kinds: none alias
+        assert!(store.get_corr((4, 2), 4).is_none());
+        assert!(store.get_result((4, 2)).is_none());
+        assert!(store.get_shard((9, 9)).is_none(), "absent blob is None");
+        // shard polling must not inflate the miss stat
+        let st = store.stats();
+        assert_eq!(st.hits, 1, "plan hit only; shard reads bypass counters");
         let _ = fs::remove_dir_all(&dir);
     }
 

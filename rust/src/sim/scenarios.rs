@@ -110,8 +110,52 @@ pub const ALL_VARIANTS: [Variant; 7] = [
 ];
 
 /// Look up a grid point by name (the `service` job-source address).
+/// Searches the default conformance grid and the out-of-core grid.
 pub fn find(name: &str) -> Option<Scenario> {
-    default_grid().into_iter().find(|s| s.name == name)
+    default_grid()
+        .into_iter()
+        .chain(oocore_grid())
+        .find(|s| s.name == name)
+}
+
+/// The out-of-core scenario grid: sizes where the sparse adjacency and
+/// streamed windows actually engage (n past
+/// [`crate::oocore::sparse::SPARSE_MIN_N`], low ER density so level 0
+/// prunes hard). Deliberately *not* part of [`default_grid`] — the
+/// cross-variant conformance suite iterates that grid over all seven
+/// families, which would be CI-prohibitive at these sizes. These points
+/// are addressable by name (`scenario:oocore-2k` job sources, the CI
+/// oocore-smoke manifest) and driven by `tests/oocore_conformance.rs`.
+pub fn oocore_grid() -> Vec<Scenario> {
+    fn oc(
+        name: &'static str,
+        n: usize,
+        m: usize,
+        density: f64,
+        alpha: f64,
+        max_level: Option<usize>,
+        seed: u64,
+    ) -> Scenario {
+        Scenario {
+            name,
+            n,
+            m,
+            topology: Topology::Er(density),
+            alpha,
+            max_level,
+            seed,
+            corr: CorrKind::Pearson,
+        }
+    }
+    vec![
+        // ~4 expected neighbors per node: sparse enough that the CSR
+        // representation wins after level 0, big enough to clear the
+        // SPARSE_MIN_N floor
+        oc("oocore-2k", 2048, 256, 4.0 / 2048.0, 0.01, None, 914),
+        // the bounded-memory headline size (release-build test only);
+        // max_level caps the run so the gate stays minutes, not hours
+        oc("oocore-10k", 10_000, 128, 0.0002, 0.001, Some(2), 915),
+    ]
 }
 
 /// The default conformance grid: ≥ 8 points crossing density (sparse →
@@ -266,6 +310,41 @@ mod tests {
         assert!(find("sparse-a01").is_some());
         assert!(find("grn-mid").is_some());
         assert!(find("no-such-scenario").is_none());
+    }
+
+    /// The out-of-core points are addressable by name but excluded from
+    /// the cross-variant conformance grid (they would be CI-prohibitive
+    /// across all seven families).
+    #[test]
+    fn oocore_grid_is_findable_but_not_in_the_default_grid() {
+        let ooc = oocore_grid();
+        assert!(!ooc.is_empty());
+        let defaults = default_grid();
+        for sc in &ooc {
+            assert!(find(sc.name).is_some(), "{}", sc.name);
+            assert!(
+                defaults.iter().all(|d| d.name != sc.name),
+                "{} must stay out of default_grid",
+                sc.name
+            );
+            assert!(
+                sc.n >= crate::oocore::sparse::SPARSE_MIN_N,
+                "{}: n={} under the sparse floor",
+                sc.name,
+                sc.n
+            );
+        }
+        // names and seeds must stay unique across BOTH grids (seeds are
+        // the determinism anchor; a reuse would alias two datasets)
+        let mut names: Vec<&str> = defaults.iter().chain(&ooc).map(|s| s.name).collect();
+        let total = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), total, "scenario name reused across grids");
+        let mut seeds: Vec<u64> = defaults.iter().chain(&ooc).map(|s| s.seed).collect();
+        seeds.sort_unstable();
+        seeds.dedup();
+        assert_eq!(seeds.len(), total, "scenario seed reused across grids");
     }
 
     /// Conformance coverage cannot silently lag the registry: a family

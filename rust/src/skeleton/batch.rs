@@ -9,9 +9,10 @@
 //! analogue of the paper's in-kernel edge-removal race, made
 //! deterministic).
 
-use crate::graph::adj::AdjMatrix;
+use crate::graph::adj::{AdjMatrix, EdgeRemove};
 use crate::graph::sepset::SepSets;
 use crate::stats::fisher::independent;
+use anyhow::{bail, Result};
 
 /// f32 copy of the correlation matrix (the artifact dtype).
 pub struct Corr32 {
@@ -168,12 +169,29 @@ impl Removals {
         self.meta.is_empty()
     }
 
+    /// Conditioning-set size of the retained entries.
+    #[inline]
+    pub fn l(&self) -> usize {
+        self.l
+    }
+
+    /// Append another candidate list (same level) in order — how the
+    /// driver concatenates a chunk's per-shard results back into the
+    /// chunk's canonical slot order.
+    pub fn append(&mut self, other: Removals) {
+        debug_assert_eq!(self.l, other.l);
+        self.meta.extend(other.meta);
+        self.svals.extend(other.svals);
+    }
+
     /// Apply in canonical order: the first entry whose edge is still
     /// present removes it and stores its S (later candidates for the
     /// same edge are moot). Returns the number of edges removed —
     /// identical to replaying the full verdict stream through
-    /// [`EBatch::apply`] / [`SBatch::apply`].
-    pub fn apply(&self, graph: &AdjMatrix, sepsets: &SepSets) -> usize {
+    /// [`EBatch::apply`] / [`SBatch::apply`]. Generic over the
+    /// adjacency representation (dense matrix, sparse CSR, or the
+    /// dispatch enum — see [`EdgeRemove`]).
+    pub fn apply(&self, graph: &impl EdgeRemove, sepsets: &SepSets) -> usize {
         let mut removed = 0;
         for (idx, meta) in self.meta.iter().enumerate() {
             let (i, j) = (meta.i as usize, meta.j as usize);
@@ -183,6 +201,52 @@ impl Removals {
             }
         }
         removed
+    }
+
+    /// Wire codec for the cross-process exchange: `l`, entry count,
+    /// then (i, j) pairs and the flat conditioning-set ids, all
+    /// little-endian u32. Order-preserving, so a decoded list applies
+    /// identically to the original.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut b = Vec::with_capacity(8 + self.meta.len() * 8 + self.svals.len() * 4);
+        b.extend_from_slice(&(self.l as u32).to_le_bytes());
+        b.extend_from_slice(&(self.meta.len() as u32).to_le_bytes());
+        for m in &self.meta {
+            b.extend_from_slice(&m.i.to_le_bytes());
+            b.extend_from_slice(&m.j.to_le_bytes());
+        }
+        for s in &self.svals {
+            b.extend_from_slice(&s.to_le_bytes());
+        }
+        b
+    }
+
+    pub fn from_bytes(b: &[u8]) -> Result<Removals> {
+        let rd_u32 = |b: &[u8], at: usize| -> Result<u32> {
+            match b.get(at..at + 4) {
+                Some(w) => Ok(u32::from_le_bytes(w.try_into().unwrap())),
+                None => bail!("truncated removals blob"),
+            }
+        };
+        let l = rd_u32(b, 0)? as usize;
+        let len = rd_u32(b, 4)? as usize;
+        let want = 8 + len * 8 + len * l * 4;
+        if b.len() != want {
+            bail!("removals blob size mismatch: {} != {want}", b.len());
+        }
+        let mut meta = Vec::with_capacity(len);
+        for idx in 0..len {
+            meta.push(SlotMeta {
+                i: rd_u32(b, 8 + idx * 8)?,
+                j: rd_u32(b, 12 + idx * 8)?,
+            });
+        }
+        let base = 8 + len * 8;
+        let mut svals = Vec::with_capacity(len * l);
+        for k in 0..len * l {
+            svals.push(rd_u32(b, base + k * 4)?);
+        }
+        Ok(Removals { l, meta, svals })
     }
 }
 
@@ -518,6 +582,48 @@ mod tests {
         assert_eq!(s1.sorted_entries(), s2.sorted_entries());
         assert_eq!(s2.get(0, 1), Some(vec![3]));
         assert!(g2.has_edge(0, 3), "padded slot must not remove");
+    }
+
+    #[test]
+    fn removals_roundtrip_through_bytes() {
+        let corr = tiny_corr();
+        let mut b = EBatch::new(2, 8);
+        b.push(&corr, 0, 1, &[2, 3]);
+        b.push(&corr, 1, 3, &[0, 2]);
+        let mut out = Removals::new(2);
+        b.drain_independent(&[0.0, 0.0], 0.1, &mut out);
+        assert_eq!(out.len(), 2);
+        let back = Removals::from_bytes(&out.to_bytes()).unwrap();
+        assert_eq!(back.l(), 2);
+        let g1 = AdjMatrix::complete(4);
+        let s1 = SepSets::new();
+        let g2 = AdjMatrix::complete(4);
+        let s2 = SepSets::new();
+        assert_eq!(out.apply(&g1, &s1), back.apply(&g2, &s2));
+        assert_eq!(g1.snapshot(), g2.snapshot());
+        assert_eq!(s1.sorted_entries(), s2.sorted_entries());
+        // corrupt blobs are rejected, not misread
+        assert!(Removals::from_bytes(&out.to_bytes()[..9]).is_err());
+        assert!(Removals::from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn removals_append_preserves_order() {
+        let corr = tiny_corr();
+        let mk = |i: usize, j: usize| {
+            let mut b = EBatch::new(1, 4);
+            b.push(&corr, i, j, &[3]);
+            let mut r = Removals::new(1);
+            b.drain_independent(&[0.0], 0.1, &mut r);
+            r
+        };
+        let mut all = mk(0, 1);
+        all.append(mk(0, 2));
+        assert_eq!(all.len(), 2);
+        let g = AdjMatrix::complete(4);
+        let s = SepSets::new();
+        assert_eq!(all.apply(&g, &s), 2);
+        assert!(!g.has_edge(0, 1) && !g.has_edge(0, 2));
     }
 
     #[test]

@@ -12,11 +12,18 @@
 //!
 //! [`RoundSchedule`]: super::schedule::RoundSchedule
 
+use super::schedule::RoundSchedule;
 use super::{Config, SkeletonResult, Variant};
 use anyhow::Result;
 
 /// Whole-run entry point of a family (every leaf module exports one).
 pub type RunFn = fn(&[f64], usize, usize, &Config) -> Result<SkeletonResult>;
+
+/// Factory for a family's [`RoundSchedule`], for callers that need to
+/// drive the level loop themselves (the `cupc shard` workers, which run
+/// the schedule through `run_rounds_sharded`). `None` for the
+/// coarse-grained families, which have no batched schedule to shard.
+pub type ScheduleFn = fn(&Config) -> Box<dyn RoundSchedule>;
 
 /// One registered algorithm family.
 pub struct FamilyInfo {
@@ -34,6 +41,11 @@ pub struct FamilyInfo {
     /// still exact but whose counts are scheduling-dependent).
     pub deterministic_tests: bool,
     pub run: RunFn,
+    /// Batched-schedule factory, or `None` for whole-run-only families
+    /// (those cannot run under `cupc shard`). Baseline rows bake in
+    /// their γ/β overrides so the factory *is* the family, not merely
+    /// its module.
+    pub schedule: Option<ScheduleFn>,
 }
 
 /// Every family, in tag order. Appending here is the single
@@ -46,6 +58,7 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 0,
         deterministic_tests: true,
         run: super::serial::run,
+        schedule: None,
     },
     FamilyInfo {
         variant: Variant::ParallelCpu,
@@ -54,6 +67,7 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 1,
         deterministic_tests: false,
         run: super::parallel_cpu::run,
+        schedule: None,
     },
     FamilyInfo {
         variant: Variant::CupcE,
@@ -62,6 +76,7 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 2,
         deterministic_tests: true,
         run: super::gpu_e::run,
+        schedule: Some(|cfg| Box::new(super::gpu_e::ESchedule::new(cfg))),
     },
     FamilyInfo {
         variant: Variant::CupcS,
@@ -70,6 +85,7 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 3,
         deterministic_tests: true,
         run: super::gpu_s::run,
+        schedule: Some(|cfg| Box::new(super::gpu_s::SSchedule::new(cfg))),
     },
     FamilyInfo {
         variant: Variant::Baseline1,
@@ -78,6 +94,13 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 4,
         deterministic_tests: true,
         run: super::baseline1::run,
+        schedule: Some(|cfg| {
+            Box::new(super::gpu_e::ESchedule::new(&Config {
+                gamma: 1,
+                beta: 1,
+                ..cfg.clone()
+            }))
+        }),
     },
     FamilyInfo {
         variant: Variant::Baseline2,
@@ -86,6 +109,13 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 5,
         deterministic_tests: true,
         run: super::baseline2::run,
+        schedule: Some(|cfg| {
+            Box::new(super::gpu_e::ESchedule::new(&Config {
+                gamma: usize::MAX / 2,
+                beta: 1,
+                ..cfg.clone()
+            }))
+        }),
     },
     FamilyInfo {
         variant: Variant::Reversed,
@@ -94,6 +124,7 @@ pub const FAMILIES: &[FamilyInfo] = &[
         tag: 6,
         deterministic_tests: true,
         run: super::reversed::run,
+        schedule: Some(|_| Box::new(super::reversed::ReversedSchedule::new())),
     },
 ];
 
@@ -169,6 +200,25 @@ mod tests {
             assert_eq!(parse(&f.name.to_ascii_uppercase()), Some(f.variant));
         }
         assert_eq!(parse("nope"), None);
+    }
+
+    #[test]
+    fn schedule_factories_cover_exactly_the_batched_families() {
+        for f in FAMILIES {
+            let coarse = matches!(f.variant, Variant::Serial | Variant::ParallelCpu);
+            assert_eq!(
+                f.schedule.is_none(),
+                coarse,
+                "{}: schedule factory presence",
+                f.name
+            );
+            if let Some(make) = f.schedule {
+                // the factory must build without touching the config's
+                // thread/engine knobs (workers own those)
+                let sched = make(&Config::default());
+                assert!(!sched.label().is_empty(), "{}", f.name);
+            }
+        }
     }
 
     #[test]

@@ -63,7 +63,7 @@ impl RoundSchedule for ESchedule {
         round.saturating_mul(self.gamma) >= self.max_total
     }
 
-    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+    fn visit_round(&self, ctx: &LevelCtx<'_>, round: u64, emit: &mut dyn FnMut(Run)) {
         let lo = round.saturating_mul(self.gamma);
         for (ti, task) in self.tasks.iter().enumerate() {
             if lo >= task.total {
@@ -76,7 +76,7 @@ impl RoundSchedule for ESchedule {
                 .saturating_add(1)
                 .saturating_mul(self.gamma)
                 .min(task.total);
-            runs.push(Run { task: ti, t0: lo, count: hi - lo });
+            emit(Run { task: ti, t0: lo, count: hi - lo });
         }
     }
 

@@ -63,7 +63,7 @@ impl RoundSchedule for SSchedule {
         round.saturating_mul(self.flight) >= self.max_total
     }
 
-    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+    fn visit_round(&self, ctx: &LevelCtx<'_>, round: u64, emit: &mut dyn FnMut(Run)) {
         let lo = round.saturating_mul(self.flight);
         for (ri, &(i, total)) in self.rows.iter().enumerate() {
             if lo >= total {
@@ -82,7 +82,7 @@ impl RoundSchedule for SSchedule {
                 .saturating_add(1)
                 .saturating_mul(self.flight)
                 .min(total);
-            runs.push(Run { task: ri, t0: lo, count: hi - lo });
+            emit(Run { task: ri, t0: lo, count: hi - lo });
         }
     }
 

@@ -87,6 +87,40 @@ pub fn eval_range(
     Ok(out)
 }
 
+/// Complement of [`eval_range`] over the same window: the pairs of
+/// `[t0, t0 + count)` that are *not* in `removed` (which must be the
+/// window's candidates in slot order, as `eval_range` returns them).
+/// The out-of-core driver exchanges survivor lists — O(edges) in the
+/// sparse regimes it targets, where the candidate list is O(n²).
+pub fn survivors_of_range(
+    n: usize,
+    t0: u64,
+    count: u64,
+    removed: &[(u32, u32)],
+) -> Vec<(u32, u32)> {
+    let mut out = Vec::with_capacity((count as usize).saturating_sub(removed.len()));
+    if count == 0 {
+        return out;
+    }
+    let (mut i, mut j) = pair_at(n, t0);
+    let mut skip = removed.iter().peekable();
+    for _ in 0..count {
+        let pair = (i as u32, j as u32);
+        if skip.peek() == Some(&&pair) {
+            skip.next();
+        } else {
+            out.push(pair);
+        }
+        j += 1;
+        if j == n {
+            i += 1;
+            j = i + 1;
+        }
+    }
+    debug_assert!(skip.next().is_none(), "removed pair outside the window");
+    out
+}
+
 /// Apply level-0 independence candidates in the order given (canonical
 /// slot order when shards are concatenated in order). Returns the number
 /// of edges removed.
@@ -203,6 +237,36 @@ mod tests {
             }
         }
         assert_eq!(t, n_pairs(n));
+    }
+
+    #[test]
+    fn survivors_complement_the_candidates() {
+        let n = 6;
+        let total = n_pairs(n);
+        // remove a scattered subset, in slot order
+        let removed = vec![(0u32, 1u32), (0, 4), (2, 3), (4, 5)];
+        let survivors = survivors_of_range(n, 0, total, &removed);
+        assert_eq!(survivors.len() as u64, total - removed.len() as u64);
+        for &(a, b) in &removed {
+            assert!(!survivors.contains(&(a, b)));
+        }
+        // windowed sweep concatenates to the full sweep
+        let mut windowed = Vec::new();
+        let mut t0 = 0u64;
+        for count in [4u64, 1, 7, 3] {
+            let lo = t0;
+            let hi = t0 + count;
+            let in_window: Vec<(u32, u32)> = (lo..hi)
+                .map(|t| pair_at(n, t))
+                .map(|(a, b)| (a as u32, b as u32))
+                .filter(|p| removed.contains(p))
+                .collect();
+            windowed.extend(survivors_of_range(n, t0, count, &in_window));
+            t0 = hi;
+        }
+        assert_eq!(t0, total);
+        assert_eq!(windowed, survivors);
+        assert!(survivors_of_range(n, 3, 0, &[]).is_empty());
     }
 
     /// The sharding contract: evaluating the canonical sweep as any

@@ -138,6 +138,45 @@ impl std::fmt::Debug for WidthHook {
     }
 }
 
+/// Which adjacency representation the level-loop driver runs on (see
+/// [`crate::oocore::sparse::Adj`]).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum AdjMode {
+    /// decide after level 0: sparse when the graph is large and the
+    /// level-0 survivor density is at or below 25%, dense otherwise
+    Auto,
+    /// always the dense matrix (the pre-out-of-core behavior)
+    Dense,
+    /// always the CSR adjacency (test/benchmark forcing)
+    Sparse,
+}
+
+/// Out-of-core knobs. Every setting is a memory/granularity trade-off
+/// only: results are bit-identical for any value (gated by
+/// `tests/oocore_conformance.rs`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct OocConfig {
+    pub adjacency: AdjMode,
+    /// max combination windows buffered per streamed chunk
+    pub window_runs: usize,
+    /// max CI-test slots per streamed chunk (also the cross-process
+    /// chunk granularity under `cupc shard`)
+    pub window_slots: u64,
+}
+
+impl Default for OocConfig {
+    fn default() -> Self {
+        // sized so typical rounds fit one chunk: the single-process
+        // default path then shards exactly the same run list per round
+        // as the pre-streaming driver did
+        OocConfig {
+            adjacency: AdjMode::Auto,
+            window_runs: 1 << 16,
+            window_slots: 1 << 20,
+        }
+    }
+}
+
 /// Run configuration. The β/γ (cuPC-E) and θ/δ (cuPC-S) knobs carry the
 /// paper's meaning translated to the batch engine: γ = conditioning sets
 /// in flight per edge per round, θ×δ = conditioning sets in flight per
@@ -177,6 +216,10 @@ pub struct Config {
     /// the returned width (see [`WidthPolicy`]). `None` (the default)
     /// keeps `threads` fixed for the whole run.
     pub width_hook: Option<WidthHook>,
+    /// Out-of-core knobs (adjacency representation, streamed-window
+    /// budgets). Purely a memory trade-off: results are bit-identical
+    /// for any setting, so cache keys ignore it.
+    pub ooc: OocConfig,
 }
 
 impl Default for Config {
@@ -196,6 +239,7 @@ impl Default for Config {
             verbose: false,
             orient: OrientRule::Standard,
             width_hook: None,
+            ooc: OocConfig::default(),
         }
     }
 }
@@ -240,11 +284,33 @@ pub struct LevelStats {
     pub seconds: f64,
 }
 
+/// Out-of-core observability for one skeleton run: which adjacency
+/// representation the level loop selected and how large the streamed
+/// run buffer peaked. Surfaced per job in the batch/serve stats sidecar
+/// so the bounded-memory claim is checkable from the outside.
+#[derive(Clone, Copy, Debug)]
+pub struct OocStats {
+    /// "dense" | "sparse" (stable spellings — CI greps these)
+    pub adjacency: &'static str,
+    /// peak bytes held by the streamed window buffer
+    pub peak_window_bytes: u64,
+}
+
+impl Default for OocStats {
+    fn default() -> Self {
+        OocStats {
+            adjacency: "dense",
+            peak_window_bytes: 0,
+        }
+    }
+}
+
 /// Output of skeleton discovery.
 pub struct SkeletonResult {
     pub graph: AdjMatrix,
     pub sepsets: SepSets,
     pub levels: Vec<LevelStats>,
+    pub ooc: OocStats,
 }
 
 impl SkeletonResult {
@@ -260,12 +326,20 @@ impl SkeletonResult {
 /// The PC-stable stop rule (Algorithm 1 line 17): continue while the
 /// maximum degree − 1 ≥ next level, plus the optional user cap.
 pub fn should_continue(graph: &AdjMatrix, next_level: usize, cfg: &Config) -> bool {
+    should_continue_any(graph.max_degree(), next_level, cfg)
+}
+
+/// The stop rule on a bare max-degree — shared by every adjacency
+/// representation (the out-of-core driver asks it through
+/// [`crate::oocore::sparse::Adj::max_degree`], the dense paths through
+/// [`should_continue`]).
+pub fn should_continue_any(max_degree: usize, next_level: usize, cfg: &Config) -> bool {
     if let Some(cap) = cfg.max_level {
         if next_level > cap {
             return false;
         }
     }
-    graph.max_degree() > next_level
+    max_degree > next_level
 }
 
 /// The trivial result for degenerate inputs (n < 2): no pairs exist, so
@@ -282,6 +356,7 @@ pub fn degenerate_result(n: usize) -> SkeletonResult {
             level: 0,
             ..LevelStats::default()
         }],
+        ooc: OocStats::default(),
     }
 }
 

@@ -77,7 +77,7 @@ impl RoundSchedule for ReversedSchedule {
         round >= self.max_total
     }
 
-    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+    fn visit_round(&self, ctx: &LevelCtx<'_>, round: u64, emit: &mut dyn FnMut(Run)) {
         for (ti, task) in self.tasks.iter().enumerate() {
             if round >= task.total {
                 continue; // this edge's sets are exhausted
@@ -86,7 +86,7 @@ impl RoundSchedule for ReversedSchedule {
                 continue; // pruned in an earlier round — budget cancelled
             }
             // walk the combination index space from the top down
-            runs.push(Run { task: ti, t0: task.total - 1 - round, count: 1 });
+            emit(Run { task: ti, t0: task.total - 1 - round, count: 1 });
         }
     }
 
@@ -201,6 +201,7 @@ mod tests {
         let corr32 = Corr32::from_f64(&corr, n);
         let snap = graph.snapshot();
         let comp = CompactAdj::from_snapshot(&snap, n);
+        let graph = crate::oocore::sparse::Adj::Dense(graph);
         let l = 2;
         let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l, taul: 1.0 };
 

@@ -2,18 +2,18 @@
 //! [`RoundSchedule`] strategy plugged into one generic level-loop driver,
 //! not a hand-copied level loop per variant.
 //!
-//! The driver ([`run_rounds`] / [`run_rounds_with_engine`]) owns
-//! everything PC-stable requires to stay order-independent: the
-//! level-synchronous frame (one frozen `G'` snapshot per level, removals
-//! applied between rounds), the level-0 pair sweep, the between-level
-//! [`WidthPolicy`](super::WidthPolicy) re-lease point, the stop rule and
-//! the per-level bookkeeping. A schedule only decides *which CI tests
-//! run when*:
+//! The driver ([`run_rounds`] / [`run_rounds_with_engine`] /
+//! [`run_rounds_sharded`]) owns everything PC-stable requires to stay
+//! order-independent: the level-synchronous frame (one frozen `G'`
+//! snapshot per level, removals applied between rounds), the level-0
+//! pair sweep, the between-level [`WidthPolicy`](super::WidthPolicy)
+//! re-lease point, the stop rule and the per-level bookkeeping. A
+//! schedule only decides *which CI tests run when*:
 //!
 //! * [`begin_level`](RoundSchedule::begin_level) — build the level's task
 //!   list from the frozen snapshot (per-edge cursors, per-row cursors,
 //!   any ordering the family wants);
-//! * [`list_round`](RoundSchedule::list_round) — stage 1: emit the
+//! * [`visit_round`](RoundSchedule::visit_round) — stage 1: emit the
 //!   round's live combination windows as [`Run`]s in the schedule's
 //!   canonical order;
 //! * [`eval_shard`](RoundSchedule::eval_shard) — stage 2 worker body:
@@ -24,6 +24,24 @@
 //! canonical slot order (stage 3), every schedule implemented on this
 //! trait is bit-deterministic and thread-count invariant *by
 //! construction* — the property `tests/conformance_engines.rs` gates.
+//!
+//! # Out-of-core execution
+//!
+//! The driver streams every round through a
+//! [`WindowPump`](crate::oocore::stream::WindowPump): emitted windows
+//! are chopped into canonical-order chunks bounded by
+//! [`Config::ooc`](super::OocConfig), each chunk is sharded through the
+//! executor as it completes, and the per-chunk candidate lists apply at
+//! round end in chunk order — semantically identical to evaluating the
+//! whole round at once (the flight sees the graph frozen at round
+//! start either way), but with an O(chunk) run buffer. The adjacency
+//! behind [`LevelCtx::graph`] is the [`Adj`] seam: dense matrix or CSR
+//! [`SparseAdj`](crate::oocore::sparse::SparseAdj), selected after
+//! level 0 (see [`AdjMode`](super::AdjMode)). Under `cupc shard`,
+//! chunks are owned round-robin by rank and the per-round results merge
+//! through a [`DiskExchange`](crate::oocore::exchange::DiskExchange) —
+//! every rank applies the identical merged stream, so all ranks hold
+//! the identical graph at every round boundary.
 //!
 //! Implementations: [`gpu_e`](super::gpu_e) (cuPC-E and, through its γ
 //! knob, the two Fig. 5 baselines), [`gpu_s`](super::gpu_s) (cuPC-S),
@@ -38,11 +56,17 @@
 use super::batch::{Corr32, EBatch, Removals};
 use super::comb::{n_sets_edge, CombRangeSkip};
 use super::engine::CiEngine;
+use super::level0::{eval_range, n_pairs, survivors_of_range};
 use super::pipeline::{use_pool, Executor, Run};
-use super::{should_continue, Config, LevelStats, SkeletonResult};
+use super::{should_continue_any, AdjMode, Config, LevelStats, OocStats, SkeletonResult};
 use crate::graph::adj::AdjMatrix;
 use crate::graph::compact::CompactAdj;
 use crate::graph::sepset::SepSets;
+use crate::oocore::exchange::{
+    decode_level_chunk, decode_pairs, encode_level_chunk, encode_pairs, DiskExchange,
+};
+use crate::oocore::sparse::{Adj, SparseAdj, SPARSE_MIN_N};
+use crate::oocore::stream::WindowPump;
 use crate::stats::fisher::tau;
 use crate::util::timer::Timer;
 use anyhow::Result;
@@ -52,7 +76,7 @@ use anyhow::Result;
 /// the f32-packed correlations, the level and its threshold.
 pub struct LevelCtx<'a> {
     pub comp: &'a CompactAdj,
-    pub graph: &'a AdjMatrix,
+    pub graph: &'a Adj,
     pub corr32: &'a Corr32,
     pub l: usize,
     pub taul: f64,
@@ -70,13 +94,22 @@ pub trait RoundSchedule: Sync {
     fn begin_level(&mut self, ctx: &LevelCtx<'_>);
 
     /// True when round `round` is past the schedule's last window (the
-    /// driver also stops early when a round lists no live runs).
+    /// driver also stops early when a round emits no live runs).
     fn rounds_done(&self, round: u64) -> bool;
 
-    /// Stage 1 (serial): append round `round`'s live windows to `runs`
-    /// in the schedule's canonical order. The concatenation of the runs
-    /// *is* the round's canonical slot order for the apply stage.
-    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>);
+    /// Stage 1 (serial): emit round `round`'s live windows to `emit` in
+    /// the schedule's canonical order. The concatenation of the emitted
+    /// runs *is* the round's canonical slot order for the apply stage.
+    /// Push-style so the driver can stream chunks through the executor
+    /// without materializing the whole round.
+    fn visit_round(&self, ctx: &LevelCtx<'_>, round: u64, emit: &mut dyn FnMut(Run));
+
+    /// Round `round`'s windows materialized into `runs` (tests and
+    /// small callers; the driver streams through
+    /// [`visit_round`](RoundSchedule::visit_round) instead).
+    fn list_round(&self, ctx: &LevelCtx<'_>, round: u64, runs: &mut Vec<Run>) {
+        self.visit_round(ctx, round, &mut |r| runs.push(r));
+    }
 
     /// Stage 2 (parallel worker body): pack + evaluate one shard of the
     /// round's windows; return the independence candidates (canonical
@@ -106,10 +139,10 @@ pub fn run_rounds(
         return Ok(super::degenerate_result(n));
     }
     if use_pool(cfg) {
-        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads })
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads }, None)
     } else {
         let mut engine = crate::runtime::engine_from_config(cfg)?;
-        run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()))
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()), None)
     }
 }
 
@@ -126,7 +159,30 @@ pub fn run_rounds_with_engine(
     if n < 2 {
         return Ok(super::degenerate_result(n));
     }
-    run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine))
+    run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine), None)
+}
+
+/// Cross-process entry point (`cupc shard` workers and the in-process
+/// conformance harness): the identical driver with chunk ownership
+/// round-robin by rank and per-round merges through `exch`. Every rank
+/// returns the complete result, bit-identical to [`run_rounds`].
+pub fn run_rounds_sharded(
+    corr: &[f64],
+    n: usize,
+    m: usize,
+    cfg: &Config,
+    sched: &mut dyn RoundSchedule,
+    exch: &mut DiskExchange,
+) -> Result<SkeletonResult> {
+    if n < 2 {
+        return Ok(super::degenerate_result(n));
+    }
+    if use_pool(cfg) {
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads }, Some(exch))
+    } else {
+        let mut engine = crate::runtime::engine_from_config(cfg)?;
+        run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()), Some(exch))
+    }
 }
 
 fn run_impl(
@@ -136,16 +192,103 @@ fn run_impl(
     cfg: &Config,
     sched: &mut dyn RoundSchedule,
     exec: &mut Executor<'_>,
+    mut exch: Option<&mut DiskExchange>,
 ) -> Result<SkeletonResult> {
-    let graph = AdjMatrix::complete(n);
-    let sepsets = SepSets::new();
+    let (rank, world) = match exch.as_deref() {
+        Some(e) => e.topology(),
+        None => (0, 1),
+    };
     let corr32 = Corr32::from_f64(corr, n);
+    let sepsets = SepSets::new();
     let mut levels = Vec::new();
+    let mut peak_window = 0u64;
 
-    levels.push(exec.run_level0(corr, n, m, cfg, &graph, &sepsets)?);
+    // ---- level 0: chunked canonical pair sweep -------------------------
+    // Chunks of the row-major upper-triangle enumeration are evaluated
+    // (owned ones only, under sharding), reduced to their *survivor*
+    // lists — O(edges) for the sparse regimes this path targets, where
+    // the removal list would be O(n²) — and merged in canonical order.
+    let t = Timer::start();
+    let total = n_pairs(n);
+    let tau0 = tau(m, 0, cfg.alpha);
+    let chunk_slots = cfg.ooc.window_slots.max(1);
+    let n_chunks0 = total.div_ceil(chunk_slots) as usize;
+    let mut owned0: Vec<(u32, Vec<(u32, u32)>)> = Vec::new();
+    for seq in 0..n_chunks0 {
+        if seq % world != rank {
+            continue;
+        }
+        let t0 = seq as u64 * chunk_slots;
+        let count = chunk_slots.min(total - t0);
+        let runs = [Run { task: 0, t0, count }];
+        let shard_results = exec.run_sharded(&runs, |shard, engine| {
+            let mut c = Vec::new();
+            for r in shard {
+                c.extend(eval_range(corr, n, tau0, r.t0, r.count, engine)?);
+            }
+            Ok(c)
+        })?;
+        let mut removed_pairs: Vec<(u32, u32)> = Vec::new();
+        for c in shard_results {
+            removed_pairs.extend(c);
+        }
+        owned0.push((seq as u32, survivors_of_range(n, t0, count, &removed_pairs)));
+    }
+    let survivors: Vec<(u32, u32)> = match exch.as_deref_mut() {
+        Some(ex) => {
+            let blobs: Vec<(u32, Vec<u8>)> =
+                owned0.iter().map(|(s, p)| (*s, encode_pairs(p))).collect();
+            drop(owned0);
+            let merged = ex.exchange(0, 0, n_chunks0, blobs)?;
+            let mut v = Vec::new();
+            for b in &merged {
+                v.extend(decode_pairs(b)?);
+            }
+            v
+        }
+        None => owned0.into_iter().flat_map(|(_, p)| p).collect(),
+    };
+    let removed0 = (total - survivors.len() as u64) as usize;
+    let use_sparse = match cfg.ooc.adjacency {
+        AdjMode::Dense => false,
+        AdjMode::Sparse => true,
+        AdjMode::Auto => {
+            n >= SPARSE_MIN_N && (survivors.len() as u64).saturating_mul(4) <= total
+        }
+    };
+    let edges_after0 = survivors.len();
+    let graph = if use_sparse {
+        // level 0 sepsets by complement: reads are identical to storing
+        // each removed pair's empty set explicitly (see graph/sepset.rs)
+        let sparse = SparseAdj::from_edges(n, &survivors);
+        sepsets.store_empty_complement(n, survivors);
+        Adj::Sparse(sparse)
+    } else {
+        let g = AdjMatrix::complete(n);
+        let mut next = survivors.iter().peekable();
+        for i in 0..n as u32 {
+            for j in (i + 1)..n as u32 {
+                if next.peek() == Some(&&(i, j)) {
+                    next.next();
+                    continue;
+                }
+                g.remove_edge(i as usize, j as usize);
+                sepsets.store(i as usize, j as usize, &[]);
+            }
+        }
+        Adj::Dense(g)
+    };
+    levels.push(LevelStats {
+        level: 0,
+        tests: total,
+        removed: removed0,
+        edges_after: edges_after0,
+        seconds: t.elapsed_s(),
+    });
 
+    // ---- levels >= 1: streamed rounds ----------------------------------
     let mut l = 1usize;
-    while should_continue(&graph, l, cfg) {
+    while should_continue_any(graph.max_degree(), l, cfg) {
         // between-level re-lease point: a hooked job asks its width
         // policy (e.g. the batch scheduler's elastic lease) how wide to
         // run this level — absorbing workers other jobs released. Width
@@ -155,39 +298,90 @@ fn run_impl(
         }
         let t = Timer::start();
         let taul = tau(m, l, cfg.alpha);
-        let snap = graph.snapshot();
-        let comp = CompactAdj::from_snapshot(&snap, n);
+        let comp = graph.compact();
         let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l, taul };
 
         sched.begin_level(&ctx);
 
         let mut tests = 0u64;
         let mut removed = 0usize;
-        let mut runs: Vec<Run> = Vec::new();
         let mut round = 0u64;
         while !sched.rounds_done(round) {
-            // stage 1 (serial): the round's live windows in the
-            // schedule's canonical order; the graph is frozen until the
-            // apply stage
-            runs.clear();
-            sched.list_round(&ctx, round, &mut runs);
-            if runs.is_empty() {
+            // stage 1+2 streamed: the round's live windows are emitted
+            // in canonical order, chopped into bounded chunks, and each
+            // owned chunk is packed + evaluated as soon as it is full.
+            // The graph stays frozen until the apply stage below, so
+            // chunk boundaries cannot change any verdict.
+            let sched_ref: &dyn RoundSchedule = &*sched;
+            let mut pump = WindowPump::new(cfg.ooc.window_runs, cfg.ooc.window_slots);
+            let mut owned: Vec<(u32, Removals, u64)> = Vec::new();
+            let mut fail: Option<anyhow::Error> = None;
+            {
+                let mut on_chunk = |seq: u32, runs: Vec<Run>| -> Result<()> {
+                    if seq as usize % world != rank {
+                        return Ok(());
+                    }
+                    let shard_results = exec.run_sharded(&runs, |shard, engine| {
+                        sched_ref.eval_shard(&ctx, shard, engine)
+                    })?;
+                    let mut cand = Removals::new(l);
+                    let mut chunk_tests = 0u64;
+                    for (c, st) in shard_results {
+                        chunk_tests += st;
+                        cand.append(c);
+                    }
+                    owned.push((seq, cand, chunk_tests));
+                    Ok(())
+                };
+                {
+                    let mut emit = |run: Run| {
+                        if fail.is_some() {
+                            return;
+                        }
+                        if let Err(e) = pump.offer(run, &mut on_chunk) {
+                            fail = Some(e);
+                        }
+                    };
+                    sched_ref.visit_round(&ctx, round, &mut emit);
+                }
+                if fail.is_none() {
+                    if let Err(e) = pump.finish(&mut on_chunk) {
+                        fail = Some(e);
+                    }
+                }
+            }
+            if let Some(e) = fail {
+                return Err(e);
+            }
+            peak_window = peak_window.max(pump.peak_bytes());
+            let n_chunks = pump.chunks_emitted() as usize;
+            if n_chunks == 0 {
                 break; // every unexhausted window belongs to a dead task
             }
 
-            // stage 2 (parallel): pack + evaluate, engines per shard;
-            // only independence candidates come back (dependent
-            // verdicts are no-ops and are dropped with the gather)
-            let sched_ref: &dyn RoundSchedule = &*sched;
-            let shard_results = exec.run_sharded(&runs, |shard, engine| {
-                sched_ref.eval_shard(&ctx, shard, engine)
-            })?;
-
             // stage 3 (serial): everything in flight lands in canonical
-            // slot order before the next round
-            for (candidates, shard_tests) in &shard_results {
-                tests += shard_tests;
-                removed += candidates.apply(&graph, &sepsets);
+            // chunk-then-slot order before the next round — on every
+            // rank, via the exchange when sharded.
+            match exch.as_deref_mut() {
+                Some(ex) => {
+                    let blobs: Vec<(u32, Vec<u8>)> = owned
+                        .iter()
+                        .map(|(s, r, ct)| (*s, encode_level_chunk(r, *ct)))
+                        .collect();
+                    drop(owned);
+                    let merged = ex.exchange(l as u32, round, n_chunks, blobs)?;
+                    for b in &merged {
+                        let (cand, ct) = decode_level_chunk(b)?;
+                        tests += ct;
+                        removed += cand.apply(&graph, &sepsets);
+                    }
+                }
+                None => {
+                    for (_, cand, ct) in &owned {
+                        tests += *ct;
+                        removed += cand.apply(&graph, &sepsets);
+                    }
+                }
             }
             round += 1;
         }
@@ -201,15 +395,17 @@ fn run_impl(
         });
         if cfg.verbose {
             eprintln!(
-                "[{}] level {l}: {tests} tests, removed {removed}, {} edges left",
+                "[{}] level {l}: {tests} tests, removed {removed}, {} edges left ({})",
                 sched.label(),
-                graph.n_edges()
+                graph.n_edges(),
+                graph.label(),
             );
         }
         l += 1;
     }
 
-    Ok(SkeletonResult { graph, sepsets, levels })
+    let ooc = OocStats { adjacency: graph.label(), peak_window_bytes: peak_window };
+    Ok(SkeletonResult { graph: graph.into_dense(), sepsets, levels, ooc })
 }
 
 /// One live edge's combination cursor within a level — the per-edge task
@@ -311,7 +507,7 @@ fn flush_e(
 mod tests {
     use super::*;
 
-    fn ctx_fixture(n: usize, kill: &[(usize, usize)]) -> (AdjMatrix, Corr32, Vec<f64>) {
+    fn ctx_fixture(n: usize, kill: &[(usize, usize)]) -> (Adj, Corr32, Vec<f64>) {
         let graph = AdjMatrix::complete(n);
         for &(a, b) in kill {
             graph.remove_edge(a, b);
@@ -321,14 +517,13 @@ mod tests {
             corr[i * n + i] = 1.0;
         }
         let corr32 = Corr32::from_f64(&corr, n);
-        (graph, corr32, corr)
+        (Adj::Dense(graph), corr32, corr)
     }
 
     #[test]
     fn edge_tasks_are_row_major_with_correct_totals() {
         let (graph, corr32, _) = ctx_fixture(5, &[(0, 3)]);
-        let snap = graph.snapshot();
-        let comp = CompactAdj::from_snapshot(&snap, 5);
+        let comp = graph.compact();
         let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l: 2, taul: 1.0 };
         let (tasks, max_total) = build_edge_tasks(&ctx);
         // rows 0 and 3 have 3 neighbors, the rest 4; every live directed
@@ -348,8 +543,7 @@ mod tests {
     fn edge_tasks_skip_short_rows() {
         // at l = 3 a row needs at least 4 neighbors to contribute
         let (graph, corr32, _) = ctx_fixture(5, &[(0, 3), (0, 4)]);
-        let snap = graph.snapshot();
-        let comp = CompactAdj::from_snapshot(&snap, 5);
+        let comp = graph.compact();
         let ctx = LevelCtx { comp: &comp, graph: &graph, corr32: &corr32, l: 3, taul: 1.0 };
         let (tasks, _) = build_edge_tasks(&ctx);
         assert!(tasks.iter().all(|t| t.i != 0), "row 0 has only 2 neighbors");

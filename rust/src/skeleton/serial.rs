@@ -103,6 +103,7 @@ pub fn run(corr: &[f64], n: usize, m: usize, cfg: &Config) -> Result<SkeletonRes
         graph,
         sepsets,
         levels,
+        ooc: super::OocStats::default(),
     })
 }
 

@@ -1,0 +1,317 @@
+//! Out-of-core conformance gate (ISSUE 8 acceptance): the skeleton,
+//! sepsets, and CPDAG must be **bit-identical** across
+//!
+//! * the dense in-memory path (the pre-out-of-core behavior),
+//! * the sparse + streamed-window path (any window budget), and
+//! * the cross-process sharded path (every rank of a `cupc shard`-style
+//!   run, here driven in-process through the same [`DiskExchange`]
+//!   protocol the binary uses),
+//!
+//! and the streamed window buffer must respect its byte budget
+//! (`peak_window_bytes ≤ window_runs × size_of::<Run>()`), which is the
+//! documented memory bound of the subsystem. Small grid points run in
+//! every profile; the `oocore-2k` / `oocore-10k` sizes — where the
+//! sparse representation actually engages via `AdjMode::Auto` — are
+//! release-build only.
+//!
+//! [`DiskExchange`]: cupc::oocore::exchange::DiskExchange
+
+use cupc::api::{finish_orientation, pc_stable_corr};
+use cupc::oocore::shard::{publish_plan, run_skeleton_sharded, ShardPlan};
+use cupc::service::{DiskStore, JobResultCore};
+use cupc::sim::scenarios::{find, Scenario};
+use cupc::skeleton::pipeline::Run;
+use cupc::skeleton::{AdjMode, Config, OocConfig, SkeletonResult, Variant};
+use std::time::Duration;
+
+/// Everything deterministic about a skeleton run, comparable bitwise.
+type Fingerprint = (
+    Vec<u8>,
+    Vec<((u32, u32), Vec<u32>)>,
+    Vec<(usize, u64, usize, usize)>,
+);
+
+fn fingerprint(skel: &SkeletonResult) -> Fingerprint {
+    (
+        skel.graph.snapshot(),
+        skel.sepsets.sorted_entries(),
+        skel.levels
+            .iter()
+            .map(|l| (l.level, l.tests, l.removed, l.edges_after))
+            .collect(),
+    )
+}
+
+fn scenario(name: &str) -> Scenario {
+    find(name).unwrap_or_else(|| panic!("scenario {name} missing"))
+}
+
+fn cfg_with(sc: &Scenario, variant: Variant, ooc: OocConfig) -> Config {
+    let mut cfg = sc.config(variant);
+    cfg.ooc = ooc;
+    cfg
+}
+
+fn tiny_windows(adjacency: AdjMode) -> OocConfig {
+    OocConfig {
+        adjacency,
+        window_runs: 3,
+        window_slots: 32,
+    }
+}
+
+/// Run `sc` sharded across `world` in-process ranks over one shared
+/// store directory — the exact worker path of `cupc shard` minus the
+/// process boundary — and return every rank's skeleton.
+fn run_sharded(
+    sc: &Scenario,
+    variant: Variant,
+    world: usize,
+    ooc: OocConfig,
+    tag: &str,
+) -> (Vec<SkeletonResult>, Config, Vec<f64>) {
+    let input = sc.generate();
+    let mut cfg = cfg_with(sc, variant, ooc).with_threads(1);
+    cfg.threads = 1;
+    let dir = std::env::temp_dir().join(format!(
+        "cupc_ooconf_{}_{}_{tag}",
+        std::process::id(),
+        sc.name
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let corr_key = (0xc0, 0xffee);
+    let plan = ShardPlan::new(input.n, input.m, corr_key, &cfg, world);
+    {
+        let store = DiskStore::open(&dir, u64::MAX).unwrap();
+        store.put_corr(corr_key, &input.corr);
+        publish_plan(&store, &plan).unwrap();
+    }
+    let key = plan.key();
+    let timing = Some((Duration::from_millis(1), Duration::from_secs(120)));
+    let skels = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..world)
+            .map(|rank| {
+                let dir = &dir;
+                scope.spawn(move || {
+                    let store = DiskStore::open(dir, u64::MAX).unwrap();
+                    run_skeleton_sharded(store, key, rank, timing)
+                        .unwrap_or_else(|e| panic!("rank {rank}: {e:#}"))
+                        .1
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap())
+            .collect::<Vec<_>>()
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+    (skels, cfg, input.corr)
+}
+
+/// The headline 3-way identity on CI-sized points: dense in-memory vs
+/// forced-sparse streamed (tiny windows) — skeleton, sepsets, per-level
+/// stats, and the majority-rule CPDAG.
+#[test]
+fn forced_sparse_and_tiny_windows_match_dense_bitwise() {
+    for name in ["sparse-a01", "dense-cap2", "rank-grn"] {
+        let sc = scenario(name);
+        let input = sc.generate();
+        for variant in [Variant::CupcS, Variant::CupcE, Variant::Reversed] {
+            let dense_cfg = cfg_with(
+                &sc,
+                variant,
+                OocConfig {
+                    adjacency: AdjMode::Dense,
+                    ..OocConfig::default()
+                },
+            );
+            let sparse_cfg = cfg_with(&sc, variant, tiny_windows(AdjMode::Sparse));
+            let dense = pc_stable_corr(&input.corr, input.n, input.m, &dense_cfg).unwrap();
+            let sparse = pc_stable_corr(&input.corr, input.n, input.m, &sparse_cfg).unwrap();
+            assert_eq!(dense.skeleton.ooc.adjacency, "dense", "{name}/{variant:?}");
+            assert_eq!(sparse.skeleton.ooc.adjacency, "sparse", "{name}/{variant:?}");
+            assert_eq!(
+                fingerprint(&dense.skeleton),
+                fingerprint(&sparse.skeleton),
+                "{name}/{variant:?}: sparse+streamed skeleton diverged"
+            );
+            assert!(
+                dense.cpdag.same_as(&sparse.cpdag),
+                "{name}/{variant:?}: CPDAG diverged"
+            );
+            assert_eq!(
+                JobResultCore::from_pc(&dense, input.n, input.m),
+                JobResultCore::from_pc(&sparse, input.n, input.m),
+                "{name}/{variant:?}: result core diverged"
+            );
+        }
+    }
+}
+
+/// Window budgets are pure memory knobs: any (runs, slots) pair — down
+/// to one slot per chunk — produces the identical result, and the peak
+/// buffer stays within the budget.
+#[test]
+fn window_budgets_are_pure_memory_knobs() {
+    let sc = scenario("mid-lowm");
+    let input = sc.generate();
+    let reference = {
+        let cfg = cfg_with(&sc, Variant::CupcS, OocConfig::default());
+        pc_stable_corr(&input.corr, input.n, input.m, &cfg).unwrap()
+    };
+    for (window_runs, window_slots) in [(1, 1), (2, 16), (7, 129), (1 << 16, 1 << 20)] {
+        for adjacency in [AdjMode::Dense, AdjMode::Sparse] {
+            let cfg = cfg_with(
+                &sc,
+                Variant::CupcS,
+                OocConfig {
+                    adjacency,
+                    window_runs,
+                    window_slots,
+                },
+            );
+            let res = pc_stable_corr(&input.corr, input.n, input.m, &cfg).unwrap();
+            assert_eq!(
+                fingerprint(&res.skeleton),
+                fingerprint(&reference.skeleton),
+                "runs={window_runs} slots={window_slots} {adjacency:?}"
+            );
+            assert!(res.cpdag.same_as(&reference.cpdag));
+            let bound = window_runs as u64 * std::mem::size_of::<Run>() as u64;
+            assert!(
+                res.skeleton.ooc.peak_window_bytes <= bound,
+                "runs={window_runs}: peak {} exceeds the documented bound {bound}",
+                res.skeleton.ooc.peak_window_bytes
+            );
+        }
+    }
+}
+
+/// Cross-process identity, end to end: every rank of a 2- and 3-way
+/// sharded run reproduces the single-process skeleton bit for bit, and
+/// rank 0's orientation yields the identical result core `cupc batch`
+/// would emit.
+#[test]
+fn sharded_ranks_reproduce_the_single_process_result_end_to_end() {
+    for (name, world) in [("mid-lowm", 2), ("grn-mid", 3)] {
+        let sc = scenario(name);
+        let input = sc.generate();
+        let ooc = OocConfig {
+            adjacency: AdjMode::Auto,
+            window_runs: 2,
+            window_slots: 16, // force real multi-chunk rounds + exchanges
+        };
+        let (skels, cfg, corr) = run_sharded(&sc, Variant::CupcS, world, ooc.clone(), "e2e");
+        let single = {
+            let cfg1 = cfg_with(&sc, Variant::CupcS, ooc).with_threads(1);
+            pc_stable_corr(&input.corr, input.n, input.m, &cfg1).unwrap()
+        };
+        let want = fingerprint(&single.skeleton);
+        assert_eq!(skels.len(), world);
+        for (rank, skel) in skels.iter().enumerate() {
+            assert_eq!(
+                fingerprint(skel),
+                want,
+                "{name}: rank {rank}/{world} skeleton diverged"
+            );
+        }
+        // orient rank 0's skeleton exactly like the shard coordinator
+        let rank0 = skels.into_iter().next().unwrap();
+        let sharded = finish_orientation(&corr, input.m, &cfg, rank0).unwrap();
+        assert_eq!(
+            JobResultCore::from_pc(&sharded, input.n, input.m),
+            JobResultCore::from_pc(&single, input.n, input.m),
+            "{name}: sharded result core diverged from single-process"
+        );
+    }
+}
+
+/// The schedule-factory seam: the gpu-e family, both Fig. 5 baselines
+/// (whose factories bake in their γ/β overrides), and the reversed-order
+/// schedule all shard to the same bits as their single-process runs.
+#[test]
+fn every_batched_family_shards_identically() {
+    let sc = scenario("sparse-a05");
+    let input = sc.generate();
+    for variant in [
+        Variant::CupcE,
+        Variant::Baseline1,
+        Variant::Baseline2,
+        Variant::Reversed,
+    ] {
+        let ooc = tiny_windows(AdjMode::Auto);
+        let tag = format!("fam{}", cupc::service::job::variant_tag(variant));
+        let (skels, _, _) = run_sharded(&sc, variant, 2, ooc.clone(), &tag);
+        let single = {
+            let cfg = cfg_with(&sc, variant, ooc).with_threads(1);
+            cupc::skeleton::run(&input.corr, input.n, input.m, &cfg).unwrap()
+        };
+        for (rank, skel) in skels.iter().enumerate() {
+            assert_eq!(
+                fingerprint(skel),
+                fingerprint(&single),
+                "{variant:?}: rank {rank} diverged"
+            );
+        }
+    }
+}
+
+/// At `oocore-2k` scale, `AdjMode::Auto` must actually pick the sparse
+/// representation after level 0 — and still match the forced-dense run
+/// bitwise. Release-build only (2k variables across two full runs is
+/// debug-prohibitive).
+#[cfg(not(debug_assertions))]
+#[test]
+fn oocore_2k_auto_goes_sparse_and_matches_dense() {
+    let sc = scenario("oocore-2k");
+    let input = sc.generate();
+    let auto_cfg = cfg_with(&sc, Variant::CupcS, OocConfig::default());
+    let auto = cupc::skeleton::run(&input.corr, input.n, input.m, &auto_cfg).unwrap();
+    assert_eq!(
+        auto.ooc.adjacency, "sparse",
+        "level-0 survivor density must trip the auto threshold at n=2048"
+    );
+    let dense_cfg = cfg_with(
+        &sc,
+        Variant::CupcS,
+        OocConfig {
+            adjacency: AdjMode::Dense,
+            ..OocConfig::default()
+        },
+    );
+    let dense = cupc::skeleton::run(&input.corr, input.n, input.m, &dense_cfg).unwrap();
+    assert_eq!(fingerprint(&auto), fingerprint(&dense));
+}
+
+/// The bounded-memory acceptance run: a synthetic sparse n=10k skeleton
+/// completes with the sparse adjacency selected and the streamed buffer
+/// inside its documented budget. Release-build only.
+#[cfg(not(debug_assertions))]
+#[test]
+fn oocore_10k_completes_within_the_window_budget() {
+    let sc = scenario("oocore-10k");
+    let input = sc.generate();
+    let mut cfg = cfg_with(&sc, Variant::CupcS, OocConfig::default());
+    cfg.threads = cupc::skeleton::available_threads();
+    let skel = cupc::skeleton::run(&input.corr, input.n, input.m, &cfg).unwrap();
+    assert_eq!(skel.ooc.adjacency, "sparse");
+    let bound = cfg.ooc.window_runs as u64 * std::mem::size_of::<Run>() as u64;
+    assert!(
+        skel.ooc.peak_window_bytes <= bound,
+        "peak {} exceeds the documented bound {bound}",
+        skel.ooc.peak_window_bytes
+    );
+    // the run actually pruned: an ER graph at ~2 expected neighbors per
+    // node keeps far fewer than the complete graph's 50M edges
+    let edges = skel.graph.n_edges();
+    assert!(
+        edges < 100_000,
+        "level loop failed to prune: {edges} edges survived"
+    );
+    assert!(
+        skel.levels.len() <= 3,
+        "max_level=2 must cap the loop, got {} levels",
+        skel.levels.len()
+    );
+}
