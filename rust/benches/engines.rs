@@ -1,8 +1,10 @@
 //! `cargo bench --bench engines` — the tracked ns/test baseline for the
 //! CI-test kernels (the promoted `micro` probe that used to hide in
-//! `skeleton/engine.rs`), the dense vs sparse adjacency store on a
-//! sparse ER skeleton (ns/test end to end, same result bit for bit),
-//! the threads=1 vs threads=N speedup of the parallel
+//! `skeleton/engine.rs`), the scalar-vs-blocked kernel comparison
+//! (ns/test per level for both `stats::kernels` paths, asserting
+//! bitwise-identical output first), the dense vs sparse adjacency
+//! store on a sparse ER skeleton (ns/test end to end, same result bit
+//! for bit), the threads=1 vs threads=N speedup of the parallel
 //! pack→evaluate→apply pipeline on the Table-2 minis, the orientation
 //! pipeline (ns/triple for v-structures + Meek and ns/test for the
 //! majority census, threads 1 vs N), and the batch-runner throughput
@@ -36,6 +38,14 @@ struct KernelRow {
     l: usize,
     batch: usize,
     ns_per_test: f64,
+}
+
+struct KernelCompareRow {
+    op: &'static str,
+    l: usize,
+    batch: usize,
+    ns_scalar: f64,
+    ns_blocked: f64,
 }
 
 struct AdjacencyRow {
@@ -129,6 +139,74 @@ fn main() -> anyhow::Result<()> {
     println!("{:<8} {:>3} {:>7} {:>12}", "kernel", "l", "batch", "ns/test");
     for r in &kernels {
         println!("{:<8} {:>3} {:>7} {:>12.1}", r.kernel, r.l, r.batch, r.ns_per_test);
+    }
+
+    // ── scalar vs blocked kernel: ns/test, bitwise-checked first ────
+    // Both paths must produce identical bits (the docs/NUMERICS.md
+    // contract) — the assert runs before any timing so a divergence
+    // can never hide behind a fast number.
+    let mut kernel_compare: Vec<KernelCompareRow> = Vec::new();
+    {
+        use cupc::stats::kernels::KernelKind;
+        let mut scalar = NativeEngine::with_kernel(KernelKind::Scalar);
+        let mut blocked = NativeEngine::with_kernel(KernelKind::Blocked);
+        for l in 1..=8usize {
+            let b = 4096usize;
+            let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
+            let zs = scalar.ci_e(l, b, &c_ij, &m1, &m2)?;
+            let zb = blocked.ci_e(l, b, &c_ij, &m1, &m2)?;
+            assert_eq!(zs, zb, "kernels must agree bitwise (ci_e l={l})");
+            let secs_scalar = median_time(1, reps, || {
+                scalar.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+            });
+            let secs_blocked = median_time(1, reps, || {
+                blocked.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+            });
+            kernel_compare.push(KernelCompareRow {
+                op: "ci_e",
+                l,
+                batch: b,
+                ns_scalar: secs_scalar * 1e9 / b as f64,
+                ns_blocked: secs_blocked * 1e9 / b as f64,
+            });
+            let k = blocked.k();
+            let rows = 128usize;
+            let (c_ij, m1, m2) = random_s_batch(&mut rng, rows, k, l);
+            let valid = vec![k as u32; rows];
+            let zs = scalar.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid)?;
+            let zb = blocked.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid)?;
+            assert_eq!(zs, zb, "kernels must agree bitwise (ci_s l={l})");
+            let tests = (rows * k) as f64;
+            let secs_scalar = median_time(1, reps, || {
+                scalar.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid).unwrap();
+            });
+            let secs_blocked = median_time(1, reps, || {
+                blocked.ci_s(l, rows, k, &c_ij, &m1, &m2, &valid).unwrap();
+            });
+            kernel_compare.push(KernelCompareRow {
+                op: "ci_s",
+                l,
+                batch: rows,
+                ns_scalar: secs_scalar * 1e9 / tests,
+                ns_blocked: secs_blocked * 1e9 / tests,
+            });
+        }
+    }
+    println!("\n== scalar vs blocked kernels: ns/test (bitwise-identical output) ==");
+    println!(
+        "{:<6} {:>3} {:>7} {:>12} {:>12} {:>8}",
+        "op", "l", "batch", "scalar", "blocked", "speedup"
+    );
+    for r in &kernel_compare {
+        println!(
+            "{:<6} {:>3} {:>7} {:>12.1} {:>12.1} {:>7.2}x",
+            r.op,
+            r.l,
+            r.batch,
+            r.ns_scalar,
+            r.ns_blocked,
+            r.ns_scalar / r.ns_blocked.max(1e-12)
+        );
     }
 
     // ── dense vs sparse adjacency store on a sparse ER skeleton ─────
@@ -271,7 +349,7 @@ fn main() -> anyhow::Result<()> {
             let mut times = Vec::new();
             let mut triples = 0u64;
             for _ in 0..reps.max(1) {
-                let mut exec = Executor::Pool { threads: t };
+                let mut exec = Executor::pool(t);
                 let timer = Timer::start();
                 let (_, stats) = orient_with(&mut exec, &skel.graph, &skel.sepsets)?;
                 times.push(timer.elapsed_s());
@@ -283,7 +361,7 @@ fn main() -> anyhow::Result<()> {
             let mut times = Vec::new();
             let mut tests = 0u64;
             for _ in 0..reps.max(1) {
-                let mut exec = Executor::Pool { threads: t };
+                let mut exec = Executor::pool(t);
                 let timer = Timer::start();
                 let (_, stats) = orient_majority_with(
                     &mut exec,
@@ -391,7 +469,17 @@ fn main() -> anyhow::Result<()> {
         secs_jt1 / secs_jtn.max(1e-12)
     );
 
-    write_json(&out, reps, threads, &kernels, &adjacency, &pipeline, &orientation, &batch)?;
+    write_json(
+        &out,
+        reps,
+        threads,
+        &kernels,
+        &kernel_compare,
+        &adjacency,
+        &pipeline,
+        &orientation,
+        &batch,
+    )?;
     println!("\nwrote {out}");
     Ok(())
 }
@@ -404,6 +492,7 @@ fn write_json(
     reps: usize,
     threads: usize,
     kernels: &[KernelRow],
+    kernel_compare: &[KernelCompareRow],
     adjacency: &[AdjacencyRow],
     pipeline: &[PipelineRow],
     orientation: &[OrientRowBench],
@@ -411,7 +500,7 @@ fn write_json(
 ) -> anyhow::Result<()> {
     let mut j = String::new();
     j.push_str("{\n");
-    j.push_str("  \"schema\": \"cupc-bench-engines/v4\",\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v5\",\n");
     j.push_str(&format!("  \"reps\": {reps},\n"));
     j.push_str(&format!("  \"threads\": {threads},\n"));
     j.push_str("  \"kernels\": [\n");
@@ -420,6 +509,21 @@ fn write_json(
         j.push_str(&format!(
             "    {{\"kernel\": \"{}\", \"l\": {}, \"batch\": {}, \"ns_per_test\": {:.2}}}{sep}\n",
             r.kernel, r.l, r.batch, r.ns_per_test
+        ));
+    }
+    j.push_str("  ],\n");
+    j.push_str("  \"kernel_compare\": [\n");
+    for (i, r) in kernel_compare.iter().enumerate() {
+        let sep = if i + 1 < kernel_compare.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"op\": \"{}\", \"l\": {}, \"batch\": {}, \"ns_scalar\": {:.2}, \
+             \"ns_blocked\": {:.2}, \"speedup\": {:.3}}}{sep}\n",
+            r.op,
+            r.l,
+            r.batch,
+            r.ns_scalar,
+            r.ns_blocked,
+            r.ns_scalar / r.ns_blocked.max(1e-12)
         ));
     }
     j.push_str("  ],\n");

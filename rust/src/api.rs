@@ -73,9 +73,7 @@ pub fn finish_orientation(
     // orientation evaluates on pooled native workers regardless of the
     // skeleton engine (the paper keeps orientation CPU-side; engines
     // share CI semantics, so this is placement, not numerics)
-    let mut exec = Executor::Pool {
-        threads: cfg.threads.max(1),
-    };
+    let mut exec = Executor::pool_with(cfg.threads.max(1), cfg.kernel);
     if let Some(hook) = &cfg.width_hook {
         // the orientation phase is "the level after the last": absorb
         // idle workers / yield to waiters exactly like a level boundary

@@ -348,7 +348,7 @@ pub fn orient_v_structures_majority(
     max_level: usize,
 ) {
     let corr32 = Corr32::from_f64(corr.c, corr.n);
-    let mut exec = Executor::Pool { threads: 1 };
+    let mut exec = Executor::pool(1);
     orient_v_structures_majority_with(&mut exec, g, &corr32, m, alpha, max_level)
         .expect("native census evaluation cannot fail");
 }
@@ -417,7 +417,7 @@ mod tests {
         let skel = vec![0, 0, 1, 0, 0, 1, 1, 1, 0];
         let mut g = Cpdag::from_skeleton(&skel, 3);
         let corr32 = Corr32::from_f64(corr.c, corr.n);
-        let mut exec = Executor::Pool { threads: 1 };
+        let mut exec = Executor::pool(1);
         let stats =
             orient_v_structures_majority_with(&mut exec, &mut g, &corr32, 1000, 0.01, 2)
                 .unwrap();
@@ -443,7 +443,7 @@ mod tests {
         let skel = crate::skeleton::run(&c, data.n, data.m, &cfg).unwrap();
         let run_at = |threads: usize| {
             let mut g = Cpdag::from_skeleton(&skel.graph.snapshot(), data.n);
-            let mut exec = Executor::Pool { threads };
+            let mut exec = Executor::pool(threads);
             let stats = orient_v_structures_majority_with(
                 &mut exec, &mut g, &corr32, data.m, cfg.alpha, 3,
             )

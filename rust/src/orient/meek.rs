@@ -142,7 +142,7 @@ pub fn apply_meek_rules_with(exec: &mut Executor<'_>, g: &mut Cpdag) -> Result<(
 /// entry; bit-identical to any pooled width). Returns the number of
 /// edges oriented.
 pub fn apply_meek_rules(g: &mut Cpdag) -> usize {
-    let mut exec = Executor::Pool { threads: 1 };
+    let mut exec = Executor::pool(1);
     apply_meek_rules_with(&mut exec, g)
         .expect("meek rule evaluation is pure and cannot fail")
         .0
@@ -317,7 +317,7 @@ mod tests {
             for &(a, b) in edges.iter().step_by(5) {
                 g.orient(a, b);
             }
-            let mut exec = Executor::Pool { threads };
+            let mut exec = Executor::pool(threads);
             let (o, s) = apply_meek_rules_with(&mut exec, &mut g).unwrap();
             (g, o, s)
         };

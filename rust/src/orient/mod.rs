@@ -107,7 +107,7 @@ pub fn orient_majority_with(
 /// Full orientation, single-worker convenience entry (kept for direct
 /// callers; bit-identical to any pooled width).
 pub fn orient(graph: &AdjMatrix, sepsets: &SepSets) -> Cpdag {
-    let mut exec = Executor::Pool { threads: 1 };
+    let mut exec = Executor::pool(1);
     orient_with(&mut exec, graph, sepsets)
         .expect("orientation on the native engine cannot fail")
         .0
@@ -121,7 +121,7 @@ pub fn orient_majority(
     alpha: f64,
     max_level: usize,
 ) -> Cpdag {
-    let mut exec = Executor::Pool { threads: 1 };
+    let mut exec = Executor::pool(1);
     orient_majority_with(&mut exec, graph, corr, m, alpha, max_level)
         .expect("orientation on the native engine cannot fail")
         .0

@@ -83,7 +83,7 @@ pub fn apply_colliders(g: &mut Cpdag, colliders: &[(usize, usize, usize)]) {
 /// the parallel path goes through [`collect_colliders`]). Kept for
 /// direct callers and tests; bit-identical to the sharded path.
 pub fn orient_v_structures(g: &mut Cpdag, sepsets: &SepSets) {
-    let mut exec = Executor::Pool { threads: 1 };
+    let mut exec = Executor::pool(1);
     let (colliders, _) = collect_colliders(&mut exec, g, sepsets)
         .expect("v-structure collection is pure and cannot fail");
     apply_colliders(g, &colliders);
@@ -154,7 +154,7 @@ mod tests {
         // shielded by the edges (1,2) / (0,2), and center 3 has degree 1
         let g = skel(4, &[(0, 2), (1, 2), (3, 2), (0, 1)]);
         let sep = SepSets::new();
-        let mut exec = Executor::Pool { threads: 1 };
+        let mut exec = Executor::pool(1);
         let (_, triples) = collect_colliders(&mut exec, &g, &sep).unwrap();
         assert_eq!(triples, 2);
     }
@@ -188,12 +188,12 @@ mod tests {
                 }
             }
         }
-        let mut single = Executor::Pool { threads: 1 };
+        let mut single = Executor::pool(1);
         let (ref_colliders, ref_triples) =
             collect_colliders(&mut single, &g, &sep).unwrap();
         assert!(ref_triples > 0, "workload must contain unshielded triples");
         for threads in [2usize, 4] {
-            let mut pool = Executor::Pool { threads };
+            let mut pool = Executor::pool(threads);
             let (colliders, triples) = collect_colliders(&mut pool, &g, &sep).unwrap();
             assert_eq!(colliders, ref_colliders, "threads={threads}");
             assert_eq!(triples, ref_triples, "threads={threads}");

@@ -32,12 +32,18 @@ use anyhow::Result;
 /// only compiled-in backend.
 pub fn engine_from_config(cfg: &Config) -> Result<Box<dyn CiEngine>> {
     match cfg.engine {
-        EngineKind::Native => Ok(Box::new(NativeEngine::new())),
+        EngineKind::Native => Ok(Box::new(NativeEngine::with_kernel(cfg.kernel))),
         #[cfg(feature = "xla")]
         EngineKind::Xla => {
             let xla = XlaEngine::new(&cfg.artifacts_dir)?;
-            // keep the native mirror on the same batch geometry
-            let native = NativeEngine::with_batches(xla.batch_e(), xla.batch_s(), xla.k());
+            // keep the native mirror on the same batch geometry (the
+            // fallback runs the config-selected kernel)
+            let native = NativeEngine::with_batches_kernel(
+                xla.batch_e(),
+                xla.batch_s(),
+                xla.k(),
+                cfg.kernel,
+            );
             Ok(Box::new(WithFallback {
                 primary: xla,
                 fallback: native,

@@ -45,7 +45,23 @@ const MIX_OFFSET: u64 = 0x6c62272e07bb0142;
 const MIX_PRIME: u64 = 0x9e3779b97f4a7c15;
 
 /// Two-stream byte hasher: FNV-1a plus a rotate-multiply accumulator.
-/// Chunking never matters — `write(a); write(b)` ≡ `write(a ++ b)`.
+/// Chunking never matters — `write(a); write(b)` ≡ `write(a ++ b)`,
+/// so callers can stream fields without worrying about framing:
+///
+/// ```
+/// use cupc::service::cache::ContentHasher;
+///
+/// let mut chunked = ContentHasher::new();
+/// chunked.write(b"corr-");
+/// chunked.write(b"bytes");
+/// let mut whole = ContentHasher::new();
+/// whole.write(b"corr-bytes");
+/// assert_eq!(chunked.finish(), whole.finish());
+///
+/// let mut other = ContentHasher::new();
+/// other.write(b"corr+bytes");
+/// assert_ne!(other.finish(), whole.finish());
+/// ```
 pub struct ContentHasher {
     a: u64,
     b: u64,

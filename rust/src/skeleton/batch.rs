@@ -1,5 +1,9 @@
 //! Batch packing: the L3 gather stage.
 //!
+//! Packed buffers feed the runtime-selectable CI-test kernels in
+//! [`crate::stats::kernels`] (see `docs/NUMERICS.md` for the f64→f32
+//! narrowing contract this packing relies on).
+//!
 //! cuPC stages a row of `A'_G` in GPU shared memory and lets threads
 //! gather `M0/M1/M2` from the resident correlation matrix. With AOT
 //! kernels of static shape, the gather moves here: the packer reads the

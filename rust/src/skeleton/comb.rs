@@ -32,6 +32,23 @@ pub fn binom(n: usize, k: usize) -> u64 {
 /// t-th lexicographic l-combination of {0,..,n-1} into `out` (ascending).
 /// Implements the paper's Algorithm 6 (1-based internally, shifted to
 /// 0-based on output, exactly as §4.2 describes for cuPC-S).
+///
+/// Walking `t` over `0..binom(n, l)` enumerates every combination in
+/// lexicographic order with no shared state — the property that lets
+/// batch packers shard slots freely:
+///
+/// ```
+/// use cupc::skeleton::comb::{binom, comb_at};
+///
+/// let mut out = [0u32; 2];
+/// let all: Vec<[u32; 2]> = (0..binom(4, 2))
+///     .map(|t| {
+///         comb_at(4, 2, t, &mut out);
+///         out
+///     })
+///     .collect();
+/// assert_eq!(all, [[0, 1], [0, 2], [0, 3], [1, 2], [1, 3], [2, 3]]);
+/// ```
 pub fn comb_at(n: usize, l: usize, t: u64, out: &mut [u32]) {
     debug_assert!(l <= n, "comb_at: l={l} > n={n}");
     debug_assert!(t < binom(n, l), "comb_at: t={t} out of range");

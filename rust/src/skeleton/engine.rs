@@ -11,9 +11,13 @@
 //! * ci_e: `c_ij[B]`, `m1[B·2·l]`, `m2[B·l·l]` → `z[B]`
 //! * ci_s: `c_ij[R·K]`, `m1[R·K·2·l]`, `m2[R·l·l]` → `z[R·K]`
 //! * level0: `c_ij[B]` → `z[B]`
+//!
+//! The native evaluation itself lives behind the kernel seam in
+//! `stats::kernels` (`scalar` reference vs `blocked` lane-major,
+//! selectable via `CUPC_KERNEL` — bitwise identical, see
+//! `docs/NUMERICS.md`).
 
-use crate::stats::chol::{pinv_fast, PinvScratch};
-use crate::stats::fisher::fisher_z;
+use crate::stats::kernels::{self, KernelKind, Scratch};
 use anyhow::Result;
 
 /// Batched CI-statistic evaluation. Inputs are f32 (the artifact dtype);
@@ -61,11 +65,14 @@ pub trait CiEngine {
     fn name(&self) -> &'static str;
 }
 
-/// Pure-Rust engine mirroring the Pallas kernels.
+/// Pure-Rust engine mirroring the Pallas kernels. The actual batch
+/// evaluation lives behind the kernel seam in `stats::kernels` —
+/// this struct owns the workspace, the batch geometry, and the
+/// [`KernelKind`] selecting scalar vs blocked evaluation (both are
+/// bitwise identical; see `docs/NUMERICS.md`).
 pub struct NativeEngine {
-    sc: PinvScratch,
-    m2inv: Vec<f64>,
-    m2f: Vec<f64>,
+    kernel: KernelKind,
+    sc: Scratch,
     batch_e: usize,
     batch_s: usize,
     k: usize,
@@ -80,66 +87,47 @@ impl Default for NativeEngine {
 }
 
 impl NativeEngine {
+    /// Default geometry, kernel selected by `CUPC_KERNEL` (blocked
+    /// when unset).
     pub fn new() -> Self {
+        Self::with_kernel(KernelKind::from_env())
+    }
+
+    /// Default geometry with an explicit kernel (the in-process A/B
+    /// path used by the conformance suite and the bench).
+    pub fn with_kernel(kernel: KernelKind) -> Self {
         // Batch geometry matches the AOT artifacts so that schedules
         // (rounds, early-termination points) are identical across engines.
-        Self::with_batches(4096, 256, 32)
+        Self::with_batches_kernel(4096, 256, 32, kernel)
     }
 
     pub fn with_batches(batch_e: usize, batch_s: usize, k: usize) -> Self {
-        let max_l = NATIVE_MAX_LEVEL;
+        Self::with_batches_kernel(batch_e, batch_s, k, KernelKind::from_env())
+    }
+
+    pub fn with_batches_kernel(
+        batch_e: usize,
+        batch_s: usize,
+        k: usize,
+        kernel: KernelKind,
+    ) -> Self {
         NativeEngine {
-            sc: PinvScratch::new(max_l),
-            m2inv: vec![0.0; max_l * max_l],
-            m2f: vec![0.0; max_l * max_l],
+            kernel,
+            sc: Scratch::new(NATIVE_MAX_LEVEL),
             batch_e,
             batch_s,
             k,
         }
     }
 
-    /// z for one packed test given a precomputed M2⁻¹.
-    #[inline]
-    fn z_from_packed(c_ij: f32, m1: &[f32], m2inv: &[f64], l: usize) -> f32 {
-        // w = M1 M2⁻¹ (2×l), H = M0 − w M1ᵀ
-        let (mut h00, mut h01, mut h11) = (0.0f64, 0.0f64, 0.0f64);
-        for r in 0..2 {
-            for c in 0..l {
-                let mut acc = 0.0f64;
-                for k in 0..l {
-                    acc += m1[r * l + k] as f64 * m2inv[k * l + c];
-                }
-                // accumulate H terms on the fly
-                match r {
-                    0 => {
-                        h00 += acc * m1[c] as f64;
-                        h01 += acc * m1[l + c] as f64;
-                    }
-                    _ => {
-                        h11 += acc * m1[l + c] as f64;
-                    }
-                }
-            }
-        }
-        let h00 = 1.0 - h00;
-        let h11 = 1.0 - h11;
-        let h01 = c_ij as f64 - h01;
-        let rho = h01 / (h00 * h11).max(1e-12).sqrt();
-        fisher_z(rho) as f32
-    }
-
-    fn pinv_f32(&mut self, m2: &[f32], l: usize) {
-        for (dst, src) in self.m2f[..l * l].iter_mut().zip(m2) {
-            *dst = *src as f64;
-        }
-        let (m2f, m2inv) = (&self.m2f[..l * l], &mut self.m2inv[..l * l]);
-        pinv_fast(m2f, l, &mut self.sc, m2inv);
+    pub fn kernel(&self) -> KernelKind {
+        self.kernel
     }
 }
 
 impl CiEngine for NativeEngine {
     fn level0(&mut self, c_ij: &[f32]) -> Result<Vec<f32>> {
-        Ok(c_ij.iter().map(|&c| fisher_z(c as f64) as f32).collect())
+        Ok(kernels::level0(self.kernel, c_ij))
     }
 
     fn ci_e(
@@ -153,18 +141,7 @@ impl CiEngine for NativeEngine {
         debug_assert_eq!(c_ij.len(), b);
         debug_assert_eq!(m1.len(), b * 2 * l);
         debug_assert_eq!(m2.len(), b * l * l);
-        let mut z = Vec::with_capacity(b);
-        for s in 0..b {
-            self.pinv_f32(&m2[s * l * l..(s + 1) * l * l], l);
-            let m2inv = &self.m2inv[..l * l];
-            z.push(Self::z_from_packed(
-                c_ij[s],
-                &m1[s * 2 * l..(s + 1) * 2 * l],
-                m2inv,
-                l,
-            ));
-        }
-        Ok(z)
+        Ok(kernels::ci_e(self.kernel, l, b, c_ij, m1, m2, &mut self.sc))
     }
 
     #[allow(clippy::too_many_arguments)]
@@ -182,23 +159,17 @@ impl CiEngine for NativeEngine {
         debug_assert_eq!(m1.len(), rows * k * 2 * l);
         debug_assert_eq!(m2.len(), rows * l * l);
         debug_assert_eq!(valid.len(), rows);
-        let mut z = vec![0.0f32; rows * k];
-        for r in 0..rows {
-            // ONE pinv per row — the cuPC-S saving, mirrored natively.
-            self.pinv_f32(&m2[r * l * l..(r + 1) * l * l], l);
-            // skip the padded tail (CUDA's inactive lanes, for free here)
-            for t in 0..(valid[r] as usize).min(k) {
-                let s = r * k + t;
-                let m2inv = &self.m2inv[..l * l];
-                z[s] = Self::z_from_packed(
-                    c_ij[s],
-                    &m1[s * 2 * l..(s + 1) * 2 * l],
-                    m2inv,
-                    l,
-                );
-            }
-        }
-        Ok(z)
+        Ok(kernels::ci_s(
+            self.kernel,
+            l,
+            rows,
+            k,
+            c_ij,
+            m1,
+            m2,
+            valid,
+            &mut self.sc,
+        ))
     }
 
     fn max_level(&self) -> usize {
@@ -348,6 +319,25 @@ mod tests {
         assert_eq!(e.batch_e(), 4096);
         assert_eq!(e.batch_s(), 256);
         assert_eq!(e.k(), 32);
+    }
+
+    #[test]
+    fn explicit_kernels_agree_through_the_engine() {
+        use crate::sim::batches::random_batch;
+        use crate::util::rng::Pcg;
+        let (l, b) = (3usize, 13usize);
+        let (c_ij, m1, m2) = random_batch(&mut Pcg::seeded(3), b, l);
+        let mut scalar = NativeEngine::with_kernel(KernelKind::Scalar);
+        let mut blocked = NativeEngine::with_kernel(KernelKind::Blocked);
+        assert_eq!(scalar.kernel(), KernelKind::Scalar);
+        assert_eq!(blocked.kernel(), KernelKind::Blocked);
+        let za = scalar.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+        let zb = blocked.ci_e(l, b, &c_ij, &m1, &m2).unwrap();
+        assert_eq!(za, zb, "kernels must agree bitwise through the engine");
+        // both engines keep the public name: kernel choice is not an
+        // engine identity (and never enters cache keys)
+        assert_eq!(scalar.name(), "native");
+        assert_eq!(blocked.name(), "native");
     }
 }
 

@@ -10,6 +10,21 @@
 //! registry tests below enforce the invariants a new row must keep
 //! (unique names, aliases and tags; parse/name roundtrip).
 //!
+//! ```
+//! use cupc::skeleton::{family, Variant};
+//!
+//! // any registered alias resolves, case-insensitively
+//! assert_eq!(family::parse("CUPS"), Some(Variant::CupcS));
+//! assert_eq!(family::parse("reversed"), Some(Variant::Reversed));
+//! assert_eq!(family::parse("no-such-schedule"), None);
+//!
+//! // and every variant has exactly one registry row of stable metadata
+//! let info = family::of(Variant::CupcE);
+//! assert_eq!(info.name, "cupc-e");
+//! assert!(info.deterministic_tests);
+//! assert_eq!(family::FAMILIES.len(), 7);
+//! ```
+//!
 //! [`RoundSchedule`]: super::schedule::RoundSchedule
 
 use super::schedule::RoundSchedule;

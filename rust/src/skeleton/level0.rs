@@ -1,5 +1,9 @@
 //! Level 0 (paper Algorithm 3): one CI test per pair, no conditioning.
 //!
+//! Evaluation goes through [`crate::stats::kernels::level0`]; level 0
+//! is elementwise, so both kernel paths share the single scalar
+//! implementation (see `docs/NUMERICS.md`).
+//!
 //! The CUDA 2-D grid over the n×n matrix becomes the canonical pair
 //! enumeration (row-major upper triangle). [`eval_range`] evaluates any
 //! contiguous slot window of that enumeration — the unit the pipeline

@@ -220,6 +220,12 @@ pub struct Config {
     /// budgets). Purely a memory trade-off: results are bit-identical
     /// for any setting, so cache keys ignore it.
     pub ooc: OocConfig,
+    /// Which native CI-test kernel evaluates packed batches (see
+    /// `stats::kernels` and `docs/NUMERICS.md`). Defaults to the
+    /// `CUPC_KERNEL` env selection (blocked when unset). Like
+    /// `threads`/`ooc`, this is bitwise-neutral — both kernels produce
+    /// identical output — so cache keys ignore it.
+    pub kernel: crate::stats::kernels::KernelKind,
 }
 
 impl Default for Config {
@@ -240,6 +246,7 @@ impl Default for Config {
             orient: OrientRule::Standard,
             width_hook: None,
             ooc: OocConfig::default(),
+            kernel: crate::stats::kernels::KernelKind::from_env(),
         }
     }
 }

@@ -51,6 +51,7 @@ use super::{Config, EngineKind, LevelStats};
 use crate::graph::adj::AdjMatrix;
 use crate::graph::sepset::SepSets;
 use crate::stats::fisher::tau;
+use crate::stats::kernels::KernelKind;
 use crate::util::timer::Timer;
 use anyhow::Result;
 
@@ -136,16 +137,30 @@ pub enum Executor<'e> {
     /// injected engine (XLA, test mocks) uses.
     Single(&'e mut dyn CiEngine),
     /// Up to `threads` scoped workers, each owning a fresh
-    /// [`NativeEngine`] (a few KiB of scratch — cheap per round).
-    Pool { threads: usize },
+    /// [`NativeEngine`] (a few KiB of scratch — cheap per round)
+    /// running the selected CI-test `kernel` (bitwise-neutral; see
+    /// `stats::kernels`).
+    Pool { threads: usize, kernel: KernelKind },
 }
 
 impl Executor<'_> {
+    /// A worker pool at `threads` width running the env-selected kernel
+    /// (`CUPC_KERNEL`, blocked when unset).
+    pub fn pool<'e>(threads: usize) -> Executor<'e> {
+        Executor::pool_with(threads, KernelKind::from_env())
+    }
+
+    /// A worker pool with an explicit kernel — the path `Config.kernel`
+    /// takes, and what in-process kernel A/B tests use.
+    pub fn pool_with<'e>(threads: usize, kernel: KernelKind) -> Executor<'e> {
+        Executor::Pool { threads, kernel }
+    }
+
     /// Current worker width (1 for the single-engine path).
     pub fn width(&self) -> usize {
         match self {
             Executor::Single(_) => 1,
-            Executor::Pool { threads } => *threads,
+            Executor::Pool { threads, .. } => *threads,
         }
     }
 
@@ -155,7 +170,7 @@ impl Executor<'_> {
     /// Width only moves work between shards; results are bit-identical
     /// for any width sequence.
     pub fn set_width(&mut self, w: usize) {
-        if let Executor::Pool { threads } = self {
+        if let Executor::Pool { threads, .. } = self {
             *threads = w.max(1);
         }
     }
@@ -170,11 +185,12 @@ impl Executor<'_> {
     {
         match self {
             Executor::Single(engine) => Ok(vec![work(runs, &mut **engine)?]),
-            Executor::Pool { threads } => {
+            Executor::Pool { threads, kernel } => {
+                let kernel = *kernel;
                 let shards = split_runs(runs, *threads);
                 if shards.len() <= 1 {
                     // too little work to pay for a spawn
-                    let mut engine = NativeEngine::new();
+                    let mut engine = NativeEngine::with_kernel(kernel);
                     let shard = shards.first().map(|s| &s[..]).unwrap_or(&[]);
                     return Ok(vec![work(shard, &mut engine)?]);
                 }
@@ -184,7 +200,7 @@ impl Executor<'_> {
                         .map(|shard| {
                             let work = &work;
                             scope.spawn(move || {
-                                let mut engine = NativeEngine::new();
+                                let mut engine = NativeEngine::with_kernel(kernel);
                                 work(shard, &mut engine)
                             })
                         })
@@ -390,7 +406,7 @@ mod tests {
 
     #[test]
     fn set_width_retargets_only_the_pool() {
-        let mut pool = Executor::Pool { threads: 2 };
+        let mut pool = Executor::pool(2);
         assert_eq!(pool.width(), 2);
         pool.set_width(5);
         assert_eq!(pool.width(), 5);
@@ -407,7 +423,7 @@ mod tests {
         let runs: Vec<Run> = (0..6)
             .map(|i| Run { task: i, t0: 0, count: 700 })
             .collect();
-        let mut exec = Executor::Pool { threads: 3 };
+        let mut exec = Executor::pool(3);
         let got = exec
             .run_sharded(&runs, |shard, engine| {
                 assert_eq!(engine.name(), "native");
@@ -451,7 +467,7 @@ mod tests {
         let mut single = Executor::Single(&mut engine);
         let (snap_s, seps_s, stats_s) = run_with(&mut single);
         for threads in [2usize, 4] {
-            let mut pool = Executor::Pool { threads };
+            let mut pool = Executor::pool(threads);
             let (snap_p, seps_p, stats_p) = run_with(&mut pool);
             assert_eq!(snap_p, snap_s, "threads={threads}");
             assert_eq!(seps_p, seps_s, "threads={threads}");
@@ -471,7 +487,7 @@ mod tests {
         let weights: Vec<u64> = vec![3000, 1, 1, 2000, 700, 1, 5000, 1];
         let want: Vec<usize> = (0..weights.len()).collect();
         for threads in [1usize, 2, 3, 4, 7] {
-            let mut exec = Executor::Pool { threads };
+            let mut exec = Executor::pool(threads);
             let got = exec
                 .run_weighted(&weights, |ids, _| Ok(ids.to_vec()))
                 .unwrap();
@@ -483,14 +499,14 @@ mod tests {
     #[test]
     fn run_weighted_zero_weight_tasks_still_run() {
         let weights = vec![0u64; 5];
-        let mut exec = Executor::Pool { threads: 4 };
+        let mut exec = Executor::pool(4);
         let got = exec
             .run_weighted(&weights, |ids, _| Ok(ids.to_vec()))
             .unwrap();
         let flat: Vec<usize> = got.into_iter().flatten().collect();
         assert_eq!(flat, vec![0, 1, 2, 3, 4]);
         // and an empty task list is a clean no-op
-        let empty = Executor::Pool { threads: 4 }
+        let empty = Executor::pool(4)
             .run_weighted(&[], |ids: &[usize], _| Ok(ids.to_vec()))
             .unwrap();
         let flat: Vec<usize> = empty.into_iter().flatten().collect();
@@ -502,7 +518,7 @@ mod tests {
         let runs: Vec<Run> = (0..4)
             .map(|i| Run { task: i, t0: 0, count: 600 })
             .collect();
-        let mut exec = Executor::Pool { threads: 4 };
+        let mut exec = Executor::pool(4);
         let res: Result<Vec<()>> = exec.run_sharded(&runs, |shard, _| {
             if shard.iter().any(|r| r.task == 2) {
                 anyhow::bail!("boom on task 2")

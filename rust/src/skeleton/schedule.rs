@@ -139,7 +139,7 @@ pub fn run_rounds(
         return Ok(super::degenerate_result(n));
     }
     if use_pool(cfg) {
-        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads }, None)
+        run_impl(corr, n, m, cfg, sched, &mut Executor::pool_with(cfg.threads, cfg.kernel), None)
     } else {
         let mut engine = crate::runtime::engine_from_config(cfg)?;
         run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()), None)
@@ -178,7 +178,8 @@ pub fn run_rounds_sharded(
         return Ok(super::degenerate_result(n));
     }
     if use_pool(cfg) {
-        run_impl(corr, n, m, cfg, sched, &mut Executor::Pool { threads: cfg.threads }, Some(exch))
+        let mut exec = Executor::pool_with(cfg.threads, cfg.kernel);
+        run_impl(corr, n, m, cfg, sched, &mut exec, Some(exch))
     } else {
         let mut engine = crate::runtime::engine_from_config(cfg)?;
         run_impl(corr, n, m, cfg, sched, &mut Executor::Single(engine.as_mut()), Some(exch))

@@ -1,5 +1,10 @@
 //! Small dense linear algebra for conditioning sets (ℓ ≤ ~16).
 //!
+//! [`pinv_fast`] is shared by both CI-test kernel paths in
+//! [`crate::stats::kernels`] — sharing it (rather than re-deriving a
+//! blocked factorization) is one of the three properties that make the
+//! blocked kernel bitwise-identical to scalar (`docs/NUMERICS.md`).
+//!
 //! Mirrors `python/compile/kernels/linalg.py` operation-for-operation:
 //! Cholesky-Banachiewicz factorization (optionally rank-revealing, zeroing
 //! deficient columns — Courrieu's "full-rank Cholesky" with static shape),

@@ -1,0 +1,285 @@
+//! Blocked, lane-major CI-test kernel: [`LANES`] slots per iteration.
+//!
+//! Layout (the CPU translation of cuPC's coalesced accesses): for each
+//! block of `LANES` batch slots the per-slot M1 rows and M2⁻¹ entries
+//! are gathered into *lane-major* f64 panels —
+//! `panel[coeff_index · LANES + lane]` — so that one coefficient's
+//! values for all eight slots sit in one contiguous, aligned strip.
+//! The `r → c → k` loop nest of the scalar kernel then runs once per
+//! block with every scalar op widened to an 8-lane strip op the
+//! autovectorizer lowers to SIMD; no lane ever reads another lane.
+//!
+//! Numerics (see `docs/NUMERICS.md`): for each lane the sequence of
+//! f64 operations — widening loads, multiply, the `k`-ascending
+//! accumulation into `acc`, the `c`-ascending accumulation into
+//! `h00/h01/h11`, and the per-slot `pinv_fast` — is *exactly* the
+//! scalar kernel's sequence, so the output is bitwise identical by
+//! construction, and the conformance grid diffs the two kernels with
+//! `assert_eq!`. The remainder (`b mod LANES` slots, and partially
+//! valid cuPC-S rows) runs the scalar per-slot routine directly.
+
+use super::{scalar, Scratch, LANES};
+use crate::stats::fisher::fisher_z;
+
+/// cuPC-E batch: full blocks of `LANES` slots, scalar remainder.
+pub fn ci_e(
+    l: usize,
+    b: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    let mut z = vec![0.0f32; b];
+    let full = b / LANES * LANES;
+    let mut s0 = 0;
+    while s0 < full {
+        // Gather: one pseudo-inverse per lane (identical to scalar),
+        // scattered into the lane-major panels.
+        for lane in 0..LANES {
+            let s = s0 + lane;
+            scalar::pinv_f32(&m2[s * l * l..(s + 1) * l * l], l, sc);
+            for (e, &v) in sc.m2inv[..l * l].iter().enumerate() {
+                sc.m2invp[e * LANES + lane] = v;
+            }
+            for (c, &v) in m1[s * 2 * l..(s + 1) * 2 * l].iter().enumerate() {
+                sc.m1p[c * LANES + lane] = v as f64;
+            }
+        }
+        block_z(&c_ij[s0..s0 + LANES], sc, l, &mut z[s0..s0 + LANES]);
+        s0 += LANES;
+    }
+    for s in full..b {
+        scalar::pinv_f32(&m2[s * l * l..(s + 1) * l * l], l, sc);
+        z[s] = scalar::z_from_packed(
+            c_ij[s],
+            &m1[s * 2 * l..(s + 1) * 2 * l],
+            &sc.m2inv[..l * l],
+            l,
+        );
+    }
+    z
+}
+
+/// cuPC-S batch: ONE pseudo-inverse per row, broadcast across the
+/// lane block (every lane in a row shares M2⁻¹ — the cuPC-S saving
+/// becomes a scalar-broadcast multiplier). Full blocks inside
+/// `valid[r]`; the partial tail runs per-slot scalar; padding keeps
+/// z = 0.0.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+pub fn ci_s(
+    l: usize,
+    rows: usize,
+    k: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    valid: &[u32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    let mut z = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        scalar::pinv_f32(&m2[r * l * l..(r + 1) * l * l], l, sc);
+        let nt = (valid[r] as usize).min(k);
+        let full = nt / LANES * LANES;
+        let mut t0 = 0;
+        while t0 < full {
+            let s0 = r * k + t0;
+            for lane in 0..LANES {
+                let s = s0 + lane;
+                for (c, &v) in m1[s * 2 * l..(s + 1) * 2 * l].iter().enumerate() {
+                    sc.m1p[c * LANES + lane] = v as f64;
+                }
+            }
+            block_z_shared(&c_ij[s0..s0 + LANES], sc, l, &mut z[s0..s0 + LANES]);
+            t0 += LANES;
+        }
+        for t in full..nt {
+            let s = r * k + t;
+            z[s] = scalar::z_from_packed(
+                c_ij[s],
+                &m1[s * 2 * l..(s + 1) * 2 * l],
+                &sc.m2inv[..l * l],
+                l,
+            );
+        }
+    }
+    z
+}
+
+/// One block of z statistics from the lane-major panels (per-slot
+/// M2⁻¹, i.e. the ci_e shape). Per lane this replays the scalar
+/// `z_from_packed` op-for-op.
+fn block_z(c_ij: &[f32], sc: &Scratch, l: usize, out: &mut [f32]) {
+    let m1p = &sc.m1p[..2 * l * LANES];
+    let m2invp = &sc.m2invp[..l * l * LANES];
+    let mut h00 = [0.0f64; LANES];
+    let mut h01 = [0.0f64; LANES];
+    let mut h11 = [0.0f64; LANES];
+    for r in 0..2 {
+        for c in 0..l {
+            let mut acc = [0.0f64; LANES];
+            for k in 0..l {
+                let a = &m1p[(r * l + k) * LANES..][..LANES];
+                let m = &m2invp[(k * l + c) * LANES..][..LANES];
+                for ((acc, &a), &m) in acc.iter_mut().zip(a).zip(m) {
+                    *acc += a * m;
+                }
+            }
+            accumulate_h(r, c, l, m1p, &acc, &mut h00, &mut h01, &mut h11);
+        }
+    }
+    finish_block(c_ij, &h00, &h01, &h11, out);
+}
+
+/// Same as [`block_z`] but with one shared M2⁻¹ for the whole block
+/// (the ci_s shape): the inverse enters as a scalar broadcast.
+fn block_z_shared(c_ij: &[f32], sc: &Scratch, l: usize, out: &mut [f32]) {
+    let m1p = &sc.m1p[..2 * l * LANES];
+    let m2inv = &sc.m2inv[..l * l];
+    let mut h00 = [0.0f64; LANES];
+    let mut h01 = [0.0f64; LANES];
+    let mut h11 = [0.0f64; LANES];
+    for r in 0..2 {
+        for c in 0..l {
+            let mut acc = [0.0f64; LANES];
+            for k in 0..l {
+                let a = &m1p[(r * l + k) * LANES..][..LANES];
+                let m = m2inv[k * l + c];
+                for (acc, &a) in acc.iter_mut().zip(a) {
+                    *acc += a * m;
+                }
+            }
+            accumulate_h(r, c, l, m1p, &acc, &mut h00, &mut h01, &mut h11);
+        }
+    }
+    finish_block(c_ij, &h00, &h01, &h11, out);
+}
+
+/// Fold one `acc` strip into the H accumulators — the lane-wide
+/// version of the scalar kernel's `match r` arm (h00 before h01 for
+/// r = 0, matching the scalar statement order per lane).
+#[allow(clippy::too_many_arguments)] // hot-loop helper, mirrors the scalar arm
+#[inline]
+fn accumulate_h(
+    r: usize,
+    c: usize,
+    l: usize,
+    m1p: &[f64],
+    acc: &[f64; LANES],
+    h00: &mut [f64; LANES],
+    h01: &mut [f64; LANES],
+    h11: &mut [f64; LANES],
+) {
+    if r == 0 {
+        let mi = &m1p[c * LANES..][..LANES];
+        let mj = &m1p[(l + c) * LANES..][..LANES];
+        for ((h, &acc), &m) in h00.iter_mut().zip(acc).zip(mi) {
+            *h += acc * m;
+        }
+        for ((h, &acc), &m) in h01.iter_mut().zip(acc).zip(mj) {
+            *h += acc * m;
+        }
+    } else {
+        let mj = &m1p[(l + c) * LANES..][..LANES];
+        for ((h, &acc), &m) in h11.iter_mut().zip(acc).zip(mj) {
+            *h += acc * m;
+        }
+    }
+}
+
+/// ρ and Fisher-z epilogue for one block, per-lane identical to the
+/// scalar tail.
+#[inline]
+fn finish_block(
+    c_ij: &[f32],
+    h00: &[f64; LANES],
+    h01: &[f64; LANES],
+    h11: &[f64; LANES],
+    out: &mut [f32],
+) {
+    for (lane, z) in out.iter_mut().enumerate() {
+        let h00 = 1.0 - h00[lane];
+        let h11 = 1.0 - h11[lane];
+        let h01 = c_ij[lane] as f64 - h01[lane];
+        let rho = h01 / (h00 * h11).max(1e-12).sqrt();
+        *z = fisher_z(rho) as f32;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{ci_e, ci_s, KernelKind, Scratch};
+    use crate::sim::batches::{random_batch, random_s_batch};
+    use crate::util::rng::Pcg;
+
+    const MAX_L: usize = 32;
+
+    /// Bitwise agreement on single-slot batches: with one slot there is
+    /// no blocking at all (the remainder path runs), so any divergence
+    /// here would mean the seam itself leaks.
+    #[test]
+    fn single_slot_batches_agree_bitwise() {
+        let mut rng = Pcg::seeded(0x51);
+        let mut sc_s = Scratch::new(MAX_L);
+        let mut sc_b = Scratch::new(MAX_L);
+        for l in 1..=8 {
+            let (c_ij, m1, m2) = random_batch(&mut rng, 1, l);
+            let zs = ci_e(KernelKind::Scalar, l, 1, &c_ij, &m1, &m2, &mut sc_s);
+            let zb = ci_e(KernelKind::Blocked, l, 1, &c_ij, &m1, &m2, &mut sc_b);
+            assert_eq!(zs[0].to_bits(), zb[0].to_bits(), "l={l}");
+        }
+    }
+
+    /// Bitwise agreement across the full random generator, including
+    /// odd batch sizes that exercise every remainder length 0..LANES.
+    #[test]
+    fn ci_e_agrees_bitwise_across_batch_sizes() {
+        let mut rng = Pcg::seeded(0xE0);
+        let mut sc_s = Scratch::new(MAX_L);
+        let mut sc_b = Scratch::new(MAX_L);
+        for l in 1..=8 {
+            for b in [1usize, 7, 8, 9, 15, 16, 33, 100] {
+                let (c_ij, m1, m2) = random_batch(&mut rng, b, l);
+                let zs = ci_e(KernelKind::Scalar, l, b, &c_ij, &m1, &m2, &mut sc_s);
+                let zb = ci_e(KernelKind::Blocked, l, b, &c_ij, &m1, &m2, &mut sc_b);
+                for (s, (a, x)) in zs.iter().zip(&zb).enumerate() {
+                    assert_eq!(a.to_bits(), x.to_bits(), "l={l} b={b} slot={s}");
+                }
+            }
+        }
+    }
+
+    /// ci_s bitwise agreement, sweeping partial `valid` widths so both
+    /// the full-block and per-slot tails run, and padding stays 0.
+    #[test]
+    fn ci_s_agrees_bitwise_including_partial_rows() {
+        let mut rng = Pcg::seeded(0x50);
+        let mut sc_s = Scratch::new(MAX_L);
+        let mut sc_b = Scratch::new(MAX_L);
+        for l in 1..=8 {
+            for (rows, k) in [(1usize, 4usize), (3, 8), (5, 17), (4, 32)] {
+                let (c_ij, m1, m2) = random_s_batch(&mut rng, rows, k, l);
+                // a mix of full, partial, and empty rows
+                let valid: Vec<u32> = (0..rows as u32)
+                    .map(|r| match r % 4 {
+                        0 => k as u32,
+                        1 => (k as u32) / 2,
+                        2 => 1,
+                        _ => 0,
+                    })
+                    .collect();
+                let zs = ci_s(KernelKind::Scalar, l, rows, k, &c_ij, &m1, &m2, &valid, &mut sc_s);
+                let zb = ci_s(KernelKind::Blocked, l, rows, k, &c_ij, &m1, &m2, &valid, &mut sc_b);
+                for (s, (a, x)) in zs.iter().zip(&zb).enumerate() {
+                    assert_eq!(a.to_bits(), x.to_bits(), "l={l} rows={rows} k={k} slot={s}");
+                }
+                for r in 0..rows {
+                    for t in (valid[r] as usize).min(k)..k {
+                        assert_eq!(zb[r * k + t], 0.0, "padding must stay zero");
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,181 @@
+//! Runtime-selectable CI-test kernels: the hot EBatch/SBatch paths.
+//!
+//! The packed batches built by `skeleton/batch.rs` are evaluated here.
+//! Two kernels share one contract (see `docs/NUMERICS.md`):
+//!
+//! * [`scalar`] — the reference path: one slot at a time, row-major,
+//!   exactly the loop nest the engine has always run. Every other
+//!   kernel is diffed against it.
+//! * [`blocked`] — the vectorized path: processes [`LANES`] batch slots
+//!   per inner iteration over *lane-major* (column-major across the
+//!   block) f64 panels, so the per-`(r, c, k)` updates become
+//!   contiguous 8-wide strips the autovectorizer turns into SIMD. The
+//!   per-lane f64 operation *order* is identical to the scalar kernel
+//!   (same `r`/`c`/`k` nesting, same pseudo-inverse per slot, remainder
+//!   slots run the scalar routine), so its output is **bitwise
+//!   identical** by construction — the conformance grid stays the
+//!   bitwise gate. A future kernel that reassociates (block-summed
+//!   grams, FMA) instead gates on the margin bound from
+//!   `tools/margin_oracle.py --kernel-delta`.
+//!
+//! Selection: `CUPC_KERNEL=scalar|blocked` (read once, see
+//! [`KernelKind::from_env`]) or explicitly via `Config.kernel` /
+//! `NativeEngine::with_kernel`. The choice never enters cache keys —
+//! like thread count, it cannot change a single output bit.
+//!
+//! ```
+//! use cupc::stats::kernels::KernelKind;
+//! assert_eq!(KernelKind::parse("scalar"), Some(KernelKind::Scalar));
+//! assert_eq!(KernelKind::parse("BLOCKED"), Some(KernelKind::Blocked));
+//! assert_eq!(KernelKind::parse("simd"), None);
+//! assert_eq!(KernelKind::default().name(), "blocked");
+//! ```
+
+use crate::stats::chol::PinvScratch;
+use std::sync::OnceLock;
+
+pub mod blocked;
+pub mod scalar;
+
+/// Batch slots evaluated per inner iteration by the blocked kernel —
+/// the CPU analogue of a (narrow) CUDA warp. 8 f64 lanes = one AVX-512
+/// register or two AVX2 registers; the panels stay L1-resident at
+/// every supported level.
+pub const LANES: usize = 8;
+
+/// Which CI-test kernel evaluates packed batches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelKind {
+    /// Reference path: per-slot row-major loops (the bitwise oracle).
+    Scalar,
+    /// Lane-major blocked path (bitwise-identical, autovectorizable).
+    #[default]
+    Blocked,
+}
+
+impl KernelKind {
+    /// Parse a kernel name (case-insensitive). `None` for unknown names.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelKind::Scalar),
+            "blocked" => Some(KernelKind::Blocked),
+            _ => None,
+        }
+    }
+
+    /// Stable lowercase name (round-trips through [`KernelKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelKind::Scalar => "scalar",
+            KernelKind::Blocked => "blocked",
+        }
+    }
+
+    /// Kernel selected by `CUPC_KERNEL`, defaulting to [`Blocked`]
+    /// (unset or unrecognized values fall back to the default). Read
+    /// once per process — tests that need both kernels in one process
+    /// construct engines explicitly instead of mutating the
+    /// environment.
+    ///
+    /// [`Blocked`]: KernelKind::Blocked
+    pub fn from_env() -> Self {
+        static CACHED: OnceLock<KernelKind> = OnceLock::new();
+        *CACHED.get_or_init(|| {
+            std::env::var("CUPC_KERNEL")
+                .ok()
+                .and_then(|s| KernelKind::parse(&s))
+                .unwrap_or_default()
+        })
+    }
+}
+
+/// Reusable per-engine workspace shared by both kernels: the
+/// pseudo-inverse scratch plus the lane-major panels the blocked
+/// kernel gathers into. Sized once for the largest supported level
+/// (~72 KiB at `max_l = 32`) so the hot loops never allocate.
+pub struct Scratch {
+    pinv: PinvScratch,
+    /// M2 widened to f64 (`l·l`), input to the pseudo-inverse.
+    m2f: Vec<f64>,
+    /// M2⁻¹ for the slot/row most recently inverted (`l·l`).
+    m2inv: Vec<f64>,
+    /// Lane-major M1 panel: `m1p[c·LANES + lane]` (`2·l·LANES`).
+    m1p: Vec<f64>,
+    /// Lane-major M2⁻¹ panel: `m2invp[e·LANES + lane]` (`l·l·LANES`).
+    m2invp: Vec<f64>,
+}
+
+impl Scratch {
+    pub fn new(max_l: usize) -> Self {
+        Scratch {
+            pinv: PinvScratch::new(max_l),
+            m2f: vec![0.0; max_l * max_l],
+            m2inv: vec![0.0; max_l * max_l],
+            m1p: vec![0.0; 2 * max_l * LANES],
+            m2invp: vec![0.0; max_l * max_l * LANES],
+        }
+    }
+}
+
+/// Level-0 sweep: elementwise `|fisher_z|` of raw correlations. Both
+/// kernels share the scalar routine — there is no accumulation to
+/// block, and libm's `ln` dominates.
+pub fn level0(_kind: KernelKind, c_ij: &[f32]) -> Vec<f32> {
+    scalar::level0(c_ij)
+}
+
+/// cuPC-E batch: one `(i, j, S)` test per slot, `b` slots.
+pub fn ci_e(
+    kind: KernelKind,
+    l: usize,
+    b: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    match kind {
+        KernelKind::Scalar => scalar::ci_e(l, b, c_ij, m1, m2, sc),
+        KernelKind::Blocked => blocked::ci_e(l, b, c_ij, m1, m2, sc),
+    }
+}
+
+/// cuPC-S batch: `rows` conditioning sets × `k` tests each, one
+/// pseudo-inverse per row.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+pub fn ci_s(
+    kind: KernelKind,
+    l: usize,
+    rows: usize,
+    k: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    valid: &[u32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    match kind {
+        KernelKind::Scalar => scalar::ci_s(l, rows, k, c_ij, m1, m2, valid, sc),
+        KernelKind::Blocked => blocked::ci_s(l, rows, k, c_ij, m1, m2, valid, sc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_round_trips_and_rejects_unknown() {
+        for kind in [KernelKind::Scalar, KernelKind::Blocked] {
+            assert_eq!(KernelKind::parse(kind.name()), Some(kind));
+        }
+        assert_eq!(KernelKind::parse(" Scalar "), Some(KernelKind::Scalar));
+        assert_eq!(KernelKind::parse(""), None);
+        assert_eq!(KernelKind::parse("avx"), None);
+    }
+
+    #[test]
+    fn default_is_blocked() {
+        assert_eq!(KernelKind::default(), KernelKind::Blocked);
+    }
+}

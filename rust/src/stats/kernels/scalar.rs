@@ -1,0 +1,102 @@
+//! Reference CI-test kernel: one slot at a time, row-major loops.
+//!
+//! This is the loop nest the native engine has always run, moved
+//! verbatim behind the kernel seam. It defines the bitwise contract
+//! every other kernel is held to (`docs/NUMERICS.md`): f32 inputs
+//! widened to f64, the `r → c → k` accumulation order below, one
+//! `pinv_fast` pseudo-inverse per slot (ci_e) or per row (ci_s).
+
+use super::Scratch;
+use crate::stats::chol::pinv_fast;
+use crate::stats::fisher::fisher_z;
+
+/// |z| of raw correlations (level 0) — shared by both kernels.
+pub fn level0(c_ij: &[f32]) -> Vec<f32> {
+    c_ij.iter().map(|&c| fisher_z(c as f64) as f32).collect()
+}
+
+/// z for one packed test given a precomputed M2⁻¹.
+#[inline]
+pub(super) fn z_from_packed(c_ij: f32, m1: &[f32], m2inv: &[f64], l: usize) -> f32 {
+    // w = M1 M2⁻¹ (2×l), H = M0 − w M1ᵀ
+    let (mut h00, mut h01, mut h11) = (0.0f64, 0.0f64, 0.0f64);
+    for r in 0..2 {
+        for c in 0..l {
+            let mut acc = 0.0f64;
+            for k in 0..l {
+                acc += m1[r * l + k] as f64 * m2inv[k * l + c];
+            }
+            // accumulate H terms on the fly
+            match r {
+                0 => {
+                    h00 += acc * m1[c] as f64;
+                    h01 += acc * m1[l + c] as f64;
+                }
+                _ => {
+                    h11 += acc * m1[l + c] as f64;
+                }
+            }
+        }
+    }
+    let h00 = 1.0 - h00;
+    let h11 = 1.0 - h11;
+    let h01 = c_ij as f64 - h01;
+    let rho = h01 / (h00 * h11).max(1e-12).sqrt();
+    fisher_z(rho) as f32
+}
+
+/// Widen a packed f32 M2 to f64 and pseudo-invert it into `sc.m2inv`.
+pub(super) fn pinv_f32(m2: &[f32], l: usize, sc: &mut Scratch) {
+    let Scratch { pinv, m2f, m2inv, .. } = sc;
+    for (dst, src) in m2f[..l * l].iter_mut().zip(m2) {
+        *dst = *src as f64;
+    }
+    pinv_fast(&m2f[..l * l], l, pinv, &mut m2inv[..l * l]);
+}
+
+/// cuPC-E batch: one pseudo-inverse + one z per slot.
+pub fn ci_e(
+    l: usize,
+    b: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    let mut z = Vec::with_capacity(b);
+    for s in 0..b {
+        pinv_f32(&m2[s * l * l..(s + 1) * l * l], l, sc);
+        z.push(z_from_packed(
+            c_ij[s],
+            &m1[s * 2 * l..(s + 1) * 2 * l],
+            &sc.m2inv[..l * l],
+            l,
+        ));
+    }
+    z
+}
+
+/// cuPC-S batch: ONE pseudo-inverse per row (the cuPC-S saving),
+/// padded tail skipped — padding slots keep z = 0.0.
+#[allow(clippy::too_many_arguments)] // mirrors the kernel ABI
+pub fn ci_s(
+    l: usize,
+    rows: usize,
+    k: usize,
+    c_ij: &[f32],
+    m1: &[f32],
+    m2: &[f32],
+    valid: &[u32],
+    sc: &mut Scratch,
+) -> Vec<f32> {
+    let mut z = vec![0.0f32; rows * k];
+    for r in 0..rows {
+        pinv_f32(&m2[r * l * l..(r + 1) * l * l], l, sc);
+        // skip the padded tail (CUDA's inactive lanes, for free here)
+        for t in 0..(valid[r] as usize).min(k) {
+            let s = r * k + t;
+            z[s] = z_from_packed(c_ij[s], &m1[s * 2 * l..(s + 1) * 2 * l], &sc.m2inv[..l * l], l);
+        }
+    }
+    z
+}

@@ -1,9 +1,13 @@
 //! Statistical substrate: normal quantiles, Fisher-z CI testing, small
-//! dense linear algebra (the paper's Algorithm 7) and correlation
-//! matrices — everything the PC engines need, implemented from scratch.
+//! dense linear algebra (the paper's Algorithm 7), correlation
+//! matrices, and the runtime-selectable CI-test kernels (`kernels/`)
+//! — everything the PC engines need, implemented from scratch. The
+//! precision contract (f32 vs f64, bitwise guarantees) lives in
+//! `docs/NUMERICS.md`.
 
 pub mod chol;
 pub mod corr;
 pub mod fisher;
+pub mod kernels;
 pub mod normal;
 pub mod pcorr;

@@ -2,6 +2,10 @@
 //! (paper eq. 3-5) — the *native* (pure Rust) CI-test path, used by the
 //! serial/threaded CPU engines and as the cross-check oracle for the XLA
 //! engine.
+//!
+//! The batched mirrors of this math (one pseudoinverse per slot / per
+//! shared row) live in [`crate::stats::kernels`]; the operation-order
+//! rules that keep them bitwise equal are in `docs/NUMERICS.md`.
 
 use super::chol::{pinv_fast, PinvScratch};
 use super::fisher::fisher_z;

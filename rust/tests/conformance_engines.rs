@@ -17,6 +17,11 @@
 //!   schedules: the number of CI tests actually evaluated is exactly the
 //!   schedule trade-off the paper studies — γ = 1 vs γ = ∞ in Fig. 5 —
 //!   so only determinism of `tests` per variant is checked.)
+//!
+//! The precision contract behind every bitwise assertion here — where
+//! f32 vs f64 is used, which knobs are guaranteed bit-neutral (threads,
+//! windows, shards, CI-test kernels), and how `tools/margin_oracle.py`
+//! justifies the f32 packing — is written down in `docs/NUMERICS.md`.
 
 use cupc::api::pc_stable_corr;
 use cupc::sim::scenarios::{default_grid, Scenario, ScenarioInput, ALL_VARIANTS};
@@ -160,6 +165,70 @@ fn batched_schedules_are_thread_count_invariant() {
             assert!(
                 r1.cpdag.same_as(&r4.cpdag),
                 "{}: {v:?} CPDAG differs between threads=1 and threads=4",
+                sc.name
+            );
+        }
+    }
+}
+
+/// The kernel seam's bitwise gate (`docs/NUMERICS.md`): the blocked
+/// lane-major kernel preserves the scalar kernel's per-lane f64
+/// operation order, so across the FULL grid both kernels must produce
+/// bit-identical skeletons, sepset *entries*, per-level stats
+/// (including test counts) and CPDAGs — `assert_eq`, no tolerance.
+/// Runs at `threads = 2` so the pooled path's per-worker engines are
+/// constructed from `Config.kernel` too. CI re-runs the whole grid
+/// under `CUPC_KERNEL=scalar` and `=blocked` (the `kernel-conformance`
+/// job) to cover the env-selection path end to end.
+#[test]
+fn scalar_and_blocked_kernels_conform_bitwise_on_the_full_grid() {
+    use cupc::stats::kernels::KernelKind;
+    for sc in default_grid() {
+        let input = sc.generate();
+        for v in [Variant::CupcE, Variant::CupcS, Variant::Reversed] {
+            let run_kernel = |kernel: KernelKind| {
+                let mut cfg = sc.config(v);
+                cfg.kernel = kernel;
+                cfg.threads = 2;
+                pc_stable_corr(&input.corr, input.n, input.m, &cfg).unwrap_or_else(|e| {
+                    panic!("{} / {v:?} kernel={} failed: {e:#}", sc.name, kernel.name())
+                })
+            };
+            let rs = run_kernel(KernelKind::Scalar);
+            let rb = run_kernel(KernelKind::Blocked);
+            assert_eq!(
+                rs.skeleton.graph.snapshot(),
+                rb.skeleton.graph.snapshot(),
+                "{}: {v:?} skeleton differs between kernels",
+                sc.name
+            );
+            assert_eq!(
+                rs.skeleton.sepsets.sorted_entries(),
+                rb.skeleton.sepsets.sorted_entries(),
+                "{}: {v:?} sepset entries differ between kernels",
+                sc.name
+            );
+            let levels = |r: &cupc::api::PcResult| -> Vec<(usize, u64, usize, usize)> {
+                r.skeleton
+                    .levels
+                    .iter()
+                    .map(|l| (l.level, l.tests, l.removed, l.edges_after))
+                    .collect()
+            };
+            assert_eq!(
+                levels(&rs),
+                levels(&rb),
+                "{}: {v:?} per-level stats differ between kernels",
+                sc.name
+            );
+            assert!(
+                rs.cpdag.same_as(&rb.cpdag),
+                "{}: {v:?} CPDAG differs between kernels",
+                sc.name
+            );
+            assert_eq!(
+                rs.orient, rb.orient,
+                "{}: {v:?} orientation stats differ between kernels",
                 sc.name
             );
         }

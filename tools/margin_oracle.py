@@ -5,10 +5,23 @@ Replicates rust/src/util/rng.rs (PCG-XSH-RR 64/32 + Box-Muller),
 sim/dag.rs::random_er, sim/sem.rs::sample and stats/corr.rs, then runs an
 *exhaustive* PC-stable level loop (superset of every schedule's tests) and
 records min |z - tau| over every evaluated CI test. If that margin is >>
-1e-5 for a scenario, f32 packing cannot flip any decision, so all six Rust
-schedules must produce bit-identical skeletons there.
+1e-5 for a scenario, f32 packing cannot flip any decision, so all seven
+Rust schedules must produce bit-identical skeletons there.
+
+Kernel-delta mode (`--kernel-delta [EPS]`, see docs/NUMERICS.md): the
+same sweep additionally evaluates every z statistic a second way — the
+sequential-order mirror of the Rust scalar kernel (ascending-k
+accumulation, ascending-c H updates) against numpy's reassociated
+(pairwise-summed) matmul — and reports, per grid point, the max
+|z_seq - z_reassoc| together with a verdict-equality check. The point:
+today's `blocked` kernel reproduces the scalar operation order exactly
+(bitwise, delta 0 by construction); a FUTURE kernel that reassociates
+is verdict-safe iff its per-test z delta stays below the worst grid
+margin — this mode measures a realistic reassociation delta and checks
+it clears that bar (optionally against an explicit EPS bound).
 """
 import math
+import sys
 import numpy as np
 
 M64 = (1 << 64) - 1
@@ -174,10 +187,42 @@ def partial_corr(c, i, j, S):
     return h01 / math.sqrt(max(h00 * h11, 1e-12))
 
 
+def partial_corr_seq(c, i, j, S):
+    """Sequential-order mirror of the Rust scalar kernel's z_from_packed
+    (skeleton/engine.rs → stats/kernels/scalar.rs): ascending-k
+    accumulation into acc, ascending-c updates of h00/h01/h11 — the
+    exact per-lane operation order the blocked kernel also reproduces.
+    Differs from partial_corr only by summation order (numpy matmul
+    reassociates), so the pair measures a realistic reassociation delta.
+    """
+    if not S:
+        return c[i, j]
+    l = len(S)
+    m2 = c[np.ix_(S, S)]
+    m2i = np.linalg.pinv(m2, rcond=1e-10, hermitian=True)
+    m1 = [[c[i, s] for s in S], [c[j, s] for s in S]]
+    h00 = h01 = h11 = 0.0
+    for r in range(2):
+        for col in range(l):
+            acc = 0.0
+            for k in range(l):
+                acc += m1[r][k] * m2i[k, col]
+            if r == 0:
+                h00 += acc * m1[0][col]
+                h01 += acc * m1[1][col]
+            else:
+                h11 += acc * m1[1][col]
+    h00 = 1.0 - h00
+    h11 = 1.0 - h11
+    h01 = c[i, j] - h01
+    return h01 / math.sqrt(max(h00 * h11, 1e-12))
+
+
 from itertools import combinations
 
 
-def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson"):
+def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson",
+                 kernel_delta=False):
     if topology[0] == "er":
         parents = random_er(n, topology[1], Pcg(seed, 1))
     else:
@@ -187,6 +232,8 @@ def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson"):
     adj = np.ones((n, n), dtype=bool)
     np.fill_diagonal(adj, False)
     min_margin = float("inf")
+    max_delta = 0.0
+    verdict_mismatches = 0
     levels = []
     total_tests = 0
     l = 0
@@ -206,6 +253,11 @@ def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson"):
                     z = fisher_z(partial_corr(c, i, j, list(S)))
                     if math.isfinite(tau):
                         min_margin = min(min_margin, abs(z - tau))
+                    if kernel_delta:
+                        z_seq = fisher_z(partial_corr_seq(c, i, j, list(S)))
+                        max_delta = max(max_delta, abs(z - z_seq))
+                        if (z <= tau) != (z_seq <= tau):
+                            verdict_mismatches += 1
                     if z <= tau:
                         to_remove.add((min(i, j), max(i, j)))
         for (a, b) in to_remove:
@@ -217,6 +269,10 @@ def run_scenario(name, n, m, topology, alpha, cap, seed, corr_kind="pearson"):
             break
         if int(adj.sum(axis=1).max()) <= l:
             break
+    if kernel_delta:
+        print(f"{name:16s} tests~{total_tests:7d} min|z-tau|={min_margin:.3e} "
+              f"max|dz|={max_delta:.3e} verdict-mismatches={verdict_mismatches}")
+        return min_margin, max_delta, verdict_mismatches
     print(f"{name:16s} edges={edges_after:4d} levels={len(levels)} "
           f"tests~{total_tests:7d} min|z-tau|={min_margin:.3e}  per-level={levels}")
     return min_margin
@@ -239,7 +295,41 @@ GRID = [
     ("rank-grn", 24, 400, ("grn", 1.5, 5), 0.01, 2, 913, "spearman"),
 ]
 
+def main_kernel_delta(eps):
+    """Kernel numerics contract check (docs/NUMERICS.md): measure the
+    reassociation delta on every grid test and assert it cannot flip any
+    verdict. Exits nonzero on a verdict mismatch or a bound violation."""
+    worst_margin = float("inf")
+    worst_delta = 0.0
+    mismatches = 0
+    for row in GRID:
+        margin, delta, bad = run_scenario(*row, kernel_delta=True)
+        worst_margin = min(worst_margin, margin)
+        worst_delta = max(worst_delta, delta)
+        mismatches += bad
+    print(f"\nworst margin over the grid:        {worst_margin:.3e}")
+    print(f"worst reassociation |dz| observed: {worst_delta:.3e}")
+    print(f"verdict mismatches:                {mismatches}")
+    print("note: the shipped `blocked` kernel preserves scalar operation order "
+          "per lane, so its delta is exactly 0; the bound above is the budget "
+          "for future reassociating kernels.")
+    ok = mismatches == 0 and worst_delta < worst_margin
+    if eps is not None:
+        print(f"requested kernel bound EPS={eps:.3e}: "
+              + ("VERDICT-SAFE (EPS < worst margin)" if eps < worst_margin
+                 else "UNSAFE (EPS >= worst margin — could flip a verdict)"))
+        ok = ok and eps < worst_margin
+    print("KERNEL CONTRACT HOLDS" if ok else "KERNEL CONTRACT VIOLATED")
+    return 0 if ok else 1
+
+
 if __name__ == "__main__":
+    if "--kernel-delta" in sys.argv:
+        idx = sys.argv.index("--kernel-delta")
+        eps_arg = None
+        if idx + 1 < len(sys.argv):
+            eps_arg = float(sys.argv[idx + 1])
+        sys.exit(main_kernel_delta(eps_arg))
     worst = float("inf")
     for row in GRID:
         worst = min(worst, run_scenario(*row))
