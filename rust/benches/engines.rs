@@ -7,9 +7,10 @@
 //! for bit), the threads=1 vs threads=N speedup of the parallel
 //! pack→evaluate→apply pipeline on the Table-2 minis, the orientation
 //! pipeline (ns/triple for v-structures + Meek and ns/test for the
-//! majority census, threads 1 vs N), and the batch-runner throughput
+//! majority census, threads 1 vs N), the batch-runner throughput
 //! (jobs/sec over the scenario grid at job-threads 1 vs N, cold cache
-//! each rep).
+//! each rep), and the lingam engine family (ns per pairwise measure
+//! sweep over the non-Gaussian lingam grid, threads 1 vs N).
 //!
 //! Writes `BENCH_engines.json` (override with `-- --out path`) so
 //! packing/engine/scheduler changes have a tracked baseline to diff
@@ -20,6 +21,7 @@
 //! instead of the three fastest), `--out FILE`.
 
 use cupc::experiments::median;
+use cupc::family::FamilyId;
 use cupc::service::{run_batch, BatchOptions, Cache, DataSource, JobSpec, Manifest};
 use cupc::sim::batches::{random_batch, random_s_batch};
 use cupc::sim::{datasets, scenarios};
@@ -69,6 +71,17 @@ struct BatchRow {
     job_threads: usize,
     secs_jt1: f64,
     secs_jtn: f64,
+}
+
+struct LingamRow {
+    scenario: &'static str,
+    n: usize,
+    m: usize,
+    /// pairwise measure evaluations (Σ rounds.tests)
+    sweeps: u64,
+    edges: usize,
+    secs_t1: f64,
+    secs_tn: f64,
 }
 
 struct OrientRowBench {
@@ -422,7 +435,7 @@ fn main() -> anyhow::Result<()> {
             .map(|sc| JobSpec {
                 name: sc.name.to_string(),
                 source: DataSource::Scenario(sc.name.to_string()),
-                variant: Variant::CupcS,
+                family: FamilyId::Pc(Variant::CupcS),
                 alpha: sc.alpha,
                 max_level: sc.max_level,
                 corr: sc.corr,
@@ -469,6 +482,64 @@ fn main() -> anyhow::Result<()> {
         secs_jt1 / secs_jtn.max(1e-12)
     );
 
+    // ── lingam: ns per pairwise measure sweep, threads 1 vs N ───────
+    // The causal-order engine's hot spot is the O(k²) pairwise-measure
+    // sweep each root-finding round; per-sweep cost is the number the
+    // registry's first non-PC family is tracked by. The t1/tN results
+    // must agree bitwise (the family's determinism contract) — asserted
+    // before any timing.
+    let mut lingam: Vec<LingamRow> = Vec::new();
+    println!("\n== lingam: ns/measure-sweep, threads=1 vs threads={threads} ==");
+    println!(
+        "{:<16} {:>4} {:>6} {:>8} {:>6} {:>10} {:>10} {:>12} {:>8}",
+        "scenario", "n", "m", "sweeps", "edges", "t1 (s)", "tN (s)", "ns/sweep", "speedup"
+    );
+    for sc in scenarios::lingam_grid() {
+        let (_, data) = sc.generate_data();
+        let run_with = |t: usize| -> anyhow::Result<(f64, cupc::api::OrderResult)> {
+            let cfg = Config {
+                threads: t,
+                ..Config::default()
+            };
+            let mut times = Vec::new();
+            let mut last = None;
+            for _ in 0..reps.max(1) {
+                let res = cupc::lingam::run(&data, &cfg)?;
+                times.push(res.seconds);
+                last = Some(res);
+            }
+            Ok((median(&times), last.unwrap()))
+        };
+        let (secs_t1, r1) = run_with(1)?;
+        let (secs_tn, rn) = run_with(threads)?;
+        assert_eq!(r1.order, rn.order, "{}: order must be thread-invariant", sc.name);
+        let w1: Vec<u64> = r1.edges.iter().map(|e| e.2.to_bits()).collect();
+        let wn: Vec<u64> = rn.edges.iter().map(|e| e.2.to_bits()).collect();
+        assert_eq!(w1, wn, "{}: edge weights must agree bitwise", sc.name);
+        let sweeps: u64 = r1.rounds.iter().map(|r| r.tests).sum();
+        println!(
+            "{:<16} {:>4} {:>6} {:>8} {:>6} {:>10.4} {:>10.4} {:>12.1} {:>7.2}x",
+            sc.name,
+            sc.n,
+            sc.m,
+            sweeps,
+            r1.edges.len(),
+            secs_t1,
+            secs_tn,
+            secs_t1 * 1e9 / sweeps.max(1) as f64,
+            secs_t1 / secs_tn.max(1e-12)
+        );
+        lingam.push(LingamRow {
+            scenario: sc.name,
+            n: sc.n,
+            m: sc.m,
+            sweeps,
+            edges: r1.edges.len(),
+            secs_t1,
+            secs_tn,
+        });
+    }
+
     write_json(
         &out,
         reps,
@@ -479,6 +550,7 @@ fn main() -> anyhow::Result<()> {
         &pipeline,
         &orientation,
         &batch,
+        &lingam,
     )?;
     println!("\nwrote {out}");
     Ok(())
@@ -497,10 +569,11 @@ fn write_json(
     pipeline: &[PipelineRow],
     orientation: &[OrientRowBench],
     batch: &BatchRow,
+    lingam: &[LingamRow],
 ) -> anyhow::Result<()> {
     let mut j = String::new();
     j.push_str("{\n");
-    j.push_str("  \"schema\": \"cupc-bench-engines/v5\",\n");
+    j.push_str("  \"schema\": \"cupc-bench-engines/v6\",\n");
     j.push_str(&format!("  \"reps\": {reps},\n"));
     j.push_str(&format!("  \"threads\": {threads},\n"));
     j.push_str("  \"kernels\": [\n");
@@ -587,6 +660,25 @@ fn write_json(
         batch.jobs as f64 / batch.secs_jtn.max(1e-12),
         batch.secs_jt1 / batch.secs_jtn.max(1e-12)
     ));
+    j.push_str("  ,\"lingam\": [\n");
+    for (i, r) in lingam.iter().enumerate() {
+        let sep = if i + 1 < lingam.len() { "," } else { "" };
+        j.push_str(&format!(
+            "    {{\"scenario\": \"{}\", \"n\": {}, \"m\": {}, \"sweeps\": {}, \"edges\": {}, \
+             \"seconds_threads1\": {:.6}, \"seconds_threadsN\": {:.6}, \
+             \"ns_per_sweep_t1\": {:.2}, \"speedup\": {:.3}}}{sep}\n",
+            r.scenario,
+            r.n,
+            r.m,
+            r.sweeps,
+            r.edges,
+            r.secs_t1,
+            r.secs_tn,
+            r.secs_t1 * 1e9 / r.sweeps.max(1) as f64,
+            r.secs_t1 / r.secs_tn.max(1e-12)
+        ));
+    }
+    j.push_str("  ]\n");
     j.push_str("}\n");
     std::fs::write(path, j)?;
     Ok(())

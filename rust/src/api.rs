@@ -36,6 +36,56 @@ impl PcResult {
     }
 }
 
+/// Full result of a causal-order engine run (the second engine kind —
+/// see [`crate::family`]): a total order over the variables and a
+/// pruned weighted DAG, rather than a CPDAG. Every field except the
+/// timings is bit-identical for any thread count.
+pub struct OrderResult {
+    /// the estimated causal order, roots first
+    pub order: Vec<usize>,
+    /// the pruned DAG as `(parent, child, weight)` rows on standardized
+    /// data, in canonical (child-position, parent-position) order
+    pub edges: Vec<(usize, usize, f64)>,
+    /// per-round stats of the root-finding loop, reusing the PC level
+    /// row shape: `level` = round, `tests` = pairwise measures,
+    /// `removed` = 1 (the elected root), `edges_after` = variables
+    /// still active
+    pub rounds: Vec<skeleton::LevelStats>,
+    /// end-to-end wall-clock seconds (rounds + pruning)
+    pub seconds: f64,
+}
+
+/// What any registered engine family returns: the PC kinds produce a
+/// [`PcResult`], the causal-order kinds an [`OrderResult`]. `PcResult`
+/// is boxed because the two payloads differ greatly in inline size.
+pub enum EngineResult {
+    Pc(Box<PcResult>),
+    Order(OrderResult),
+}
+
+/// Run any registered engine family from observational data — the
+/// single entry point the `cupc run` dispatch goes through. PC
+/// families compose correlation → skeleton → orientation exactly like
+/// [`pc_stable_data`]; causal-order families run their whole-run
+/// function from the registry row.
+pub fn run_family(
+    id: crate::family::FamilyId,
+    data: &DataMatrix,
+    cfg: &Config,
+) -> Result<EngineResult> {
+    match crate::family::of(id).kind {
+        crate::family::FamilyKind::Pc => {
+            let variant = id.variant().expect("PC rows carry a variant");
+            let cfg = Config {
+                variant,
+                ..cfg.clone()
+            };
+            Ok(EngineResult::Pc(Box::new(pc_stable_data(data, &cfg)?)))
+        }
+        crate::family::FamilyKind::Order(run) => Ok(EngineResult::Order(run(data, cfg)?)),
+    }
+}
+
 /// Run PC-stable from observational data (m samples × n variables).
 pub fn pc_stable_data(data: &DataMatrix, cfg: &Config) -> Result<PcResult> {
     let t = crate::util::timer::Timer::start();

@@ -34,7 +34,7 @@ pub const USAGE: &str = "\
 cupc — GPU-schedule parallel PC-stable (cuPC reproduction)
 
 USAGE:
-  cupc run --dataset <name|csv> [--variant cups|cupe|serial|parcpu|b1|b2|reversed]
+  cupc run --dataset <name|csv> [--variant cups|cupe|serial|parcpu|b1|b2|reversed|lingam]
            [--engine native|xla] [--alpha 0.01] [--max-level L]
            [--beta B --gamma G --theta T --delta D] [--threads N]
            [--orient standard|majority] [--verbose]

@@ -1,14 +1,20 @@
-//! `cupc run` — PC-stable on a registry dataset or CSV file.
+//! `cupc run` — one engine family on a registry dataset or CSV file.
+//!
+//! `--variant` accepts any name or alias from the top-level engine-family
+//! registry: the seven PC schedules print the usual CPDAG summary, while
+//! causal-order families (`lingam`) print the recovered order and the
+//! regression-pruned DAG.
 
 use anyhow::{bail, Context, Result};
 use cupc::data::csv::load_csv;
-use cupc::metrics::{skeleton_metrics, level_time_shares};
+use cupc::metrics::{level_time_shares, skeleton_metrics};
 use cupc::prelude::*;
 use cupc::sim::datasets;
+use cupc::stats::corr::DataMatrix;
 use cupc::util::cli::Args;
 use std::path::PathBuf;
 
-pub fn config_from_args(args: &Args) -> Result<Config> {
+pub fn config_from_args(args: &Args) -> Result<(Config, FamilyId)> {
     let base = Config::default();
     let mut cfg = Config {
         alpha: args.get_f64("alpha", base.alpha)?,
@@ -24,9 +30,13 @@ pub fn config_from_args(args: &Args) -> Result<Config> {
     if let Some(l) = args.get("max-level") {
         cfg.max_level = Some(l.parse().context("--max-level")?);
     }
+    let mut family = FamilyId::Pc(cfg.variant);
     if let Some(v) = args.get("variant") {
-        cfg.variant = Variant::parse(v)
+        family = cupc::family::parse(v)
             .with_context(|| format!("unknown variant {v:?}"))?;
+        if let Some(variant) = family.variant() {
+            cfg.variant = variant;
+        }
     }
     cfg.engine = match args.get_or("engine", "native").as_str() {
         "native" => EngineKind::Native,
@@ -38,11 +48,11 @@ pub fn config_from_args(args: &Args) -> Result<Config> {
         "majority" => cupc::skeleton::OrientRule::Majority,
         other => bail!("unknown orient rule {other:?} (standard|majority)"),
     };
-    Ok(cfg)
+    Ok((cfg, family))
 }
 
 pub fn main(args: &Args) -> Result<()> {
-    let cfg = config_from_args(args)?;
+    let (cfg, family) = config_from_args(args)?;
     let name = args
         .get("dataset")
         .context("--dataset <registry name or .csv path> required")?;
@@ -58,11 +68,21 @@ pub fn main(args: &Args) -> Result<()> {
     };
 
     eprintln!(
-        "running {:?} engine={:?} on {name}: n={} m={} alpha={}",
-        cfg.variant, cfg.engine, data.n, data.m, cfg.alpha
+        "running {} engine={:?} on {name}: n={} m={} alpha={}",
+        cupc::family::of(family).name,
+        cfg.engine,
+        data.n,
+        data.m,
+        cfg.alpha
     );
-    let res = cupc::api::pc_stable_data(&data, &cfg)?;
+    match cupc::api::run_family(family, &data, &cfg)? {
+        EngineResult::Pc(res) => print_pc(&res, &data, truth.as_deref()),
+        EngineResult::Order(res) => print_order(&res, &data, truth.as_deref()),
+    }
+    Ok(())
+}
 
+fn print_pc(res: &PcResult, data: &DataMatrix, truth: Option<&[u8]>) {
     println!("== result ==");
     println!("variables        : {}", data.n);
     println!("samples          : {}", data.m);
@@ -91,12 +111,50 @@ pub fn main(args: &Args) -> Result<()> {
         );
     }
     if let Some(truth) = truth {
-        let m = skeleton_metrics(&res.skeleton.graph.snapshot(), &truth, data.n);
-        println!("-- vs ground truth --");
+        print_truth(&res.skeleton.graph.snapshot(), truth, data.n);
+    }
+}
+
+fn print_order(res: &OrderResult, data: &DataMatrix, truth: Option<&[u8]>) {
+    println!("== result ==");
+    println!("variables        : {}", data.n);
+    println!("samples          : {}", data.m);
+    println!("directed edges   : {}", res.edges.len());
+    println!("total time       : {:.3}s", res.seconds);
+    println!(
+        "causal order     : {}",
+        res.order
+            .iter()
+            .map(|v| v.to_string())
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    println!("-- per round --");
+    for ls in &res.rounds {
         println!(
-            "TP={} FP={} FN={} precision={:.3} recall={:.3} F1={:.3}",
-            m.tp, m.fp, m.fn_, m.precision, m.recall, m.f1
+            "round {}: measures={} active_after={} time={:.3}s",
+            ls.level, ls.tests, ls.edges_after, ls.seconds
         );
     }
-    Ok(())
+    println!("-- edges (cause -> effect : weight) --");
+    for &(i, j, w) in &res.edges {
+        println!("{i} -> {j} : {w:+.4}");
+    }
+    if let Some(truth) = truth {
+        let mut est = vec![0u8; data.n * data.n];
+        for &(i, j, _) in &res.edges {
+            est[i * data.n + j] = 1;
+            est[j * data.n + i] = 1;
+        }
+        print_truth(&est, truth, data.n);
+    }
+}
+
+fn print_truth(est: &[u8], truth: &[u8], n: usize) {
+    let m = skeleton_metrics(est, truth, n);
+    println!("-- vs ground truth --");
+    println!(
+        "TP={} FP={} FN={} precision={:.3} recall={:.3} F1={:.3}",
+        m.tp, m.fp, m.fn_, m.precision, m.recall, m.f1
+    );
 }

@@ -70,12 +70,19 @@ fn coordinator(args: &Args) -> Result<()> {
         manifest.jobs.len()
     );
     let spec = &manifest.jobs[0];
-    let fam = family::of(spec.variant);
+    let variant = spec.pc_variant().with_context(|| {
+        format!(
+            "family {} is not a PC family and cannot be sharded \
+             (sharding splits the CI-test skeleton across ranks)",
+            spec.variant_name()
+        )
+    })?;
+    let fam = family::of(variant);
     ensure!(
         fam.schedule.is_some(),
         "variant {} has no batched schedule and cannot be sharded \
          (pick one of the cupc-e/cupc-s/baseline/reversed families)",
-        fam.name
+        spec.variant_name()
     );
 
     let mut cfg = spec.config(threads);

@@ -1,0 +1,433 @@
+//! The top-level engine-family registry: every causal-discovery engine
+//! the crate ships, across *both* kinds — CI-test PC schedules (the
+//! [`skeleton`](crate::skeleton) families, tags 0..6) and causal-order
+//! engines (root-finding rounds → causal order → regression pruning,
+//! the [`lingam`](crate::lingam) family, tag 7).
+//!
+//! This is the seam the service, CLI, and cache layers dispatch on.
+//! The `skeleton::family` table keeps only the *implementation* columns
+//! (run function, schedule factory); the identity columns — canonical
+//! name, aliases, cache tag — live here so a non-PC family registers in
+//! exactly the same place and inherits manifest parsing, cache keys,
+//! report labels, and USAGE text without touching those layers.
+//!
+//! Adding a family is now: write the leaf module, append one
+//! [`EngineFamily`] row here with a fresh `tag` (PC kinds also append a
+//! `skeleton::family::FamilyInfo` row), and everything else picks it
+//! up. The registry tests below enforce the invariants a new row must
+//! keep: globally unique names, aliases and tags across both kinds; PC
+//! tags 0..6 pinned forever; parse/name round-trips.
+//!
+//! ```
+//! use cupc::family::{self, FamilyId};
+//! use cupc::skeleton::Variant;
+//!
+//! // any registered alias resolves, case-insensitively, to either kind
+//! assert_eq!(family::parse("CUPS"), Some(FamilyId::Pc(Variant::CupcS)));
+//! assert_eq!(family::parse("paralingam"), Some(FamilyId::Lingam));
+//! assert_eq!(family::parse("no-such-engine"), None);
+//!
+//! // PC spellings still resolve to a plain Variant for PC-only layers
+//! assert_eq!(Variant::parse("reversed"), Some(Variant::Reversed));
+//! // ...but causal-order spellings deliberately do not
+//! assert_eq!(Variant::parse("lingam"), None);
+//!
+//! assert_eq!(family::FAMILIES.len(), 8);
+//! ```
+
+use crate::api::OrderResult;
+use crate::skeleton::pipeline::Executor;
+use crate::skeleton::{Config, LevelStats, Variant};
+use crate::stats::corr::DataMatrix;
+use crate::util::timer::Timer;
+use anyhow::Result;
+
+/// Identity of one registered engine family. PC families carry their
+/// skeleton [`Variant`]; causal-order families are their own arms.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FamilyId {
+    /// A CI-test PC family (skeleton → orientation → CPDAG).
+    Pc(Variant),
+    /// The ParaLiNGAM causal-order family (order → pruned DAG).
+    Lingam,
+}
+
+impl FamilyId {
+    /// The skeleton variant, for PC families only. Layers that are
+    /// PC-specific (shard plans, the batched level loop) go through
+    /// this and reject `None` with a family-named error.
+    pub fn variant(self) -> Option<Variant> {
+        match self {
+            FamilyId::Pc(v) => Some(v),
+            FamilyId::Lingam => None,
+        }
+    }
+}
+
+/// Whole-run entry point of a causal-order family: observational data
+/// in, causal order + pruned DAG out. The correlation layer is not
+/// involved — the engine consumes raw columns.
+pub type RunOrderFn = fn(&DataMatrix, &Config) -> Result<OrderResult>;
+
+/// Which of the two engine kinds a registry row is.
+pub enum FamilyKind {
+    /// Runs through the PC pipeline (`skeleton::run` + orientation);
+    /// the implementation columns live in `skeleton::family`.
+    Pc,
+    /// Runs through the [`CausalOrder`] driver; the row carries its
+    /// whole-run function directly.
+    Order(RunOrderFn),
+}
+
+/// One registered engine family (either kind).
+pub struct EngineFamily {
+    pub id: FamilyId,
+    /// Canonical CLI/report spelling.
+    pub name: &'static str,
+    /// Accepted parse spellings (lowercase; include `name`).
+    pub aliases: &'static [&'static str],
+    /// Stable tag for content hashing — cache keys depend on it, so a
+    /// tag is **never renumbered or reused**; new families append.
+    pub tag: u8,
+    pub kind: FamilyKind,
+}
+
+/// Every engine family, in tag order: the seven PC families (tags 0..6,
+/// identical spellings to the pre-split `skeleton::family` registry so
+/// no manifest, cache key, or report line moved), then the causal-order
+/// families appended after them.
+pub const FAMILIES: &[EngineFamily] = &[
+    EngineFamily {
+        id: FamilyId::Pc(Variant::Serial),
+        name: "serial",
+        aliases: &["serial", "stable", "stable.fast"],
+        tag: 0,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::ParallelCpu),
+        name: "parcpu",
+        aliases: &["parcpu", "parallel-cpu", "parallel-pc"],
+        tag: 1,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::CupcE),
+        name: "cupc-e",
+        aliases: &["cupe", "cupc-e", "e"],
+        tag: 2,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::CupcS),
+        name: "cupc-s",
+        aliases: &["cups", "cupc-s", "s"],
+        tag: 3,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::Baseline1),
+        name: "baseline1",
+        aliases: &["baseline1", "b1"],
+        tag: 4,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::Baseline2),
+        name: "baseline2",
+        aliases: &["baseline2", "b2"],
+        tag: 5,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Pc(Variant::Reversed),
+        name: "reversed",
+        aliases: &["reversed", "reversed-order", "rop"],
+        tag: 6,
+        kind: FamilyKind::Pc,
+    },
+    EngineFamily {
+        id: FamilyId::Lingam,
+        name: "lingam",
+        aliases: &["lingam", "paralingam", "direct-lingam"],
+        tag: 7,
+        kind: FamilyKind::Order(crate::lingam::run),
+    },
+];
+
+/// The registry row for a family id. Every constructible `FamilyId`
+/// has exactly one row (enforced by `registry_covers_every_id`), so
+/// this never panics on a constructed id.
+pub fn of(id: FamilyId) -> &'static EngineFamily {
+    FAMILIES
+        .iter()
+        .find(|f| f.id == id)
+        .unwrap_or_else(|| panic!("family {id:?} is not registered in family::FAMILIES"))
+}
+
+/// Resolve a cache/wire tag back to its family, if any.
+pub fn by_tag(tag: u8) -> Option<&'static EngineFamily> {
+    FAMILIES.iter().find(|f| f.tag == tag)
+}
+
+/// Parse a CLI/manifest spelling (case-insensitive) against every
+/// family's alias list, across both kinds.
+pub fn parse(s: &str) -> Option<FamilyId> {
+    let lower = s.to_ascii_lowercase();
+    FAMILIES
+        .iter()
+        .find(|f| f.aliases.contains(&lower.as_str()))
+        .map(|f| f.id)
+}
+
+/// One causal-order strategy under the generic [`run_order`] driver —
+/// the counterpart of `RoundSchedule` for the second engine kind.
+///
+/// The driver owns the round loop; the strategy owns the data. The
+/// split mirrors the PC seam: measure sweeps are batched through
+/// [`Executor::run_weighted`] so each pairwise statistic is computed
+/// wholly inside one task (exactly once, any shard split), and the
+/// driver reduces the concatenated shard results serially in canonical
+/// pair order — bit-identical for any thread count.
+pub trait CausalOrder: Sync {
+    /// Short name for progress lines.
+    fn label(&self) -> &'static str;
+    /// Sample count (the per-pair work weight).
+    fn samples(&self) -> usize;
+    /// Variables not yet placed in the order, ascending.
+    fn active(&self) -> &[usize];
+    /// The pairwise root-decision statistic D(a, b) for two active
+    /// variables, `a < b`: positive iff `a` is the more plausible
+    /// cause. Must be pure (called concurrently across workers).
+    fn measure(&self, a: usize, b: usize) -> f64;
+    /// Commit `root` as the next element of the causal order and
+    /// residualize the remaining active variables against it.
+    fn eliminate(&mut self, root: usize);
+    /// Regress every variable on its order predecessors and keep the
+    /// significant coefficients: the final DAG as `(parent, child,
+    /// weight)` rows, in canonical (child-position, parent-position)
+    /// order.
+    fn prune(&self, order: &[usize], exec: &mut Executor<'_>) -> Result<Vec<(usize, usize, f64)>>;
+}
+
+/// Drive a [`CausalOrder`] strategy to a full [`OrderResult`]:
+/// root-finding rounds (one per order position), then regression
+/// pruning. Per-round stats reuse [`LevelStats`] with `level` = round,
+/// `tests` = pairwise measures evaluated, `removed` = 1 (the chosen
+/// root leaves the active set), `edges_after` = variables still
+/// active — so the service report and stats layers need no new row
+/// type.
+///
+/// Between rounds the executor re-leases through `cfg.width_hook`
+/// exactly like the PC level loop, so elastic batch scheduling covers
+/// causal-order jobs with zero scheduler changes.
+pub fn run_order(strategy: &mut dyn CausalOrder, cfg: &Config) -> Result<OrderResult> {
+    let total = Timer::start();
+    let m = strategy.samples();
+    let mut exec = Executor::pool_with(cfg.threads.max(1), cfg.kernel);
+    let mut order: Vec<usize> = Vec::new();
+    let mut rounds: Vec<LevelStats> = Vec::new();
+    let mut round = 0usize;
+    loop {
+        let active: Vec<usize> = strategy.active().to_vec();
+        if active.len() <= 1 {
+            break;
+        }
+        if round > 0 {
+            if let Some(hook) = &cfg.width_hook {
+                exec.set_width(hook.0.width_for_level(round));
+            }
+        }
+        let t = Timer::start();
+        let k = active.len();
+        let mut pairs: Vec<(usize, usize)> = Vec::with_capacity(k * (k - 1) / 2);
+        for ai in 0..k {
+            for bi in ai + 1..k {
+                pairs.push((ai, bi));
+            }
+        }
+        // every pair is one atomic task of weight m; run_weighted
+        // assigns it to exactly one shard and returns shard results in
+        // canonical order
+        let weights = vec![m as u64; pairs.len()];
+        let sref: &dyn CausalOrder = &*strategy;
+        let shard_results = exec.run_weighted(&weights, |ids, _engine| {
+            let mut out = Vec::with_capacity(ids.len());
+            for &id in ids {
+                let (ai, bi) = pairs[id];
+                out.push((id, sref.measure(active[ai], active[bi])));
+            }
+            Ok(out)
+        })?;
+        // serial reduction in canonical pair order: the score sums see
+        // the same addends in the same order for any width
+        let mut scores = vec![0.0f64; k];
+        for (id, d) in shard_results.into_iter().flatten() {
+            let (ai, bi) = pairs[id];
+            let da = d.min(0.0);
+            scores[ai] += da * da;
+            let db = (-d).min(0.0);
+            scores[bi] += db * db;
+        }
+        // argmin with smallest-index tie-break (strict < keeps the
+        // earliest minimum)
+        let mut best = 0usize;
+        for (i, &s) in scores.iter().enumerate().skip(1) {
+            if s < scores[best] {
+                best = i;
+            }
+        }
+        let root = active[best];
+        order.push(root);
+        strategy.eliminate(root);
+        rounds.push(LevelStats {
+            level: round,
+            tests: pairs.len() as u64,
+            removed: 1,
+            edges_after: k - 1,
+            seconds: t.elapsed_s(),
+        });
+        round += 1;
+    }
+    if let Some(&last) = strategy.active().first() {
+        order.push(last);
+    }
+    if let Some(hook) = &cfg.width_hook {
+        // pruning is "the round after the last", like orientation
+        exec.set_width(hook.0.width_for_level(round));
+    }
+    let edges = strategy.prune(&order, &mut exec)?;
+    Ok(OrderResult {
+        order,
+        edges,
+        rounds,
+        seconds: total.elapsed_s(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::service::job::{variant_name, variant_tag};
+
+    const ALL_IDS: [FamilyId; 8] = [
+        FamilyId::Pc(Variant::Serial),
+        FamilyId::Pc(Variant::ParallelCpu),
+        FamilyId::Pc(Variant::CupcE),
+        FamilyId::Pc(Variant::CupcS),
+        FamilyId::Pc(Variant::Baseline1),
+        FamilyId::Pc(Variant::Baseline2),
+        FamilyId::Pc(Variant::Reversed),
+        FamilyId::Lingam,
+    ];
+
+    #[test]
+    fn registry_covers_every_id() {
+        // `of` panics if an id is missing; enumerate them all so adding
+        // an enum arm without a registry row fails here.
+        for id in ALL_IDS {
+            assert_eq!(of(id).id, id);
+        }
+        assert_eq!(FAMILIES.len(), ALL_IDS.len());
+    }
+
+    #[test]
+    fn names_aliases_and_tags_are_globally_unique() {
+        let mut names: Vec<&str> = FAMILIES.iter().map(|f| f.name).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), FAMILIES.len(), "duplicate canonical name");
+
+        let mut aliases: Vec<&str> = FAMILIES
+            .iter()
+            .flat_map(|f| f.aliases.iter().copied())
+            .collect();
+        let n_aliases = aliases.len();
+        aliases.sort_unstable();
+        aliases.dedup();
+        assert_eq!(aliases.len(), n_aliases, "an alias maps to two families");
+
+        let mut tags: Vec<u8> = FAMILIES.iter().map(|f| f.tag).collect();
+        tags.sort_unstable();
+        tags.dedup();
+        assert_eq!(tags.len(), FAMILIES.len(), "duplicate cache-key tag");
+    }
+
+    /// Cache keys and shard plans depend on these exact numbers: the PC
+    /// tags 0..6 and their spellings are pinned forever, and every new
+    /// family appends (lingam = 7).
+    #[test]
+    fn tags_and_names_are_pinned() {
+        for (id, tag, name) in [
+            (FamilyId::Pc(Variant::Serial), 0, "serial"),
+            (FamilyId::Pc(Variant::ParallelCpu), 1, "parcpu"),
+            (FamilyId::Pc(Variant::CupcE), 2, "cupc-e"),
+            (FamilyId::Pc(Variant::CupcS), 3, "cupc-s"),
+            (FamilyId::Pc(Variant::Baseline1), 4, "baseline1"),
+            (FamilyId::Pc(Variant::Baseline2), 5, "baseline2"),
+            (FamilyId::Pc(Variant::Reversed), 6, "reversed"),
+            (FamilyId::Lingam, 7, "lingam"),
+        ] {
+            let f = of(id);
+            assert_eq!(f.tag, tag, "{name}");
+            assert_eq!(f.name, name);
+            assert_eq!(by_tag(tag).map(|f| f.id), Some(id));
+        }
+    }
+
+    /// `Variant::parse` and `variant_tag` round-trip through the new
+    /// registry for every entry: PC rows resolve to their variant with
+    /// the registry's tag and name; causal-order rows resolve here but
+    /// deliberately not through `Variant::parse`.
+    #[test]
+    fn variant_parse_and_tag_roundtrip_through_the_registry() {
+        for f in FAMILIES {
+            assert_eq!(parse(f.name), Some(f.id), "{}", f.name);
+            assert_eq!(parse(&f.name.to_ascii_uppercase()), Some(f.id));
+            for a in f.aliases {
+                assert_eq!(parse(a), Some(f.id), "alias {a}");
+            }
+            assert!(f.aliases.contains(&f.name), "{}: name must parse", f.name);
+            match f.id.variant() {
+                Some(v) => {
+                    assert_eq!(Variant::parse(f.name), Some(v));
+                    assert_eq!(variant_tag(v), f.tag);
+                    assert_eq!(variant_name(v), f.name);
+                }
+                None => {
+                    for a in f.aliases {
+                        assert_eq!(Variant::parse(a), None, "{a} must not be a PC variant");
+                    }
+                }
+            }
+        }
+        assert_eq!(parse("nope"), None);
+    }
+
+    #[test]
+    fn aliases_are_lowercase() {
+        for f in FAMILIES {
+            for a in f.aliases {
+                assert_eq!(*a, a.to_ascii_lowercase(), "{}: alias {a:?}", f.name);
+            }
+        }
+    }
+
+    /// The PC rows here and the implementation rows in
+    /// `skeleton::family` stay in lockstep: same variants, same order.
+    #[test]
+    fn pc_rows_mirror_the_skeleton_registry() {
+        let pc: Vec<Variant> = FAMILIES.iter().filter_map(|f| f.id.variant()).collect();
+        let skel: Vec<Variant> = crate::skeleton::family::FAMILIES
+            .iter()
+            .map(|f| f.variant)
+            .collect();
+        assert_eq!(pc, skel);
+        for f in FAMILIES {
+            match (&f.kind, f.id.variant()) {
+                (FamilyKind::Pc, Some(_)) | (FamilyKind::Order(_), None) => {}
+                _ => panic!("{}: kind / id mismatch", f.name),
+            }
+        }
+    }
+}

@@ -19,11 +19,18 @@
 //! correlation kinds — go through the [`service`] batch layer
 //! (`cupc batch`), which schedules jobs under one thread budget and
 //! caches correlation matrices and results content-addressed.
+//!
+//! The same execution frame hosts more than CI-test PC: the [`family`]
+//! registry holds every engine family across two kinds — PC round
+//! schedules and causal-order engines ([`lingam`], ParaLiNGAM) — and
+//! the service, CLI, and cache layers dispatch on it uniformly.
 
 pub mod api;
 pub mod data;
 pub mod experiments;
+pub mod family;
 pub mod graph;
+pub mod lingam;
 pub mod metrics;
 pub mod oocore;
 pub mod orient;
@@ -36,7 +43,8 @@ pub mod util;
 
 pub mod prelude {
     //! Convenient re-exports for downstream users.
-    pub use crate::api::{pc_stable_corr, pc_stable_data, PcResult};
+    pub use crate::api::{pc_stable_corr, pc_stable_data, EngineResult, OrderResult, PcResult};
+    pub use crate::family::FamilyId;
     pub use crate::graph::adj::AdjMatrix;
     pub use crate::graph::cpdag::Cpdag;
     pub use crate::skeleton::{Config, EngineKind, Variant};

@@ -1,0 +1,137 @@
+//! The DirectLiNGAM pairwise root-decision measure and its
+//! maximum-entropy approximation (Hyvärinen 1998), exactly as
+//! `tools/lingam_oracle.py` mirrors them.
+//!
+//! Everything here is f64 and sequentially summed in sample order: each
+//! D(i, j) is computed wholly inside one executor task, so the only
+//! reproducibility requirement is that a *single* evaluation is
+//! deterministic — which sequential f64 arithmetic gives for free on
+//! any thread count and either CI kernel (the kernel is a PC-engine
+//! knob; this module never touches it). See docs/NUMERICS.md.
+
+/// Hyvärinen's maximum-entropy approximation constants — the same
+/// values the reference DirectLiNGAM implementation uses.
+pub const K1: f64 = 79.047;
+pub const K2: f64 = 7.4129;
+pub const GAMMA: f64 = 0.37457;
+
+/// Differential entropy of a standard Gaussian, `(1 + ln 2π) / 2`.
+pub fn h_nu() -> f64 {
+    (1.0 + (2.0 * std::f64::consts::PI).ln()) / 2.0
+}
+
+/// Coefficient-magnitude gate for the pruning regressions: keep an edge
+/// iff `|b| > PRUNE_THRESHOLD` on standardized data.
+pub const PRUNE_THRESHOLD: f64 = 0.05;
+
+/// Standardize one column to zero mean / unit variance (population
+/// denominator `1/m`). A (near-)constant column (`sd <= 1e-12`)
+/// standardizes to all-zeros, mirroring `stats::corr` and the oracle.
+pub fn standardize(col: &[f64]) -> Vec<f64> {
+    let m = col.len();
+    let mut mean = 0.0;
+    for &x in col {
+        mean += x;
+    }
+    mean /= m as f64;
+    let mut var = 0.0;
+    for &x in col {
+        let d = x - mean;
+        var += d * d;
+    }
+    let sd = (var / m as f64).sqrt();
+    if sd <= 1e-12 {
+        return vec![0.0; m];
+    }
+    col.iter().map(|&x| (x - mean) / sd).collect()
+}
+
+/// Ĥ(u): the maximum-entropy approximation of differential entropy for
+/// an (approximately) standardized sample.
+pub fn entropy(u: &[f64]) -> f64 {
+    let m = u.len() as f64;
+    let mut lc = 0.0;
+    let mut ue = 0.0;
+    for &x in u {
+        lc += x.cosh().ln();
+        ue += x * (-(x * x) / 2.0).exp();
+    }
+    lc /= m;
+    ue /= m;
+    h_nu() - K1 * (lc - GAMMA) * (lc - GAMMA) - K2 * ue * ue
+}
+
+/// D(i, j) for two standardized columns: positive iff `i` is the more
+/// plausible cause of `j`. Antisymmetric by construction — the driver
+/// evaluates each unordered pair once and negates for the other side.
+pub fn measure(xi: &[f64], xj: &[f64]) -> f64 {
+    let m = xi.len();
+    debug_assert_eq!(m, xj.len());
+    let mut c = 0.0;
+    for (a, b) in xi.iter().zip(xj) {
+        c += a * b;
+    }
+    c /= m as f64;
+    let s2 = (1.0 - c * c).max(1e-12);
+    let s = s2.sqrt();
+    let mut ri_j = Vec::with_capacity(m);
+    let mut rj_i = Vec::with_capacity(m);
+    for (a, b) in xi.iter().zip(xj) {
+        ri_j.push((a - c * b) / s);
+        rj_i.push((b - c * a) / s);
+    }
+    (entropy(xj) + entropy(&ri_j)) - (entropy(xi) + entropy(&rj_i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn standardize_gives_zero_mean_unit_variance() {
+        let mut rng = Pcg::seeded(7);
+        let col: Vec<f64> = (0..500).map(|_| 3.0 + 2.5 * rng.normal()).collect();
+        let z = standardize(&col);
+        let m = z.len() as f64;
+        let mean: f64 = z.iter().sum::<f64>() / m;
+        let var: f64 = z.iter().map(|x| x * x).sum::<f64>() / m;
+        assert!(mean.abs() < 1e-12, "mean {mean}");
+        assert!((var - 1.0).abs() < 1e-12, "var {var}");
+    }
+
+    #[test]
+    fn constant_column_standardizes_to_zeros() {
+        assert!(standardize(&[4.2; 64]).iter().all(|&x| x == 0.0));
+    }
+
+    /// A standard Gaussian sample should sit near the entropy ceiling
+    /// H_NU; a uniform sample (lower entropy at unit variance) clearly
+    /// below it. The measure only uses differences, but the absolute
+    /// anchoring catches sign/constant mistakes.
+    #[test]
+    fn entropy_ranks_gaussian_above_uniform() {
+        let mut rng = Pcg::seeded(11);
+        let g: Vec<f64> = (0..20000).map(|_| rng.normal()).collect();
+        let s = 3f64.sqrt();
+        let u: Vec<f64> = (0..20000).map(|_| rng.uniform_in(-s, s)).collect();
+        let hg = entropy(&standardize(&g));
+        let hu = entropy(&standardize(&u));
+        assert!((hg - h_nu()).abs() < 0.01, "gaussian {hg} vs {}", h_nu());
+        assert!(hg > hu + 0.05, "gaussian {hg} <= uniform {hu}");
+    }
+
+    /// On x → y with uniform noise, D(x, y) must be positive (x is the
+    /// cause) and exactly antisymmetric as the driver assumes.
+    #[test]
+    fn measure_points_from_cause_to_effect() {
+        let mut rng = Pcg::seeded(13);
+        let s = 3f64.sqrt();
+        let x: Vec<f64> = (0..8000).map(|_| rng.uniform_in(-s, s)).collect();
+        let y: Vec<f64> = x.iter().map(|&v| 0.8 * v + rng.uniform_in(-s, s)).collect();
+        let zx = standardize(&x);
+        let zy = standardize(&y);
+        let d = measure(&zx, &zy);
+        assert!(d > 1e-4, "cause score {d}");
+    }
+}

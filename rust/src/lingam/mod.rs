@@ -1,0 +1,334 @@
+//! ParaLiNGAM: parallel DirectLiNGAM for linear non-Gaussian acyclic
+//! models (Shahbazinia, Salehkaleybar & Hashemi, arxiv 2109.13993) —
+//! the first causal-order engine family behind the two-kind registry
+//! ([`crate::family`]).
+//!
+//! DirectLiNGAM finds a causal *order* by repeatedly electing a root:
+//! in each round, every active pair (i, j) contributes the pairwise
+//! likelihood-ratio measure D(i, j) ([`measure`]); the variable whose
+//! score `Σ_j min(0, D)²` is smallest is appended to the order and the
+//! remaining variables are residualized against it. A final pass
+//! regresses each variable on its order predecessors (original
+//! standardized data) and keeps coefficients above
+//! [`measure::PRUNE_THRESHOLD`], yielding a DAG rather than a CPDAG —
+//! no orientation phase, no sepsets, no correlation matrix.
+//!
+//! ParaLiNGAM's contribution is batching the O(k²) measure sweep of
+//! each round across workers; here that is [`Executor::run_weighted`]
+//! with one atomic task per pair, which the generic
+//! [`crate::family::run_order`] driver reduces serially in canonical
+//! order — bit-identical for any thread count, either CI kernel
+//! (unused by this family), and warm or cold cache.
+//!
+//! All quantities are f64 end to end; `tools/lingam_oracle.py` mirrors
+//! this module draw for draw and gates the shipped grid points on
+//! decision margins (root-score gaps, pruning-coefficient distance
+//! from the threshold) that dwarf any cross-implementation
+//! summation-order deltas.
+
+pub mod measure;
+
+use crate::api::OrderResult;
+use crate::family::CausalOrder;
+use crate::skeleton::pipeline::Executor;
+use crate::skeleton::Config;
+use crate::stats::corr::DataMatrix;
+use anyhow::{ensure, Result};
+use measure::{standardize, PRUNE_THRESHOLD};
+
+/// Sequential dot product (canonical sample order — the bitwise
+/// contract depends on every sum being evaluated in one fixed order).
+fn dot(x: &[f64], y: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for (a, b) in x.iter().zip(y) {
+        s += a * b;
+    }
+    s
+}
+
+/// Solve the k×k system `a · w = b` by Gaussian elimination with
+/// partial pivoting (row-major `a`, overwritten). The normal equations
+/// of the pruning regressions are tiny (k < n), so a dense direct
+/// solve is exact enough — the oracle certifies every shipped grid
+/// point's coefficients sit ≥ 0.01 from the pruning gate, 10 orders
+/// of magnitude above solver-vs-LAPACK deltas.
+fn solve(a: &mut [f64], b: &mut [f64], k: usize) -> Result<Vec<f64>> {
+    for col in 0..k {
+        let mut piv = col;
+        for row in col + 1..k {
+            if a[row * k + col].abs() > a[piv * k + col].abs() {
+                piv = row;
+            }
+        }
+        ensure!(
+            a[piv * k + col].abs() > 1e-12,
+            "singular normal equations at column {col} (collinear predecessors)"
+        );
+        if piv != col {
+            for cc in 0..k {
+                a.swap(piv * k + cc, col * k + cc);
+            }
+            b.swap(piv, col);
+        }
+        for row in col + 1..k {
+            let f = a[row * k + col] / a[col * k + col];
+            if f == 0.0 {
+                continue;
+            }
+            for cc in col..k {
+                a[row * k + cc] -= f * a[col * k + cc];
+            }
+            b[row] -= f * b[col];
+        }
+    }
+    let mut x = vec![0.0; k];
+    for row in (0..k).rev() {
+        let mut s = b[row];
+        for cc in row + 1..k {
+            s -= a[row * k + cc] * x[cc];
+        }
+        x[row] = s / a[row * k + row];
+    }
+    Ok(x)
+}
+
+/// The ParaLiNGAM strategy: standardized data columns, residualized in
+/// place between rounds, plus the frozen originals for pruning.
+pub struct ParaLingam {
+    m: usize,
+    /// Working columns — residualized against each elected root.
+    cols: Vec<Vec<f64>>,
+    /// Frozen standardized originals, for the pruning regressions.
+    original: Vec<Vec<f64>>,
+    /// Variables not yet placed, ascending.
+    active: Vec<usize>,
+}
+
+impl ParaLingam {
+    pub fn new(data: &DataMatrix) -> ParaLingam {
+        let (m, n) = (data.m, data.n);
+        let mut cols = Vec::with_capacity(n);
+        for v in 0..n {
+            let raw: Vec<f64> = (0..m).map(|s| data.at(s, v)).collect();
+            cols.push(standardize(&raw));
+        }
+        ParaLingam {
+            m,
+            original: cols.clone(),
+            cols,
+            active: (0..n).collect(),
+        }
+    }
+
+    /// OLS of `order[p]` on `order[..p]` over the original standardized
+    /// data; returns the kept `(parent, child, weight)` rows in
+    /// predecessor order.
+    fn regress_position(&self, order: &[usize], p: usize) -> Result<Vec<(usize, usize, f64)>> {
+        let child = order[p];
+        let preds = &order[..p];
+        let k = preds.len();
+        let mut a = vec![0.0; k * k];
+        let mut b = vec![0.0; k];
+        for (q, &pq) in preds.iter().enumerate() {
+            for (r, &pr) in preds.iter().enumerate() {
+                a[q * k + r] = dot(&self.original[pq], &self.original[pr]) / self.m as f64;
+            }
+            b[q] = dot(&self.original[pq], &self.original[child]) / self.m as f64;
+        }
+        let w = solve(&mut a, &mut b, k)?;
+        let mut out = Vec::new();
+        for (q, &parent) in preds.iter().enumerate() {
+            if w[q].abs() > PRUNE_THRESHOLD {
+                out.push((parent, child, w[q]));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl CausalOrder for ParaLingam {
+    fn label(&self) -> &'static str {
+        "paralingam"
+    }
+
+    fn samples(&self) -> usize {
+        self.m
+    }
+
+    fn active(&self) -> &[usize] {
+        &self.active
+    }
+
+    fn measure(&self, a: usize, b: usize) -> f64 {
+        measure::measure(&self.cols[a], &self.cols[b])
+    }
+
+    fn eliminate(&mut self, root: usize) {
+        let root_col = self.cols[root].clone();
+        let m = self.m as f64;
+        for &v in &self.active {
+            if v == root {
+                continue;
+            }
+            let c = dot(&self.cols[v], &root_col) / m;
+            let resid: Vec<f64> = self.cols[v]
+                .iter()
+                .zip(&root_col)
+                .map(|(x, r)| x - c * r)
+                .collect();
+            self.cols[v] = standardize(&resid);
+        }
+        self.active.retain(|&v| v != root);
+    }
+
+    fn prune(&self, order: &[usize], exec: &mut Executor<'_>) -> Result<Vec<(usize, usize, f64)>> {
+        if order.len() < 2 {
+            return Ok(Vec::new());
+        }
+        // task id t regresses order position t+1; weight ≈ the normal
+        // equations' gram cost so shards balance on the real work
+        let weights: Vec<u64> = (1..order.len())
+            .map(|p| (p * p * self.m).max(1) as u64)
+            .collect();
+        let shard_results = exec.run_weighted(&weights, |ids, _engine| {
+            let mut out = Vec::new();
+            for &id in ids {
+                out.extend(self.regress_position(order, id + 1)?);
+            }
+            Ok(out)
+        })?;
+        // canonical concatenation: child positions ascending, parents
+        // in predecessor order within each child
+        Ok(shard_results.into_iter().flatten().collect())
+    }
+}
+
+/// Whole-run entry point registered as the `lingam` family (tag 7):
+/// data in, causal order + pruned DAG out, through the generic
+/// [`crate::family::run_order`] driver.
+pub fn run(data: &DataMatrix, cfg: &Config) -> Result<OrderResult> {
+    let mut strategy = ParaLingam::new(data);
+    crate::family::run_order(&mut strategy, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    /// x0 → x1 → x2 with uniform noise: DirectLiNGAM must recover the
+    /// chain order and exactly the two true edges.
+    fn chain_data(m: usize, seed: u64) -> DataMatrix {
+        let mut rng = Pcg::seeded(seed);
+        let s = 3f64.sqrt();
+        let mut x = vec![0.0; m * 3];
+        for row in 0..m {
+            let x0 = rng.uniform_in(-s, s);
+            let x1 = 0.8 * x0 + rng.uniform_in(-s, s);
+            let x2 = 0.7 * x1 + rng.uniform_in(-s, s);
+            x[row * 3] = x0;
+            x[row * 3 + 1] = x1;
+            x[row * 3 + 2] = x2;
+        }
+        DataMatrix::new(x, m, 3)
+    }
+
+    #[test]
+    fn recovers_a_chain_and_its_edges() {
+        let data = chain_data(4000, 21);
+        let cfg = Config {
+            threads: 2,
+            ..Config::default()
+        };
+        let res = run(&data, &cfg).unwrap();
+        assert_eq!(res.order, vec![0, 1, 2]);
+        let got: Vec<(usize, usize)> = res.edges.iter().map(|&(a, b, _)| (a, b)).collect();
+        assert_eq!(got, vec![(0, 1), (1, 2)]);
+        for &(_, _, w) in &res.edges {
+            assert!(w > 0.5, "edge weight {w} implausibly small");
+        }
+        // two elimination rounds for three variables, each electing one
+        assert_eq!(res.rounds.len(), 2);
+        assert_eq!(res.rounds[0].tests, 3);
+        assert_eq!(res.rounds[0].removed, 1);
+        assert_eq!(res.rounds[1].tests, 1);
+    }
+
+    /// The bitwise contract inside one process: order, edges (weights
+    /// included, bit for bit), and per-round stats must not depend on
+    /// the worker count.
+    #[test]
+    fn results_are_bit_identical_across_thread_counts() {
+        let data = chain_data(2000, 22);
+        let base = run(
+            &data,
+            &Config {
+                threads: 1,
+                ..Config::default()
+            },
+        )
+        .unwrap();
+        for threads in [2, 4, 7] {
+            let res = run(
+                &data,
+                &Config {
+                    threads,
+                    ..Config::default()
+                },
+            )
+            .unwrap();
+            assert_eq!(res.order, base.order, "threads={threads}");
+            assert_eq!(res.edges.len(), base.edges.len());
+            for (a, b) in res.edges.iter().zip(&base.edges) {
+                assert_eq!(a.0, b.0);
+                assert_eq!(a.1, b.1);
+                assert_eq!(a.2.to_bits(), b.2.to_bits(), "threads={threads}");
+            }
+            let stats: Vec<(usize, u64, usize, usize)> = res
+                .rounds
+                .iter()
+                .map(|l| (l.level, l.tests, l.removed, l.edges_after))
+                .collect();
+            let want: Vec<(usize, u64, usize, usize)> = base
+                .rounds
+                .iter()
+                .map(|l| (l.level, l.tests, l.removed, l.edges_after))
+                .collect();
+            assert_eq!(stats, want, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_yield_empty_results() {
+        let cfg = Config::default();
+        let one = run(&DataMatrix::new(vec![1.0, 2.0, 3.0], 3, 1), &cfg).unwrap();
+        assert_eq!(one.order, vec![0]);
+        assert!(one.edges.is_empty());
+        assert!(one.rounds.is_empty());
+
+        let none = run(&DataMatrix::new(vec![], 0, 0), &cfg).unwrap();
+        assert!(none.order.is_empty());
+        assert!(none.edges.is_empty());
+    }
+
+    #[test]
+    fn singular_regressions_error_instead_of_panicking() {
+        // x1 is an exact copy of x0: the pruning normal equations for
+        // x2 on {x0, x1} are singular
+        let mut rng = Pcg::seeded(5);
+        let m = 512;
+        let mut x = vec![0.0; m * 3];
+        for row in 0..m {
+            let v = rng.uniform_in(-1.0, 1.0);
+            x[row * 3] = v;
+            x[row * 3 + 1] = v;
+            x[row * 3 + 2] = v + 0.3 * rng.uniform_in(-1.0, 1.0);
+        }
+        let data = DataMatrix::new(x, m, 3);
+        let err = run(&data, &Config::default());
+        assert!(
+            err.is_err(),
+            "collinear duplicate columns must surface as an error"
+        );
+    }
+}

@@ -154,11 +154,9 @@ impl ShardPlan {
         ensure!(b.len() == WANT, "plan payload is {} bytes, want {WANT}", b.len());
         let u64_at = |at: usize| u64::from_le_bytes(b[at..at + 8].try_into().unwrap());
         let u32_at = |at: usize| u32::from_le_bytes(b[at..at + 4].try_into().unwrap());
-        let variant = family::FAMILIES
-            .iter()
-            .find(|f| f.tag == b[49])
-            .map(|f| f.variant)
-            .with_context(|| format!("unknown variant tag {}", b[49]))?;
+        let variant = crate::family::by_tag(b[49])
+            .and_then(|f| f.id.variant())
+            .with_context(|| format!("tag {} is not a shardable PC variant", b[49]))?;
         let orient = match b[50] {
             0 => OrientRule::Standard,
             1 => OrientRule::Majority,

@@ -14,8 +14,8 @@
 //! loses nothing: every representable graph state is a subset of the
 //! construction edges, exactly like the dense matrix starting complete.
 //!
-//! [`Adj`] is the dispatch seam the level-loop driver holds: all seven
-//! schedule families read adjacency through it (`has_edge` is the only
+//! [`Adj`] is the dispatch seam the level-loop driver holds: every PC
+//! schedule family reads adjacency through it (`has_edge` is the only
 //! read on the hot path), so they run on either representation
 //! unchanged. Parity with [`AdjMatrix`] — identical neighbor iteration
 //! order, degrees, snapshot contents, and `should_continue` decisions

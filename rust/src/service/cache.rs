@@ -30,7 +30,8 @@
 //! disk, then recomputes — populating both tiers on the way out.
 
 use super::report::JobResultCore;
-use crate::skeleton::{OrientRule, Variant};
+use crate::family::FamilyId;
+use crate::skeleton::OrientRule;
 use crate::stats::corr::{CorrKind, DataMatrix};
 use std::collections::{HashMap, HashSet};
 use std::sync::{Arc, Condvar, Mutex};
@@ -119,15 +120,21 @@ pub fn data_key(data: &DataMatrix, kind: CorrKind) -> Key {
     h.finish()
 }
 
-/// Key for the result layer: correlation bytes + shape + run parameters.
+/// Key for the result layer: input bytes + shape + run parameters.
+///
+/// `input` is the family's actual numeric input — the correlation
+/// matrix for PC families, the raw data columns for causal-order
+/// families (which never compute a correlation matrix). The family tag
+/// (registry `tag`, unique across both kinds) keys them apart even if
+/// the byte streams collided.
 #[allow(clippy::too_many_arguments)] // a key is its full parameter list
 pub fn result_key(
-    corr: &[f64],
+    input: &[f64],
     n: usize,
     m: usize,
     alpha: f64,
     max_level: Option<usize>,
-    variant: Variant,
+    family: FamilyId,
     orient: OrientRule,
 ) -> Key {
     let mut h = ContentHasher::new();
@@ -135,9 +142,9 @@ pub fn result_key(
     h.write_u64(m as u64);
     h.write_f64s(&[alpha]);
     h.write_u64(max_level.map(|l| l as u64).unwrap_or(u64::MAX));
-    h.write_u8(super::job::variant_tag(variant));
+    h.write_u8(super::job::family_tag(family));
     h.write_u8(super::job::orient_tag(orient));
-    h.write_f64s(corr);
+    h.write_f64s(input);
     h.finish()
 }
 
@@ -341,6 +348,7 @@ impl Cache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::skeleton::Variant;
 
     fn toy_data(seed: u64) -> DataMatrix {
         use crate::util::rng::Pcg;
@@ -385,22 +393,19 @@ mod tests {
 
     #[test]
     fn result_keys_separate_run_parameters() {
+        let cups = FamilyId::Pc(Variant::CupcS);
+        let cupe = FamilyId::Pc(Variant::CupcE);
         let corr = vec![1.0, 0.5, 0.5, 1.0];
-        let base = result_key(
-            &corr,
-            2,
-            100,
-            0.01,
-            None,
-            Variant::CupcS,
-            OrientRule::Standard,
-        );
+        let base = result_key(&corr, 2, 100, 0.01, None, cups, OrientRule::Standard);
         for other in [
-            result_key(&corr, 2, 100, 0.05, None, Variant::CupcS, OrientRule::Standard),
-            result_key(&corr, 2, 100, 0.01, Some(2), Variant::CupcS, OrientRule::Standard),
-            result_key(&corr, 2, 100, 0.01, None, Variant::CupcE, OrientRule::Standard),
-            result_key(&corr, 2, 100, 0.01, None, Variant::CupcS, OrientRule::Majority),
-            result_key(&corr, 2, 200, 0.01, None, Variant::CupcS, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.05, None, cups, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, Some(2), cups, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, None, cupe, OrientRule::Standard),
+            result_key(&corr, 2, 100, 0.01, None, cups, OrientRule::Majority),
+            result_key(&corr, 2, 200, 0.01, None, cups, OrientRule::Standard),
+            // the two engine kinds can never share a result entry,
+            // even over identical input bytes
+            result_key(&corr, 2, 100, 0.01, None, FamilyId::Lingam, OrientRule::Standard),
         ] {
             assert_ne!(base, other);
         }
@@ -518,6 +523,7 @@ mod tests {
             skeleton_edges: vec![(0, 1)],
             directed: vec![],
             undirected: vec![(0, 1)],
+            order: vec![],
         });
         cache.put_result((8, 8), core.clone());
         assert_eq!(cache.get_result((8, 8)).as_deref(), Some(&*core));

@@ -2,9 +2,13 @@
 //!
 //! A [`JobSpec`] names a data source — a CSV file, a registered
 //! [`crate::sim::datasets`] entry, or a [`crate::sim::scenarios`] grid
-//! point — plus the run parameters (schedule variant, alpha, level cap,
-//! correlation kind, orientation rule). A [`Manifest`] is an ordered
-//! list of jobs parsed from JSON (`cupc batch --manifest jobs.json`):
+//! point — plus the run parameters (engine family, alpha, level cap,
+//! correlation kind, orientation rule). The `variant` key resolves
+//! through the top-level [`crate::family`] registry, so a manifest can
+//! mix both engine kinds — CI-test PC schedules and causal-order
+//! engines (`"variant": "lingam"`) — with no other changes. A
+//! [`Manifest`] is an ordered list of jobs parsed from JSON
+//! (`cupc batch --manifest jobs.json`):
 //!
 //! ```json
 //! {"jobs": [
@@ -24,6 +28,7 @@
 //! scenario names are validated at parse time so a typo fails before
 //! any job runs.
 
+use crate::family::FamilyId;
 use crate::sim::{datasets, scenarios};
 use crate::skeleton::{Config, OrientRule, Variant};
 use crate::stats::corr::CorrKind;
@@ -53,19 +58,23 @@ impl DataSource {
     }
 }
 
-/// One PC run: data source + run parameters.
+/// One engine run: data source + run parameters.
 ///
-/// Determinism note: every variant except `parcpu` produces
+/// Determinism note: every family except `parcpu` produces
 /// bit-reproducible records (including per-level test counts — the
 /// pipeline's thread-count invariance). `parcpu`'s per-level *test
 /// counts* and first-found sepsets are scheduling-dependent by design,
 /// so the batch determinism contract covers the deterministic
 /// schedules; `parcpu` jobs still produce the identical skeleton.
+/// Causal-order families (`lingam`) are fully deterministic, ignore
+/// `max_level`, `corr`, and `orient`, and use `alpha` not at all —
+/// their decisions are the pairwise-measure scores and the fixed
+/// pruning threshold.
 #[derive(Clone, Debug)]
 pub struct JobSpec {
     pub name: String,
     pub source: DataSource,
-    pub variant: Variant,
+    pub family: FamilyId,
     pub alpha: f64,
     pub max_level: Option<usize>,
     pub corr: CorrKind,
@@ -73,20 +82,31 @@ pub struct JobSpec {
 }
 
 impl JobSpec {
-    /// The skeleton config for this job at a leased worker width.
+    /// The run config for this job at a leased worker width. For
+    /// causal-order families the `variant` field is inert (the engine
+    /// never reads it) and stays at its default.
     pub fn config(&self, threads: usize) -> Config {
         Config {
             alpha: self.alpha,
             max_level: self.max_level,
-            variant: self.variant,
+            variant: self.family.variant().unwrap_or(Variant::CupcS),
             orient: self.orient,
             ..Config::default()
         }
         .with_threads(threads)
     }
 
+    /// The PC variant, for PC-only layers (`cupc shard`); `None` for
+    /// causal-order families.
+    pub fn pc_variant(&self) -> Option<Variant> {
+        self.family.variant()
+    }
+
+    /// Canonical family spelling — the report record's `variant` field
+    /// (the key name predates the second engine kind and is pinned for
+    /// downstream parsers).
     pub fn variant_name(&self) -> &'static str {
-        variant_name(self.variant)
+        crate::family::of(self.family).name
     }
 
     pub fn orient_name(&self) -> &'static str {
@@ -97,19 +117,26 @@ impl JobSpec {
     }
 }
 
-/// Canonical CLI spelling of a variant (delegates to the
-/// [`family`](crate::skeleton::family) registry — the single source of
-/// truth for family metadata).
+/// Canonical CLI spelling of a PC variant (delegates to the top-level
+/// [`crate::family`] registry — the single source of truth for family
+/// metadata). Kept Variant-typed for PC-only callers (shard plans).
 pub fn variant_name(v: Variant) -> &'static str {
-    crate::skeleton::family::of(v).name
+    crate::family::of(FamilyId::Pc(v)).name
 }
 
-/// Stable tag for content hashing (cache keys depend on it — never
-/// renumber). The values live in the family registry; `tags_are_stable`
-/// below pins every historical assignment so a registry edit can never
-/// silently re-key the disk cache.
+/// Stable tag of a PC variant for content hashing (cache keys and
+/// shard-plan bytes depend on it — never renumber). The values live in
+/// the registry; `tags_are_stable` below pins every historical
+/// assignment so a registry edit can never silently re-key the disk
+/// cache.
 pub fn variant_tag(v: Variant) -> u8 {
-    crate::skeleton::family::of(v).tag
+    crate::family::of(FamilyId::Pc(v)).tag
+}
+
+/// Stable tag of any engine family (either kind) for content hashing —
+/// the generalization [`variant_tag`] is the PC restriction of.
+pub fn family_tag(f: FamilyId) -> u8 {
+    crate::family::of(f).tag
 }
 
 /// Stable tag for content hashing.
@@ -219,12 +246,12 @@ fn parse_job(j: &Json, idx: usize) -> Result<JobSpec> {
         Some(v) => v.as_str().context("\"name\" must be a string")?.to_string(),
         None => format!("job-{idx}"),
     };
-    let variant = match j.get("variant") {
+    let family = match j.get("variant") {
         Some(v) => {
             let s = v.as_str().context("\"variant\" must be a string")?;
-            Variant::parse(s).with_context(|| format!("unknown variant {s:?}"))?
+            crate::family::parse(s).with_context(|| format!("unknown variant {s:?}"))?
         }
-        None => Variant::CupcS,
+        None => FamilyId::Pc(Variant::CupcS),
     };
     let alpha = match j.get("alpha") {
         Some(v) => v.as_f64().context("\"alpha\" must be a number")?,
@@ -261,7 +288,7 @@ fn parse_job(j: &Json, idx: usize) -> Result<JobSpec> {
     Ok(JobSpec {
         name,
         source,
-        variant,
+        family,
         alpha,
         max_level,
         corr,
@@ -289,7 +316,7 @@ mod tests {
         let a = &m.jobs[0];
         assert_eq!(a.name, "a");
         assert_eq!(a.source, DataSource::Dataset("nci60-mini".into()));
-        assert_eq!(a.variant, Variant::CupcE);
+        assert_eq!(a.family, FamilyId::Pc(Variant::CupcE));
         assert_eq!(a.alpha, 0.05);
         assert_eq!(a.max_level, Some(2));
         assert_eq!(a.corr, CorrKind::Spearman);
@@ -298,7 +325,11 @@ mod tests {
         let b = &m.jobs[1];
         assert_eq!(b.name, "job-1", "name defaults to the index");
         assert_eq!(b.source, DataSource::Csv(PathBuf::from("some/data.csv")));
-        assert_eq!(b.variant, Variant::CupcS, "variant defaults to cups");
+        assert_eq!(
+            b.family,
+            FamilyId::Pc(Variant::CupcS),
+            "variant defaults to cups"
+        );
         assert_eq!(b.alpha, 0.01);
         assert_eq!(b.max_level, None);
         assert_eq!(b.corr, CorrKind::Pearson);
@@ -387,6 +418,35 @@ mod tests {
         assert_eq!(cfg.threads, 5);
     }
 
+    /// A manifest can mix both engine kinds: the lingam spelling
+    /// resolves through the top-level registry and its config carries
+    /// the shared knobs (threads) while the PC-only `variant` field
+    /// stays inert at its default.
+    #[test]
+    fn manifest_accepts_the_lingam_family() {
+        let m = Manifest::parse(
+            r#"{"jobs": [
+                {"scenario": "grn-mid", "variant": "reversed"},
+                {"name": "l", "scenario": "grn-mid", "variant": "lingam"}
+            ]}"#,
+        )
+        .unwrap();
+        let l = &m.jobs[1];
+        assert_eq!(l.family, FamilyId::Lingam);
+        assert_eq!(l.variant_name(), "lingam");
+        assert_eq!(l.pc_variant(), None);
+        assert_eq!(l.config(3).threads, 3);
+        assert_eq!(family_tag(FamilyId::Lingam), 7);
+        // the alias spellings resolve too
+        for alias in ["paralingam", "direct-lingam", "LINGAM"] {
+            let m = Manifest::parse(&format!(
+                r#"{{"jobs": [{{"csv": "a.csv", "variant": "{alias}"}}]}}"#
+            ))
+            .unwrap();
+            assert_eq!(m.jobs[0].family, FamilyId::Lingam, "{alias}");
+        }
+    }
+
     #[test]
     fn tags_are_injective() {
         use crate::sim::scenarios::ALL_VARIANTS;
@@ -427,6 +487,7 @@ mod tests {
                 "canonical name must parse back to the variant"
             );
         }
+        assert_eq!(family_tag(FamilyId::Lingam), 7, "lingam appended at 7");
         assert_eq!(orient_tag(OrientRule::Standard), 0);
         assert_eq!(orient_tag(OrientRule::Majority), 1);
     }
@@ -437,7 +498,7 @@ mod tests {
             r#"{"jobs": [{"scenario": "grn-mid", "variant": "reversed"}]}"#,
         )
         .unwrap();
-        assert_eq!(m.jobs[0].variant, Variant::Reversed);
+        assert_eq!(m.jobs[0].family, FamilyId::Pc(Variant::Reversed));
         assert_eq!(m.jobs[0].variant_name(), "reversed");
         assert_eq!(m.jobs[0].config(2).variant, Variant::Reversed);
     }

@@ -17,7 +17,7 @@
 use super::cache::CacheStats;
 use super::job::JobSpec;
 use super::store::DiskStats;
-use crate::api::PcResult;
+use crate::api::{OrderResult, PcResult};
 use crate::util::json::escape;
 use std::sync::Arc;
 
@@ -83,10 +83,15 @@ pub struct JobResultCore {
     pub levels: Vec<LevelRow>,
     /// undirected skeleton edges, (i, j) with i < j, row-major order
     pub skeleton_edges: Vec<(u32, u32)>,
-    /// CPDAG arrows i → j
+    /// CPDAG arrows i → j — or, for a causal-order family, the pruned
+    /// DAG's arrows (every edge of an order engine is directed)
     pub directed: Vec<(u32, u32)>,
-    /// CPDAG undirected edges, (i, j) with i < j
+    /// CPDAG undirected edges, (i, j) with i < j (always empty for
+    /// causal-order families)
     pub undirected: Vec<(u32, u32)>,
+    /// the estimated causal order, roots first — empty for PC families,
+    /// whose output is a CPDAG, not an order
+    pub order: Vec<u32>,
 }
 
 impl JobResultCore {
@@ -117,6 +122,47 @@ impl JobResultCore {
             skeleton_edges: as_u32(res.skeleton.graph.edges()),
             directed: as_u32(res.cpdag.directed_edges()),
             undirected: as_u32(res.cpdag.undirected_edges()),
+            order: Vec::new(),
+        }
+    }
+
+    /// The deterministic core of a causal-order run: the DAG adjacency
+    /// flows into the same row shape PC jobs use (rounds as level rows,
+    /// arrows in `directed`, the undirected support in
+    /// `skeleton_edges`), plus the order itself. Orientation counters
+    /// stay zero — there is no orientation phase to count.
+    pub fn from_order(res: &OrderResult, n: usize, m: usize) -> Self {
+        let levels = res
+            .rounds
+            .iter()
+            .map(|l| LevelRow {
+                level: l.level,
+                tests: l.tests,
+                removed: l.removed,
+                edges_after: l.edges_after,
+            })
+            .collect();
+        let mut directed: Vec<(u32, u32)> = res
+            .edges
+            .iter()
+            .map(|&(a, b, _w)| (a as u32, b as u32))
+            .collect();
+        directed.sort_unstable();
+        let mut skeleton_edges: Vec<(u32, u32)> = directed
+            .iter()
+            .map(|&(i, j)| (i.min(j), i.max(j)))
+            .collect();
+        skeleton_edges.sort_unstable();
+        skeleton_edges.dedup();
+        JobResultCore {
+            n,
+            m,
+            orient: OrientRow::default(),
+            levels,
+            skeleton_edges,
+            directed,
+            undirected: Vec::new(),
+            order: res.order.iter().map(|&v| v as u32).collect(),
         }
     }
 
@@ -125,6 +171,7 @@ impl JobResultCore {
         self.levels.len() * std::mem::size_of::<LevelRow>()
             + (self.skeleton_edges.len() + self.directed.len() + self.undirected.len())
                 * std::mem::size_of::<(u32, u32)>()
+            + self.order.len() * std::mem::size_of::<u32>()
             + std::mem::size_of::<Self>()
     }
 
@@ -160,6 +207,11 @@ impl JobResultCore {
                 b.extend_from_slice(&i.to_le_bytes());
                 b.extend_from_slice(&j.to_le_bytes());
             }
+        }
+        // causal-order section (schema v3; empty for PC families)
+        push_u64(&mut b, self.order.len() as u64);
+        for &v in &self.order {
+            b.extend_from_slice(&v.to_le_bytes());
         }
         b
     }
@@ -222,6 +274,11 @@ impl JobResultCore {
                 list.push((r.u32()?, r.u32()?));
             }
         }
+        let norder = r.len(4)?;
+        let mut order = Vec::with_capacity(norder);
+        for _ in 0..norder {
+            order.push(r.u32()?);
+        }
         if r.pos != b.len() {
             return None; // trailing garbage is corruption, not slack
         }
@@ -234,6 +291,7 @@ impl JobResultCore {
             skeleton_edges,
             directed,
             undirected,
+            order,
         })
     }
 }
@@ -317,6 +375,20 @@ pub fn result_line(spec: &JobSpec, core: &JobResultCore) -> String {
     s.push_str(&format!(",\"skeleton\":{}", edges_json(&core.skeleton_edges)));
     s.push_str(&format!(",\"directed\":{}", edges_json(&core.directed)));
     s.push_str(&format!(",\"undirected\":{}", edges_json(&core.undirected)));
+    if !core.order.is_empty() {
+        // causal-order families only — PC records keep their exact
+        // historical shape (the byte-identity gates depend on it)
+        let mut o = String::with_capacity(2 + core.order.len() * 4);
+        o.push('[');
+        for (idx, v) in core.order.iter().enumerate() {
+            if idx > 0 {
+                o.push(',');
+            }
+            o.push_str(&v.to_string());
+        }
+        o.push(']');
+        s.push_str(&format!(",\"order\":{o}"));
+    }
     s.push('}');
     s
 }
@@ -403,6 +475,7 @@ pub fn render_stats(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::family::FamilyId;
     use crate::service::job::DataSource;
     use crate::skeleton::{OrientRule, Variant};
     use crate::stats::corr::CorrKind;
@@ -412,7 +485,7 @@ mod tests {
         JobSpec {
             name: "toy \"quoted\"".into(),
             source: DataSource::Scenario("sparse-a01".into()),
-            variant: Variant::CupcS,
+            family: FamilyId::Pc(Variant::CupcS),
             alpha: 0.01,
             max_level: Some(2),
             corr: CorrKind::Pearson,
@@ -446,6 +519,7 @@ mod tests {
             skeleton_edges: vec![(0, 1), (1, 2), (2, 3)],
             directed: vec![(0, 1)],
             undirected: vec![(1, 2), (2, 3)],
+            order: vec![],
         }
     }
 
@@ -472,6 +546,45 @@ mod tests {
         assert!(v.get("threads").is_none());
         assert!(v.get("adjacency").is_none());
         assert!(v.get("peak_window_bytes").is_none());
+        // PC records keep their exact historical shape: no order key
+        assert!(v.get("order").is_none());
+    }
+
+    /// Causal-order jobs flow through the same row shape: rounds as
+    /// level rows, DAG arrows in `directed`, the order as its own
+    /// array — and the record parses as JSON like any PC record.
+    #[test]
+    fn order_results_render_with_the_dag_adjacency_shape() {
+        let res = OrderResult {
+            order: vec![2, 0, 1],
+            edges: vec![(2, 0, 0.8), (2, 1, -0.6), (0, 1, 0.3)],
+            rounds: vec![crate::skeleton::LevelStats {
+                level: 0,
+                tests: 3,
+                removed: 1,
+                edges_after: 2,
+                seconds: 0.5,
+            }],
+            seconds: 1.0,
+        };
+        let core = JobResultCore::from_order(&res, 3, 100);
+        assert_eq!(core.order, vec![2, 0, 1]);
+        assert_eq!(core.directed, vec![(0, 1), (2, 0), (2, 1)], "row-major");
+        assert_eq!(core.skeleton_edges, vec![(0, 1), (0, 2), (1, 2)]);
+        assert!(core.undirected.is_empty());
+        assert_eq!(core.orient, OrientRow::default());
+        assert_eq!(core.levels.len(), 1);
+        assert_eq!(core.levels[0].tests, 3);
+
+        let mut spec = toy_spec();
+        spec.family = FamilyId::Lingam;
+        let v = Json::parse(&result_line(&spec, &core)).unwrap();
+        assert_eq!(v.get("variant").unwrap().as_str(), Some("lingam"));
+        let order = v.get("order").unwrap().as_array().unwrap();
+        let got: Vec<usize> = order.iter().map(|x| x.as_usize().unwrap()).collect();
+        assert_eq!(got, vec![2, 0, 1]);
+        assert_eq!(v.get("directed").unwrap().as_array().unwrap().len(), 3);
+        assert_eq!(v.get("undirected").unwrap().as_array().unwrap().len(), 0);
     }
 
     #[test]
@@ -588,7 +701,7 @@ mod tests {
         assert_eq!(back.levels, core.levels, "codec must preserve row order");
 
         let mut spec = toy_spec();
-        spec.variant = Variant::Reversed;
+        spec.family = FamilyId::Pc(Variant::Reversed);
         let v = Json::parse(&result_line(&spec, &core)).unwrap();
         assert_eq!(v.get("variant").unwrap().as_str(), Some("reversed"));
         let rows = v.get("levels").unwrap().as_array().unwrap();
@@ -612,6 +725,13 @@ mod tests {
                 skeleton_edges: vec![],
                 directed: vec![],
                 undirected: vec![],
+                order: vec![],
+            },
+            {
+                let mut c = toy_core();
+                c.order = vec![3, 0, 1, 2];
+                c.undirected = vec![];
+                c
             },
         ] {
             let bytes = core.to_bytes();

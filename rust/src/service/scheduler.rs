@@ -327,6 +327,63 @@ pub fn run_job(
     let seconds_load = t.elapsed_s();
     let threads_start = lease.width();
 
+    // causal-order families skip the correlation layer entirely (the
+    // engine consumes raw columns) but share the result layer, the
+    // elastic lease, and both cache tiers byte for byte with PC jobs —
+    // the registry kind is the only dispatch point
+    if let crate::family::FamilyKind::Order(run) = crate::family::of(spec.family).kind {
+        let t = Timer::start();
+        let rk = cache::result_key(
+            &data.x,
+            data.n,
+            data.m,
+            spec.alpha,
+            spec.max_level,
+            spec.family,
+            spec.orient,
+        );
+        let (core, result_cache) = loop {
+            if let Some(c) = cache.get_result(rk) {
+                break (c, CacheOutcome::Mem);
+            }
+            if let Some(claim) = cache.claim_compute(rk) {
+                if let Some(loaded) = store.and_then(|s| s.get_result(rk)) {
+                    let core = Arc::new(loaded);
+                    cache.put_result(rk, core.clone());
+                    drop(claim);
+                    break (core, CacheOutcome::Disk);
+                }
+                let mut cfg = spec.config(lease.width());
+                // re-lease between root-finding rounds, like PC levels
+                cfg.width_hook = Some(ElasticLease::hook(lease));
+                let res = run(&data, &cfg)
+                    .map(|r| Arc::new(JobResultCore::from_order(&r, data.n, data.m)));
+                if let Ok(core) = &res {
+                    cache.put_result(rk, core.clone());
+                }
+                drop(claim);
+                let core = res
+                    .with_context(|| format!("job {:?} ({})", spec.name, spec.source.label()))?;
+                if let Some(s) = store {
+                    s.put_result(rk, &core);
+                }
+                break (core, CacheOutcome::Miss);
+            }
+        };
+        return Ok(JobReport {
+            core,
+            seconds_load,
+            seconds_corr: 0.0,
+            seconds_run: t.elapsed_s(),
+            corr_cache: CacheOutcome::Miss,
+            result_cache,
+            threads_used: threads_start,
+            threads_peak: lease.peak(),
+            adjacency: "dense",
+            peak_window_bytes: 0,
+        });
+    }
+
     let t = Timer::start();
     let dk = cache::data_key(&data, spec.corr);
     let (corr, corr_cache) = loop {
@@ -364,7 +421,7 @@ pub fn run_job(
         data.m,
         spec.alpha,
         spec.max_level,
-        spec.variant,
+        spec.family,
         spec.orient,
     );
     // out-of-core observability for the stats sidecar; stays at the
@@ -526,6 +583,7 @@ pub fn run_batch(manifest: &Manifest, opts: &BatchOptions, cache: &Cache) -> Res
 mod tests {
     use super::*;
     use crate::service::report::render_results;
+    use crate::family::FamilyId;
     use crate::skeleton::{OrientRule, Variant};
     use crate::stats::corr::CorrKind;
 
@@ -533,7 +591,7 @@ mod tests {
         JobSpec {
             name: name.to_string(),
             source: DataSource::Scenario(scenario.to_string()),
-            variant: Variant::CupcS,
+            family: FamilyId::Pc(Variant::CupcS),
             alpha,
             max_level: None,
             corr,
@@ -777,7 +835,7 @@ mod tests {
                 JobSpec {
                     name: "bad".into(),
                     source: DataSource::Csv("no/such/file.csv".into()),
-                    variant: Variant::CupcS,
+                    family: FamilyId::Pc(Variant::CupcS),
                     alpha: 0.01,
                     max_level: None,
                     corr: CorrKind::Pearson,
@@ -806,7 +864,7 @@ mod tests {
             jobs: vec![JobSpec {
                 name: "missing".into(),
                 source: DataSource::Csv("definitely/not/here.csv".into()),
-                variant: Variant::CupcS,
+                family: FamilyId::Pc(Variant::CupcS),
                 alpha: 0.01,
                 max_level: None,
                 corr: CorrKind::Pearson,

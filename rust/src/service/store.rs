@@ -51,8 +51,10 @@ use std::time::{Duration, SystemTime};
 
 /// Bump on ANY layout change — header or payload encodings. Old entries
 /// then degrade to misses (delete + recompute) instead of misparsing.
-/// (v2: `JobResultCore` gained the orientation counters.)
-pub const SCHEMA_VERSION: u32 = 2;
+/// (v2: `JobResultCore` gained the orientation counters. v3:
+/// `JobResultCore` gained the causal-order section for the lingam
+/// engine family.)
+pub const SCHEMA_VERSION: u32 = 3;
 
 const MAGIC: [u8; 4] = *b"CUPC";
 /// magic 4 + version 4 + kind 1 + key 16 + payload_len 8 + checksum 16
@@ -576,6 +578,7 @@ mod tests {
             skeleton_edges: vec![(0, 1), (1, 2)],
             directed: vec![(0, 1)],
             undirected: vec![(1, 2)],
+            order: vec![],
         }
     }
 

@@ -15,7 +15,7 @@
 
 use super::dag::WeightedDag;
 use super::datasets::Topology;
-use super::sem;
+use super::sem::{self, NoiseKind};
 use crate::skeleton::{Config, OrientRule, Variant};
 use crate::stats::corr::{CorrKind, DataMatrix};
 use crate::util::rng::Pcg;
@@ -37,8 +37,12 @@ pub struct Scenario {
     pub max_level: Option<usize>,
     /// master seed (graph stream and sample stream derive from it)
     pub seed: u64,
-    /// correlation estimator feeding the CI tests
+    /// correlation estimator feeding the CI tests (ignored by
+    /// causal-order families, which consume the raw data)
     pub corr: CorrKind,
+    /// exogenous-noise distribution for SEM sampling; the PC grids use
+    /// Gaussian, the lingam grid needs non-Gaussian noise
+    pub noise: NoiseKind,
 }
 
 impl Scenario {
@@ -69,7 +73,7 @@ impl Scenario {
             Topology::Er(d) => WeightedDag::random_er(self.n, d, &mut rng_g),
             Topology::Grn(avg, maxp) => WeightedDag::random_grn(self.n, avg, maxp, &mut rng_g),
         };
-        let data = sem::sample(&dag, self.m, &mut Pcg::new(self.seed, 2));
+        let data = sem::sample_with_noise(&dag, self.m, &mut Pcg::new(self.seed, 2), self.noise);
         (dag, data)
     }
 
@@ -110,20 +114,61 @@ pub const ALL_VARIANTS: [Variant; 7] = [
 ];
 
 /// Look up a grid point by name (the `service` job-source address).
-/// Searches the default conformance grid and the out-of-core grid.
+/// Searches the default conformance grid, the out-of-core grid, and the
+/// lingam (non-Gaussian) grid.
 pub fn find(name: &str) -> Option<Scenario> {
     default_grid()
         .into_iter()
         .chain(oocore_grid())
+        .chain(lingam_grid())
         .find(|s| s.name == name)
+}
+
+/// The lingam scenario grid: non-Gaussian-noise SEMs on which
+/// DirectLiNGAM provably recovers the exact ground-truth DAG.
+/// `tools/lingam_oracle.py::LINGAM_GRID` must stay in lockstep with this
+/// list (name, n, m, topology, seed, noise) — its margin gate certifies
+/// that every root election clears a 1e-9 score gap and every pruning
+/// coefficient sits ≥ 0.01 from the 0.05 threshold, which is what lets
+/// `tests/lingam_conformance.rs` pin the oracle's orders and DAGs as
+/// exact expectations. `alpha`/`max_level` are inert for the lingam
+/// family but keep the points runnable under PC variants too; `corr`
+/// stays Pearson only for the cache's corr layer — lingam consumes the
+/// raw data.
+pub fn lingam_grid() -> Vec<Scenario> {
+    fn lg(
+        name: &'static str,
+        n: usize,
+        m: usize,
+        topology: Topology,
+        seed: u64,
+        noise: NoiseKind,
+    ) -> Scenario {
+        Scenario {
+            name,
+            n,
+            m,
+            topology,
+            alpha: 0.01,
+            max_level: None,
+            seed,
+            corr: CorrKind::Pearson,
+            noise,
+        }
+    }
+    vec![
+        lg("lingam-uniform", 12, 5000, Topology::Er(0.2), 918, NoiseKind::Uniform),
+        lg("lingam-laplace", 10, 5000, Topology::Er(0.25), 916, NoiseKind::Laplace),
+        lg("lingam-grn", 14, 4000, Topology::Grn(1.8, 4), 953, NoiseKind::Uniform),
+    ]
 }
 
 /// The out-of-core scenario grid: sizes where the sparse adjacency and
 /// streamed windows actually engage (n past
 /// [`crate::oocore::sparse::SPARSE_MIN_N`], low ER density so level 0
 /// prunes hard). Deliberately *not* part of [`default_grid`] — the
-/// cross-variant conformance suite iterates that grid over all seven
-/// families, which would be CI-prohibitive at these sizes. These points
+/// cross-variant conformance suite iterates that grid over every PC
+/// family, which would be CI-prohibitive at these sizes. These points
 /// are addressable by name (`scenario:oocore-2k` job sources, the CI
 /// oocore-smoke manifest) and driven by `tests/oocore_conformance.rs`.
 pub fn oocore_grid() -> Vec<Scenario> {
@@ -145,6 +190,7 @@ pub fn oocore_grid() -> Vec<Scenario> {
             max_level,
             seed,
             corr: CorrKind::Pearson,
+            noise: NoiseKind::Gaussian,
         }
     }
     vec![
@@ -183,6 +229,7 @@ pub fn default_grid() -> Vec<Scenario> {
             max_level,
             seed,
             corr: CorrKind::Pearson,
+            noise: NoiseKind::Gaussian,
         }
     }
     fn sx(
@@ -204,6 +251,7 @@ pub fn default_grid() -> Vec<Scenario> {
             max_level,
             seed,
             corr,
+            noise: NoiseKind::Gaussian,
         }
     }
     vec![
@@ -314,7 +362,7 @@ mod tests {
 
     /// The out-of-core points are addressable by name but excluded from
     /// the cross-variant conformance grid (they would be CI-prohibitive
-    /// across all seven families).
+    /// across every PC family).
     #[test]
     fn oocore_grid_is_findable_but_not_in_the_default_grid() {
         let ooc = oocore_grid();
@@ -334,17 +382,52 @@ mod tests {
                 sc.n
             );
         }
-        // names and seeds must stay unique across BOTH grids (seeds are
+        // names and seeds must stay unique across ALL grids (seeds are
         // the determinism anchor; a reuse would alias two datasets)
-        let mut names: Vec<&str> = defaults.iter().chain(&ooc).map(|s| s.name).collect();
+        let lingam = lingam_grid();
+        let all: Vec<&Scenario> = defaults.iter().chain(&ooc).chain(&lingam).collect();
+        let mut names: Vec<&str> = all.iter().map(|s| s.name).collect();
         let total = names.len();
         names.sort_unstable();
         names.dedup();
         assert_eq!(names.len(), total, "scenario name reused across grids");
-        let mut seeds: Vec<u64> = defaults.iter().chain(&ooc).map(|s| s.seed).collect();
+        let mut seeds: Vec<u64> = all.iter().map(|s| s.seed).collect();
         seeds.sort_unstable();
         seeds.dedup();
         assert_eq!(seeds.len(), total, "scenario seed reused across grids");
+    }
+
+    /// The lingam grid must stay in lockstep with the pinned python
+    /// oracle (`tools/lingam_oracle.py::LINGAM_GRID`) — these literals
+    /// are the Rust half of that contract.
+    #[test]
+    fn lingam_grid_is_pinned_and_non_gaussian() {
+        let grid = lingam_grid();
+        assert_eq!(grid.len(), 3);
+        let rows: Vec<(&str, usize, usize, u64, NoiseKind)> = grid
+            .iter()
+            .map(|s| (s.name, s.n, s.m, s.seed, s.noise))
+            .collect();
+        assert_eq!(
+            rows,
+            vec![
+                ("lingam-uniform", 12, 5000, 918, NoiseKind::Uniform),
+                ("lingam-laplace", 10, 5000, 916, NoiseKind::Laplace),
+                ("lingam-grn", 14, 4000, 953, NoiseKind::Uniform),
+            ]
+        );
+        for s in &grid {
+            assert_ne!(s.noise, NoiseKind::Gaussian, "{}: lingam needs non-Gaussian noise", s.name);
+            assert!(find(s.name).is_some(), "{}", s.name);
+        }
+        assert!(
+            grid.iter().any(|s| matches!(s.topology, Topology::Grn(..))),
+            "GRN coverage in the lingam grid"
+        );
+        // PC grids keep the paper's Gaussian noise
+        for s in default_grid().iter().chain(&oocore_grid()) {
+            assert_eq!(s.noise, NoiseKind::Gaussian, "{}", s.name);
+        }
     }
 
     /// Conformance coverage cannot silently lag the registry: a family

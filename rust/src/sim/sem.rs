@@ -1,20 +1,72 @@
 //! Linear structural equation model sampling (paper §5.6):
-//! Vi = Ni + Σ_{j<i} A[i,j]·Vj with independent standard-normal noise,
-//! sampled in topological order.
+//! Vi = Ni + Σ_{j<i} A[i,j]·Vj with independent noise, sampled in
+//! topological order. The default noise is standard normal; the lingam
+//! engine family needs *non*-Gaussian noise (linear-Gaussian SEMs are
+//! only identifiable up to the Markov equivalence class), so
+//! [`NoiseKind`] adds unit-variance uniform and Laplace generators.
+//! `tools/lingam_oracle.py::draw_noise` mirrors these draw for draw.
 
 use super::dag::WeightedDag;
 use crate::stats::corr::DataMatrix;
 use crate::util::rng::Pcg;
+use std::f64::consts::FRAC_1_SQRT_2;
 
-/// Sample `m` observations from the linear SEM induced by `dag`.
-/// Returns a row-major (m × n) data matrix.
+/// Exogenous-noise distribution for SEM sampling. Every kind is
+/// zero-mean unit-variance so downstream correlation magnitudes are
+/// comparable across kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum NoiseKind {
+    /// Standard normal (Box-Muller) — the paper's §5.6 default.
+    Gaussian,
+    /// Uniform on (−√3, √3): variance (2√3)²/12 = 1.
+    Uniform,
+    /// Laplace with scale 1/√2 (inverse-CDF draw): variance 2·b² = 1.
+    Laplace,
+}
+
+impl NoiseKind {
+    /// One noise draw. Draw-identical to `lingam_oracle.py::draw_noise`.
+    pub fn draw(self, rng: &mut Pcg) -> f64 {
+        match self {
+            NoiseKind::Gaussian => rng.normal(),
+            NoiseKind::Uniform => {
+                let s = 3f64.sqrt();
+                rng.uniform_in(-s, s)
+            }
+            NoiseKind::Laplace => loop {
+                let u = rng.uniform();
+                if u == 0.0 {
+                    // inverse CDF needs u in (0, 1); uniform() can emit
+                    // exactly 0, whose image is −∞
+                    continue;
+                }
+                let x = if u < 0.5 {
+                    (2.0 * u).ln()
+                } else {
+                    -((2.0 * (1.0 - u)).ln())
+                };
+                return x * FRAC_1_SQRT_2;
+            },
+        }
+    }
+}
+
+/// Sample `m` observations from the linear SEM induced by `dag` with
+/// standard-normal noise. Returns a row-major (m × n) data matrix.
 pub fn sample(dag: &WeightedDag, m: usize, rng: &mut Pcg) -> DataMatrix {
+    sample_with_noise(dag, m, rng, NoiseKind::Gaussian)
+}
+
+/// [`sample`] with an explicit noise kind. The draw order (one noise
+/// draw per cell, sample-major then variable-major) is identical across
+/// kinds, so two kinds under one seed share a DAG but not data.
+pub fn sample_with_noise(dag: &WeightedDag, m: usize, rng: &mut Pcg, noise: NoiseKind) -> DataMatrix {
     let n = dag.n;
     let mut x = vec![0.0f64; m * n];
     for s in 0..m {
         let row = &mut x[s * n..(s + 1) * n];
         for i in 0..n {
-            let mut v = rng.normal();
+            let mut v = noise.draw(rng);
             for &(j, w) in &dag.parents[i] {
                 v += w * row[j as usize];
             }
@@ -61,6 +113,52 @@ mod tests {
         assert!(c[1].abs() < 0.05, "c01={}", c[1]); // 0 vs 1
         assert!(c[2].abs() < 0.05, "c02={}", c[2]); // 0 vs 2
         assert!(c[1 * 3 + 2] > 0.5, "c12={}", c[5]);
+    }
+
+    #[test]
+    fn sample_is_the_gaussian_noise_kind() {
+        let dag = WeightedDag::random_er(8, 0.3, &mut Pcg::seeded(12));
+        let a = sample(&dag, 50, &mut Pcg::seeded(13));
+        let b = sample_with_noise(&dag, 50, &mut Pcg::seeded(13), NoiseKind::Gaussian);
+        assert_eq!(a.x, b.x, "sample() must stay draw-identical to Gaussian");
+    }
+
+    #[test]
+    fn every_noise_kind_is_zero_mean_unit_variance() {
+        let dag = WeightedDag {
+            n: 1,
+            parents: vec![vec![]],
+        };
+        for kind in [NoiseKind::Gaussian, NoiseKind::Uniform, NoiseKind::Laplace] {
+            let data = sample_with_noise(&dag, 20000, &mut Pcg::seeded(14), kind);
+            let m = data.x.len() as f64;
+            let mean: f64 = data.x.iter().sum::<f64>() / m;
+            let var: f64 = data.x.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / m;
+            assert!(mean.abs() < 0.05, "{kind:?}: mean={mean}");
+            assert!((var - 1.0).abs() < 0.06, "{kind:?}: var={var}");
+        }
+    }
+
+    #[test]
+    fn uniform_noise_is_bounded_and_laplace_is_not_gaussian() {
+        let dag = WeightedDag {
+            n: 1,
+            parents: vec![vec![]],
+        };
+        let s = 3f64.sqrt();
+        let uni = sample_with_noise(&dag, 5000, &mut Pcg::seeded(15), NoiseKind::Uniform);
+        assert!(uni.x.iter().all(|v| v.abs() < s), "uniform must stay in (−√3, √3)");
+        // excess kurtosis: uniform −1.2, gaussian 0, laplace +3 — the
+        // separation the lingam measure feeds on
+        let kurt = |xs: &[f64]| {
+            let m = xs.len() as f64;
+            let s4: f64 = xs.iter().map(|v| v.powi(4)).sum::<f64>() / m;
+            let s2: f64 = xs.iter().map(|v| v * v).sum::<f64>() / m;
+            s4 / (s2 * s2) - 3.0
+        };
+        let lap = sample_with_noise(&dag, 20000, &mut Pcg::seeded(16), NoiseKind::Laplace);
+        assert!(kurt(&uni.x) < -0.9, "uniform kurtosis {}", kurt(&uni.x));
+        assert!(kurt(&lap.x) > 1.5, "laplace kurtosis {}", kurt(&lap.x));
     }
 
     #[test]

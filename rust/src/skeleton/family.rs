@@ -1,28 +1,28 @@
-//! The algorithm-family registry: one table describing every skeleton
-//! schedule the crate ships, so the layers above `skeleton/` dispatch on
-//! data instead of matching exhaustively on [`Variant`].
+//! The PC-family *implementation* table: one row per skeleton schedule
+//! carrying its run function and (for batched schedules) its
+//! [`RoundSchedule`] factory, so `skeleton::run` and the shard workers
+//! dispatch on data instead of matching exhaustively on [`Variant`].
 //!
-//! Adding a family is now: write the leaf module (a [`RoundSchedule`]
-//! implementation for batched schedules, or a whole-run function for
-//! coarse-grained ones), append one [`FamilyInfo`] row here with a fresh
-//! `tag`, and everything else — CLI parsing, manifest parsing, cache
-//! keys, report labels, `skeleton::run` dispatch — picks it up. The
-//! registry tests below enforce the invariants a new row must keep
-//! (unique names, aliases and tags; parse/name roundtrip).
+//! Identity metadata — canonical name, aliases, the stable cache tag —
+//! lives in the top-level [`crate::family`] registry, which spans both
+//! engine kinds (PC schedules and causal-order engines). Adding a PC
+//! family is: write the leaf module, append one [`FamilyInfo`] row
+//! here, and one [`EngineFamily`](crate::family::EngineFamily) row
+//! there; everything else — CLI parsing, manifest parsing, cache keys,
+//! report labels — picks it up. The registry tests (here and in
+//! `crate::family`) enforce the invariants a new row must keep.
 //!
 //! ```
 //! use cupc::skeleton::{family, Variant};
 //!
-//! // any registered alias resolves, case-insensitively
-//! assert_eq!(family::parse("CUPS"), Some(Variant::CupcS));
-//! assert_eq!(family::parse("reversed"), Some(Variant::Reversed));
-//! assert_eq!(family::parse("no-such-schedule"), None);
-//!
-//! // and every variant has exactly one registry row of stable metadata
+//! // every variant has exactly one implementation row
 //! let info = family::of(Variant::CupcE);
-//! assert_eq!(info.name, "cupc-e");
 //! assert!(info.deterministic_tests);
-//! assert_eq!(family::FAMILIES.len(), 7);
+//! assert!(info.schedule.is_some());
+//!
+//! // spellings resolve through the top-level registry
+//! assert_eq!(Variant::parse("CUPS"), Some(Variant::CupcS));
+//! assert_eq!(Variant::parse("no-such-schedule"), None);
 //! ```
 //!
 //! [`RoundSchedule`]: super::schedule::RoundSchedule
@@ -40,16 +40,10 @@ pub type RunFn = fn(&[f64], usize, usize, &Config) -> Result<SkeletonResult>;
 /// coarse-grained families, which have no batched schedule to shard.
 pub type ScheduleFn = fn(&Config) -> Box<dyn RoundSchedule>;
 
-/// One registered algorithm family.
+/// One registered PC algorithm family (implementation columns only —
+/// see the module doc for where the identity columns live).
 pub struct FamilyInfo {
     pub variant: Variant,
-    /// Canonical CLI/report spelling.
-    pub name: &'static str,
-    /// Accepted `Variant::parse` spellings (lowercase; include `name`).
-    pub aliases: &'static [&'static str],
-    /// Stable tag for content hashing — cache keys depend on it, so a
-    /// tag is **never renumbered or reused**; new families append.
-    pub tag: u8,
     /// Whether per-level `tests` counts are bit-reproducible for any
     /// thread count (true for every pipeline-batched schedule and the
     /// serial reference; false for the racy `parcpu`, whose skeleton is
@@ -63,50 +57,36 @@ pub struct FamilyInfo {
     pub schedule: Option<ScheduleFn>,
 }
 
-/// Every family, in tag order. Appending here is the single
-/// registration step for a new schedule.
+/// Every PC family, in the same order as the top-level registry's PC
+/// rows (tags 0..6 there; enforced by
+/// `family::tests::pc_rows_mirror_the_skeleton_registry`).
 pub const FAMILIES: &[FamilyInfo] = &[
     FamilyInfo {
         variant: Variant::Serial,
-        name: "serial",
-        aliases: &["serial", "stable", "stable.fast"],
-        tag: 0,
         deterministic_tests: true,
         run: super::serial::run,
         schedule: None,
     },
     FamilyInfo {
         variant: Variant::ParallelCpu,
-        name: "parcpu",
-        aliases: &["parcpu", "parallel-cpu", "parallel-pc"],
-        tag: 1,
         deterministic_tests: false,
         run: super::parallel_cpu::run,
         schedule: None,
     },
     FamilyInfo {
         variant: Variant::CupcE,
-        name: "cupc-e",
-        aliases: &["cupe", "cupc-e", "e"],
-        tag: 2,
         deterministic_tests: true,
         run: super::gpu_e::run,
         schedule: Some(|cfg| Box::new(super::gpu_e::ESchedule::new(cfg))),
     },
     FamilyInfo {
         variant: Variant::CupcS,
-        name: "cupc-s",
-        aliases: &["cups", "cupc-s", "s"],
-        tag: 3,
         deterministic_tests: true,
         run: super::gpu_s::run,
         schedule: Some(|cfg| Box::new(super::gpu_s::SSchedule::new(cfg))),
     },
     FamilyInfo {
         variant: Variant::Baseline1,
-        name: "baseline1",
-        aliases: &["baseline1", "b1"],
-        tag: 4,
         deterministic_tests: true,
         run: super::baseline1::run,
         schedule: Some(|cfg| {
@@ -119,9 +99,6 @@ pub const FAMILIES: &[FamilyInfo] = &[
     },
     FamilyInfo {
         variant: Variant::Baseline2,
-        name: "baseline2",
-        aliases: &["baseline2", "b2"],
-        tag: 5,
         deterministic_tests: true,
         run: super::baseline2::run,
         schedule: Some(|cfg| {
@@ -134,33 +111,20 @@ pub const FAMILIES: &[FamilyInfo] = &[
     },
     FamilyInfo {
         variant: Variant::Reversed,
-        name: "reversed",
-        aliases: &["reversed", "reversed-order", "rop"],
-        tag: 6,
         deterministic_tests: true,
         run: super::reversed::run,
         schedule: Some(|_| Box::new(super::reversed::ReversedSchedule::new())),
     },
 ];
 
-/// The registry row for a variant. Every `Variant` has exactly one row
-/// (enforced by `registry_covers_every_variant`), so this never panics
-/// on a constructed `Variant`.
+/// The implementation row for a variant. Every `Variant` has exactly
+/// one row (enforced by `registry_covers_every_variant`), so this never
+/// panics on a constructed `Variant`.
 pub fn of(v: Variant) -> &'static FamilyInfo {
     FAMILIES
         .iter()
         .find(|f| f.variant == v)
         .unwrap_or_else(|| panic!("variant {v:?} is not registered in family::FAMILIES"))
-}
-
-/// Parse a CLI/manifest spelling (case-insensitive) against every
-/// family's alias list.
-pub fn parse(s: &str) -> Option<Variant> {
-    let lower = s.to_ascii_lowercase();
-    FAMILIES
-        .iter()
-        .find(|f| f.aliases.contains(&lower.as_str()))
-        .map(|f| f.variant)
 }
 
 #[cfg(test)]
@@ -185,36 +149,12 @@ mod tests {
     }
 
     #[test]
-    fn names_aliases_and_tags_are_unique() {
-        let mut names: Vec<&str> = FAMILIES.iter().map(|f| f.name).collect();
-        names.sort_unstable();
-        names.dedup();
-        assert_eq!(names.len(), FAMILIES.len(), "duplicate canonical name");
-
-        let mut aliases: Vec<&str> = FAMILIES.iter().flat_map(|f| f.aliases.iter().copied()).collect();
-        let n_aliases = aliases.len();
-        aliases.sort_unstable();
-        aliases.dedup();
-        assert_eq!(aliases.len(), n_aliases, "an alias maps to two families");
-
-        let mut tags: Vec<u8> = FAMILIES.iter().map(|f| f.tag).collect();
-        tags.sort_unstable();
-        tags.dedup();
-        assert_eq!(tags.len(), FAMILIES.len(), "duplicate cache-key tag");
-    }
-
-    #[test]
-    fn canonical_name_is_an_alias_and_roundtrips() {
-        for f in FAMILIES {
-            assert!(
-                f.aliases.contains(&f.name),
-                "{}: canonical name must parse",
-                f.name
-            );
-            assert_eq!(parse(f.name), Some(f.variant));
-            assert_eq!(parse(&f.name.to_ascii_uppercase()), Some(f.variant));
+    fn variants_are_unique() {
+        for (i, a) in FAMILIES.iter().enumerate() {
+            for b in &FAMILIES[i + 1..] {
+                assert_ne!(a.variant, b.variant, "duplicate variant row");
+            }
         }
-        assert_eq!(parse("nope"), None);
     }
 
     #[test]
@@ -224,23 +164,14 @@ mod tests {
             assert_eq!(
                 f.schedule.is_none(),
                 coarse,
-                "{}: schedule factory presence",
-                f.name
+                "{:?}: schedule factory presence",
+                f.variant
             );
             if let Some(make) = f.schedule {
                 // the factory must build without touching the config's
                 // thread/engine knobs (workers own those)
                 let sched = make(&Config::default());
-                assert!(!sched.label().is_empty(), "{}", f.name);
-            }
-        }
-    }
-
-    #[test]
-    fn aliases_are_lowercase() {
-        for f in FAMILIES {
-            for a in f.aliases {
-                assert_eq!(*a, a.to_ascii_lowercase(), "{}: alias {a:?}", f.name);
+                assert!(!sched.label().is_empty(), "{:?}", f.variant);
             }
         }
     }

@@ -1,8 +1,10 @@
 //! Skeleton discovery — the computationally intensive first step of
 //! PC-stable (paper Algorithm 1) and the subject of cuPC.
 //!
-//! Seven schedules are implemented over a common engine abstraction.
-//! Each is an *algorithm family* registered in [`family::FAMILIES`];
+//! The PC schedules are implemented over a common engine abstraction.
+//! Each is an *algorithm family* registered in [`family::FAMILIES`]
+//! (the implementation table; identity metadata and the non-PC engine
+//! kinds live in the top-level [`crate::family`] registry);
 //! the batched ones are [`schedule::RoundSchedule`] strategies driven by
 //! one shared level loop, the coarse-grained ones are whole-run
 //! functions:
@@ -78,10 +80,14 @@ pub enum Variant {
 }
 
 impl Variant {
-    /// Parse a CLI/manifest spelling against the [`family`] registry's
-    /// alias lists (case-insensitive).
+    /// Parse a CLI/manifest spelling against the top-level
+    /// [`crate::family`] registry's alias lists (case-insensitive).
+    /// Resolves PC families only — causal-order spellings (`lingam`)
+    /// parse through `crate::family::parse` but return `None` here,
+    /// so PC-specific layers reject them with a typed error instead of
+    /// silently misrouting.
     pub fn parse(s: &str) -> Option<Variant> {
-        family::parse(s)
+        crate::family::parse(s).and_then(|id| id.variant())
     }
 }
 

@@ -1,5 +1,5 @@
 //! Reversed-order pruning PC (arxiv 2109.04626) as a batched
-//! [`RoundSchedule`] — the seventh family, and the proof that the
+//! [`RoundSchedule`] — the seventh PC family, and the proof that the
 //! [`schedule`](super::schedule) seam is real: this module is the entire
 //! algorithm, everything else is registration.
 //!

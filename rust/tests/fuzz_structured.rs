@@ -1,0 +1,355 @@
+//! Seeded structured fuzzing for the untrusted-input surfaces, runnable
+//! under plain `cargo test` (no external fuzzing toolchain).
+//!
+//! Three targets, all deterministic from one seed:
+//!
+//! * `util::json` — generated documents must survive a
+//!   render → parse → re-render fixpoint; generated strings must survive
+//!   parse → `escape` → reparse; byte-level mutations of valid
+//!   documents must parse or error, never panic or abort;
+//! * `service::DiskStore` — a bit-flip corpus over whole entry files:
+//!   every single-bit corruption must read as a *miss* (and delete the
+//!   entry), never a panic or a wrong payload, and the slot must be
+//!   cleanly rewritable afterwards;
+//! * `JobResultCore::from_bytes` — truncations and byte mutations of a
+//!   valid encoding must decode to `Some(original)` or `None`, never
+//!   panic.
+//!
+//! The seed defaults to a fixed constant so CI is reproducible; set
+//! `CUPC_FUZZ_SEED` to explore. Any crash found by a sweep gets pinned
+//! as a literal regression case in `regressions_stay_fixed`.
+
+use cupc::service::{DiskStore, JobResultCore};
+use cupc::util::json::{escape, Json};
+use cupc::util::rng::Pcg;
+use std::path::PathBuf;
+
+const DEFAULT_SEED: u64 = 0x5eed_cafe;
+
+fn fuzz_seed() -> u64 {
+    std::env::var("CUPC_FUZZ_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(DEFAULT_SEED)
+}
+
+// ── structured JSON generation ──────────────────────────────────────
+
+/// A random scalar-safe string: quotes, backslashes, control bytes,
+/// multilingual plane and astral characters — everything `escape` and
+/// the parser's surrogate-pair path must cope with.
+fn gen_string(rng: &mut Pcg) -> String {
+    let len = rng.below(12) as usize;
+    let mut s = String::new();
+    for _ in 0..len {
+        s.push(match rng.below(8) {
+            0 => '"',
+            1 => '\\',
+            2 => char::from_u32(rng.below(0x20) as u32).unwrap(),
+            3 => '\u{1F600}', // astral: rendered via a surrogate pair in \u form
+            4 => 'é',
+            5 => '/',
+            6 => char::from_u32(0x20 + rng.below(0x5e) as u32).unwrap(),
+            _ => 'a',
+        });
+    }
+    s
+}
+
+/// A random number that renders and reparses exactly: integers and
+/// dyadic fractions are exact in f64 and in decimal, so the
+/// render → parse fixpoint has no rounding escape hatch.
+fn gen_number(rng: &mut Pcg) -> f64 {
+    let int = rng.below(2_000_001) as f64 - 1_000_000.0;
+    let frac = rng.below(256) as f64 / 256.0;
+    if rng.bernoulli(0.5) {
+        int
+    } else {
+        int + frac
+    }
+}
+
+fn gen_value(rng: &mut Pcg, depth: usize) -> Json {
+    let top = if depth == 0 { 4 } else { 6 };
+    match rng.below(top) {
+        0 => Json::Null,
+        1 => Json::Bool(rng.bernoulli(0.5)),
+        2 => Json::Num(gen_number(rng)),
+        3 => Json::Str(gen_string(rng)),
+        4 => {
+            let k = rng.below(4) as usize;
+            Json::Arr((0..k).map(|_| gen_value(rng, depth - 1)).collect())
+        }
+        _ => {
+            let k = rng.below(4) as usize;
+            Json::Obj(
+                (0..k)
+                    .map(|i| (format!("k{i}-{}", escape(&gen_string(rng))), gen_value(rng, depth - 1)))
+                    .collect(),
+            )
+        }
+    }
+}
+
+/// Render a [`Json`] value back to text (the crate renders by hand at
+/// each call site, so the fuzzer carries its own canonical renderer).
+fn render(v: &Json) -> String {
+    match v {
+        Json::Null => "null".into(),
+        Json::Bool(b) => b.to_string(),
+        // Rust's f64 Display is shortest-round-trip and never produces
+        // exponents for these magnitudes — valid JSON by construction
+        Json::Num(x) => x.to_string(),
+        Json::Str(s) => format!("\"{}\"", escape(s)),
+        Json::Arr(items) => {
+            let inner: Vec<String> = items.iter().map(render).collect();
+            format!("[{}]", inner.join(","))
+        }
+        Json::Obj(kv) => {
+            let inner: Vec<String> = kv
+                .iter()
+                .map(|(k, v)| format!("\"{}\":{}", escape(k), render(v)))
+                .collect();
+            format!("{{{}}}", inner.join(","))
+        }
+    }
+}
+
+/// Generated documents render → parse → re-render to a fixpoint. Object
+/// keys here are made unique per container, so parse-order preservation
+/// makes the fixpoint exact.
+#[test]
+fn generated_documents_roundtrip_exactly() {
+    let mut rng = Pcg::seeded(fuzz_seed());
+    for i in 0..500 {
+        let v = gen_value(&mut rng, 4);
+        let doc = render(&v);
+        let parsed = Json::parse(&doc).unwrap_or_else(|e| panic!("iter {i}: {doc:?}: {e:#}"));
+        assert_eq!(render(&parsed), doc, "iter {i}: fixpoint broke");
+    }
+}
+
+/// parse → escape → reparse over generated strings (the satellite's
+/// named target): escaping must be lossless and always reparseable.
+#[test]
+fn parse_escape_reparse_roundtrips() {
+    let mut rng = Pcg::seeded(fuzz_seed() ^ 1);
+    for i in 0..1000 {
+        let s = gen_string(&mut rng);
+        let doc = format!("\"{}\"", escape(&s));
+        let parsed = Json::parse(&doc)
+            .unwrap_or_else(|e| panic!("iter {i}: escape produced unparseable {doc:?}: {e:#}"));
+        assert_eq!(parsed.as_str(), Some(s.as_str()), "iter {i}");
+        let again = format!("\"{}\"", escape(parsed.as_str().unwrap()));
+        assert_eq!(again, doc, "iter {i}: escape must be deterministic");
+    }
+}
+
+/// Byte-level mutations of valid documents: the parser must return
+/// (Ok or Err), never panic — the daemon feeds it raw network bytes.
+#[test]
+fn mutated_documents_never_panic_the_parser() {
+    let mut rng = Pcg::seeded(fuzz_seed() ^ 2);
+    for _ in 0..200 {
+        let doc = render(&gen_value(&mut rng, 4));
+        let mut bytes = doc.into_bytes();
+        for _ in 0..1 + rng.below(4) {
+            if bytes.is_empty() {
+                break;
+            }
+            let at = rng.below(bytes.len() as u64) as usize;
+            match rng.below(4) {
+                0 => bytes[at] = rng.below(256) as u8,
+                1 => bytes[at] ^= 1 << rng.below(8),
+                2 => {
+                    bytes.truncate(at);
+                }
+                _ => bytes.insert(at, rng.below(256) as u8),
+            }
+        }
+        // lossy conversion mirrors what a UTF-8-validated network frame
+        // could still smuggle through; outcome is unchecked — only
+        // "no panic" is the property
+        let _ = Json::parse(&String::from_utf8_lossy(&bytes));
+    }
+}
+
+/// Crashes and near-misses found by past sweeps (plus the adversarial
+/// corpus the daemon tests use), pinned as literals so they can never
+/// regress silently.
+#[test]
+fn regressions_stay_fixed() {
+    // nesting bomb: must error via the depth cap, not overflow the stack
+    let bomb = "[".repeat(100_000);
+    let corpus: [&str; 13] = [
+        // unpaired/truncated surrogate escapes (would panic a naive
+        // from_str_radix/from_u32 unwrap chain)
+        r#""\uD83D""#,
+        r#""\uDC00""#,
+        r#""\u12"#,
+        "\"\\u12é9\"",
+        &bomb,
+        // overflow-to-infinity numbers
+        "1e999",
+        r#"{"alpha":-1e999}"#,
+        // scanner runs off a number into EOF
+        "-",
+        "1e",
+        ".",
+        // empty and lone tokens
+        "",
+        ",",
+        "\"",
+    ];
+    for doc in corpus {
+        assert!(
+            Json::parse(doc).is_err(),
+            "{:?} must error",
+            &doc[..doc.len().min(40)]
+        );
+    }
+}
+
+// ── DiskStore bit-flip corpus ───────────────────────────────────────
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("cupc_fuzz_{}_{tag}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn toy_core() -> JobResultCore {
+    use cupc::service::report::{LevelRow, OrientRow};
+    JobResultCore {
+        n: 5,
+        m: 64,
+        orient: OrientRow {
+            triples: 4,
+            census_tests: 9,
+            meek_sweeps: 2,
+        },
+        levels: vec![LevelRow {
+            level: 0,
+            tests: 10,
+            removed: 3,
+            edges_after: 7,
+        }],
+        skeleton_edges: vec![(0, 1), (1, 2), (3, 4)],
+        directed: vec![(0, 1), (3, 4)],
+        undirected: vec![(1, 2)],
+        order: vec![4, 0, 2, 1, 3],
+    }
+}
+
+/// Every single-bit flip anywhere in a stored entry file — header or
+/// payload — must read back as a miss that deletes the entry, after
+/// which the slot is cleanly rewritable. Never a panic, never a wrong
+/// payload. (The store's checksum covers the payload; the header fields
+/// are each individually validated.)
+#[test]
+fn single_bit_flips_in_store_entries_are_always_a_miss() {
+    let mut rng = Pcg::seeded(fuzz_seed() ^ 3);
+    let dir = tmp_dir("bitflip");
+    let store = DiskStore::open(&dir, 1 << 20).unwrap();
+    let corr: Vec<f64> = (0..9).map(|i| (i as f64) / 8.0 - 0.5).collect();
+    let core = toy_core();
+    store.put_corr((11, 22), &corr);
+    store.put_result((33, 44), &core);
+
+    let entry_of = |prefix: &str| -> PathBuf {
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .flatten()
+            .map(|e| e.path())
+            .find(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(prefix))
+            })
+            .unwrap_or_else(|| panic!("no {prefix} entry in {}", dir.display()))
+    };
+
+    // corr entries
+    let path = entry_of("corr-");
+    let pristine = std::fs::read(&path).unwrap();
+    for at in 0..pristine.len() {
+        let mut bad = pristine.clone();
+        bad[at] ^= 1 << rng.below(8);
+        std::fs::write(&path, &bad).unwrap();
+        assert!(
+            store.get_corr((11, 22), 9).is_none(),
+            "byte {at}: a corrupted corr entry must miss"
+        );
+        assert!(!path.exists(), "byte {at}: the corrupt entry must be deleted");
+        std::fs::write(&path, &pristine).unwrap();
+    }
+    assert_eq!(store.get_corr((11, 22), 9), Some(corr), "pristine bytes still hit");
+
+    // result entries (exercises JobResultCore::from_bytes behind the
+    // checksum as well — a flip can only reach it via a collision,
+    // which a 128-bit checksum makes unobservable; the decode guard
+    // still exists for key-collision shapes)
+    let path = entry_of("res-");
+    let pristine = std::fs::read(&path).unwrap();
+    for at in 0..pristine.len() {
+        let mut bad = pristine.clone();
+        bad[at] ^= 1 << rng.below(8);
+        std::fs::write(&path, &bad).unwrap();
+        assert!(
+            store.get_result((33, 44)).is_none(),
+            "byte {at}: a corrupted result entry must miss"
+        );
+        assert!(!path.exists(), "byte {at}: the corrupt entry must be deleted");
+        std::fs::write(&path, &pristine).unwrap();
+    }
+    assert_eq!(store.get_result((33, 44)).as_ref(), Some(&core));
+
+    // truncations at every length, and trailing garbage
+    for cut in 0..pristine.len() {
+        std::fs::write(&path, &pristine[..cut]).unwrap();
+        assert!(store.get_result((33, 44)).is_none(), "cut={cut}");
+        std::fs::write(&path, &pristine).unwrap();
+    }
+    let mut long = pristine.clone();
+    long.extend_from_slice(b"garbage");
+    std::fs::write(&path, &long).unwrap();
+    assert!(store.get_result((33, 44)).is_none(), "trailing garbage is a miss");
+
+    // the slot recovers: recompute-and-store round-trips again
+    store.put_result((33, 44), &core);
+    assert_eq!(store.get_result((33, 44)).as_ref(), Some(&core));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// `JobResultCore::from_bytes` directly (no checksum shield): random
+/// mutations and truncations of a valid encoding must return
+/// `Some(original)` or `None` — never panic, never a huge allocation.
+#[test]
+fn result_codec_survives_mutation_fuzzing() {
+    let mut rng = Pcg::seeded(fuzz_seed() ^ 4);
+    let core = toy_core();
+    let bytes = core.to_bytes();
+    assert_eq!(JobResultCore::from_bytes(&bytes).as_ref(), Some(&core));
+    for cut in 0..bytes.len() {
+        assert!(
+            JobResultCore::from_bytes(&bytes[..cut]).is_none(),
+            "every truncation misses (cut={cut})"
+        );
+    }
+    for i in 0..2000 {
+        let mut bad = bytes.clone();
+        for _ in 0..1 + rng.below(3) {
+            let at = rng.below(bad.len() as u64) as usize;
+            if rng.bernoulli(0.5) {
+                bad[at] ^= 1 << rng.below(8);
+            } else {
+                bad[at] = rng.below(256) as u8;
+            }
+        }
+        if let Some(decoded) = JobResultCore::from_bytes(&bad) {
+            // a decode that succeeds must be internally consistent
+            // enough to re-encode to the same bytes it decoded from
+            assert_eq!(decoded.to_bytes(), bad, "iter {i}: decode/encode disagree");
+        }
+    }
+}

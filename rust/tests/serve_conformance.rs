@@ -63,7 +63,7 @@ fn tmp_dir(tag: &str) -> PathBuf {
 fn served_stream_is_bit_identical_to_batch_cold_and_warm() {
     let text = demo_text();
     let reference = batch_reference(&text);
-    assert_eq!(reference.lines().count(), 7, "demo manifest is 7 jobs");
+    assert_eq!(reference.lines().count(), 9, "demo manifest is 9 jobs");
 
     let handle = spawn(serve_opts()).unwrap();
     let mut c = Client::connect(&handle.addr.to_string()).unwrap();
@@ -82,7 +82,7 @@ fn served_stream_is_bit_identical_to_batch_cold_and_warm() {
     let v = Json::parse(&stats).unwrap();
     let cache = v.get("stats").unwrap().get("cache").unwrap();
     assert!(
-        cache.get("hits").unwrap().as_usize().unwrap() >= 7,
+        cache.get("hits").unwrap().as_usize().unwrap() >= 9,
         "warm submit must hit the shared result cache: {stats}"
     );
     handle.shutdown().unwrap();

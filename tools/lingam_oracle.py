@@ -1,0 +1,236 @@
+#!/usr/bin/env python3
+"""Margin oracle for the ParaLiNGAM (DirectLiNGAM) engine family.
+
+Replicates, draw for draw, the Rust side of the lingam grid:
+rust/src/util/rng.rs (PCG-XSH-RR 64/32 + Box-Muller), sim/dag.rs
+generators, the sim/sem.rs non-Gaussian noise kinds added for the
+`lingam/` family (uniform and Laplace, both unit variance), and then
+runs the exact pairwise-LR DirectLiNGAM procedure `rust/src/lingam/`
+implements: standardize -> root-finding rounds over the maximum-entropy
+measure -> causal order -> OLS pruning at |b| > PRUNE_THRESHOLD.
+
+For every grid point it reports the *decision margins*:
+
+* per round, the gap between the chosen root's score and the runner-up
+  (the root decision margin). Scores are sums of min(0, D)^2 terms with
+  |D| <= ~1e-3, so a summation-order delta of ~1e-13 on D moves a score
+  by ~1e-15 at most; the 1e-9 gap floor leaves ~6 orders of magnitude
+  of headroom for any faithful reimplementation;
+* over the pruning regressions, min |b| - thr over kept edges and
+  min thr - |b| over dropped candidates (floor 0.01 — near-threshold
+  coefficients would make the point a coin flip, so seeds are chosen
+  to keep every coefficient far from the gate);
+* whether the recovered DAG equals the ground-truth DAG — the Rust
+  conformance tests assert exactly that, so a grid point only ships if
+  exact-arithmetic DirectLiNGAM provably recovers the truth on it.
+
+`--scan LO HI` sweeps seeds for a candidate point definition (used once,
+offline, to pick the shipped seeds); the bare invocation gates the
+pinned LINGAM_GRID and exits nonzero if any margin dips under its floor.
+"""
+import math
+import sys
+
+import numpy as np
+
+from margin_oracle import Pcg, random_er, random_grn
+
+# rust: std::f64::consts::FRAC_1_SQRT_2 (correctly rounded 1/sqrt(2) —
+# NOT python's 1/math.sqrt(2), which is one ulp low)
+FRAC_1_SQRT_2 = 0.7071067811865476
+
+# lingam/measure.rs constants (Hyvarinen 1998 maximum-entropy
+# approximation, the same values the reference DirectLiNGAM uses)
+K1 = 79.047
+K2 = 7.4129
+GAMMA = 0.37457
+H_NU = (1.0 + math.log(2.0 * math.pi)) / 2.0
+
+PRUNE_THRESHOLD = 0.05
+
+ROOT_GAP_FLOOR = 1e-9
+PRUNE_MARGIN_FLOOR = 0.01
+
+
+def draw_noise(kind, rng):
+    """Mirror of sim/sem.rs::NoiseKind::draw."""
+    if kind == "gaussian":
+        return rng.normal()
+    if kind == "uniform":
+        s = math.sqrt(3.0)
+        return rng.uniform_in(-s, s)
+    if kind == "laplace":
+        while True:
+            u = rng.uniform()
+            if u == 0.0:
+                continue
+            if u < 0.5:
+                x = math.log(2.0 * u)
+            else:
+                x = -math.log(2.0 * (1.0 - u))
+            return x * FRAC_1_SQRT_2
+    raise ValueError(kind)
+
+
+def sem_sample(parents, n, m, rng, noise):
+    x = np.zeros((m, n))
+    for s in range(m):
+        row = x[s]
+        for i in range(n):
+            v = draw_noise(noise, rng)
+            for j, w in parents[i]:
+                v += w * row[j]
+            row[i] = v
+    return x
+
+
+def standardize(col):
+    m = len(col)
+    mean = col.sum() / m
+    centered = col - mean
+    var = (centered * centered).sum() / m
+    sd = math.sqrt(var)
+    if sd <= 1e-12:
+        return np.zeros_like(col)
+    return centered / sd
+
+
+def entropy(u):
+    """H-hat(u) for an (approximately) standardized sample u."""
+    m = len(u)
+    lc = np.log(np.cosh(u)).sum() / m
+    ue = (u * np.exp(-(u * u) / 2.0)).sum() / m
+    return H_NU - K1 * (lc - GAMMA) ** 2 - K2 * ue * ue
+
+
+def measure(xi, xj):
+    """D(i,j): > 0 iff i is the more plausible cause (lingam/measure.rs)."""
+    m = len(xi)
+    c = (xi * xj).sum() / m
+    s2 = max(1.0 - c * c, 1e-12)
+    s = math.sqrt(s2)
+    ri_j = (xi - c * xj) / s
+    rj_i = (xj - c * xi) / s
+    return (entropy(xj) + entropy(ri_j)) - (entropy(xi) + entropy(rj_i))
+
+
+def causal_order(x_std, n):
+    """Root-finding rounds; returns (order, per-round root gaps)."""
+    cols = [x_std[:, v].copy() for v in range(n)]
+    active = list(range(n))
+    order = []
+    gaps = []
+    while len(active) > 1:
+        k = len(active)
+        scores = [0.0] * k
+        for ai in range(k):
+            for bi in range(ai + 1, k):
+                d = measure(cols[active[ai]], cols[active[bi]])
+                scores[ai] += min(0.0, d) ** 2
+                scores[bi] += min(0.0, -d) ** 2
+        best = min(range(k), key=lambda i: (scores[i], i))
+        ranked = sorted(scores)
+        gaps.append(ranked[1] - ranked[0])
+        root = active[best]
+        order.append(root)
+        m = len(cols[root])
+        for v in active:
+            if v == root:
+                continue
+            c = (cols[v] * cols[root]).sum() / m
+            cols[v] = standardize(cols[v] - c * cols[root])
+        active.pop(best)
+    order.append(active[0])
+    return order, gaps
+
+
+def prune(x_std, order):
+    """OLS of each var on its causal-order predecessors (original
+    standardized data), keep |b| > PRUNE_THRESHOLD. Returns (edges,
+    min kept margin, min dropped margin)."""
+    m = x_std.shape[0]
+    edges = []
+    kept_margin = float("inf")
+    dropped_margin = float("inf")
+    for p in range(1, len(order)):
+        child = order[p]
+        preds = order[:p]
+        xp = x_std[:, preds]
+        a = (xp.T @ xp) / m
+        b = (xp.T @ x_std[:, child]) / m
+        w = np.linalg.solve(a, b)
+        for q, parent in enumerate(preds):
+            coef = abs(w[q])
+            if coef > PRUNE_THRESHOLD:
+                kept_margin = min(kept_margin, coef - PRUNE_THRESHOLD)
+                edges.append((parent, child, float(w[q])))
+            else:
+                dropped_margin = min(dropped_margin, PRUNE_THRESHOLD - coef)
+    return edges, kept_margin, dropped_margin
+
+
+def truth_edges(parents):
+    out = set()
+    for child, ps in enumerate(parents):
+        for j, _w in ps:
+            out.add((j, child))
+    return out
+
+
+def run_point(name, n, m, topology, seed, noise, verbose=True):
+    if topology[0] == "er":
+        parents = random_er(n, topology[1], Pcg(seed, 1))
+    else:
+        parents = random_grn(n, topology[1], topology[2], Pcg(seed, 1))
+    x = sem_sample(parents, n, m, Pcg(seed, 2), noise)
+    x_std = np.column_stack([standardize(x[:, v]) for v in range(n)])
+    order, gaps = causal_order(x_std, n)
+    edges, kept, dropped = prune(x_std, order)
+    got = {(a, b) for (a, b, _w) in edges}
+    want = truth_edges(parents)
+    exact = got == want
+    min_gap = min(gaps) if gaps else float("inf")
+    ok = exact and min_gap >= ROOT_GAP_FLOOR \
+        and kept >= PRUNE_MARGIN_FLOOR and dropped >= PRUNE_MARGIN_FLOOR
+    if verbose:
+        print(f"{name:16s} n={n:3d} m={m:5d} noise={noise:8s} "
+              f"edges={len(want):3d} order={order}")
+        print(f"{'':16s} root-gap(min)={min_gap:.3e} "
+              f"prune kept={kept:.4f} dropped={dropped:.4f} "
+              f"truth={'EXACT' if exact else 'MISMATCH ' + str(sorted(got ^ want))}"
+              f" -> {'OK' if ok else 'BAD'}")
+    return ok, min_gap, kept, dropped, exact
+
+
+# The pinned lingam grid — must stay in lockstep with
+# rust/src/sim/scenarios.rs::lingam_grid (name, n, m, topology, seed,
+# noise). Seeds chosen by `--scan` so every decision clears its floor.
+LINGAM_GRID = [
+    ("lingam-uniform", 12, 5000, ("er", 0.2), 918, "uniform"),
+    ("lingam-laplace", 10, 5000, ("er", 0.25), 916, "laplace"),
+    ("lingam-grn", 14, 4000, ("grn", 1.8, 4), 953, "uniform"),
+]
+
+
+def scan(lo, hi):
+    for (name, n, m, topo, _seed, noise) in LINGAM_GRID:
+        print(f"== scanning {name} ==")
+        for seed in range(lo, hi):
+            ok, gap, kept, dropped, exact = run_point(
+                name, n, m, topo, seed, noise, verbose=False)
+            flag = "OK " if ok else "   "
+            print(f"  seed {seed}: {flag} gap={gap:.2e} kept={kept:.4f} "
+                  f"dropped={dropped:.4f} exact={exact}")
+
+
+if __name__ == "__main__":
+    if "--scan" in sys.argv:
+        i = sys.argv.index("--scan")
+        scan(int(sys.argv[i + 1]), int(sys.argv[i + 2]))
+        sys.exit(0)
+    all_ok = True
+    for row in LINGAM_GRID:
+        ok, *_ = run_point(*row)
+        all_ok = all_ok and ok
+    print("\nLINGAM GRID SAFE" if all_ok else "\nLINGAM GRID UNSAFE — change seeds!")
+    sys.exit(0 if all_ok else 1)
